@@ -1,0 +1,108 @@
+//! Forest specialization (λ = 1): Corollaries 27 / 29 / 31 live.
+//!
+//!     cargo run --release --example forest_matching [-- --n 100000]
+//!
+//! Demonstrates that maximum matchings give *optimal* correlation
+//! clusterings on forests (verified against the exact solver on small
+//! subsamples), and compares the maximal (2-approx) and (1+ε) matching
+//! pipelines, including Remark 30's P4 tightness instance.
+
+use arbocc::algorithms::forest::{clustering_from_matching, matching_clustering_cost};
+use arbocc::algorithms::matching::{
+    approx_matching, maximal_matching, maximum_matching_forest,
+};
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::exact::exact_cost;
+use arbocc::graph::generators::{path, random_forest};
+use arbocc::mpc::memory::Words;
+use arbocc::mpc::{MpcConfig, MpcSimulator};
+use arbocc::util::cli::Args;
+use arbocc::util::rng::Rng;
+use arbocc::util::table::{fnum, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 100_000);
+    let seed = args.get_u64("seed", 3);
+    let mut rng = Rng::new(seed);
+
+    // --- Corollary 27 on exactly-solvable instances -------------------
+    println!("Corollary 27 check (maximum matching = OPT) on 20 random 12-vertex forests:");
+    let mut ok = 0;
+    for _ in 0..20 {
+        let g = random_forest(12, 0.8, &mut rng);
+        let m = maximum_matching_forest(&g);
+        let c = clustering_from_matching(g.n(), &m);
+        if cost(&g, &c).total() == exact_cost(&g) {
+            ok += 1;
+        }
+    }
+    println!("  {ok}/20 matched the exact optimum\n");
+    assert_eq!(ok, 20);
+
+    // --- The big forest ------------------------------------------------
+    let g = random_forest(n, 0.9, &mut rng);
+    println!("random forest: n={} m={}", g.n(), g.m());
+    let sim = || MpcSimulator::new(MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5));
+
+    let mut table = Table::new(
+        "forest correlation clustering via matchings",
+        &["algorithm", "|M|", "cost", "vs opt", "MPC rounds"],
+    );
+
+    let m_star = maximum_matching_forest(&g);
+    let opt_cost = matching_clustering_cost(g.m(), m_star.len());
+    table.row(&[
+        "maximum matching (OPT, Cor. 27)".into(),
+        m_star.len().to_string(),
+        opt_cost.to_string(),
+        "1.000".into(),
+        "-".into(),
+    ]);
+
+    let mut s1 = sim();
+    let maximal = maximal_matching(&g, &mut rng, &mut s1, 64);
+    let maximal_cost = matching_clustering_cost(g.m(), maximal.matching.len());
+    table.row(&[
+        "maximal matching (2-approx)".into(),
+        maximal.matching.len().to_string(),
+        maximal_cost.to_string(),
+        fnum(maximal_cost as f64 / opt_cost.max(1) as f64),
+        s1.n_rounds().to_string(),
+    ]);
+
+    for eps in [1.0, 0.5, 0.25] {
+        let mut s = sim();
+        let run = approx_matching(&g, maximal.matching.clone(), eps, &mut s);
+        let c = matching_clustering_cost(g.m(), run.matching.len());
+        table.row(&[
+            format!("(1+{eps})-approx matching"),
+            run.matching.len().to_string(),
+            c.to_string(),
+            fnum(c as f64 / opt_cost.max(1) as f64),
+            s.n_rounds().to_string(),
+        ]);
+        // Lemma 29's guarantee, checked.
+        assert!(
+            (1.0 + eps) * run.matching.len() as f64 + 1e-9 >= m_star.len() as f64,
+            "(1+ε)|M| ≥ |M*| violated"
+        );
+    }
+    table.print();
+
+    // --- Remark 30 tightness -------------------------------------------
+    println!("\nRemark 30 (P4 tightness): maximal matching can be 2× off:");
+    let p4 = path(4);
+    let worst_maximal = vec![(1u32, 2u32)]; // the middle edge is maximal
+    let best = maximum_matching_forest(&p4);
+    println!(
+        "  P4: worst maximal cost = {}, optimum cost = {} (ratio {})",
+        matching_clustering_cost(p4.m(), worst_maximal.len()),
+        matching_clustering_cost(p4.m(), best.len()),
+        fnum(
+            matching_clustering_cost(p4.m(), worst_maximal.len()) as f64
+                / matching_clustering_cost(p4.m(), best.len()) as f64
+        )
+    );
+    println!("forest_matching OK");
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the 60-second tour of the arbocc public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Generates a bounded-arboricity graph, estimates λ, runs the paper's
+//! Algorithm 4 with PIVOT inside, scores the result against the
+//! bad-triangle lower bound, and applies the Lemma 25 structural
+//! transform.
+
+use arbocc::algorithms::alg4::{alg4, degree_threshold};
+use arbocc::algorithms::pivot::pivot_random;
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::structural::bound_cluster_sizes;
+use arbocc::cluster::triangles::packing_lower_bound;
+use arbocc::graph::arboricity::estimate_arboricity;
+use arbocc::graph::generators::lambda_arboric;
+use arbocc::util::rng::Rng;
+
+fn main() {
+    // 1. A graph whose positive edges are 3-arboric (union of 3 random
+    //    spanning trees), 50k vertices.
+    let mut rng = Rng::new(2021);
+    let g = lambda_arboric(50_000, 3, &mut rng);
+    println!("graph: n={} m={} Δ={}", g.n(), g.m(), g.max_degree());
+
+    // 2. Estimate arboricity: λ is sandwiched by a Nash-Williams density
+    //    witness and the degeneracy.
+    let est = estimate_arboricity(&g);
+    let (lo, hi) = est.bounds();
+    println!("arboricity: λ ∈ [{lo}, {hi}] (degeneracy {})", est.degeneracy);
+    let lambda = hi;
+
+    // 3. Algorithm 4 (Theorem 26): singleton out vertices with degree
+    //    above 8(1+ε)λ/ε, run PIVOT on the bounded-degree rest.
+    let eps = 2.0;
+    println!(
+        "Algorithm 4: ε={eps}, threshold d(v) > {:.0}",
+        degree_threshold(lambda, eps)
+    );
+    let clustering = alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng));
+
+    // 4. Score it. Bad-triangle packings lower-bound every clustering,
+    //    so cost/LB upper-bounds the true approximation ratio.
+    let c = cost(&g, &clustering);
+    let lb = packing_lower_bound(&g);
+    println!(
+        "cost = {} ({} positive + {} negative disagreements), {} clusters",
+        c.total(),
+        c.positive,
+        c.negative,
+        clustering.n_clusters()
+    );
+    println!(
+        "lower bound = {lb} ⇒ measured ratio ≤ {:.3} (paper: 3 in expectation)",
+        c.total() as f64 / lb as f64
+    );
+
+    // 5. Lemma 25 in action: the structural transform never increases
+    //    cost and caps cluster sizes at 4λ−2.
+    let res = bound_cluster_sizes(&g, &clustering, lambda);
+    let c2 = cost(&g, &res.clustering);
+    println!(
+        "structural transform: {} moves, max cluster {} ≤ {}, cost {} (≤ {})",
+        res.moves,
+        res.max_cluster_size,
+        4 * lambda - 2,
+        c2.total(),
+        c.total()
+    );
+    assert!(c2.total() <= c.total());
+    assert!(res.max_cluster_size <= 4 * lambda - 2);
+    println!("quickstart OK");
+}

@@ -1,0 +1,79 @@
+"""AOT export: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  HLO text — not ``.serialize()`` — is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate links)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_BATCH, AOT_N, export_registry
+from .kernels.common import TILE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="export a single entry point by name"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "aot_n": AOT_N,
+        "aot_batch": AOT_BATCH,
+        "tile": TILE,
+        "jax_version": jax.__version__,
+        "entries": {},
+    }
+    for name, (fn, specs) in export_registry().items():
+        if args.only is not None and name != args.only:
+            continue
+        text = lower_entry(name, fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "arg_shapes": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

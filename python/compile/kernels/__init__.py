@@ -1,0 +1,24 @@
+"""L1 Pallas kernels for arbocc (build-time only; never on the request path).
+
+Kernels:
+  * :mod:`matmul`        — tiled ``X @ Y^T`` (co-membership, 2-paths).
+  * :mod:`disagreement`  — tiled disagreement reduction.
+  * :mod:`triangles`     — tiled bad-triangle reduction.
+  * :mod:`ref`           — pure-jnp oracles.
+"""
+
+from .common import AOT_BATCH, AOT_N, TILE
+from .disagreement import disagreement_sums
+from .matmul import comembership, matmul_nt, two_paths
+from .triangles import bad_triangle_raw
+
+__all__ = [
+    "AOT_BATCH",
+    "AOT_N",
+    "TILE",
+    "comembership",
+    "matmul_nt",
+    "two_paths",
+    "disagreement_sums",
+    "bad_triangle_raw",
+]

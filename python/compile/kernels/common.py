@@ -1,0 +1,51 @@
+"""Shared constants and helpers for the Pallas kernel layer (L1).
+
+All kernels are authored for TPU-style tiling (VMEM-resident blocks feeding
+the MXU) but are lowered with ``interpret=True`` so the resulting HLO runs
+on any PJRT backend, including the Rust CPU client on the request path.
+
+Conventions
+-----------
+* ``TILE`` is the block edge used for AOT export: 128 matches the MXU
+  systolic array edge and keeps per-tile VMEM usage at 64 KiB per f32
+  operand (3 operands resident => < 200 KiB, far under the ~16 MiB VMEM
+  budget, leaving room for double buffering).
+* All counts are computed in f32.  Counts are integers below 2^24 for every
+  shape we export (N <= 4096), so f32 accumulation is exact.
+* Adjacency blocks are dense {0,1} f32 matrices: ``A[u, v] = 1`` iff the
+  positive edge (u, v) exists.  The complete signed graph's negative edges
+  are implicit: a pair of *valid* vertices without a positive edge is a
+  negative edge.
+* Padding: callers pad blocks up to a multiple of the tile size.  The
+  ``valid`` vector is 1.0 for real vertices and 0.0 for padding; padded
+  rows of a one-hot labeling are all-zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Block edge used for AOT export. Kernels take the tile size as a parameter
+# so tests can sweep small tiles quickly under interpret mode.
+TILE = 128
+
+# Problem size of the exported artifacts: dense blocks of up to AOT_N
+# vertices (the Rust coordinator packs clusters into blocks of this size).
+AOT_N = 256
+
+# Batch size of the exported best-of-K scorer (Remark 14 driver).
+AOT_BATCH = 8
+
+
+def check_tiling(n: int, tile: int) -> None:
+    """Validate that ``n`` is tileable by ``tile``."""
+    if n <= 0 or tile <= 0:
+        raise ValueError(f"sizes must be positive, got n={n} tile={tile}")
+    if n % tile != 0:
+        raise ValueError(f"n={n} is not a multiple of tile={tile}")
+
+
+def f32(x) -> jax.Array:
+    """Cast to f32, the kernels' working dtype."""
+    return jnp.asarray(x, dtype=jnp.float32)

@@ -1,0 +1,157 @@
+"""L1 Pallas kernel: tiled disagreement reduction for correlation clustering.
+
+Given a positive-adjacency block ``A`` (dense {0,1} f32) and a
+co-membership block ``C`` for the same vertex set, the raw per-ordered-pair
+disagreement indicators are
+
+* positive disagreement at (u, v):  ``A[u,v] * (1 - C[u,v])``
+  (a positive edge whose endpoints are split), and
+* negative disagreement at (u, v):  ``(1 - A[u,v]) * C[u,v]``
+  (a co-clustered pair without a positive edge — an implicit negative
+  edge inside a cluster).
+
+The kernel reduces both sums over the full n x n plane in one sweep.  The
+caller corrects for self-pairs and for double counting (each unordered pair
+appears twice):
+
+    pos = raw_pos / 2
+    neg = (raw_neg - n_valid) / 2
+
+because the diagonal contributes exactly one raw negative unit per valid
+vertex (``A[v,v] = 0``, ``C[v,v] = 1``) and nothing positive.
+
+Padding is handled by the ``valid`` vector: the negative term is masked by
+``valid[u] * valid[v]`` (implicit negative edges exist only between real
+vertices), while the positive term needs no mask since padded rows/columns
+of ``A`` are zero.
+
+On TPU this is a pure VPU (elementwise + reduce) pass over tiles already
+resident from the co-membership matmul; the output is a single (1, 2)
+accumulator block revisited by every grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, check_tiling, f32
+
+
+def _dis_kernel(adj_ref, com_ref, vi_ref, vj_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = adj_ref[...]
+    c = com_ref[...]
+    vv = vi_ref[...].reshape(-1, 1) * vj_ref[...].reshape(1, -1)
+    raw_pos = jnp.sum(a * (1.0 - c))
+    raw_neg = jnp.sum((1.0 - a) * c * vv)
+    o_ref[0, 0] += raw_pos
+    o_ref[0, 1] += raw_neg
+
+
+def _dis_batched_kernel(adj_ref, com_ref, vi_ref, vj_ref, o_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    del b
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = adj_ref[...]
+    c = com_ref[0]
+    vv = vi_ref[...].reshape(-1, 1) * vj_ref[...].reshape(1, -1)
+    o_ref[0, 0] += jnp.sum(a * (1.0 - c))
+    o_ref[0, 1] += jnp.sum((1.0 - a) * c * vv)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def disagreement_sums_batched(
+    adj: jax.Array,
+    coms: jax.Array,
+    valid: jax.Array,
+    *,
+    tile: int = TILE,
+) -> jax.Array:
+    """Raw disagreement sums for B co-membership candidates of one block.
+
+    §Perf L1-3 companion of ``matmul.matmul_nt_batched``: the batch lives
+    in the kernel grid — ``(B, n/t, n/t)`` — with the shared ``adj`` tile
+    indexed independently of b. Returns ``f32[B, 2]``.
+    """
+    adj = f32(adj)
+    coms = f32(coms)
+    valid = f32(valid)
+    b, n, _ = coms.shape
+    if adj.shape != (n, n) or valid.shape != (n,):
+        raise ValueError(f"shape mismatch: adj={adj.shape} coms={coms.shape}")
+    check_tiling(n, tile)
+    grid = (b, n // tile, n // tile)
+    return pl.pallas_call(
+        _dis_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda b, i, j: (i, j)),
+            pl.BlockSpec((1, tile, tile), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((tile,), lambda b, i, j: (i,)),
+            pl.BlockSpec((tile,), lambda b, i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        interpret=True,
+    )(adj, coms, valid, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def disagreement_sums(
+    adj: jax.Array,
+    com: jax.Array,
+    valid: jax.Array,
+    *,
+    tile: int = TILE,
+) -> jax.Array:
+    """Raw (uncorrected) disagreement sums over all ordered pairs.
+
+    Args:
+      adj: ``f32[n, n]`` symmetric {0,1} positive adjacency, zero diagonal.
+      com: ``f32[n, n]`` symmetric {0,1} co-membership.
+      valid: ``f32[n]`` vertex validity mask.
+      tile: block edge.
+
+    Returns:
+      ``f32[1, 2]``: ``[[raw_pos, raw_neg]]``.
+    """
+    adj = f32(adj)
+    com = f32(com)
+    valid = f32(valid)
+    n = adj.shape[0]
+    if adj.shape != (n, n) or com.shape != (n, n) or valid.shape != (n,):
+        raise ValueError(
+            f"shape mismatch: adj={adj.shape} com={com.shape} valid={valid.shape}"
+        )
+    check_tiling(n, tile)
+
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        _dis_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=True,
+    )(adj, com, valid, valid)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+Each function mirrors one kernel with straight jax.numpy, no Pallas, no
+tiling.  The pytest suite asserts exact equality (all values are integer
+counts well inside f32's exact range) between kernels and these oracles
+across randomized shape/seed sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import f32
+
+
+def matmul_nt_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y.T`` in plain jnp."""
+    return jnp.dot(f32(x), f32(y).T, preferred_element_type=jnp.float32)
+
+
+def comembership_ref(onehot: jax.Array) -> jax.Array:
+    """Co-membership ``L @ L^T``."""
+    oh = f32(onehot)
+    return jnp.dot(oh, oh.T, preferred_element_type=jnp.float32)
+
+
+def two_paths_ref(adj: jax.Array) -> jax.Array:
+    """2-path counts ``A @ A``."""
+    a = f32(adj)
+    return jnp.dot(a, a, preferred_element_type=jnp.float32)
+
+
+def disagreement_sums_ref(
+    adj: jax.Array, com: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Raw ordered-pair disagreement sums ``[[raw_pos, raw_neg]]``."""
+    a = f32(adj)
+    c = f32(com)
+    v = f32(valid)
+    vv = v[:, None] * v[None, :]
+    raw_pos = jnp.sum(a * (1.0 - c))
+    raw_neg = jnp.sum((1.0 - a) * c * vv)
+    return jnp.stack([raw_pos, raw_neg]).reshape(1, 2)
+
+
+def bad_triangle_raw_ref(
+    p2: jax.Array, adj: jax.Array, valid: jax.Array
+) -> jax.Array:
+    """Raw bad-triangle sum (ordered pairs, diagonal excluded)."""
+    p = f32(p2)
+    a = f32(adj)
+    v = f32(valid)
+    n = a.shape[0]
+    vv = v[:, None] * v[None, :]
+    offdiag = 1.0 - jnp.eye(n, dtype=jnp.float32)
+    return jnp.sum(p * (1.0 - a) * vv * offdiag).reshape(1, 1)
+
+
+def cost_eval_ref(adj: jax.Array, onehot: jax.Array, valid: jax.Array):
+    """End-to-end oracle for the L2 ``cost_eval`` entry point.
+
+    Returns (positive_disagreements, negative_disagreements) over unordered
+    pairs of valid vertices.
+    """
+    com = comembership_ref(onehot)
+    sums = disagreement_sums_ref(adj, com, valid)
+    n_valid = jnp.sum(f32(valid))
+    pos = sums[0, 0] * 0.5
+    neg = (sums[0, 1] - n_valid) * 0.5
+    return pos, neg
+
+
+def bad_triangles_ref(adj: jax.Array, valid: jax.Array) -> jax.Array:
+    """End-to-end oracle for the L2 ``bad_triangles`` entry point."""
+    p2 = two_paths_ref(adj)
+    raw = bad_triangle_raw_ref(p2, adj, valid)
+    return raw[0, 0] * 0.5

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: bad-triangle reduction.
+
+A *bad triangle* {u, v, w} has two positive edges (uv, vw) and one negative
+edge (uw).  In a complete signed graph the negative edge is implicit: u, w
+valid, not positively adjacent.  The count decomposes over the 2-path
+matrix ``P2 = A @ A``:
+
+    #bad = 1/2 * sum_{u != w} P2[u, w] * (1 - A[u, w]) * valid[u] * valid[w]
+
+(each triangle is counted once at (u, w) and once at (w, u), hence the
+half; the diagonal is excluded because ``P2[u, u] = deg(u)`` counts
+degenerate 2-paths, not triangles).
+
+The paper's cost-charging arguments (PIVOT's 3-approximation, Section 1)
+are against edge-disjoint bad-triangle packings; the raw count computed
+here upper-bounds any packing and the Rust side pairs it with a greedy
+packing for the certified lower bound.
+
+This kernel consumes the ``P2`` tiles produced by ``matmul.two_paths`` and
+performs the masked reduce; on TPU it is a VPU epilogue over the MXU's
+output tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, check_tiling, f32
+
+
+def _tri_kernel(p2_ref, adj_ref, vi_ref, vj_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p2 = p2_ref[...]
+    a = adj_ref[...]
+    vv = vi_ref[...].reshape(-1, 1) * vj_ref[...].reshape(1, -1)
+    # The diagonal of the full matrix only appears inside diagonal blocks
+    # (i == j); mask it there with a scaled identity.
+    t = p2.shape[0]
+    eye = jnp.eye(t, dtype=p2.dtype) * (i == j).astype(p2.dtype)
+    mask = vv * (1.0 - a) * (1.0 - eye)
+    o_ref[0, 0] += jnp.sum(p2 * mask)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bad_triangle_raw(
+    p2: jax.Array,
+    adj: jax.Array,
+    valid: jax.Array,
+    *,
+    tile: int = TILE,
+) -> jax.Array:
+    """Raw (ordered, undivided) bad-triangle sum; caller divides by 2.
+
+    Args:
+      p2: ``f32[n, n]`` 2-path counts ``A @ A``.
+      adj: ``f32[n, n]`` positive adjacency.
+      valid: ``f32[n]`` validity mask.
+      tile: block edge.
+
+    Returns:
+      ``f32[1, 1]`` raw sum.
+    """
+    p2 = f32(p2)
+    adj = f32(adj)
+    valid = f32(valid)
+    n = adj.shape[0]
+    if p2.shape != (n, n) or valid.shape != (n,):
+        raise ValueError(f"shape mismatch: p2={p2.shape} adj={adj.shape}")
+    check_tiling(n, tile)
+
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        _tri_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(p2, adj, valid, valid)

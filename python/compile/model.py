@@ -1,0 +1,151 @@
+"""L2: JAX compute graphs for arbocc's numeric hot path.
+
+These are the exact functions the Rust coordinator executes through PJRT
+(after :mod:`compile.aot` lowers them to HLO text).  They compose the L1
+Pallas kernels into three entry points:
+
+* ``cost_eval``        — disagreement cost of one labeling of a dense block.
+* ``cost_eval_batch``  — the Remark 14 hot path: score K candidate
+                         labelings of the same block in one executable call.
+* ``bad_triangles``    — bad-triangle count of a dense block (lower-bound
+                         machinery for the approximation-ratio harness).
+
+Block protocol (shared with ``rust/src/runtime/``):
+  * blocks hold up to N vertices, padded to N with invalid vertices;
+  * ``adj``    is f32[N, N], symmetric {0,1}, zero diagonal, zero rows for
+               padding;
+  * ``onehot`` is f32[N, N] (cluster ids are block-local, < N), all-zero
+               rows for padding;
+  * ``valid``  is f32[N], 1.0 for real vertices.
+
+All outputs are integer-valued f32 scalars/vectors (exact below 2^24).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    AOT_BATCH,
+    AOT_N,
+    TILE,
+    bad_triangle_raw,
+    comembership,
+    disagreement_sums,
+    two_paths,
+)
+from .kernels.disagreement import disagreement_sums_batched
+from .kernels.matmul import matmul_nt_batched
+
+
+def cost_eval(adj, onehot, valid, *, tile: int = TILE):
+    """Disagreement cost of one block labeling.
+
+    Returns ``(pos, neg)``: positive and negative disagreements over
+    unordered pairs of valid vertices.  Total cost is ``pos + neg``.
+    """
+    com = comembership(onehot, tile=tile)
+    sums = disagreement_sums(adj, com, valid, tile=tile)
+    n_valid = jnp.sum(valid)
+    pos = sums[0, 0] * 0.5
+    # Every valid vertex contributes one raw negative unit on the diagonal
+    # (co-membership with itself, no self-loop in adj).
+    neg = (sums[0, 1] - n_valid) * 0.5
+    return pos, neg
+
+
+def cost_eval_batch(adj, onehots, valid, *, tile: int = TILE):
+    """Score a batch of K labelings of the same block.
+
+    Args:
+      adj: f32[N, N].
+      onehots: f32[K, N, N].
+      valid: f32[N].
+
+    Returns:
+      ``(pos, neg)``, each f32[K].
+
+    This is the best-of-K driver's kernel: PIVOT's 3-approximation holds in
+    expectation, and Remark 14 converts it to a with-high-probability bound
+    by running O(log n) independent copies and keeping the cheapest — which
+    needs K clusterings scored per block per sweep point.
+
+    §Perf L1-3 (measured, see EXPERIMENTS.md §Perf): three lowerings were
+    benchmarked under CPU-PJRT —
+
+    * ``vmap`` over the single-block Pallas kernels:      ~74 ms / batch-8
+    * natively batched Pallas kernels (grid = (B,i,j,k)): ~74 ms / batch-8
+    * fused einsum graph (below):                         ~3.7 ms / batch-8
+
+    Interpret-mode Pallas lowers to scalar XLA loop nests that the CPU
+    backend cannot vectorize, while ``einsum`` hits the native dot
+    emitter.  The batched entry point therefore lowers from the einsum
+    graph on this target; the batched Pallas kernels
+    (``kernels.matmul.matmul_nt_batched``,
+    ``kernels.disagreement.disagreement_sums_batched``) remain the TPU
+    lowering (Mosaic) and are still pytest-validated against the same
+    oracle.
+    """
+    del tile
+    coms = jnp.einsum("bik,bjk->bij", onehots, onehots)
+    vv = valid[:, None] * valid[None, :]
+    raw_pos = jnp.sum(adj[None] * (1.0 - coms), axis=(1, 2))
+    raw_neg = jnp.sum((1.0 - adj[None]) * coms * vv[None], axis=(1, 2))
+    n_valid = jnp.sum(valid)
+    pos = raw_pos * 0.5
+    neg = (raw_neg - n_valid) * 0.5
+    return pos, neg
+
+
+def cost_eval_batch_pallas(adj, onehots, valid, *, tile: int = TILE):
+    """The natively batched Pallas lowering of ``cost_eval_batch`` —
+    the TPU path; kept numerically identical (pytest) to the einsum
+    lowering exported for CPU."""
+    coms = matmul_nt_batched(onehots, tile=tile)
+    sums = disagreement_sums_batched(adj, coms, valid, tile=tile)
+    n_valid = jnp.sum(valid)
+    pos = sums[:, 0] * 0.5
+    neg = (sums[:, 1] - n_valid) * 0.5
+    return pos, neg
+
+
+def bad_triangles(adj, valid, *, tile: int = TILE):
+    """Number of bad triangles in a dense block.
+
+    A bad triangle (two positive edges + one implicit negative edge) forces
+    at least one disagreement in any clustering, so edge-disjoint packings
+    of them lower-bound OPT (the paper's cost-charging currency).
+    """
+    p2 = two_paths(adj, tile=tile)
+    raw = bad_triangle_raw(p2, adj, valid, tile=tile)
+    return (raw[0, 0] * 0.5,)
+
+
+# ---------------------------------------------------------------------------
+# AOT export registry: entry point name -> (callable, example input specs).
+# Shapes here are the contract with rust/src/runtime/; change them together.
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_registry():
+    """Entry points exported by ``compile.aot``."""
+    n, b = AOT_N, AOT_BATCH
+    return {
+        "cost_eval": (
+            lambda adj, oh, valid: cost_eval(adj, oh, valid),
+            (_spec((n, n)), _spec((n, n)), _spec((n,))),
+        ),
+        "cost_eval_batch": (
+            lambda adj, ohs, valid: cost_eval_batch(adj, ohs, valid),
+            (_spec((n, n)), _spec((b, n, n)), _spec((n,))),
+        ),
+        "triangles": (
+            lambda adj, valid: bad_triangles(adj, valid),
+            (_spec((n, n)), _spec((n,))),
+        ),
+    }

@@ -1,0 +1,59 @@
+"""AOT export smoke tests: the HLO-text interchange contract with Rust."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_registry_lowering_produces_hlo_text():
+    """Every entry point lowers to parseable-looking HLO text."""
+    for name, (fn, specs) in model.export_registry().items():
+        text = aot.lower_entry(name, fn, specs)
+        assert "HloModule" in text, f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: no entry computation"
+        # The interchange contract: text, never serialized protos.
+        assert len(text) > 1000
+
+
+def test_artifacts_match_registry_when_present():
+    """If artifacts/ exists (make artifacts ran), files + manifest agree."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts/ not built")
+    import json
+
+    with open(os.path.join(art, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["aot_n"] == model.AOT_N
+    assert manifest["aot_batch"] == model.AOT_BATCH
+    for name in model.export_registry():
+        assert name in manifest["entries"], f"{name} missing from manifest"
+        path = os.path.join(art, manifest["entries"][name]["file"])
+        assert os.path.exists(path), f"{path} missing"
+        with open(path) as f:
+            assert "HloModule" in f.read(2048)
+
+
+@pytest.mark.slow
+def test_aot_module_runs_as_script(tmp_path):
+    """`python -m compile.aot --out-dir X --only cost_eval` works."""
+    env = dict(os.environ)
+    out = tmp_path / "arts"
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--only", "triangles"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert (out / "triangles.hlo.txt").exists()
+    assert (out / "manifest.json").exists()

@@ -1,0 +1,162 @@
+"""Kernel-vs-oracle correctness: the core numeric signal of the stack.
+
+Every L1 Pallas kernel is compared against its pure-jnp oracle in
+``compile.kernels.ref``.  All quantities are integer counts, so we assert
+*exact* equality, not allclose-with-slack.  Hypothesis sweeps tile sizes,
+block sizes, densities and seeds.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    bad_triangle_raw,
+    comembership,
+    disagreement_sums,
+    matmul_nt,
+    two_paths,
+)
+from compile.kernels import ref
+from compile.kernels.common import check_tiling
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Small tiles keep interpret-mode sweeps fast; the AOT tile (128) is
+# exercised once per kernel in the dedicated @pytest.mark tests below.
+SMALL = st.sampled_from([8, 16, 24, 32])
+TILES = st.sampled_from([4, 8])
+
+
+def random_block(rng: np.random.Generator, n: int, density: float, pad: int):
+    """Random symmetric adjacency with `pad` trailing invalid vertices."""
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    a = np.triu(a, k=1)
+    a = a + a.T
+    valid = np.ones(n, dtype=np.float32)
+    if pad > 0:
+        a[n - pad :, :] = 0.0
+        a[:, n - pad :] = 0.0
+        valid[n - pad :] = 0.0
+    return a, valid
+
+
+def random_onehot(rng: np.random.Generator, n: int, valid: np.ndarray):
+    labels = rng.integers(0, n, size=n)
+    oh = np.zeros((n, n), dtype=np.float32)
+    for v in range(n):
+        if valid[v] > 0:
+            oh[v, labels[v]] = 1.0
+    return oh
+
+
+@hypothesis.given(
+    n=SMALL, tile=TILES, seed=st.integers(0, 2**31 - 1), density=st.floats(0.0, 1.0)
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_matmul_nt_matches_ref(n, tile, seed, density):
+    if n % tile != 0:
+        n = (n // tile + 1) * tile
+    rng = np.random.default_rng(seed)
+    x = (rng.random((n, n)) < density).astype(np.float32)
+    y = (rng.random((n, n)) < density).astype(np.float32)
+    got = matmul_nt(x, y, tile=tile)
+    want = ref.matmul_nt_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@hypothesis.given(
+    n=SMALL,
+    tile=TILES,
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.0, 0.8),
+    pad=st.integers(0, 5),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_disagreement_matches_ref(n, tile, seed, density, pad):
+    if n % tile != 0:
+        n = (n // tile + 1) * tile
+    pad = min(pad, n - 1)
+    rng = np.random.default_rng(seed)
+    adj, valid = random_block(rng, n, density, pad)
+    oh = random_onehot(rng, n, valid)
+    com = np.asarray(comembership(oh, tile=tile))
+    got = disagreement_sums(adj, com, valid, tile=tile)
+    want = ref.disagreement_sums_ref(adj, com, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@hypothesis.given(
+    n=SMALL,
+    tile=TILES,
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.0, 0.8),
+    pad=st.integers(0, 5),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_triangles_match_ref(n, tile, seed, density, pad):
+    if n % tile != 0:
+        n = (n // tile + 1) * tile
+    pad = min(pad, n - 1)
+    rng = np.random.default_rng(seed)
+    adj, valid = random_block(rng, n, density, pad)
+    p2 = np.asarray(two_paths(adj, tile=tile))
+    got = bad_triangle_raw(p2, adj, valid, tile=tile)
+    want = ref.bad_triangle_raw_ref(p2, adj, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_comembership_semantics():
+    """C[u,v] = 1 iff same label; padded rows co-member with nothing."""
+    oh = np.zeros((8, 8), dtype=np.float32)
+    oh[0, 3] = oh[1, 3] = oh[2, 5] = 1.0  # v3 padded (all-zero row)
+    c = np.asarray(comembership(oh, tile=4))
+    assert c[0, 1] == 1.0 and c[1, 0] == 1.0
+    assert c[0, 2] == 0.0 and c[2, 1] == 0.0
+    assert c[3, 3] == 0.0 and c[3, 0] == 0.0
+    assert c[0, 0] == 1.0
+
+
+def test_triangle_on_known_graph():
+    """Path u-v-w (uw missing) is exactly one bad triangle."""
+    n = 8
+    adj = np.zeros((n, n), dtype=np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    adj[1, 2] = adj[2, 1] = 1.0
+    valid = np.ones(n, dtype=np.float32)
+    p2 = np.asarray(two_paths(adj, tile=4))
+    raw = np.asarray(bad_triangle_raw(p2, adj, valid, tile=4))
+    assert raw[0, 0] == 2.0  # ordered count; one triangle
+
+
+def test_triangle_clique_has_none():
+    """A positive clique contains no bad triangle."""
+    n = 8
+    adj = np.ones((n, n), dtype=np.float32) - np.eye(n, dtype=np.float32)
+    valid = np.ones(n, dtype=np.float32)
+    p2 = np.asarray(two_paths(adj, tile=4))
+    raw = np.asarray(bad_triangle_raw(p2, adj, valid, tile=4))
+    assert raw[0, 0] == 0.0
+
+
+def test_check_tiling_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        check_tiling(10, 4)
+    with pytest.raises(ValueError):
+        check_tiling(0, 4)
+
+
+@pytest.mark.slow
+def test_aot_tile_size_smoke():
+    """One pass at the exported tile size (128) and block size (256)."""
+    rng = np.random.default_rng(0)
+    n = 256
+    adj, valid = random_block(rng, n, 0.05, pad=7)
+    oh = random_onehot(rng, n, valid)
+    com = np.asarray(comembership(oh))
+    got = np.asarray(disagreement_sums(adj, com, valid))
+    want = np.asarray(ref.disagreement_sums_ref(adj, com, valid))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,132 @@
+"""L2 model-level tests: entry-point semantics and batching.
+
+These validate the exact functions the Rust runtime will execute, against
+both the jnp oracle and hand-computed clustering costs.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def brute_force_cost(adj: np.ndarray, labels: np.ndarray, valid: np.ndarray):
+    """Textbook O(n^2) disagreement count for ground truth."""
+    n = adj.shape[0]
+    pos = neg = 0
+    for u in range(n):
+        for v in range(u + 1, n):
+            if valid[u] == 0 or valid[v] == 0:
+                continue
+            same = labels[u] == labels[v]
+            if adj[u, v] > 0 and not same:
+                pos += 1
+            if adj[u, v] == 0 and same:
+                neg += 1
+    return float(pos), float(neg)
+
+
+def make_instance(seed: int, n: int, density: float, pad: int):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    a = np.triu(a, k=1)
+    a = a + a.T
+    valid = np.ones(n, dtype=np.float32)
+    if pad:
+        a[n - pad :, :] = 0.0
+        a[:, n - pad :] = 0.0
+        valid[n - pad :] = 0.0
+    labels = rng.integers(0, max(n // 2, 1), size=n)
+    oh = np.zeros((n, n), dtype=np.float32)
+    for v in range(n):
+        if valid[v] > 0:
+            oh[v, labels[v]] = 1.0
+    return a, labels, oh, valid
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    density=st.floats(0.0, 0.6),
+    pad=st.integers(0, 4),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_cost_eval_matches_brute_force(seed, density, pad):
+    n = 16
+    a, labels, oh, valid = make_instance(seed, n, density, pad)
+    pos, neg = model.cost_eval(a, oh, valid, tile=8)
+    want_pos, want_neg = brute_force_cost(a, labels, valid)
+    assert float(pos) == want_pos
+    assert float(neg) == want_neg
+
+
+def test_cost_eval_matches_oracle_exactly():
+    a, _, oh, valid = make_instance(7, 32, 0.3, pad=3)
+    pos, neg = model.cost_eval(a, oh, valid, tile=8)
+    rpos, rneg = ref.cost_eval_ref(a, oh, valid)
+    assert float(pos) == float(rpos)
+    assert float(neg) == float(rneg)
+
+
+def test_batch_equals_loop():
+    """cost_eval_batch(k) == [cost_eval(k_i)] — the Remark 14 scorer."""
+    n, k = 16, 5
+    a, _, _, valid = make_instance(3, n, 0.4, pad=2)
+    ohs = np.stack([make_instance(100 + i, n, 0.4, 2)[2] for i in range(k)])
+    bpos, bneg = model.cost_eval_batch(a, ohs, valid, tile=8)
+    for i in range(k):
+        pos, neg = model.cost_eval(a, ohs[i], valid, tile=8)
+        assert float(bpos[i]) == float(pos)
+        assert float(bneg[i]) == float(neg)
+
+
+def test_batch_pallas_lowering_matches_einsum_lowering():
+    """The TPU (batched-Pallas) and CPU (einsum) lowerings are identical."""
+    n, k = 16, 4
+    a, _, _, valid = make_instance(5, n, 0.4, pad=1)
+    ohs = np.stack([make_instance(200 + i, n, 0.4, 1)[2] for i in range(k)])
+    epos, eneg = model.cost_eval_batch(a, ohs, valid, tile=8)
+    ppos, pneg = model.cost_eval_batch_pallas(a, ohs, valid, tile=8)
+    np.testing.assert_array_equal(np.asarray(epos), np.asarray(ppos))
+    np.testing.assert_array_equal(np.asarray(eneg), np.asarray(pneg))
+
+
+def test_bad_triangles_matches_oracle():
+    a, _, _, valid = make_instance(11, 32, 0.25, pad=2)
+    (got,) = model.bad_triangles(a, valid, tile=8)
+    want = ref.bad_triangles_ref(a, valid)
+    assert float(got) == float(want)
+
+
+def test_singletons_cost_all_positive_edges():
+    """All-singleton clustering: every positive edge disagrees, no negative."""
+    n = 16
+    a, _, _, valid = make_instance(5, n, 0.5, pad=0)
+    oh = np.eye(n, dtype=np.float32)
+    pos, neg = model.cost_eval(a, oh, valid, tile=8)
+    assert float(pos) == float(a.sum() / 2)
+    assert float(neg) == 0.0
+
+
+def test_one_big_cluster_costs_all_negative_pairs():
+    """Single cluster: every implicit negative pair disagrees."""
+    n = 16
+    a, _, _, valid = make_instance(9, n, 0.5, pad=0)
+    oh = np.zeros((n, n), dtype=np.float32)
+    oh[:, 0] = 1.0
+    pos, neg = model.cost_eval(a, oh, valid, tile=8)
+    total_pairs = n * (n - 1) / 2
+    assert float(pos) == 0.0
+    assert float(neg) == total_pairs - float(a.sum() / 2)
+
+
+def test_export_registry_shapes():
+    reg = model.export_registry()
+    assert set(reg) == {"cost_eval", "cost_eval_batch", "triangles"}
+    n, b = model.AOT_N, model.AOT_BATCH
+    _, specs = reg["cost_eval_batch"]
+    assert tuple(specs[1].shape) == (b, n, n)

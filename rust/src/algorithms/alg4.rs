@@ -1,0 +1,181 @@
+//! Algorithm 4 / Theorem 26 — the paper's main algorithmic implication:
+//! high-degree vertices can be ignored.
+//!
+//! Given ε > 0 and arboricity bound λ, the vertices with degree above
+//! `8(1+ε)/ε · λ` become singletons; any α-approximate algorithm A runs
+//! on the remaining bounded-degree subgraph (max degree ≤ 8(1+ε)λ/ε);
+//! the union is a `max{1+ε, α}`-approximation.
+//!
+//! The module also exposes the Theorem 26 edge-accounting helpers used by
+//! the unit tests to validate Equation (1) (`|M⁺| ≤ Σ_{v∈H} d⁺(v) ≤ 2|M⁺|`,
+//! Figure 5) — the identity at the heart of the proof.
+
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+
+/// Degree threshold of Theorem 26: `8(1+ε)/ε · λ`.
+pub fn degree_threshold(lambda: usize, eps: f64) -> f64 {
+    assert!(eps > 0.0, "ε must be positive");
+    8.0 * (1.0 + eps) / eps * lambda as f64
+}
+
+/// Split the vertex set into high-degree H and the kept subgraph G'.
+/// Returns (keep mask, H as vertex list).
+pub fn split_high_degree(g: &Graph, lambda: usize, eps: f64) -> (Vec<bool>, Vec<u32>) {
+    let thr = degree_threshold(lambda, eps);
+    let mut keep = vec![true; g.n()];
+    let mut high = Vec::new();
+    for v in 0..g.n() as u32 {
+        if g.degree(v) as f64 > thr {
+            keep[v as usize] = false;
+            high.push(v);
+        }
+    }
+    (keep, high)
+}
+
+/// Edge partition of the Theorem 26 proof: positive edges incident to H
+/// (`M⁺`) vs. unmarked (`U`). Negative marked edges `M⁻` are implicit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeAccounting {
+    /// |M⁺| — positive edges with ≥ 1 endpoint in H.
+    pub marked_positive: u64,
+    /// Σ_{v∈H} d⁺(v) — the double-counting sum of Equation (1).
+    pub degree_sum_h: u64,
+    /// |U ∩ E⁺| — positive edges with no endpoint in H.
+    pub unmarked_positive: u64,
+}
+
+pub fn edge_accounting(g: &Graph, keep: &[bool]) -> EdgeAccounting {
+    let mut marked = 0u64;
+    let mut unmarked = 0u64;
+    let mut dsum = 0u64;
+    for (u, v) in g.edges() {
+        if keep[u as usize] && keep[v as usize] {
+            unmarked += 1;
+        } else {
+            marked += 1;
+        }
+    }
+    for v in 0..g.n() as u32 {
+        if !keep[v as usize] {
+            dsum += g.degree(v) as u64;
+        }
+    }
+    EdgeAccounting { marked_positive: marked, degree_sum_h: dsum, unmarked_positive: unmarked }
+}
+
+/// Run Algorithm 4: singletons for H, `inner` on the compacted G', union.
+///
+/// `inner` receives the compacted subgraph and must return a clustering of
+/// it; its vertex ids are positions in the returned `old_ids` mapping.
+pub fn alg4<F>(g: &Graph, lambda: usize, eps: f64, inner: F) -> Clustering
+where
+    F: FnOnce(&Graph) -> Clustering,
+{
+    let (keep, _high) = split_high_degree(g, lambda, eps);
+    let (sub, old_ids) = g.induced_compact(&keep);
+    let sub_clustering = inner(&sub);
+    assert_eq!(sub_clustering.n(), sub.n(), "inner clustering size mismatch");
+    // Start from all-singletons (covers H), then merge A(G').
+    let mut out = Clustering::singletons(g.n());
+    out.merge_subclustering(&sub_clustering, &old_ids);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pivot::pivot_random;
+    use crate::cluster::cost::cost;
+    use crate::cluster::exact::{exact_cost, MAX_EXACT_N};
+    use crate::graph::generators::{lambda_arboric, star};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threshold_matches_paper_examples() {
+        // ε = 2 (Corollary 28): threshold = 8·3/2·λ = 12λ.
+        assert_eq!(degree_threshold(1, 2.0), 12.0);
+        assert_eq!(degree_threshold(5, 2.0), 60.0);
+    }
+
+    #[test]
+    fn split_bounds_remaining_degree() {
+        let mut rng = Rng::new(120);
+        let g = star(100); // λ=1, hub degree 100
+        let (keep, high) = split_high_degree(&g, 1, 2.0);
+        assert_eq!(high, vec![0]);
+        let (sub, _) = g.induced_compact(&keep);
+        assert_eq!(sub.max_degree(), 0, "leaves are isolated after hub removal");
+        let _ = rng;
+    }
+
+    #[test]
+    fn equation_1_marked_edge_sandwich() {
+        // Figure 5 / Equation (1): |M⁺| ≤ Σ_{v∈H} d⁺(v) ≤ 2|M⁺|.
+        let mut rng = Rng::new(121);
+        for trial in 0..10 {
+            let g = lambda_arboric(200, 1 + trial % 4, &mut rng);
+            let lambda = 1 + trial % 4;
+            let (keep, high) = split_high_degree(&g, lambda, 0.5);
+            if high.is_empty() {
+                continue;
+            }
+            let acc = edge_accounting(&g, &keep);
+            assert!(acc.marked_positive <= acc.degree_sum_h, "trial {trial}");
+            assert!(acc.degree_sum_h <= 2 * acc.marked_positive, "trial {trial}");
+            assert_eq!(
+                acc.marked_positive + acc.unmarked_positive,
+                g.m() as u64,
+                "edge partition must cover E+"
+            );
+        }
+    }
+
+    #[test]
+    fn alg4_produces_valid_partition() {
+        let mut rng = Rng::new(122);
+        let g = lambda_arboric(150, 2, &mut rng);
+        let mut inner_rng = rng.fork(1);
+        let c = alg4(&g, 2, 2.0, |sub| pivot_random(sub, &mut inner_rng));
+        assert_eq!(c.n(), 150);
+        // High-degree vertices are singletons.
+        let (keep, high) = split_high_degree(&g, 2, 2.0);
+        let _ = keep;
+        for &h in &high {
+            let label = c.label(h);
+            let same = (0..150u32).filter(|&v| c.label(v) == label).count();
+            assert_eq!(same, 1, "high-degree vertex {h} must be a singleton");
+        }
+    }
+
+    #[test]
+    fn alg4_ratio_within_theorem_bound_on_small_instances() {
+        // With ε = 2 and exact inner solver, the union must be within
+        // max{1+ε, 1} = 3× OPT; in practice far closer.
+        let mut rng = Rng::new(123);
+        for trial in 0..8 {
+            let n = MAX_EXACT_N - 2;
+            let g = lambda_arboric(n, 1, &mut rng);
+            let opt = exact_cost(&g);
+            let c = alg4(&g, 1, 2.0, |sub| {
+                crate::cluster::exact::solve_exact(sub).0
+            });
+            let got = cost(&g, &c).total();
+            if opt == 0 {
+                assert_eq!(got, 0, "trial {trial}");
+            } else {
+                assert!(
+                    got as f64 <= 3.0 * opt as f64,
+                    "trial {trial}: {got} > 3 × {opt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ε must be positive")]
+    fn zero_eps_rejected() {
+        degree_threshold(1, 0.0);
+    }
+}

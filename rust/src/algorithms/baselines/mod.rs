@@ -1,0 +1,11 @@
+//! Distributed correlation-clustering baselines the paper compares
+//! against in §1.4: ParallelPivot (CDK, KDD'14) and C4 / ClusterWild!
+//! (PPORRJ, NeurIPS'15).
+
+pub mod c4;
+pub mod clusterwild;
+pub mod parallel_pivot;
+
+pub use c4::{c4, C4Run};
+pub use clusterwild::{clusterwild, ClusterWildRun};
+pub use parallel_pivot::{parallel_pivot, ParallelPivotRun};

@@ -1,0 +1,105 @@
+//! Forest specialization glue (Lemma 29 / Corollaries 27 & 31):
+//! matchings become clusterings, with the paper's cost identity
+//! `cost = (#non-isolated-structure pairs) − |M|` made checkable.
+//!
+//! Clustering rule: each matched pair is a 2-cluster; every unmatched
+//! vertex is a singleton.  On a forest, Corollary 27 says a *maximum*
+//! matching yields an optimum clustering, and Lemma 29 transfers an
+//! α-approximate matching into an α-approximate clustering.
+
+use crate::algorithms::matching::Matching;
+use crate::cluster::Clustering;
+
+/// Build the clustering induced by a matching.
+pub fn clustering_from_matching(n: usize, m: &Matching) -> Clustering {
+    let mut c = Clustering::singletons(n);
+    for &(u, v) in m {
+        let label = c.label(u);
+        c.set_label(v, label);
+    }
+    c
+}
+
+/// The paper's closed form for matching-based clustering cost on a forest
+/// with `edges` positive edges: every positive edge not inside a matched
+/// pair disagrees, negatives never do (clusters have ≤ 2 members joined
+/// by a positive edge): `cost = m − |M|`.
+pub fn matching_clustering_cost(edges: usize, matching_size: usize) -> u64 {
+    (edges - matching_size) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::matching::maximum::maximum_matching_forest;
+    use crate::cluster::cost::cost;
+    use crate::cluster::exact::exact_cost;
+    use crate::graph::generators::{path, random_forest, star};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cost_closed_form_matches() {
+        let mut rng = Rng::new(160);
+        for trial in 0..10 {
+            let g = random_forest(60, 0.85, &mut rng);
+            let m = maximum_matching_forest(&g);
+            let c = clustering_from_matching(g.n(), &m);
+            assert_eq!(
+                cost(&g, &c).total(),
+                matching_clustering_cost(g.m(), m.len()),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn corollary_27_maximum_matching_is_optimal() {
+        // On forests small enough for the exact solver, the maximum-
+        // matching clustering cost equals OPT.
+        let mut rng = Rng::new(161);
+        for trial in 0..15 {
+            let g = random_forest(12, 0.8, &mut rng);
+            let m = maximum_matching_forest(&g);
+            let c = clustering_from_matching(g.n(), &m);
+            assert_eq!(cost(&g, &c).total(), exact_cost(&g), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn star_and_path_forms() {
+        let g = star(5);
+        let m = maximum_matching_forest(&g);
+        let c = clustering_from_matching(g.n(), &m);
+        assert_eq!(cost(&g, &c).total(), 4); // k - 1
+
+        let p = path(4);
+        let mp = maximum_matching_forest(&p);
+        let cp = clustering_from_matching(p.n(), &mp);
+        assert_eq!(cost(&p, &cp).total(), 1);
+    }
+
+    #[test]
+    fn lemma_29_alpha_transfer() {
+        // If α|M| ≥ |M*| then matching-clustering cost ≤ α · OPT.
+        let mut rng = Rng::new(162);
+        for trial in 0..10 {
+            let g = random_forest(80, 0.9, &mut rng);
+            let mstar = maximum_matching_forest(&g);
+            if mstar.is_empty() {
+                continue;
+            }
+            // Use half the maximum matching as an artificial 2-approx.
+            let half: Matching = mstar.iter().copied().step_by(2).collect();
+            let alpha = mstar.len() as f64 / half.len() as f64;
+            let opt_cost = matching_clustering_cost(g.m(), mstar.len());
+            let half_cost = matching_clustering_cost(g.m(), half.len());
+            if opt_cost == 0 {
+                continue;
+            }
+            assert!(
+                half_cost as f64 <= alpha * opt_cost as f64 + 1e-9,
+                "trial {trial}: {half_cost} > {alpha} × {opt_cost}"
+            );
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Local-search refinement — an extension toward the paper's Question 3
+//! ("can one do strictly better than 3 in a distributed setting?").
+//!
+//! Best-move local search over single-vertex relocations: each pass, every
+//! vertex considers moving to the cluster of one of its positive
+//! neighbors (or to a fresh singleton) and takes the move with the best
+//! cost delta.  Deltas are computed locally in O(deg(v)) from cluster
+//! sizes and neighbor-label counts, so a pass is O(n + m) — and the
+//! *sequential-scan* variant below is exactly the kind of local update
+//! Lemma 25's proof performs (singleton extraction is one of the
+//! candidate moves).
+//!
+//! Used as (a) an ablation showing how much slack PIVOT leaves on real
+//! workloads and (b) a post-processing pass that preserves all structural
+//! guarantees (cost never increases).
+
+use crate::cluster::cost::cost;
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+
+/// Result with pass observability.
+#[derive(Debug, Clone)]
+pub struct LocalSearchRun {
+    pub clustering: Clustering,
+    pub passes: usize,
+    pub moves: usize,
+    pub initial_cost: u64,
+    pub final_cost: u64,
+}
+
+/// Refine `input` by single-vertex best moves until a pass makes no move
+/// or `max_passes` is hit. The cost never increases.
+pub fn local_search(g: &Graph, input: &Clustering, max_passes: usize) -> LocalSearchRun {
+    let n = g.n();
+    let norm = input.normalize();
+    let mut labels: Vec<u32> = norm.labels().to_vec();
+    let mut next_free = labels.iter().copied().max().map(|x| x + 1).unwrap_or(0);
+    let mut sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    for &l in &labels {
+        *sizes.entry(l).or_insert(0) += 1;
+    }
+
+    let initial_cost = cost(g, input).total();
+    let mut moves = 0usize;
+    let mut passes = 0usize;
+
+    for _ in 0..max_passes {
+        passes += 1;
+        let mut moved_this_pass = 0usize;
+        for v in 0..n as u32 {
+            let current = labels[v as usize];
+            // Count positive neighbors per adjacent cluster.
+            let mut nb_count: std::collections::HashMap<u32, u64> =
+                std::collections::HashMap::new();
+            for &u in g.neighbors(v) {
+                *nb_count.entry(labels[u as usize]).or_insert(0) += 1;
+            }
+            let deg_in_current = nb_count.get(&current).copied().unwrap_or(0);
+            let size_current = sizes[&current];
+            // Cost contribution of v in cluster C of size s with d
+            // positive neighbors inside: (deg - d) positive disagreements
+            // + (s - 1 - d) negative ones. The (deg) term is constant
+            // across candidate moves, so compare f(C) = (s-1) - 2d.
+            let f_current = (size_current - 1) as i64 - 2 * deg_in_current as i64;
+            // Candidates: neighbor clusters + a fresh singleton (f = 0).
+            let mut best_label = current;
+            let mut best_f = f_current;
+            if 0 < best_f {
+                best_label = u32::MAX; // singleton marker
+                best_f = 0;
+            }
+            for (&cand, &d) in &nb_count {
+                if cand == current {
+                    continue;
+                }
+                let s = sizes[&cand];
+                let f = s as i64 - 2 * d as i64; // joining: size becomes s+1
+                if f < best_f {
+                    best_f = f;
+                    best_label = cand;
+                }
+            }
+            if best_label != current {
+                let target = if best_label == u32::MAX {
+                    let fresh = next_free;
+                    next_free += 1;
+                    fresh
+                } else {
+                    best_label
+                };
+                *sizes.get_mut(&current).unwrap() -= 1;
+                *sizes.entry(target).or_insert(0) += 1;
+                labels[v as usize] = target;
+                moved_this_pass += 1;
+            }
+        }
+        moves += moved_this_pass;
+        if moved_this_pass == 0 {
+            break;
+        }
+    }
+
+    let clustering = Clustering::from_labels(labels);
+    let final_cost = cost(g, &clustering).total();
+    debug_assert!(final_cost <= initial_cost, "local search increased cost");
+    LocalSearchRun { clustering, passes, moves, initial_cost, final_cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pivot::pivot_random;
+    use crate::cluster::exact::exact_cost;
+    use crate::graph::generators::{clique, lambda_arboric, path};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn never_increases_cost() {
+        let mut rng = Rng::new(310);
+        for trial in 0..10 {
+            let g = lambda_arboric(200, 1 + trial % 3, &mut rng);
+            let start = pivot_random(&g, &mut rng);
+            let run = local_search(&g, &start, 20);
+            assert!(run.final_cost <= run.initial_cost, "trial {trial}");
+            assert_eq!(cost(&g, &run.clustering).total(), run.final_cost);
+        }
+    }
+
+    #[test]
+    fn merges_a_split_clique() {
+        // Start with a K6 split in two halves: local search should merge.
+        let g = clique(6);
+        let start = Clustering::from_labels(vec![0, 0, 0, 1, 1, 1]);
+        let run = local_search(&g, &start, 20);
+        assert_eq!(run.final_cost, 0);
+        assert_eq!(run.clustering.n_clusters(), 1);
+    }
+
+    #[test]
+    fn splits_a_bad_merge() {
+        // Two disjoint edges forced into one cluster: split to optimal.
+        let g = crate::graph::Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        let start = Clustering::single_cluster(4);
+        let run = local_search(&g, &start, 20);
+        assert_eq!(run.final_cost, 0);
+    }
+
+    #[test]
+    fn improves_toward_optimum_on_small_instances() {
+        let mut rng = Rng::new(311);
+        let mut at_opt = 0;
+        let trials = 15;
+        for _ in 0..trials {
+            let g = lambda_arboric(11, 2, &mut rng);
+            let opt = exact_cost(&g);
+            let start = pivot_random(&g, &mut rng);
+            let run = local_search(&g, &start, 30);
+            assert!(run.final_cost >= opt);
+            if run.final_cost == opt {
+                at_opt += 1;
+            }
+        }
+        assert!(at_opt >= trials / 2, "local search should often reach OPT: {at_opt}/{trials}");
+    }
+
+    #[test]
+    fn fixed_point_on_path_opt() {
+        let g = path(4);
+        let opt = Clustering::from_labels(vec![0, 0, 1, 1]);
+        let run = local_search(&g, &opt, 5);
+        assert_eq!(run.final_cost, 1);
+        assert_eq!(run.moves, 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Maximum matching on forests — exact, linear time.
+//!
+//! Corollary 27: on forests (λ = 1), clustering by a maximum matching is
+//! an *optimum* correlation clustering.  The classic greedy-leaf-peel is
+//! exact on forests: repeatedly take any leaf, match it to its neighbor,
+//! delete both.  (Exchange argument: some maximum matching matches every
+//! leaf's unique edge or leaves the leaf exposed — matching the leaf edge
+//! never hurts.)
+//!
+//! A vertex-DP variant is included as an independent implementation for
+//! cross-checking (tests assert both produce the same matching *size*).
+
+use crate::graph::Graph;
+
+/// A matching as a list of edges (u < v), pairwise vertex-disjoint.
+pub type Matching = Vec<(u32, u32)>;
+
+/// Check the matching property against a graph.
+pub fn is_matching(g: &Graph, m: &Matching) -> bool {
+    let mut used = std::collections::HashSet::new();
+    for &(u, v) in m {
+        if !g.has_edge(u, v) {
+            return false;
+        }
+        if !used.insert(u) || !used.insert(v) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Is `m` maximal (no free edge can be added)?
+pub fn is_maximal(g: &Graph, m: &Matching) -> bool {
+    let mut matched = vec![false; g.n()];
+    for &(u, v) in m {
+        matched[u as usize] = true;
+        matched[v as usize] = true;
+    }
+    g.edges().all(|(u, v)| matched[u as usize] || matched[v as usize])
+}
+
+/// Exact maximum matching on a forest via leaf peeling.
+///
+/// Panics if the graph contains a cycle (it is only exact on forests).
+pub fn maximum_matching_forest(g: &Graph) -> Matching {
+    let n = g.n();
+    let mut degree: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+    let mut removed = vec![false; n];
+    let mut matched = vec![false; n];
+    let mut matching = Vec::new();
+    // Queue of current leaves (degree 1 among the remaining graph).
+    let mut queue: std::collections::VecDeque<u32> =
+        (0..n as u32).filter(|&v| degree[v as usize] == 1).collect();
+    let mut processed = 0usize;
+
+    let remove = |v: u32,
+                      degree: &mut Vec<usize>,
+                      removed: &mut Vec<bool>,
+                      queue: &mut std::collections::VecDeque<u32>| {
+        removed[v as usize] = true;
+        for &u in g.neighbors(v) {
+            if !removed[u as usize] {
+                degree[u as usize] -= 1;
+                if degree[u as usize] == 1 {
+                    queue.push_back(u);
+                }
+            }
+        }
+    };
+
+    while let Some(leaf) = queue.pop_front() {
+        if removed[leaf as usize] || degree[leaf as usize] == 0 {
+            // Became isolated or already handled.
+            if !removed[leaf as usize] {
+                removed[leaf as usize] = true;
+            }
+            continue;
+        }
+        processed += 1;
+        // Its unique remaining neighbor.
+        let parent = g
+            .neighbors(leaf)
+            .iter()
+            .copied()
+            .find(|&u| !removed[u as usize])
+            .expect("leaf with degree 1 has a live neighbor");
+        matching.push(if leaf < parent { (leaf, parent) } else { (parent, leaf) });
+        matched[leaf as usize] = true;
+        matched[parent as usize] = true;
+        remove(leaf, &mut degree, &mut removed, &mut queue);
+        remove(parent, &mut degree, &mut removed, &mut queue);
+    }
+    let _ = processed;
+    // Cycle detection: in a forest, peeling exhausts all edges.
+    let leftover_edges = (0..n as u32)
+        .filter(|&v| !removed[v as usize])
+        .map(|v| g.neighbors(v).iter().filter(|&&u| !removed[u as usize]).count())
+        .sum::<usize>()
+        / 2;
+    assert_eq!(leftover_edges, 0, "maximum_matching_forest requires a forest (cycle found)");
+    matching
+}
+
+/// Independent check: maximum-matching *size* on a forest via rooted DP
+/// (`take[v]` = best matching in subtree if v is matched to a child,
+/// `skip[v]` = best if not).
+pub fn maximum_matching_size_dp(g: &Graph) -> usize {
+    let n = g.n();
+    let mut visited = vec![false; n];
+    let mut total = 0usize;
+    for root in 0..n as u32 {
+        if visited[root as usize] {
+            continue;
+        }
+        // Iterative post-order DFS.
+        let mut order = Vec::new();
+        let mut parent = vec![u32::MAX; n];
+        let mut stack = vec![root];
+        visited[root as usize] = true;
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &u in g.neighbors(v) {
+                if !visited[u as usize] {
+                    visited[u as usize] = true;
+                    parent[u as usize] = v;
+                    stack.push(u);
+                }
+            }
+        }
+        let mut take = vec![0i64; n]; // v matched to one child
+        let mut skip = vec![0i64; n]; // v unmatched
+        for &v in order.iter().rev() {
+            let mut sum_best = 0i64; // Σ max(take, skip) over children
+            let mut best_gain = i64::MIN; // best (skip_c + 1 - max_c)
+            for &c in g.neighbors(v) {
+                if parent[c as usize] != v {
+                    continue;
+                }
+                let m = take[c as usize].max(skip[c as usize]);
+                sum_best += m;
+                best_gain = best_gain.max(skip[c as usize] + 1 - m);
+            }
+            skip[v as usize] = sum_best;
+            take[v as usize] =
+                if best_gain == i64::MIN { 0 } else { sum_best + best_gain };
+        }
+        total += take[root as usize].max(skip[root as usize]) as usize;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{caterpillar, path, random_forest, random_tree, star};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn path_matchings() {
+        assert_eq!(maximum_matching_forest(&path(2)).len(), 1);
+        assert_eq!(maximum_matching_forest(&path(3)).len(), 1);
+        assert_eq!(maximum_matching_forest(&path(4)).len(), 2);
+        assert_eq!(maximum_matching_forest(&path(7)).len(), 3);
+    }
+
+    #[test]
+    fn star_matches_one() {
+        assert_eq!(maximum_matching_forest(&star(9)).len(), 1);
+    }
+
+    #[test]
+    fn caterpillar_matches_spine_count() {
+        // Each spine vertex can match one of its legs.
+        let g = caterpillar(5, 2);
+        assert_eq!(maximum_matching_forest(&g).len(), 5);
+    }
+
+    #[test]
+    fn peel_equals_dp_on_random_forests() {
+        let mut rng = Rng::new(130);
+        for trial in 0..20 {
+            let g = random_forest(80, 0.8, &mut rng);
+            let peel = maximum_matching_forest(&g);
+            assert!(is_matching(&g, &peel), "trial {trial}");
+            assert_eq!(peel.len(), maximum_matching_size_dp(&g), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn peel_result_is_maximal() {
+        let mut rng = Rng::new(131);
+        let g = random_tree(100, &mut rng);
+        let m = maximum_matching_forest(&g);
+        assert!(is_maximal(&g, &m), "a maximum matching is maximal");
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a forest")]
+    fn cycle_rejected() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        maximum_matching_forest(&g);
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        assert!(maximum_matching_forest(&Graph::empty(5)).is_empty());
+        assert_eq!(maximum_matching_size_dp(&Graph::empty(5)), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Matching algorithms for the forest (λ = 1) specialization
+//! (Corollaries 27, 29, 31):
+//!
+//! * [`maximum`] — exact maximum matching on forests (leaf peel + DP
+//!   cross-check);
+//! * [`maximal`] — randomized MPC maximal matching (2-approx);
+//! * [`approx`] — (1+ε)-approx via bounded-length augmenting paths.
+
+pub mod approx;
+pub mod maximal;
+pub mod maximum;
+
+pub use approx::{approx_matching, ApproxRun};
+pub use maximal::{maximal_matching, MaximalRun};
+pub use maximum::{is_matching, is_maximal, maximum_matching_forest, Matching};

@@ -1,0 +1,21 @@
+//! Every algorithm in the paper, plus its baselines.
+//!
+//! | Paper reference | Module |
+//! |---|---|
+//! | PIVOT (ACN'05) | [`pivot`] |
+//! | Randomized greedy MIS + Fischer–Noever instrumentation | [`greedy_mis`] |
+//! | Algorithms 1–3 (MPC greedy MIS, Theorem 24) | [`mpc_mis`] |
+//! | Algorithm 4 / Theorem 26 (high-degree filtering) | [`alg4`] |
+//! | Corollaries 27/29/31 (forest ⇒ matchings) | [`matching`], [`forest`] |
+//! | Corollary 32 (O(λ²) in O(1) rounds) | [`simple`] |
+//! | §1.4 baselines (ParallelPivot, C4, ClusterWild!) | [`baselines`] |
+
+pub mod alg4;
+pub mod baselines;
+pub mod forest;
+pub mod greedy_mis;
+pub mod local_search;
+pub mod matching;
+pub mod mpc_mis;
+pub mod pivot;
+pub mod simple;

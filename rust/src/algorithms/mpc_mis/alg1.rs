@@ -1,0 +1,249 @@
+//! Algorithm 1: the phase driver — greedy MIS in the sublinear-memory
+//! regime by prefix processing with degree halving (Lemma 22, Figure 3).
+//!
+//! Phase i processes the next `t_i = Θ(n log n / (Δ / 2^i))` vertices of
+//! π as a *prefix graph* (induced on still-alive prefix vertices; its max
+//! degree is O(log n) w.h.p. by Chernoff), using Algorithm 2 (Model 1) or
+//! Algorithm 3 (Model 2) as the subroutine.  Lemma 22 guarantees the
+//! residual graph's max degree halves per phase, so O(log Δ) phases
+//! suffice; the driver *measures* the residual degree each phase instead
+//! of assuming it (experiment E6).
+
+use crate::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params, Alg2Stats};
+use crate::algorithms::mpc_mis::alg3::{alg3_process, Alg3Params, Alg3Stats};
+use crate::graph::Graph;
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Which prefix-processing subroutine Algorithm 1 uses.
+#[derive(Debug, Clone)]
+pub enum Subroutine {
+    /// Algorithm 2 (graph shattering) — Model 1.
+    Alg2(Alg2Params),
+    /// Algorithm 3 (exponentiation + compression) — Model 2.
+    Alg3(Alg3Params),
+}
+
+impl Subroutine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Subroutine::Alg2(_) => "alg2",
+            Subroutine::Alg3(_) => "alg3",
+        }
+    }
+}
+
+/// Driver tunables.
+#[derive(Debug, Clone)]
+pub struct Alg1Params {
+    /// Prefix constant: t_i = c_prefix · n · log2(n) / (Δ/2^i).
+    pub c_prefix: f64,
+    pub subroutine: Subroutine,
+}
+
+impl Default for Alg1Params {
+    fn default() -> Self {
+        Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) }
+    }
+}
+
+/// Per-phase observability (Figure 3 / Lemma 22 data).
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: usize,
+    /// Number of π positions consumed this phase.
+    pub prefix_size: usize,
+    /// Max degree of the prefix graph (should be O(log n), Chernoff).
+    pub prefix_max_degree: usize,
+    /// Max degree among still-alive unprocessed vertices afterwards
+    /// (Lemma 22: ≤ Δ/2^{i+1} w.h.p.).
+    pub residual_max_degree: usize,
+    /// Rounds charged during this phase.
+    pub rounds: usize,
+}
+
+/// Result of an Algorithm 1 run.
+#[derive(Debug, Clone)]
+pub struct Alg1Run {
+    pub in_mis: Vec<bool>,
+    pub phases: Vec<PhaseStat>,
+    /// Max chunk-graph component sizes across all Alg2 invocations
+    /// (empty when Alg3 is the subroutine) — Lemma 18's quantity.
+    pub chunk_max_components: Vec<usize>,
+    pub alg3_stats: Vec<Alg3Stats>,
+}
+
+/// Run Algorithm 1: greedy MIS w.r.t. `perm`, counting rounds on `sim`.
+pub fn alg1_greedy_mis(
+    g: &Graph,
+    perm: &[u32],
+    params: &Alg1Params,
+    sim: &mut MpcSimulator,
+) -> Alg1Run {
+    let n = g.n();
+    assert_eq!(perm.len(), n);
+    let mut blocked = vec![false; n];
+    let mut in_mis = vec![false; n];
+    let mut run = Alg1Run {
+        in_mis: Vec::new(),
+        phases: Vec::new(),
+        chunk_max_components: Vec::new(),
+        alg3_stats: Vec::new(),
+    };
+    if n == 0 {
+        return run;
+    }
+
+    let delta0 = g.max_degree().max(2);
+    let logn = (n.max(2) as f64).log2();
+    let mut pos = 0usize;
+    let mut phase = 0usize;
+    while pos < n {
+        // Δ/2^i target for this phase (≥ 1).
+        let target_delta = ((delta0 as f64) / (1u64 << phase.min(62)) as f64).max(1.0);
+        let t_i =
+            (((params.c_prefix * n as f64 * logn) / target_delta).ceil() as usize).clamp(1, n - pos);
+        let order = &perm[pos..pos + t_i];
+        pos += t_i;
+
+        // Prefix-graph max degree (measured, for the Chernoff claim).
+        let alive_set: std::collections::HashSet<u32> =
+            order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
+        let prefix_max_degree = alive_set
+            .iter()
+            .map(|&v| g.neighbors(v).iter().filter(|u| alive_set.contains(u)).count())
+            .max()
+            .unwrap_or(0);
+
+        let rounds_before = sim.n_rounds();
+        match &params.subroutine {
+            Subroutine::Alg2(p) => {
+                let stats: Alg2Stats =
+                    alg2_process(g, order, &mut blocked, &mut in_mis, sim, p);
+                run.chunk_max_components.extend(stats.chunk_max_components);
+            }
+            Subroutine::Alg3(p) => {
+                let stats = alg3_process(g, order, &mut blocked, &mut in_mis, sim, p);
+                run.alg3_stats.push(stats);
+            }
+        }
+
+        // Residual degree among unprocessed alive vertices (Lemma 22).
+        let mut unprocessed = vec![false; n];
+        for &v in &perm[pos..] {
+            if !blocked[v as usize] {
+                unprocessed[v as usize] = true;
+            }
+        }
+        let residual_max_degree = (0..n as u32)
+            .filter(|&v| unprocessed[v as usize])
+            .map(|v| g.neighbors(v).iter().filter(|&&u| unprocessed[u as usize]).count())
+            .max()
+            .unwrap_or(0);
+
+        run.phases.push(PhaseStat {
+            phase,
+            prefix_size: t_i,
+            prefix_max_degree,
+            residual_max_degree,
+            rounds: sim.n_rounds() - rounds_before,
+        });
+        phase += 1;
+    }
+
+    run.in_mis = in_mis;
+    run
+}
+
+/// Baseline: direct Fischer–Noever simulation — one MPC round per
+/// parallel-greedy fixpoint iteration (O(log n) rounds w.h.p.). This is
+/// the "known" algorithm our Theorem 24 result is measured against.
+pub fn direct_simulation_mis(g: &Graph, perm: &[u32], sim: &mut MpcSimulator) -> Vec<bool> {
+    let (mis, iters) = crate::algorithms::greedy_mis::parallel_greedy_rounds(g, perm);
+    let max_deg = g.max_degree() as Words;
+    for i in 0..iters {
+        sim.round(&format!("direct[{i}]"), max_deg, max_deg, 2 * g.m() as Words, max_deg + 1);
+    }
+    mis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy_mis::greedy_mis;
+    use crate::graph::generators::{barabasi_albert, lambda_arboric};
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    fn m1_sim(g: &Graph) -> MpcSimulator {
+        MpcSimulator::new(MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5))
+    }
+
+    fn m2_sim(g: &Graph) -> MpcSimulator {
+        MpcSimulator::new(MpcConfig::model2(g.n(), (g.n() + 2 * g.m()) as Words, 0.5))
+    }
+
+    #[test]
+    fn alg1_with_alg2_matches_sequential() {
+        let mut rng = Rng::new(100);
+        for trial in 0..6 {
+            let g = lambda_arboric(200, 1 + trial % 3, &mut rng);
+            let perm = rng.permutation(200);
+            let mut sim = m1_sim(&g);
+            let run = alg1_greedy_mis(&g, &perm, &Alg1Params::default(), &mut sim);
+            assert_eq!(run.in_mis, greedy_mis(&g, &perm), "trial {trial}");
+            assert!(!run.phases.is_empty());
+        }
+    }
+
+    #[test]
+    fn alg1_with_alg3_matches_sequential() {
+        let mut rng = Rng::new(101);
+        let g = barabasi_albert(300, 3, &mut rng);
+        let perm = rng.permutation(300);
+        let mut sim = m2_sim(&g);
+        let params = Alg1Params {
+            c_prefix: 1.0,
+            subroutine: Subroutine::Alg3(Alg3Params::default()),
+        };
+        let run = alg1_greedy_mis(&g, &perm, &params, &mut sim);
+        assert_eq!(run.in_mis, greedy_mis(&g, &perm));
+    }
+
+    #[test]
+    fn residual_degree_decays() {
+        // Lemma 22's shape: residual degrees shrink phase over phase.
+        let mut rng = Rng::new(102);
+        let g = barabasi_albert(3000, 4, &mut rng);
+        let perm = rng.permutation(3000);
+        let mut sim = m1_sim(&g);
+        // Small prefixes to force several phases.
+        let params = Alg1Params { c_prefix: 0.02, ..Default::default() };
+        let run = alg1_greedy_mis(&g, &perm, &params, &mut sim);
+        assert!(run.phases.len() >= 3, "want multiple phases, got {}", run.phases.len());
+        let first = run.phases.first().unwrap().residual_max_degree;
+        let last = run.phases.last().unwrap().residual_max_degree;
+        assert!(last <= first, "residual degree should not grow: {first} -> {last}");
+        assert_eq!(run.in_mis, greedy_mis(&g, &perm));
+    }
+
+    #[test]
+    fn direct_simulation_matches_and_counts_rounds() {
+        let mut rng = Rng::new(103);
+        let g = lambda_arboric(150, 2, &mut rng);
+        let perm = rng.permutation(150);
+        let mut sim = m1_sim(&g);
+        let mis = direct_simulation_mis(&g, &perm, &mut sim);
+        assert_eq!(mis, greedy_mis(&g, &perm));
+        assert!(sim.n_rounds() >= 1);
+    }
+
+    #[test]
+    fn trivial_graphs() {
+        let g = Graph::empty(3);
+        let perm = vec![2u32, 0, 1];
+        let mut sim = m1_sim(&g);
+        let run = alg1_greedy_mis(&g, &perm, &Alg1Params::default(), &mut sim);
+        assert_eq!(run.in_mis, vec![true, true, true]);
+    }
+}

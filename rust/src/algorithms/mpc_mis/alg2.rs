@@ -1,0 +1,263 @@
+//! Algorithm 2: greedy MIS on a (prefix) graph via graph shattering,
+//! Model 1.
+//!
+//! The prefix's vertices are processed in π order in *chunks* whose size
+//! doubles every phase: `c_i = 2^i · n / (divisor · Δ')`.  Because a
+//! chunk is a uniform sample of the surviving vertices, the chunk graph's
+//! connected components are small (Lemma 18: O(log n) w.h.p. with the
+//! paper's constants), so every component can be gathered onto one
+//! machine by graph exponentiation in O(log log n) rounds (Lemma 19) and
+//! greedily resolved there in zero additional communication.
+//!
+//! Exactness: chunks partition the prefix by π rank, so resolving chunks
+//! in order with carried-over `blocked` state reproduces the sequential
+//! greedy MIS *exactly* — the paper's simulations are not approximations.
+//!
+//! Constants: the paper uses divisor 100 and 2000·log Δ chunks per phase
+//! "for a cleaner analysis".  Those are asymptotic-proof constants; the
+//! default here keeps the *subcritical sampling* property that drives
+//! Lemma 18 (expected sampled neighbors per vertex = 2/divisor < 1) with
+//! a smaller constant so measured round counts aren't constant-dominated.
+//! `Alg2Params::faithful()` restores the paper's literal constants.
+
+use crate::algorithms::greedy_mis::greedy_mis_on_subset;
+use crate::graph::components::UnionFind;
+use crate::graph::Graph;
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Tunable constants of Algorithm 2.
+#[derive(Debug, Clone)]
+pub struct Alg2Params {
+    /// Chunk size divisor: c_i = 2^i n / (divisor · Δ'). Must keep the
+    /// per-chunk sampling subcritical (divisor > 2).
+    pub divisor: f64,
+    /// Chunks per phase = ceil(iters_factor · log2 Δ').
+    pub iters_factor: f64,
+}
+
+impl Default for Alg2Params {
+    fn default() -> Self {
+        Alg2Params { divisor: 8.0, iters_factor: 4.0 }
+    }
+}
+
+impl Alg2Params {
+    /// The paper's literal constants (§Algorithm 2).
+    pub fn faithful() -> Self {
+        Alg2Params { divisor: 100.0, iters_factor: 2000.0 }
+    }
+}
+
+/// Per-run observability (feeds experiments E4/E5).
+#[derive(Debug, Clone, Default)]
+pub struct Alg2Stats {
+    /// Max connected-component size of each processed (nonempty) chunk
+    /// graph — the Lemma 18 quantity.
+    pub chunk_max_components: Vec<usize>,
+    /// Number of nonempty chunks processed.
+    pub chunks: usize,
+    /// Number of phases.
+    pub phases: usize,
+}
+
+/// Process `order` (vertices of a prefix, in π order) with Algorithm 2.
+/// `blocked`/`in_mis` carry global greedy state across prefixes.
+pub fn alg2_process(
+    g: &Graph,
+    order: &[u32],
+    blocked: &mut [bool],
+    in_mis: &mut [bool],
+    sim: &mut MpcSimulator,
+    params: &Alg2Params,
+) -> Alg2Stats {
+    let mut stats = Alg2Stats::default();
+    let nprefix = order.len();
+    if nprefix == 0 {
+        return stats;
+    }
+    // Δ' = max degree of the prefix graph (induced on currently-alive
+    // prefix vertices). Computing it is one aggregate (charged below).
+    let in_prefix: std::collections::HashSet<u32> =
+        order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
+    let delta_p = order
+        .iter()
+        .filter(|&&v| !blocked[v as usize])
+        .map(|&v| g.neighbors(v).iter().filter(|u| in_prefix.contains(u)).count())
+        .max()
+        .unwrap_or(0)
+        .max(1);
+    sim.round("alg2/degree-aggregate", 1, 1, nprefix as Words, 2);
+
+    let mut pos = 0usize;
+    let mut phase = 0u32;
+    while pos < nprefix {
+        let c_i = (((1u64 << phase.min(62)) as f64) * nprefix as f64
+            / (params.divisor * delta_p as f64))
+            .ceil()
+            .max(1.0) as usize;
+        let iters = ((params.iters_factor * (delta_p.max(2) as f64).log2()).ceil() as usize).max(1);
+        for _ in 0..iters {
+            if pos >= nprefix {
+                break;
+            }
+            let end = (pos + c_i).min(nprefix);
+            let chunk = &order[pos..end];
+            pos = end;
+            process_chunk(g, chunk, blocked, in_mis, sim, &mut stats);
+        }
+        stats.phases += 1;
+        phase += 1;
+    }
+    stats
+}
+
+/// Resolve one chunk: gather each connected component of the chunk graph
+/// on one machine (graph exponentiation — O(log(max component)) rounds),
+/// run greedy locally, then one round to publish the statuses.
+fn process_chunk(
+    g: &Graph,
+    chunk: &[u32],
+    blocked: &mut [bool],
+    in_mis: &mut [bool],
+    sim: &mut MpcSimulator,
+    stats: &mut Alg2Stats,
+) {
+    // Alive = not yet knocked out by earlier chunks/prefixes.
+    let alive: Vec<u32> = chunk.iter().copied().filter(|&v| !blocked[v as usize]).collect();
+    if alive.is_empty() {
+        // A chunk with no surviving vertices is known empty from π and the
+        // already-published statuses; no synchronous round is needed.
+        return;
+    }
+    // Chunk-local components (edges of g among alive chunk vertices).
+    let index: std::collections::HashMap<u32, u32> =
+        alive.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+    let mut uf = UnionFind::new(alive.len());
+    for (i, &v) in alive.iter().enumerate() {
+        for &u in g.neighbors(v) {
+            if let Some(&j) = index.get(&u) {
+                uf.union(i as u32, j as u32);
+            }
+        }
+    }
+    // Component sizes and memory footprint (topology words of the largest
+    // component: members + their chunk-internal adjacency).
+    let mut comp_size: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    let mut comp_words: std::collections::HashMap<u32, Words> = std::collections::HashMap::new();
+    for (i, &v) in alive.iter().enumerate() {
+        let root = uf.find(i as u32);
+        *comp_size.entry(root).or_insert(0) += 1;
+        let internal_deg =
+            g.neighbors(v).iter().filter(|u| index.contains_key(u)).count() as Words;
+        *comp_words.entry(root).or_insert(0) += 1 + internal_deg;
+    }
+    let max_comp = comp_size.values().copied().max().unwrap_or(1);
+    let max_words = comp_words.values().copied().max().unwrap_or(1);
+    stats.chunk_max_components.push(max_comp);
+    stats.chunks += 1;
+
+    // Graph exponentiation inside the chunk graph: radius doubles per
+    // round until it covers the largest component (diameter ≤ size).
+    let gather_rounds = ((max_comp.max(2) as f64).log2().ceil() as usize).max(1);
+    let total_words: Words = comp_words.values().sum();
+    for r in 0..gather_rounds {
+        sim.round(
+            &format!("alg2/gather[{r}]"),
+            max_words,
+            max_words,
+            total_words,
+            max_words,
+        );
+    }
+
+    // Local greedy resolution (no communication; arbitrary local compute
+    // is free in MPC) ...
+    greedy_mis_on_subset(g, chunk, blocked, in_mis);
+    // ... and one round to publish new statuses to all neighbors.
+    let max_deg = alive.iter().map(|&v| g.degree(v) as Words).max().unwrap_or(0);
+    let total_deg: Words = alive.iter().map(|&v| g.degree(v) as Words).sum();
+    sim.round("alg2/publish", max_deg, max_deg, total_deg, max_words);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy_mis::{greedy_mis, is_valid_mis};
+    use crate::graph::generators::lambda_arboric;
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    fn run_alg2(g: &Graph, perm: &[u32]) -> (Vec<bool>, Alg2Stats, usize) {
+        let cfg = MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; g.n()];
+        let mut in_mis = vec![false; g.n()];
+        let stats =
+            alg2_process(g, perm, &mut blocked, &mut in_mis, &mut sim, &Alg2Params::default());
+        (in_mis, stats, sim.n_rounds())
+    }
+
+    #[test]
+    fn matches_sequential_greedy_exactly() {
+        let mut rng = Rng::new(80);
+        for trial in 0..10 {
+            let g = lambda_arboric(150, 1 + trial % 4, &mut rng);
+            let perm = rng.permutation(150);
+            let expected = greedy_mis(&g, &perm);
+            let (got, _, _) = run_alg2(&g, &perm);
+            assert_eq!(got, expected, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn produces_valid_mis() {
+        let mut rng = Rng::new(81);
+        let g = lambda_arboric(300, 3, &mut rng);
+        let perm = rng.permutation(300);
+        let (mis, stats, rounds) = run_alg2(&g, &perm);
+        assert!(is_valid_mis(&g, &mis));
+        assert!(stats.chunks > 0);
+        assert!(rounds > 0);
+    }
+
+    #[test]
+    fn components_stay_small() {
+        // Lemma 18's shape: chunk components are O(log n)-ish. With the
+        // default subcritical divisor the max component should be far
+        // below the chunk size.
+        let mut rng = Rng::new(82);
+        let g = lambda_arboric(2000, 4, &mut rng);
+        let perm = rng.permutation(2000);
+        let (_, stats, _) = run_alg2(&g, &perm);
+        let max_comp = stats.chunk_max_components.iter().copied().max().unwrap_or(0);
+        assert!(max_comp <= 64, "component of size {max_comp} on n=2000");
+    }
+
+    #[test]
+    fn faithful_constants_also_exact() {
+        let mut rng = Rng::new(83);
+        let g = lambda_arboric(100, 2, &mut rng);
+        let perm = rng.permutation(100);
+        let expected = greedy_mis(&g, &perm);
+        let cfg = MpcConfig::model1(100, 700, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; 100];
+        let mut in_mis = vec![false; 100];
+        alg2_process(&g, &perm, &mut blocked, &mut in_mis, &mut sim, &Alg2Params::faithful());
+        assert_eq!(in_mis, expected);
+    }
+
+    #[test]
+    fn empty_prefix_noop() {
+        let g = Graph::empty(5);
+        let cfg = MpcConfig::model1(5, 10, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; 5];
+        let mut in_mis = vec![false; 5];
+        let stats =
+            alg2_process(&g, &[], &mut blocked, &mut in_mis, &mut sim, &Alg2Params::default());
+        assert_eq!(stats.chunks, 0);
+        assert_eq!(sim.n_rounds(), 0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Algorithm 3: greedy MIS via graph exponentiation + round compression,
+//! Model 2 (one machine per vertex).
+//!
+//! Every alive vertex gathers the largest R-hop ball that fits in its
+//! machine (Lemma 21 shows R ∈ O(log n / log Δ) fits when Δ^R ∈ O(n^δ)),
+//! then the parallel greedy fixpoint is simulated in *compressed* rounds:
+//! one MPC round advances R fixpoint iterations (a vertex's next-R-steps
+//! status is a function of its R-ball), plus one round to publish updated
+//! statuses (§2.1.4 steps 2–3).
+//!
+//! Exactness: the parallel fixpoint ("π-local minima join") computes the
+//! sequential greedy MIS; compression changes only the round schedule.
+
+use crate::algorithms::greedy_mis::ranks_from_permutation;
+use crate::graph::Graph;
+use crate::mpc::exponentiation::gather_balls;
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Tunables for Algorithm 3.
+#[derive(Debug, Clone)]
+pub struct Alg3Params {
+    /// Constant C in the gathered radius R = ⌈C · log n / log Δ'⌉
+    /// (Lemma 21 picks C so that Δ^R ∈ O(n^δ); the memory budget still
+    /// caps growth if the constant is too generous).
+    pub radius_constant: f64,
+    /// Hard cap on R regardless of the formula.
+    pub max_radius: usize,
+}
+
+impl Default for Alg3Params {
+    fn default() -> Self {
+        Alg3Params { radius_constant: 0.5, max_radius: 64 }
+    }
+}
+
+/// Observability for experiments.
+#[derive(Debug, Clone, Default)]
+pub struct Alg3Stats {
+    /// Radius actually gathered.
+    pub radius: usize,
+    /// Rounds spent gathering.
+    pub gather_rounds: usize,
+    /// Fixpoint iterations needed.
+    pub fixpoint_iters: usize,
+    /// Compressed simulation rounds charged.
+    pub simulate_rounds: usize,
+}
+
+/// Process `order` (prefix vertices in π order) with Algorithm 3.
+pub fn alg3_process(
+    g: &Graph,
+    order: &[u32],
+    blocked: &mut [bool],
+    in_mis: &mut [bool],
+    sim: &mut MpcSimulator,
+    params: &Alg3Params,
+) -> Alg3Stats {
+    let mut stats = Alg3Stats::default();
+    // Alive prefix vertices, with a compact relabeling for the fixpoint.
+    let alive: Vec<u32> = order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
+    if alive.is_empty() {
+        return stats;
+    }
+    let n = g.n();
+    let mut keep = vec![false; n];
+    for &v in &alive {
+        keep[v as usize] = true;
+    }
+    let (sub, old_id) = g.induced_compact(&keep);
+
+    // Rank of each sub-vertex = global π rank (prefix order preserved).
+    let global_rank = {
+        // order carries π order of the prefix; build rank over the prefix.
+        let mut r = vec![u32::MAX; n];
+        for (i, &v) in order.iter().enumerate() {
+            r[v as usize] = i as u32;
+        }
+        r
+    };
+    let sub_perm: Vec<u32> = {
+        // permutation of sub vertices sorted by global rank.
+        let mut idx: Vec<u32> = (0..sub.n() as u32).collect();
+        idx.sort_by_key(|&i| global_rank[old_id[i as usize] as usize]);
+        idx
+    };
+
+    // Step 1 (Model 2): every vertex gathers its R-hop ball, with
+    // R = ⌈C · log n / log Δ'⌉ (Lemma 21). Round cost, achieved radius
+    // and memory feasibility are *measured*, not assumed.
+    let delta_p = sub.max_degree().max(2) as f64;
+    let target_radius = ((params.radius_constant * (sub.n().max(2) as f64).log2()
+        / delta_p.log2())
+    .ceil() as usize)
+        .clamp(1, params.max_radius);
+    let targets: Vec<u32> = (0..sub.n() as u32).collect();
+    let balls = gather_balls(
+        &sub,
+        &targets,
+        target_radius,
+        sim.config.s_words,
+        sim,
+        "alg3/gather",
+    );
+    let radius = balls.radius.max(1);
+    stats.radius = radius;
+    stats.gather_rounds = balls.rounds;
+
+    // Steps 2–3: compressed parallel-greedy fixpoint: R iterations per
+    // compute round + 1 publish round.
+    let rank = ranks_from_permutation(&sub_perm);
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Undecided,
+        In,
+        Out,
+    }
+    let mut st = vec![St::Undecided; sub.n()];
+    let mut undecided = sub.n();
+    let max_ball_words: Words =
+        balls.balls.iter().map(|b| b.len() as Words).max().unwrap_or(1);
+    while undecided > 0 {
+        // One compressed MPC round = `radius` fixpoint iterations.
+        for _ in 0..radius {
+            if undecided == 0 {
+                break;
+            }
+            let mut joiners: Vec<u32> = Vec::new();
+            for v in 0..sub.n() as u32 {
+                if st[v as usize] != St::Undecided {
+                    continue;
+                }
+                let is_min = sub.neighbors(v).iter().all(|&u| {
+                    st[u as usize] != St::Undecided || rank[u as usize] > rank[v as usize]
+                });
+                if is_min {
+                    joiners.push(v);
+                }
+            }
+            for &v in &joiners {
+                st[v as usize] = St::In;
+                undecided -= 1;
+            }
+            for &v in &joiners {
+                for &u in sub.neighbors(v) {
+                    if st[u as usize] == St::Undecided {
+                        st[u as usize] = St::Out;
+                        undecided -= 1;
+                    }
+                }
+            }
+            stats.fixpoint_iters += 1;
+        }
+        // Compute round (simulate R steps inside gathered balls) …
+        sim.round(
+            "alg3/simulate",
+            max_ball_words,
+            max_ball_words,
+            sub.n() as Words,
+            max_ball_words,
+        );
+        // … plus the status-publication round.
+        let max_deg = sub.max_degree() as Words;
+        sim.round("alg3/publish", max_deg, max_deg, 2 * sub.m() as Words, max_ball_words);
+        stats.simulate_rounds += 2;
+    }
+
+    // Commit results to the global greedy state: MIS members first (so
+    // their neighbors' `blocked` flags are set), then sanity-check Outs.
+    for (i, &s) in st.iter().enumerate() {
+        if s == St::In {
+            let v = old_id[i];
+            in_mis[v as usize] = true;
+            for &u in g.neighbors(v) {
+                blocked[u as usize] = true;
+            }
+        }
+    }
+    for (i, &s) in st.iter().enumerate() {
+        match s {
+            St::In => {}
+            St::Out => debug_assert!(blocked[old_id[i] as usize]),
+            St::Undecided => unreachable!("fixpoint must decide everything"),
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy_mis::{greedy_mis, is_valid_mis};
+    use crate::graph::generators::{lambda_arboric, path};
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    fn run_alg3(g: &Graph, perm: &[u32]) -> (Vec<bool>, Alg3Stats, usize) {
+        let cfg = MpcConfig::model2(g.n(), (g.n() + 2 * g.m()) as Words, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; g.n()];
+        let mut in_mis = vec![false; g.n()];
+        let stats =
+            alg3_process(g, perm, &mut blocked, &mut in_mis, &mut sim, &Alg3Params::default());
+        (in_mis, stats, sim.n_rounds())
+    }
+
+    #[test]
+    fn matches_sequential_greedy_exactly() {
+        let mut rng = Rng::new(90);
+        for trial in 0..10 {
+            let g = lambda_arboric(150, 1 + trial % 4, &mut rng);
+            let perm = rng.permutation(150);
+            let expected = greedy_mis(&g, &perm);
+            let (got, _, _) = run_alg3(&g, &perm);
+            assert_eq!(got, expected, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn produces_valid_mis_and_counts_rounds() {
+        let mut rng = Rng::new(91);
+        let g = lambda_arboric(400, 2, &mut rng);
+        let perm = rng.permutation(400);
+        let (mis, stats, rounds) = run_alg3(&g, &perm);
+        assert!(is_valid_mis(&g, &mis));
+        assert!(stats.radius >= 1);
+        assert!(rounds >= stats.gather_rounds + stats.simulate_rounds);
+    }
+
+    #[test]
+    fn compression_reduces_rounds_vs_iters() {
+        // With a generous memory budget the gathered radius is large, so
+        // compressed rounds ≪ fixpoint iterations.
+        let mut rng = Rng::new(92);
+        let g = path(512);
+        let perm = rng.permutation(512);
+        let (_, stats, _) = run_alg3(&g, &perm);
+        assert!(stats.radius >= 4, "radius {}", stats.radius);
+        assert!(
+            stats.simulate_rounds <= 2 * (stats.fixpoint_iters / stats.radius + 1),
+            "simulate {} iters {} radius {}",
+            stats.simulate_rounds,
+            stats.fixpoint_iters,
+            stats.radius
+        );
+    }
+
+    #[test]
+    fn partial_prefix_then_rest_is_exact() {
+        let mut rng = Rng::new(93);
+        let g = lambda_arboric(120, 3, &mut rng);
+        let perm = rng.permutation(120);
+        let expected = greedy_mis(&g, &perm);
+        let cfg = MpcConfig::model2(120, 1000, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; 120];
+        let mut in_mis = vec![false; 120];
+        let (a, b) = perm.split_at(40);
+        alg3_process(&g, a, &mut blocked, &mut in_mis, &mut sim, &Alg3Params::default());
+        alg3_process(&g, b, &mut blocked, &mut in_mis, &mut sim, &Alg3Params::default());
+        assert_eq!(in_mis, expected);
+    }
+
+    #[test]
+    fn empty_input_noop() {
+        let g = Graph::empty(4);
+        let cfg = MpcConfig::model2(4, 8, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let mut blocked = vec![false; 4];
+        let mut in_mis = vec![false; 4];
+        let stats =
+            alg3_process(&g, &[], &mut blocked, &mut in_mis, &mut sim, &Alg3Params::default());
+        assert_eq!(stats.fixpoint_iters, 0);
+        assert_eq!(sim.n_rounds(), 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! MPC greedy-MIS pipeline (paper Section 3):
+//!
+//! * [`alg1`] — the phase driver with degree halving (Algorithm 1) and
+//!   the direct Fischer–Noever simulation baseline;
+//! * [`alg2`] — graph shattering subroutine, Model 1 (Algorithm 2);
+//! * [`alg3`] — exponentiation + round compression, Model 2 (Algorithm 3);
+//! * [`pivot_mpc`] — the MIS→PIVOT cluster-join wrapper (Corollary 28).
+
+pub mod alg1;
+pub mod alg2;
+pub mod alg3;
+pub mod pivot_mpc;
+
+pub use alg1::{alg1_greedy_mis, direct_simulation_mis, Alg1Params, Alg1Run, Subroutine};
+pub use alg2::Alg2Params;
+pub use alg3::Alg3Params;
+pub use pivot_mpc::{mpc_pivot, MpcPivotRun};

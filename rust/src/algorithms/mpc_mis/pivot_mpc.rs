@@ -1,0 +1,80 @@
+//! MPC PIVOT: Algorithm 1's greedy MIS plus the one-round cluster join —
+//! the algorithm behind Corollaries 13/28.
+
+use crate::algorithms::mpc_mis::alg1::{alg1_greedy_mis, Alg1Params, Alg1Run};
+use crate::algorithms::pivot::pivot_from_mis;
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Result of an MPC PIVOT run.
+#[derive(Debug, Clone)]
+pub struct MpcPivotRun {
+    pub clustering: Clustering,
+    pub mis_run: Alg1Run,
+    /// Total rounds including the cluster-join round.
+    pub rounds: usize,
+}
+
+/// Run PIVOT in the MPC model: simulate greedy MIS w.r.t. `perm` via
+/// Algorithm 1, then one more round in which every non-MIS vertex joins
+/// its earliest-in-π MIS neighbor.
+pub fn mpc_pivot(
+    g: &Graph,
+    perm: &[u32],
+    params: &Alg1Params,
+    sim: &mut MpcSimulator,
+) -> MpcPivotRun {
+    let mis_run = alg1_greedy_mis(g, perm, params, sim);
+    // Cluster-join round: each vertex hears the (rank, id) of MIS
+    // neighbors — one aggregate over edges.
+    let max_deg = g.max_degree() as Words;
+    sim.round("pivot/join", max_deg, max_deg, 2 * g.m() as Words, max_deg + 2);
+    let clustering = pivot_from_mis(g, perm, &mis_run.in_mis);
+    MpcPivotRun { clustering, mis_run, rounds: sim.n_rounds() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::mpc_mis::alg1::Subroutine;
+    use crate::algorithms::mpc_mis::alg3::Alg3Params;
+    use crate::algorithms::pivot::pivot;
+    use crate::graph::generators::lambda_arboric;
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mpc_pivot_equals_sequential_pivot() {
+        let mut rng = Rng::new(110);
+        for trial in 0..6 {
+            let g = lambda_arboric(180, 1 + trial % 3, &mut rng);
+            let perm = rng.permutation(180);
+            let cfg = MpcConfig::model1(180, (180 + 2 * g.m()) as Words, 0.5);
+            let mut sim = MpcSimulator::new(cfg);
+            let run = mpc_pivot(&g, &perm, &Alg1Params::default(), &mut sim);
+            assert_eq!(
+                run.clustering.normalize(),
+                pivot(&g, &perm).normalize(),
+                "trial {trial}: MPC PIVOT must equal sequential PIVOT"
+            );
+            assert_eq!(run.rounds, sim.n_rounds());
+        }
+    }
+
+    #[test]
+    fn model2_variant_also_exact() {
+        let mut rng = Rng::new(111);
+        let g = lambda_arboric(150, 2, &mut rng);
+        let perm = rng.permutation(150);
+        let cfg = MpcConfig::model2(150, (150 + 2 * g.m()) as Words, 0.5);
+        let mut sim = MpcSimulator::new(cfg);
+        let params = Alg1Params {
+            c_prefix: 1.0,
+            subroutine: Subroutine::Alg3(Alg3Params::default()),
+        };
+        let run = mpc_pivot(&g, &perm, &params, &mut sim);
+        assert_eq!(run.clustering.normalize(), pivot(&g, &perm).normalize());
+    }
+}

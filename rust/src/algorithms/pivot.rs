@@ -1,0 +1,180 @@
+//! PIVOT (Ailon–Charikar–Newman): the 3-approximation (in expectation)
+//! workhorse, in two equivalent forms.
+//!
+//! Sequential form: repeatedly pick the earliest unclustered vertex in π,
+//! cluster it with its unclustered positive neighbors.
+//!
+//! MIS form (the one the paper exploits): the pivots are exactly the
+//! greedy MIS with respect to π, and every non-pivot joins its
+//! *earliest-in-π* pivot neighbor.  [`pivot`] uses the direct form;
+//! [`pivot_from_mis`] derives the clustering from any (correct) greedy
+//! MIS — this is what the MPC pipeline uses after Algorithms 1–3 produce
+//! the MIS, and the tests assert the two forms coincide.
+
+use crate::algorithms::greedy_mis::{greedy_mis, ranks_from_permutation};
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Sequential PIVOT with respect to permutation π.
+pub fn pivot(g: &Graph, perm: &[u32]) -> Clustering {
+    assert_eq!(perm.len(), g.n());
+    let mut label = vec![u32::MAX; g.n()];
+    for &v in perm {
+        if label[v as usize] != u32::MAX {
+            continue;
+        }
+        label[v as usize] = v;
+        for &u in g.neighbors(v) {
+            if label[u as usize] == u32::MAX {
+                label[u as usize] = v;
+            }
+        }
+    }
+    Clustering::from_labels(label)
+}
+
+/// PIVOT with a fresh uniform-at-random permutation.
+pub fn pivot_random(g: &Graph, rng: &mut Rng) -> Clustering {
+    let perm = rng.permutation(g.n());
+    pivot(g, &perm)
+}
+
+/// Derive the PIVOT clustering from a greedy MIS (the cluster-join step of
+/// the MPC pipeline: one extra round in which every non-MIS vertex joins
+/// its earliest MIS neighbor).
+pub fn pivot_from_mis(g: &Graph, perm: &[u32], in_mis: &[bool]) -> Clustering {
+    let rank = ranks_from_permutation(perm);
+    let mut label = vec![u32::MAX; g.n()];
+    for v in 0..g.n() as u32 {
+        if in_mis[v as usize] {
+            label[v as usize] = v;
+        }
+    }
+    for v in 0..g.n() as u32 {
+        if in_mis[v as usize] {
+            continue;
+        }
+        let mut best: Option<u32> = None;
+        for &u in g.neighbors(v) {
+            if in_mis[u as usize]
+                && best.map(|b| rank[u as usize] < rank[b as usize]).unwrap_or(true)
+            {
+                best = Some(u);
+            }
+        }
+        // Maximality of the MIS guarantees a pivot neighbor exists.
+        let p = best.expect("non-MIS vertex without MIS neighbor: MIS not maximal");
+        label[v as usize] = p;
+    }
+    Clustering::from_labels(label)
+}
+
+/// Convenience: full sequential PIVOT expressed through the MIS path.
+pub fn pivot_via_mis(g: &Graph, perm: &[u32]) -> Clustering {
+    let mis = greedy_mis(g, perm);
+    pivot_from_mis(g, perm, &mis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost;
+    use crate::cluster::exact::exact_cost;
+    use crate::graph::generators::{clique, lambda_arboric, path, star};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pivot_equals_mis_form() {
+        let mut rng = Rng::new(70);
+        for trial in 0..20 {
+            let g = lambda_arboric(120, 1 + trial % 4, &mut rng);
+            let perm = rng.permutation(120);
+            assert_eq!(
+                pivot(&g, &perm).normalize(),
+                pivot_via_mis(&g, &perm).normalize(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn pivot_on_clique_is_one_cluster() {
+        let g = clique(8);
+        let mut rng = Rng::new(71);
+        let c = pivot_random(&g, &mut rng);
+        assert_eq!(c.n_clusters(), 1);
+        assert_eq!(cost(&g, &c).total(), 0);
+    }
+
+    #[test]
+    fn pivot_star_center_first() {
+        let g = star(6);
+        let mut perm = vec![0u32];
+        perm.extend(1..=6u32);
+        let c = pivot(&g, &perm);
+        assert_eq!(c.n_clusters(), 1);
+    }
+
+    #[test]
+    fn pivot_star_leaf_first() {
+        // Leaf pivot takes {leaf, center}; remaining leaves become
+        // singletons.
+        let g = star(6);
+        let mut perm: Vec<u32> = vec![1, 0];
+        perm.extend(2..=6u32);
+        let c = pivot(&g, &perm);
+        assert_eq!(c.n_clusters(), 6);
+        assert!(c.same_cluster(0, 1));
+    }
+
+    #[test]
+    fn expected_ratio_at_most_three_on_small_instances() {
+        // Monte-Carlo check of the 3-approximation (in expectation):
+        // mean PIVOT cost / OPT ≤ 3 with slack for sampling noise.
+        let mut rng = Rng::new(72);
+        for trial in 0..5 {
+            let g = lambda_arboric(11, 1 + trial % 3, &mut rng);
+            let opt = exact_cost(&g);
+            if opt == 0 {
+                continue;
+            }
+            let trials = 400;
+            let mean: f64 = (0..trials)
+                .map(|_| cost(&g, &pivot_random(&g, &mut rng)).total() as f64)
+                .sum::<f64>()
+                / trials as f64;
+            let ratio = mean / opt as f64;
+            assert!(ratio <= 3.3, "trial {trial}: mean ratio {ratio} > 3.3");
+        }
+    }
+
+    #[test]
+    fn path_identity_order() {
+        let g = path(4);
+        let c = pivot(&g, &[0, 1, 2, 3]);
+        // 0 clusters {0,1}; 2 clusters {2,3}.
+        assert!(c.same_cluster(0, 1));
+        assert!(c.same_cluster(2, 3));
+        assert_eq!(cost(&g, &c).total(), 1);
+    }
+
+    #[test]
+    fn clusters_are_pivot_neighborhood_subsets() {
+        let mut rng = Rng::new(73);
+        let g = lambda_arboric(100, 2, &mut rng);
+        let perm = rng.permutation(100);
+        let c = pivot(&g, &perm);
+        // Every cluster is {pivot} ∪ subset of N(pivot): diameter ≤ 2 in E+.
+        for members in c.members() {
+            if members.len() <= 1 {
+                continue;
+            }
+            // The pivot is the member adjacent to all others.
+            let has_center = members.iter().any(|&p| {
+                members.iter().all(|&u| u == p || g.has_edge(p, u))
+            });
+            assert!(has_center, "cluster {members:?} lacks a center");
+        }
+    }
+}

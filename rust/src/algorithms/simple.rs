@@ -1,0 +1,170 @@
+//! Corollary 32: the O(λ²)-approximate deterministic algorithm in O(1)
+//! MPC rounds.
+//!
+//! Rule: every connected component (w.r.t. E+) that is a clique becomes a
+//! cluster; all other vertices become singletons.  MPC implementation
+//! (as in the paper's proof): vertices with degree ≥ 2λ cannot be in any
+//! clique component (cliques in a λ-arboric graph have ≤ 2λ vertices), so
+//! after ignoring them the candidate components have bounded size; the
+//! clique test is two broadcast-tree aggregates (component id = min
+//! vertex id via convergecast; "is my neighborhood exactly the component"
+//! via sum) — O(1/δ) routed rounds, charged for real.
+
+use crate::cluster::Clustering;
+use crate::graph::components::{components, is_clique};
+use crate::graph::Graph;
+use crate::mpc::broadcast::{Aggregate, BroadcastTree};
+use crate::mpc::memory::Words;
+use crate::mpc::router::Router;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Result with round observability.
+#[derive(Debug, Clone)]
+pub struct SimpleRun {
+    pub clustering: Clustering,
+    pub rounds: usize,
+    /// Number of clique components clustered.
+    pub clique_clusters: usize,
+}
+
+/// Run the simple algorithm, charging its constant number of rounds.
+pub fn simple_clustering(g: &Graph, lambda: usize, sim: &mut MpcSimulator) -> SimpleRun {
+    let rounds_before = sim.n_rounds();
+    let n = g.n();
+    // Degree filter (one local round: degrees are known from input
+    // placement, broadcasting the λ threshold is part of setup).
+    let max_clique = 2 * lambda;
+    let keep: Vec<bool> = (0..n as u32).map(|v| g.degree(v) < max_clique).collect();
+    let filtered = g.induced_in_place(&keep);
+
+    // Component labels + clique checks (the O(1)-round MPC part; executed
+    // here centrally, charged as the broadcast-tree passes the proof
+    // prescribes: 2 convergecasts + 1 broadcast).
+    let comps = components(&filtered);
+    let members = comps.members();
+
+    let router = Router::new(sim.config.machines);
+    let tree = BroadcastTree::new(sim.config.machines, sim.config.s_words);
+    // Convergecast 1: global max component size (feasibility signal).
+    let mut per_machine = vec![0u64; sim.config.machines];
+    for (i, m) in members.iter().enumerate() {
+        per_machine[i % sim.config.machines] =
+            per_machine[i % sim.config.machines].max(m.len() as u64);
+    }
+    let _max_comp = tree.aggregate(sim, &router, &per_machine, Aggregate::Max);
+    // Broadcast: commit decision round.
+    tree.broadcast(sim, &router, 1);
+
+    let mut labels: Vec<u32> = (0..n as u32).collect();
+    let mut clique_clusters = 0usize;
+    for m in &members {
+        if m.len() >= 2 && m.len() <= max_clique && is_clique(&filtered, m) {
+            // All members keep[*] == true by construction of `filtered`;
+            // but a filtered vertex may have had edges to removed
+            // vertices — then its component in g is bigger and not a
+            // clique component of g. Check original degrees.
+            let genuine = m
+                .iter()
+                .all(|&v| keep[v as usize] && g.degree(v) == m.len() - 1);
+            if genuine {
+                let label = m[0];
+                for &v in m {
+                    labels[v as usize] = label;
+                }
+                clique_clusters += 1;
+            }
+        }
+    }
+    // Final status round (cluster labels to neighbors).
+    let max_deg = g.max_degree() as Words;
+    sim.round("simple/commit", max_deg.max(1), max_deg.max(1), 2 * g.m() as Words, max_deg + 1);
+
+    SimpleRun {
+        clustering: Clustering::from_labels(labels),
+        rounds: sim.n_rounds() - rounds_before,
+        clique_clusters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost;
+    use crate::cluster::exact::exact_cost;
+    use crate::graph::generators::{barbell, disjoint_cliques, lambda_arboric, path};
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    fn sim(g: &Graph) -> MpcSimulator {
+        MpcSimulator::new(MpcConfig::model1(
+            g.n().max(2),
+            (g.n() + 2 * g.m()).max(4) as Words,
+            0.5,
+        ))
+    }
+
+    #[test]
+    fn clique_components_become_clusters() {
+        let g = disjoint_cliques(4, 5); // λ(K5) = 3
+        let mut s = sim(&g);
+        let run = simple_clustering(&g, 3, &mut s);
+        assert_eq!(run.clique_clusters, 4);
+        assert_eq!(cost(&g, &run.clustering).total(), 0);
+    }
+
+    #[test]
+    fn non_cliques_become_singletons() {
+        let g = path(6);
+        let mut s = sim(&g);
+        let run = simple_clustering(&g, 1, &mut s);
+        // P6 is not a clique (except pairs are not components) ⇒ all
+        // singletons except... P6 is one non-clique component: singletons.
+        assert_eq!(run.clique_clusters, 0);
+        assert_eq!(cost(&g, &run.clustering).total(), g.m() as u64);
+    }
+
+    #[test]
+    fn pairs_are_cliques() {
+        // A single edge is a K2 component: clustered together.
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        let mut s = sim(&g);
+        let run = simple_clustering(&g, 1, &mut s);
+        assert!(run.clustering.same_cluster(0, 1));
+        assert_eq!(run.clique_clusters, 1);
+        assert_eq!(cost(&g, &run.clustering).total(), 0);
+    }
+
+    #[test]
+    fn constant_rounds() {
+        // Round count must not grow with n (the O(1) claim).
+        let mut rng = Rng::new(170);
+        let small = lambda_arboric(100, 2, &mut rng);
+        let large = lambda_arboric(5000, 2, &mut rng);
+        let mut s1 = sim(&small);
+        let r1 = simple_clustering(&small, 2, &mut s1).rounds;
+        let mut s2 = sim(&large);
+        let r2 = simple_clustering(&large, 2, &mut s2).rounds;
+        assert!(r2 <= r1 + 3, "rounds grew with n: {r1} -> {r2}");
+        assert!(r2 <= 12, "not constant: {r2}");
+    }
+
+    #[test]
+    fn barbell_ratio_is_lambda_squared_shape() {
+        // Remark 33 tightness: barbell K_λ–K_λ. OPT = 1; simple pays ≈ λ².
+        for lambda in [3usize, 5, 8] {
+            let g = barbell(lambda);
+            let mut s = sim(&g);
+            let run = simple_clustering(&g, lambda, &mut s);
+            let got = cost(&g, &run.clustering).total();
+            // The bridge makes the two cliques one non-clique component ⇒
+            // everything singleton ⇒ cost = m = 2·C(λ,2)+1 ≈ λ².
+            assert_eq!(got, g.m() as u64);
+            if 2 * lambda <= 12 {
+                let opt = exact_cost(&g);
+                assert_eq!(opt, 1);
+                let ratio = got as f64 / opt as f64;
+                assert!(ratio >= (lambda * (lambda - 1)) as f64, "ratio {ratio} too small");
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Timing harness: warmup, adaptive iteration count, robust statistics.
+//!
+//! The criterion replacement. Usage:
+//! ```ignore
+//! let m = bench("cost/sparse", || { cost(&g, &c); });
+//! println!("{m}");
+//! ```
+
+use crate::util::stats;
+use crate::util::timer::fmt_duration;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation (seconds).
+    pub mad_s: f64,
+    pub min_s: f64,
+    pub iterations: usize,
+    pub samples: usize,
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10}/iter ± {:>9} (min {:>10}, {} iters × {} samples)",
+            self.name,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mad_s),
+            fmt_duration(self.min_s),
+            self.iterations,
+            self.samples
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Minimum wall-clock time to spend measuring (seconds).
+    pub measure_s: f64,
+    /// Warmup time (seconds).
+    pub warmup_s: f64,
+    /// Number of sample groups for the median.
+    pub samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { measure_s: 0.6, warmup_s: 0.15, samples: 12 }
+    }
+}
+
+/// Quick preset for heavyweight end-to-end benches.
+pub fn quick() -> BenchConfig {
+    BenchConfig { measure_s: 0.25, warmup_s: 0.05, samples: 6 }
+}
+
+/// Run a benchmark with the default configuration.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Measurement {
+    bench_with(name, &BenchConfig::default(), f)
+}
+
+/// Run a benchmark.
+pub fn bench_with<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> Measurement {
+    // Warmup + iteration-count calibration.
+    let warm_start = std::time::Instant::now();
+    let mut calib_iters = 0usize;
+    while warm_start.elapsed().as_secs_f64() < cfg.warmup_s || calib_iters == 0 {
+        f();
+        calib_iters += 1;
+        if calib_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+    // Aim each sample group at measure_s / samples.
+    let group_target = cfg.measure_s / cfg.samples as f64;
+    let iters = ((group_target / per_iter.max(1e-9)).ceil() as usize).max(1);
+
+    let mut groups = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        groups.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        median_s: stats::median(&groups),
+        mad_s: stats::mad(&groups),
+        min_s: stats::min(&groups),
+        iterations: iters,
+        samples: cfg.samples,
+    }
+}
+
+/// Throughput helper: items/second at the median.
+pub fn throughput(m: &Measurement, items_per_iter: f64) -> f64 {
+    items_per_iter / m.median_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let m = bench_with(
+            "noop-ish",
+            &BenchConfig { measure_s: 0.05, warmup_s: 0.01, samples: 4 },
+            || {
+                x = x.wrapping_add(std::hint::black_box(1));
+            },
+        );
+        assert!(m.median_s >= 0.0);
+        assert!(m.iterations >= 1);
+        assert_eq!(m.samples, 4);
+    }
+
+    #[test]
+    fn throughput_inverts_time() {
+        let m = Measurement {
+            name: "t".into(),
+            median_s: 0.5,
+            mad_s: 0.0,
+            min_s: 0.5,
+            iterations: 1,
+            samples: 1,
+        };
+        assert_eq!(throughput(&m, 100.0), 200.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Micro-benchmark harness + shared experiment plumbing (criterion is
+//! unavailable offline; see DESIGN.md §2).
+//!
+//! * [`harness`] — warmup + timed iterations with median/MAD reporting;
+//! * [`workloads`] — the named graph-family × size sweeps the experiment
+//!   benches share, so every table is generated from the same instances.
+
+pub mod harness;
+pub mod report;
+pub mod workloads;

@@ -1,0 +1,103 @@
+//! Report aggregation: collect `reports/*.json` (written by the bench
+//! bins) into one markdown summary — the mechanical half of keeping
+//! EXPERIMENTS.md in sync with reruns.
+
+use std::path::Path;
+
+use crate::util::json::{parse, Json};
+
+/// One loaded report.
+#[derive(Debug)]
+pub struct Report {
+    pub name: String,
+    pub data: Json,
+}
+
+/// Load every `*.json` under `dir` (sorted by name for determinism).
+pub fn load_reports(dir: &Path) -> std::io::Result<Vec<Report>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let text = std::fs::read_to_string(&path)?;
+        match parse(&text) {
+            Ok(data) => out.push(Report {
+                name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+                data,
+            }),
+            Err(err) => eprintln!("warning: skipping {}: {err}", path.display()),
+        }
+    }
+    Ok(out)
+}
+
+/// Render all reports as a markdown document.
+pub fn render_markdown(reports: &[Report]) -> String {
+    let mut out = String::new();
+    out.push_str("# arbocc experiment reports\n\n");
+    out.push_str(&format!("{} report file(s) aggregated from `reports/`.\n", reports.len()));
+    for r in reports {
+        out.push_str(&format!("\n## {}\n\n", r.name));
+        match &r.data {
+            Json::Obj(map) => {
+                out.push_str("| key | value |\n|---|---|\n");
+                for (k, v) in map {
+                    let rendered = match v {
+                        Json::Num(x) => crate::util::table::fnum(*x),
+                        Json::Str(s) => s.clone(),
+                        Json::Bool(b) => b.to_string(),
+                        other => other.pretty().replace('\n', " "),
+                    };
+                    out.push_str(&format!("| {k} | {rendered} |\n"));
+                }
+            }
+            other => {
+                out.push_str("```json\n");
+                out.push_str(&other.pretty());
+                out.push_str("\n```\n");
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn loads_and_renders() {
+        let dir = std::env::temp_dir().join(format!("arbocc-report-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut j = Json::obj();
+        j.set("ratio", Json::num(2.5)).set("family", Json::str("ba-3"));
+        std::fs::write(dir.join("demo.json"), j.pretty()).unwrap();
+        std::fs::write(dir.join("broken.json"), "{not json").unwrap();
+        std::fs::write(dir.join("ignored.txt"), "x").unwrap();
+
+        let reports = load_reports(&dir).unwrap();
+        assert_eq!(reports.len(), 1, "only the valid json loads");
+        let md = render_markdown(&reports);
+        assert!(md.contains("## demo"));
+        assert!(md.contains("| ratio | 2.500 |"), "got:\n{md}");
+        assert!(md.contains("| family | ba-3 |"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_ok() {
+        let dir = std::env::temp_dir().join("arbocc-report-test-none");
+        let reports = load_reports(&dir).unwrap();
+        assert!(reports.is_empty());
+        let md = render_markdown(&reports);
+        assert!(md.contains("0 report file(s)"));
+    }
+}

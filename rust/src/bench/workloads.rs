@@ -1,0 +1,89 @@
+//! Shared experiment workloads: named family × size sweeps with
+//! deterministic per-cell seeds, so every bench table is regenerated from
+//! identical instances.
+
+use crate::graph::generators::Family;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// One cell of a sweep.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub family: Family,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    pub fn name(&self) -> String {
+        format!("{}/n={}", self.family.name(), self.n)
+    }
+
+    pub fn generate(&self) -> Graph {
+        let mut rng = Rng::new(self.seed);
+        self.family.generate(self.n, &mut rng)
+    }
+
+    /// RNG stream for algorithm randomness on this workload (decorrelated
+    /// from the generator stream).
+    pub fn algo_rng(&self, trial: u64) -> Rng {
+        Rng::new(self.seed ^ 0xA11C0DE ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+/// The standard family set for clustering experiments (bounded-arboricity
+/// focus of the paper).
+pub fn clustering_families() -> Vec<Family> {
+    vec![
+        Family::Forest,
+        Family::LambdaArboric(2),
+        Family::LambdaArboric(4),
+        Family::LambdaArboric(8),
+        Family::BarabasiAlbert(3),
+        Family::Grid,
+    ]
+}
+
+/// Build a sweep: all families × all sizes, seeds derived from a base.
+pub fn sweep(families: &[Family], sizes: &[usize], base_seed: u64) -> Vec<Workload> {
+    let mut out = Vec::new();
+    for (fi, &family) in families.iter().enumerate() {
+        for (si, &n) in sizes.iter().enumerate() {
+            out.push(Workload {
+                family,
+                n,
+                seed: base_seed
+                    .wrapping_add((fi as u64) << 32)
+                    .wrapping_add((si as u64) << 16)
+                    .wrapping_add(1),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let s1 = sweep(&clustering_families(), &[100, 1000], 7);
+        let s2 = sweep(&clustering_families(), &[100, 1000], 7);
+        assert_eq!(s1.len(), s2.len());
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.seed, b.seed);
+            let ga = a.generate();
+            let gb = b.generate();
+            assert_eq!(ga.n(), gb.n());
+            assert_eq!(ga.m(), gb.m());
+        }
+    }
+
+    #[test]
+    fn workload_names_unique() {
+        let s = sweep(&clustering_families(), &[64, 256], 3);
+        let names: std::collections::HashSet<String> = s.iter().map(|w| w.name()).collect();
+        assert_eq!(names.len(), s.len());
+    }
+}

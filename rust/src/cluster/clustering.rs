@@ -1,0 +1,208 @@
+//! Clustering representation: a partition of `V` as a label vector.
+//!
+//! The paper's clustering `C = {C_1, ..., C_r}` is stored as
+//! `label[v] = cluster id of v`.  Any `u32` ids are accepted;
+//! [`Clustering::normalize`] canonicalizes to `[0, r)` ordered by first
+//! appearance, which makes clusterings comparable across algorithms.
+
+/// A partition of the vertex set, by labels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Clustering {
+    labels: Vec<u32>,
+}
+
+impl Clustering {
+    pub fn from_labels(labels: Vec<u32>) -> Clustering {
+        Clustering { labels }
+    }
+
+    /// All-singletons clustering.
+    pub fn singletons(n: usize) -> Clustering {
+        Clustering { labels: (0..n as u32).collect() }
+    }
+
+    /// Everything in one cluster.
+    pub fn single_cluster(n: usize) -> Clustering {
+        Clustering { labels: vec![0; n] }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn label(&self, v: u32) -> u32 {
+        self.labels[v as usize]
+    }
+
+    #[inline]
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    #[inline]
+    pub fn same_cluster(&self, u: u32, v: u32) -> bool {
+        self.labels[u as usize] == self.labels[v as usize]
+    }
+
+    pub fn set_label(&mut self, v: u32, c: u32) {
+        self.labels[v as usize] = c;
+    }
+
+    /// Relabel clusters to `[0, r)` by order of first appearance.
+    ///
+    /// Perf note (§Perf L3-1): label ids produced by the algorithms are
+    /// vertex ids (< n), so the dense `Vec` remap fast path applies on
+    /// every hot call; the `HashMap` path only serves adversarial label
+    /// spaces.
+    pub fn normalize(&self) -> Clustering {
+        let n = self.labels.len();
+        let max = self.labels.iter().copied().max().unwrap_or(0) as usize;
+        if max <= 4 * n + 4 {
+            let mut map = vec![u32::MAX; max + 1];
+            let mut next = 0u32;
+            let labels = self
+                .labels
+                .iter()
+                .map(|&l| {
+                    let slot = &mut map[l as usize];
+                    if *slot == u32::MAX {
+                        *slot = next;
+                        next += 1;
+                    }
+                    *slot
+                })
+                .collect();
+            Clustering { labels }
+        } else {
+            let mut map = std::collections::HashMap::new();
+            let mut next = 0u32;
+            let labels = self
+                .labels
+                .iter()
+                .map(|&l| {
+                    *map.entry(l).or_insert_with(|| {
+                        let id = next;
+                        next += 1;
+                        id
+                    })
+                })
+                .collect();
+            Clustering { labels }
+        }
+    }
+
+    /// Number of distinct clusters.
+    pub fn n_clusters(&self) -> usize {
+        let set: std::collections::HashSet<u32> = self.labels.iter().copied().collect();
+        set.len()
+    }
+
+    /// Sizes keyed by normalized cluster id.
+    pub fn sizes(&self) -> Vec<usize> {
+        let norm = self.normalize();
+        let k = norm.n_clusters();
+        let mut sizes = vec![0usize; k];
+        for &l in &norm.labels {
+            sizes[l as usize] += 1;
+        }
+        sizes
+    }
+
+    pub fn max_cluster_size(&self) -> usize {
+        self.sizes().into_iter().max().unwrap_or(0)
+    }
+
+    /// Members of each cluster (normalized ids).
+    pub fn members(&self) -> Vec<Vec<u32>> {
+        let norm = self.normalize();
+        let mut out = vec![Vec::new(); norm.n_clusters()];
+        for (v, &l) in norm.labels.iter().enumerate() {
+            out[l as usize].push(v as u32);
+        }
+        out
+    }
+
+    /// Merge another clustering defined on a vertex subset into this one.
+    ///
+    /// `sub_old_ids[i]` is the original id of sub-vertex `i`; labels from
+    /// `sub` are offset to avoid collisions.  This is the Algorithm 4 /
+    /// Theorem 26 union step: `{{v} : v ∈ H} ∪ A(G')`.
+    pub fn merge_subclustering(&mut self, sub: &Clustering, sub_old_ids: &[u32]) {
+        assert_eq!(sub.n(), sub_old_ids.len());
+        let offset = self.labels.iter().copied().max().map(|x| x + 1).unwrap_or(0);
+        for (i, &old) in sub_old_ids.iter().enumerate() {
+            self.labels[old as usize] = offset + sub.label(i as u32);
+        }
+    }
+
+    /// Histogram of cluster sizes (index = size, value = #clusters).
+    pub fn size_histogram(&self) -> Vec<usize> {
+        let sizes = self.sizes();
+        let max = sizes.iter().copied().max().unwrap_or(0);
+        let mut h = vec![0usize; max + 1];
+        for s in sizes {
+            h[s] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_orders_by_first_appearance() {
+        let c = Clustering::from_labels(vec![7, 7, 2, 9, 2]);
+        let n = c.normalize();
+        assert_eq!(n.labels(), &[0, 0, 1, 2, 1]);
+        assert_eq!(c.n_clusters(), 3);
+    }
+
+    #[test]
+    fn sizes_and_histogram() {
+        let c = Clustering::from_labels(vec![0, 0, 1, 2, 2, 2]);
+        assert_eq!(c.sizes(), vec![2, 1, 3]);
+        assert_eq!(c.max_cluster_size(), 3);
+        let h = c.size_histogram();
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 1);
+        assert_eq!(h[3], 1);
+    }
+
+    #[test]
+    fn singletons_and_single() {
+        assert_eq!(Clustering::singletons(4).n_clusters(), 4);
+        assert_eq!(Clustering::single_cluster(4).n_clusters(), 1);
+    }
+
+    #[test]
+    fn members_partition_vertices() {
+        let c = Clustering::from_labels(vec![5, 5, 3, 3, 8]);
+        let mem = c.members();
+        let total: usize = mem.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(mem[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn merge_subclustering_unions() {
+        // 5 vertices; vertices 1 and 3 were "low degree" and clustered
+        // together by the inner algorithm; others are singletons.
+        let mut c = Clustering::singletons(5);
+        let sub = Clustering::from_labels(vec![0, 0]);
+        c.merge_subclustering(&sub, &[1, 3]);
+        assert!(c.same_cluster(1, 3));
+        assert!(!c.same_cluster(0, 1));
+        assert_eq!(c.n_clusters(), 4);
+    }
+
+    #[test]
+    fn same_cluster_reflexive() {
+        let c = Clustering::from_labels(vec![1, 2, 1]);
+        assert!(c.same_cluster(0, 2));
+        assert!(!c.same_cluster(0, 1));
+    }
+}

@@ -1,0 +1,155 @@
+//! Disagreement cost of a clustering on a complete signed graph, O(n + m).
+//!
+//! For positive-edge graph `G = (V, E+)` (negatives implicit) and
+//! clustering `C`:
+//!
+//! * positive disagreements = #{ {u,v} ∈ E+ : C(u) != C(v) }
+//! * negative disagreements = Σ_C (|C| choose 2) − #intra-cluster
+//!   positive edges
+//!
+//! This sparse formula is the pure-Rust twin of the L1 dense kernel
+//! (`python/compile/kernels/disagreement.py`); the integration tests and
+//! the runtime's self-check assert they agree exactly.
+
+use crate::cluster::clustering::Clustering;
+use crate::graph::Graph;
+
+/// Disagreement breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cost {
+    pub positive: u64,
+    pub negative: u64,
+}
+
+impl Cost {
+    pub fn total(&self) -> u64 {
+        self.positive + self.negative
+    }
+}
+
+impl std::fmt::Display for Cost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (+{} / -{})", self.total(), self.positive, self.negative)
+    }
+}
+
+/// Compute the disagreement cost in O(n + m).
+///
+/// Perf note (§Perf L3-4): iterates the *directed* adjacency flat and
+/// halves the same-cluster count, instead of filtering `u < v` per entry
+/// — the branch-free scan is ~40% faster on scale-free CSR layouts.
+pub fn cost(g: &Graph, clustering: &Clustering) -> Cost {
+    assert_eq!(g.n(), clustering.n(), "clustering size mismatch");
+    let norm = clustering.normalize();
+    let labels = norm.labels();
+    let k = norm.n_clusters();
+    let mut sizes = vec![0u64; k];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    // Each undirected edge appears twice in the directed scan.
+    let mut intra2 = 0u64;
+    for v in 0..g.n() as u32 {
+        let lv = labels[v as usize];
+        for &u in g.neighbors(v) {
+            intra2 += (labels[u as usize] == lv) as u64;
+        }
+    }
+    let intra = intra2 / 2;
+    let cut = g.m() as u64 - intra;
+    let pairs: u64 = sizes.iter().map(|&s| s * (s - 1) / 2).sum();
+    Cost { positive: cut, negative: pairs - intra }
+}
+
+/// O(n^2) textbook reference used by tests and the exact solver.
+pub fn cost_brute(g: &Graph, clustering: &Clustering) -> Cost {
+    let n = g.n() as u32;
+    let mut positive = 0u64;
+    let mut negative = 0u64;
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let same = clustering.same_cluster(u, v);
+            let edge = g.has_edge(u, v);
+            if edge && !same {
+                positive += 1;
+            }
+            if !edge && same {
+                negative += 1;
+            }
+        }
+    }
+    Cost { positive, negative }
+}
+
+/// Agreements (the maximization objective): total pairs minus cost.
+pub fn agreements(g: &Graph, clustering: &Clustering) -> u64 {
+    let n = g.n() as u64;
+    let total_pairs = n * (n - 1) / 2;
+    total_pairs - cost(g, clustering).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{clique, lambda_arboric, path};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn singletons_cost_equals_m() {
+        let g = clique(6);
+        let c = Clustering::singletons(6);
+        let k = cost(&g, &c);
+        assert_eq!(k.positive, 15);
+        assert_eq!(k.negative, 0);
+    }
+
+    #[test]
+    fn single_cluster_costs_missing_pairs() {
+        let g = path(4); // 3 edges, 6 pairs
+        let c = Clustering::single_cluster(4);
+        let k = cost(&g, &c);
+        assert_eq!(k.positive, 0);
+        assert_eq!(k.negative, 3);
+    }
+
+    #[test]
+    fn clique_single_cluster_is_free() {
+        let g = clique(7);
+        let c = Clustering::single_cluster(7);
+        assert_eq!(cost(&g, &c).total(), 0);
+    }
+
+    #[test]
+    fn p4_optimal_cost_is_one() {
+        // Path a-b-c-d: cluster {a,b},{c,d} ⇒ only edge b-c disagrees.
+        let g = path(4);
+        let c = Clustering::from_labels(vec![0, 0, 1, 1]);
+        assert_eq!(cost(&g, &c).total(), 1);
+    }
+
+    #[test]
+    fn sparse_matches_brute_force() {
+        let mut rng = Rng::new(10);
+        for trial in 0..20 {
+            let g = lambda_arboric(30, 1 + trial % 3, &mut rng);
+            let labels: Vec<u32> = (0..30).map(|_| rng.index(8) as u32).collect();
+            let c = Clustering::from_labels(labels);
+            assert_eq!(cost(&g, &c), cost_brute(&g, &c), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn agreements_complement() {
+        let g = path(5);
+        let c = Clustering::from_labels(vec![0, 0, 1, 1, 2]);
+        let k = cost(&g, &c);
+        assert_eq!(agreements(&g, &c), 10 - k.total());
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn size_mismatch_panics() {
+        let g = path(4);
+        cost(&g, &Clustering::singletons(3));
+    }
+}

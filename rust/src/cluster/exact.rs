@@ -1,0 +1,189 @@
+//! Exact optimum correlation clustering by subset DP — ratio ground truth
+//! for small instances (n ≤ 14).
+//!
+//! Decomposition: writing `w(C) = pairs(C) − 2·posEdges(C)` for a cluster
+//! C, the total disagreement cost of a partition P is
+//!
+//! ```text
+//! cost(P) = m + Σ_{C ∈ P} w(C)
+//! ```
+//!
+//! (each intra-cluster positive edge cancels one positive disagreement and
+//! one negative-pair unit).  Minimizing Σ w(C) over partitions is the
+//! classic subset-DP: `best[S] = min over T ⊆ S, lowbit(S) ∈ T` of
+//! `w(T) + best[S \ T]`, O(3^n) time, O(2^n) space.
+
+use crate::cluster::clustering::Clustering;
+use crate::cluster::cost::{cost, Cost};
+use crate::graph::Graph;
+
+/// Hard cap: 3^14 ≈ 4.8M subset-pair steps, comfortably fast.
+pub const MAX_EXACT_N: usize = 14;
+
+/// Exact optimum clustering and its cost.
+pub fn solve_exact(g: &Graph) -> (Clustering, Cost) {
+    let n = g.n();
+    assert!(n <= MAX_EXACT_N, "exact solver capped at n={MAX_EXACT_N}, got {n}");
+    if n == 0 {
+        return (Clustering::from_labels(vec![]), Cost { positive: 0, negative: 0 });
+    }
+
+    // Adjacency bitmasks.
+    let adj: Vec<u32> = (0..n as u32)
+        .map(|v| g.neighbors(v).iter().fold(0u32, |acc, &u| acc | (1 << u)))
+        .collect();
+
+    let full = (1u32 << n) - 1;
+    // posEdges[s] = positive edges inside subset s, built incrementally:
+    // pos(s) = pos(s without lowbit) + |adj(lowbit) ∩ (s without lowbit)|.
+    let mut pos = vec![0i32; (full + 1) as usize];
+    for s in 1..=full {
+        let low = s.trailing_zeros() as usize;
+        let rest = s & (s - 1);
+        pos[s as usize] = pos[rest as usize] + (adj[low] & rest).count_ones() as i32;
+    }
+
+    // w(s) = pairs(s) - 2 pos(s).
+    let w = |s: u32| -> i32 {
+        let k = s.count_ones() as i32;
+        k * (k - 1) / 2 - 2 * pos[s as usize]
+    };
+
+    let mut best = vec![i32::MAX; (full + 1) as usize];
+    let mut choice = vec![0u32; (full + 1) as usize];
+    best[0] = 0;
+    for s in 1..=full {
+        let low = 1u32 << s.trailing_zeros();
+        // Enumerate submasks T of s that contain `low`.
+        let rest = s & !low;
+        let mut sub = rest;
+        loop {
+            let t = sub | low;
+            let cand = w(t).saturating_add(best[(s & !t) as usize]);
+            if cand < best[s as usize] {
+                best[s as usize] = cand;
+                choice[s as usize] = t;
+            }
+            if sub == 0 {
+                break;
+            }
+            sub = (sub - 1) & rest;
+        }
+    }
+
+    // Reconstruct.
+    let mut labels = vec![0u32; n];
+    let mut s = full;
+    let mut cid = 0u32;
+    while s != 0 {
+        let t = choice[s as usize];
+        let mut bits = t;
+        while bits != 0 {
+            let v = bits.trailing_zeros();
+            labels[v as usize] = cid;
+            bits &= bits - 1;
+        }
+        cid += 1;
+        s &= !t;
+    }
+    let clustering = Clustering::from_labels(labels);
+    let c = cost(g, &clustering);
+    debug_assert_eq!(
+        c.total() as i64,
+        g.m() as i64 + best[full as usize] as i64,
+        "DP objective and direct cost disagree"
+    );
+    (clustering, c)
+}
+
+/// Exact optimum cost only.
+pub fn exact_cost(g: &Graph) -> u64 {
+    solve_exact(g).1.total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost_brute;
+    use crate::graph::generators::{barbell, clique, disjoint_cliques, path, star};
+    use crate::graph::Graph;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clique_opt_is_zero() {
+        let g = clique(7);
+        let (c, k) = solve_exact(&g);
+        assert_eq!(k.total(), 0);
+        assert_eq!(c.n_clusters(), 1);
+    }
+
+    #[test]
+    fn disjoint_cliques_opt_is_zero() {
+        let g = disjoint_cliques(3, 4);
+        let (c, k) = solve_exact(&g);
+        assert_eq!(k.total(), 0);
+        assert_eq!(c.n_clusters(), 3);
+    }
+
+    #[test]
+    fn p3_opt_is_one() {
+        let (_, k) = solve_exact(&path(3));
+        assert_eq!(k.total(), 1);
+    }
+
+    #[test]
+    fn p4_opt_is_one() {
+        // Corollary 27: opt = (n-1) - maxmatching = 3 - 2 = 1.
+        let (c, k) = solve_exact(&path(4));
+        assert_eq!(k.total(), 1);
+        assert!(c.max_cluster_size() <= 2, "λ=1 ⇒ clusters ≤ 2 (Lemma 25)");
+    }
+
+    #[test]
+    fn star_opt_matches_matching_formula() {
+        // Star K_{1,k}: max matching = 1 ⇒ OPT = k - 1.
+        for k in 2..6 {
+            let g = star(k);
+            assert_eq!(exact_cost(&g), (k - 1) as u64, "star k={k}");
+        }
+    }
+
+    #[test]
+    fn barbell_opt_is_one() {
+        // Remark 33: cluster each K_λ, pay the bridge.
+        let g = barbell(5);
+        assert_eq!(exact_cost(&g), 1);
+    }
+
+    #[test]
+    fn exact_beats_every_random_clustering() {
+        let mut rng = Rng::new(30);
+        for trial in 0..10 {
+            let n = 8;
+            let edges: Vec<(u32, u32)> = (0..n as u32)
+                .flat_map(|u| ((u + 1)..n as u32).map(move |v| (u, v)))
+                .filter(|_| rng.bernoulli(0.4))
+                .collect();
+            let g = Graph::from_edges(n, &edges);
+            let (opt_c, opt_k) = solve_exact(&g);
+            assert_eq!(cost_brute(&g, &opt_c), opt_k, "trial {trial}");
+            for _ in 0..50 {
+                let labels: Vec<u32> = (0..n).map(|_| rng.index(n) as u32).collect();
+                let c = Clustering::from_labels(labels);
+                assert!(cost_brute(&g, &c).total() >= opt_k.total(), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_zero() {
+        assert_eq!(exact_cost(&Graph::empty(0)), 0);
+        assert_eq!(exact_cost(&Graph::empty(5)), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capped")]
+    fn oversize_panics() {
+        let _ = solve_exact(&Graph::empty(15));
+    }
+}

@@ -1,0 +1,154 @@
+//! Clustering-quality metrics beyond disagreement cost.
+//!
+//! Used by the community-detection (planted partition) experiment: when a
+//! ground-truth clustering exists, we can measure how well correlation
+//! clustering *recovers* it — the use-case the paper's introduction
+//! motivates (community detection, link prediction).
+
+use crate::cluster::Clustering;
+
+/// Pair-counting confusion between a predicted and a reference clustering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairConfusion {
+    /// Pairs together in both.
+    pub tt: u64,
+    /// Together in prediction, apart in reference.
+    pub tf: u64,
+    /// Apart in prediction, together in reference.
+    pub ft: u64,
+    /// Apart in both.
+    pub ff: u64,
+}
+
+/// Compute the pair confusion in O(n + Σ cluster-intersections) using
+/// the contingency table (not the naive O(n²) loop).
+pub fn pair_confusion(pred: &Clustering, truth: &Clustering) -> PairConfusion {
+    assert_eq!(pred.n(), truth.n());
+    let n = pred.n() as u64;
+    let p = pred.normalize();
+    let t = truth.normalize();
+    // Contingency counts.
+    let mut cont: std::collections::HashMap<(u32, u32), u64> = std::collections::HashMap::new();
+    for v in 0..pred.n() as u32 {
+        *cont.entry((p.label(v), t.label(v))).or_insert(0) += 1;
+    }
+    let mut p_sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    let mut t_sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    for v in 0..pred.n() as u32 {
+        *p_sizes.entry(p.label(v)).or_insert(0) += 1;
+        *t_sizes.entry(t.label(v)).or_insert(0) += 1;
+    }
+    let choose2 = |x: u64| x * x.saturating_sub(1) / 2;
+    let sum_cont: u64 = cont.values().map(|&c| choose2(c)).sum();
+    let sum_p: u64 = p_sizes.values().map(|&c| choose2(c)).sum();
+    let sum_t: u64 = t_sizes.values().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    let tt = sum_cont;
+    let tf = sum_p - sum_cont;
+    let ft = sum_t - sum_cont;
+    let ff = total - tt - tf - ft;
+    PairConfusion { tt, tf, ft, ff }
+}
+
+/// Rand index: fraction of vertex pairs on which the two clusterings
+/// agree (together-together or apart-apart). 1.0 = identical partitions.
+pub fn rand_index(pred: &Clustering, truth: &Clustering) -> f64 {
+    let c = pair_confusion(pred, truth);
+    let total = c.tt + c.tf + c.ft + c.ff;
+    if total == 0 {
+        return 1.0;
+    }
+    (c.tt + c.ff) as f64 / total as f64
+}
+
+/// Adjusted Rand index (Hubert–Arabie): Rand corrected for chance;
+/// 1.0 = identical, ~0 = random relabeling.
+pub fn adjusted_rand_index(pred: &Clustering, truth: &Clustering) -> f64 {
+    let c = pair_confusion(pred, truth);
+    let (tt, tf, ft, ff) = (c.tt as f64, c.tf as f64, c.ft as f64, c.ff as f64);
+    let total = tt + tf + ft + ff;
+    if total == 0.0 {
+        return 1.0;
+    }
+    let sum_p = tt + tf;
+    let sum_t = tt + ft;
+    let expected = sum_p * sum_t / total;
+    let max_index = (sum_p + sum_t) / 2.0;
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (tt - expected) / (max_index - expected)
+}
+
+/// Pairwise precision/recall/F1 of the "same cluster" relation.
+pub fn pairwise_f1(pred: &Clustering, truth: &Clustering) -> (f64, f64, f64) {
+    let c = pair_confusion(pred, truth);
+    let precision = if c.tt + c.tf == 0 { 1.0 } else { c.tt as f64 / (c.tt + c.tf) as f64 };
+    let recall = if c.tt + c.ft == 0 { 1.0 } else { c.tt as f64 / (c.tt + c.ft) as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    (precision, recall, f1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let a = Clustering::from_labels(vec![0, 0, 1, 1, 2]);
+        let b = Clustering::from_labels(vec![7, 7, 3, 3, 9]); // same partition
+        assert_eq!(rand_index(&a, &b), 1.0);
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        let (p, r, f1) = pairwise_f1(&a, &b);
+        assert_eq!((p, r, f1), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn disjoint_views_score_low() {
+        // Prediction: all singletons; truth: one big cluster.
+        let pred = Clustering::singletons(6);
+        let truth = Clustering::single_cluster(6);
+        let c = pair_confusion(&pred, &truth);
+        assert_eq!(c.tt, 0);
+        assert_eq!(c.ft, 15);
+        assert_eq!(rand_index(&pred, &truth), 0.0);
+        let (p, r, _) = pairwise_f1(&pred, &truth);
+        assert_eq!(p, 1.0); // vacuous precision
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn confusion_matches_brute_force() {
+        let pred = Clustering::from_labels(vec![0, 0, 1, 1, 1, 2, 2]);
+        let truth = Clustering::from_labels(vec![0, 1, 1, 1, 2, 2, 2]);
+        let c = pair_confusion(&pred, &truth);
+        // Brute force.
+        let (mut tt, mut tf, mut ft, mut ff) = (0u64, 0u64, 0u64, 0u64);
+        for u in 0..7u32 {
+            for v in (u + 1)..7 {
+                match (pred.same_cluster(u, v), truth.same_cluster(u, v)) {
+                    (true, true) => tt += 1,
+                    (true, false) => tf += 1,
+                    (false, true) => ft += 1,
+                    (false, false) => ff += 1,
+                }
+            }
+        }
+        assert_eq!(c, PairConfusion { tt, tf, ft, ff });
+    }
+
+    #[test]
+    fn ari_near_zero_for_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(42);
+        let n = 500;
+        let truth = Clustering::from_labels((0..n).map(|v| (v % 10) as u32).collect());
+        let pred = Clustering::from_labels((0..n).map(|_| rng.index(10) as u32).collect());
+        let ari = adjusted_rand_index(&pred, &truth);
+        assert!(ari.abs() < 0.05, "random ARI should be ~0, got {ari}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Correlation clustering core: partitions, disagreement costs, bad
+//! triangles, exact small-instance optima, and the Lemma 25 structural
+//! transform.
+
+pub mod clustering;
+pub mod cost;
+pub mod exact;
+pub mod metrics;
+pub mod structural;
+pub mod triangles;
+
+pub use clustering::Clustering;
+pub use cost::{cost, Cost};

@@ -1,0 +1,175 @@
+//! Lemma 25's structural transform, made executable.
+//!
+//! The paper proves: any clustering with a cluster of size ≥ 4λ−1 contains
+//! a vertex v* with internal positive degree ≤ 2λ−1, and moving v* to a
+//! singleton does not increase the cost.  Repeating yields an optimum
+//! clustering with all clusters ≤ 4λ−2.
+//!
+//! [`bound_cluster_sizes`] runs exactly that local-update procedure on an
+//! *arbitrary* input clustering.  It is both a component of experiments
+//! (E1 validates the lemma by transforming exact optima) and a usable
+//! post-processing pass (cost never increases, sizes become ≤ 4λ−2).
+
+use crate::cluster::clustering::Clustering;
+use crate::graph::Graph;
+
+/// Outcome of the transform.
+#[derive(Debug, Clone)]
+pub struct StructuralResult {
+    pub clustering: Clustering,
+    /// Number of vertices split off into singletons.
+    pub moves: usize,
+    /// Largest cluster size after the transform.
+    pub max_cluster_size: usize,
+}
+
+/// Apply Lemma 25's local updates until every cluster has size ≤ 4λ−2.
+///
+/// Each step picks, from any oversized cluster, a vertex of minimum
+/// internal positive degree.  The lemma guarantees that degree is
+/// ≤ 2λ−1 ≤ (|C|−1)/2, so the move cannot increase the cost; we assert
+/// the guarantee instead of trusting it.
+pub fn bound_cluster_sizes(g: &Graph, input: &Clustering, lambda: usize) -> StructuralResult {
+    assert!(lambda >= 1, "λ must be ≥ 1");
+    let limit = 4 * lambda - 2;
+    let norm = input.normalize();
+    let _n = g.n();
+    let mut labels: Vec<u32> = norm.labels().to_vec();
+    let mut next_label = labels.iter().copied().max().map(|x| x + 1).unwrap_or(0);
+
+    // members[c] = vertices currently in cluster c (tombstone-free vecs,
+    // rebuilt lazily when dirty).
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); next_label as usize];
+    for (v, &c) in labels.iter().enumerate() {
+        members[c as usize].push(v as u32);
+    }
+
+    let mut moves = 0usize;
+    let mut queue: std::collections::VecDeque<u32> =
+        (0..members.len() as u32).filter(|&c| members[c as usize].len() > limit).collect();
+
+    while let Some(c) = queue.pop_front() {
+        loop {
+            let cluster = &members[c as usize];
+            if cluster.len() <= limit {
+                break;
+            }
+            // Find v* minimizing internal positive degree.
+            let in_cluster: std::collections::HashSet<u32> = cluster.iter().copied().collect();
+            let (v_star, d_int) = cluster
+                .iter()
+                .map(|&v| {
+                    let d = g.neighbors(v).iter().filter(|u| in_cluster.contains(u)).count();
+                    (v, d)
+                })
+                .min_by_key(|&(_, d)| d)
+                .expect("oversized cluster is nonempty");
+            // Lemma 25's existence guarantee (contradiction argument via
+            // arboricity): the min internal degree is ≤ 2λ−1. Moving v*
+            // out removes (|C|−1−d_int) negative disagreements and adds
+            // d_int positive ones; non-increase needs d_int ≤ (|C|−1)/2.
+            assert!(
+                d_int <= 2 * lambda - 1,
+                "Lemma 25 violated: |C|={} min internal degree {} > 2λ-1={} — \
+                 is λ={lambda} really an upper bound on the arboricity?",
+                cluster.len(),
+                d_int,
+                2 * lambda - 1
+            );
+            debug_assert!(2 * d_int <= cluster.len() - 1);
+            // Execute the move.
+            let pos = members[c as usize].iter().position(|&x| x == v_star).unwrap();
+            members[c as usize].swap_remove(pos);
+            labels[v_star as usize] = next_label;
+            members.push(vec![v_star]);
+            next_label += 1;
+            moves += 1;
+        }
+    }
+
+    let clustering = Clustering::from_labels(labels);
+    let max_cluster_size = clustering.max_cluster_size();
+    StructuralResult { clustering, moves, max_cluster_size }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost;
+    use crate::cluster::exact::solve_exact;
+    use crate::graph::arboricity::estimate_arboricity;
+    use crate::graph::generators::{clique, lambda_arboric, random_tree};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transform_never_increases_cost_and_caps_sizes() {
+        let mut rng = Rng::new(40);
+        for lambda in [1usize, 2, 3] {
+            for trial in 0..10 {
+                let g = lambda_arboric(60, lambda, &mut rng);
+                // Adversarial start: everything in one cluster.
+                let start = Clustering::single_cluster(60);
+                let before = cost(&g, &start).total();
+                let res = bound_cluster_sizes(&g, &start, lambda);
+                let after = cost(&g, &res.clustering).total();
+                assert!(after <= before, "λ={lambda} trial={trial}: {after} > {before}");
+                assert!(
+                    res.max_cluster_size <= 4 * lambda - 2,
+                    "λ={lambda}: size {} > {}",
+                    res.max_cluster_size,
+                    4 * lambda - 2
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_optimum_stays_optimal_after_transform() {
+        // Lemma 25's statement: there EXISTS an optimum with bounded
+        // clusters; transforming an optimum must keep the cost equal.
+        let mut rng = Rng::new(41);
+        for trial in 0..10 {
+            let g = lambda_arboric(10, 1 + trial % 2, &mut rng);
+            let lambda = 1 + trial % 2;
+            let (opt, opt_cost) = solve_exact(&g);
+            let res = bound_cluster_sizes(&g, &opt, lambda);
+            assert_eq!(
+                cost(&g, &res.clustering).total(),
+                opt_cost.total(),
+                "transforming an optimum must preserve optimality"
+            );
+        }
+    }
+
+    #[test]
+    fn forest_clusters_capped_at_two() {
+        // λ=1 ⇒ limit = 2: the transform reduces any clustering of a
+        // forest to clusters of size ≤ 2 (matching Corollary 27's view).
+        let mut rng = Rng::new(42);
+        let g = random_tree(40, &mut rng);
+        let start = Clustering::single_cluster(40);
+        let res = bound_cluster_sizes(&g, &start, 1);
+        assert!(res.max_cluster_size <= 2);
+    }
+
+    #[test]
+    fn clique_within_limit_untouched() {
+        // K_6 is 3-arboric; limit 4·3−2 = 10 ≥ 6: nothing to do.
+        let g = clique(6);
+        let est = estimate_arboricity(&g);
+        let lambda = est.degeneracy.div_ceil(2).max(1) + 1; // ≥ true λ
+        let start = Clustering::single_cluster(6);
+        let res = bound_cluster_sizes(&g, &start, lambda);
+        assert_eq!(res.moves, 0);
+        assert_eq!(cost(&g, &res.clustering).total(), 0);
+    }
+
+    #[test]
+    fn already_small_clusters_noop() {
+        let mut rng = Rng::new(43);
+        let g = lambda_arboric(30, 2, &mut rng);
+        let start = Clustering::singletons(30);
+        let res = bound_cluster_sizes(&g, &start, 2);
+        assert_eq!(res.moves, 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Arboricity machinery: degeneracy (Matula–Beck peel) and Nash–Williams
+//! density witnesses.
+//!
+//! The paper's parameter λ is the arboricity of the positive-edge graph,
+//! `λ = max_S ⌈|E(S)|/(|S|-1)⌉`.  Computing λ exactly is a matroid-union
+//! problem; the standard practical sandwich is
+//!
+//! ```text
+//! density_lb  ≤  λ  ≤  degeneracy(G)  ≤  2λ - 1
+//! ```
+//!
+//! where `density_lb` is the best Nash–Williams density over the suffix
+//! subgraphs of the degeneracy order (each suffix is an induced subgraph,
+//! hence a valid witness).  The algorithms only need an O(λ) degree
+//! threshold, so any constant-factor estimate is sufficient — we report
+//! both ends of the sandwich.
+
+use crate::graph::csr::Graph;
+
+/// Result of the degeneracy peel.
+#[derive(Debug, Clone)]
+pub struct ArboricityEstimate {
+    /// Degeneracy d(G): the largest minimum degree over all subgraphs.
+    pub degeneracy: usize,
+    /// Best Nash–Williams density witness found: ⌈m_S / (|S|-1)⌉ maximized
+    /// over the peel-order suffixes. A certified *lower* bound on λ.
+    pub density_lower_bound: usize,
+    /// Peel order (smallest-degree-first removal order).
+    pub order: Vec<u32>,
+}
+
+impl ArboricityEstimate {
+    /// λ is within [density_lower_bound, degeneracy].
+    pub fn bounds(&self) -> (usize, usize) {
+        (self.density_lower_bound, self.degeneracy.max(self.density_lower_bound))
+    }
+}
+
+/// Matula–Beck bucket peel in O(n + m).
+pub fn estimate_arboricity(g: &Graph) -> ArboricityEstimate {
+    let n = g.n();
+    if n == 0 {
+        return ArboricityEstimate { degeneracy: 0, density_lower_bound: 0, order: vec![] };
+    }
+    let max_deg = g.max_degree();
+    let mut degree: Vec<usize> = (0..n as u32).map(|v| g.degree(v)).collect();
+    // Bucket queue keyed by current degree.
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); max_deg + 1];
+    for v in 0..n as u32 {
+        buckets[degree[v as usize]].push(v);
+    }
+    let mut removed = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut degeneracy = 0usize;
+    let mut cursor = 0usize;
+    for _ in 0..n {
+        // Find the lowest non-empty bucket; cursor can only have decreased
+        // by 1 per removal, so reset it down first.
+        while cursor > 0 && !buckets[cursor - 1].is_empty() {
+            cursor -= 1;
+        }
+        while buckets[cursor].is_empty() {
+            cursor += 1;
+        }
+        let v = loop {
+            let cand = buckets[cursor].pop().expect("bucket nonempty");
+            // Lazy deletion: entries may be stale (degree changed).
+            if !removed[cand as usize] && degree[cand as usize] == cursor {
+                break cand;
+            }
+            while buckets[cursor].is_empty() {
+                cursor += 1;
+            }
+        };
+        removed[v as usize] = true;
+        degeneracy = degeneracy.max(cursor);
+        order.push(v);
+        for &u in g.neighbors(v) {
+            if !removed[u as usize] {
+                let d = degree[u as usize];
+                degree[u as usize] = d - 1;
+                buckets[d - 1].push(u);
+            }
+        }
+    }
+
+    // Nash–Williams density over suffixes of the peel order: walk the
+    // order backwards, counting edges internal to the suffix.
+    let mut in_suffix = vec![false; n];
+    let mut suffix_edges = 0usize;
+    let mut best_density = 0usize;
+    let mut suffix_size = 0usize;
+    for &v in order.iter().rev() {
+        suffix_edges += g.neighbors(v).iter().filter(|&&u| in_suffix[u as usize]).count();
+        in_suffix[v as usize] = true;
+        suffix_size += 1;
+        if suffix_size >= 2 && suffix_edges > 0 {
+            let dens = suffix_edges.div_ceil(suffix_size - 1);
+            best_density = best_density.max(dens);
+        }
+    }
+
+    ArboricityEstimate { degeneracy, density_lower_bound: best_density, order }
+}
+
+/// Orient edges along the peel order (each vertex keeps the neighbors
+/// peeled after it): yields out-degree ≤ degeneracy, the standard
+/// bounded-out-degree orientation used for O(λ)-style arguments.
+pub fn peel_orientation(g: &Graph, est: &ArboricityEstimate) -> Vec<Vec<u32>> {
+    let n = g.n();
+    let mut rank = vec![0u32; n];
+    for (i, &v) in est.order.iter().enumerate() {
+        rank[v as usize] = i as u32;
+    }
+    let mut out = vec![Vec::new(); n];
+    for v in 0..n as u32 {
+        for &u in g.neighbors(v) {
+            if rank[u as usize] > rank[v as usize] {
+                out[v as usize].push(u);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{clique, grid, lambda_arboric, random_tree, star};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tree_estimates() {
+        let mut rng = Rng::new(1);
+        let t = random_tree(500, &mut rng);
+        let est = estimate_arboricity(&t);
+        assert_eq!(est.degeneracy, 1);
+        assert_eq!(est.density_lower_bound, 1);
+        assert_eq!(est.bounds(), (1, 1));
+    }
+
+    #[test]
+    fn clique_estimates() {
+        // K_k: degeneracy k-1, arboricity ⌈k/2⌉.
+        let g = clique(8);
+        let est = estimate_arboricity(&g);
+        assert_eq!(est.degeneracy, 7);
+        assert_eq!(est.density_lower_bound, 4); // 28 / 7 = 4
+    }
+
+    #[test]
+    fn grid_estimates() {
+        let g = grid(10, 10);
+        let est = estimate_arboricity(&g);
+        assert_eq!(est.degeneracy, 2);
+        assert!(est.density_lower_bound >= 1 && est.density_lower_bound <= 2);
+    }
+
+    #[test]
+    fn star_is_one_arboric() {
+        let est = estimate_arboricity(&star(50));
+        assert_eq!(est.degeneracy, 1);
+        assert_eq!(est.density_lower_bound, 1);
+    }
+
+    #[test]
+    fn lambda_arboric_sandwich() {
+        let mut rng = Rng::new(7);
+        for lambda in [1usize, 2, 3, 5] {
+            let g = lambda_arboric(400, lambda, &mut rng);
+            let est = estimate_arboricity(&g);
+            let (lo, hi) = est.bounds();
+            assert!(lo <= lambda, "density lb {lo} exceeds construction λ {lambda}");
+            assert!(hi >= lambda.min(2), "degeneracy {hi} too small for λ {lambda}");
+            assert!(hi <= 2 * lambda, "degeneracy {hi} above 2λ for λ {lambda}");
+        }
+    }
+
+    #[test]
+    fn orientation_bounded_by_degeneracy() {
+        let mut rng = Rng::new(9);
+        let g = lambda_arboric(300, 3, &mut rng);
+        let est = estimate_arboricity(&g);
+        let orient = peel_orientation(&g, &est);
+        let max_out = orient.iter().map(|o| o.len()).max().unwrap();
+        assert!(max_out <= est.degeneracy);
+        // Orientation covers each edge exactly once.
+        let total: usize = orient.iter().map(|o| o.len()).sum();
+        assert_eq!(total, g.m());
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let est = estimate_arboricity(&Graph::empty(0));
+        assert_eq!(est.bounds(), (0, 0));
+        let est1 = estimate_arboricity(&Graph::empty(5));
+        assert_eq!(est1.degeneracy, 0);
+    }
+}

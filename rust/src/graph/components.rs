@@ -1,0 +1,183 @@
+//! Connected components and clique detection — the substrate of the
+//! Corollary 32 "simple algorithm" (clique components become clusters).
+
+use crate::graph::csr::Graph;
+
+/// Component labelling of a graph.
+#[derive(Debug, Clone)]
+pub struct Components {
+    /// `label[v]` is the component id of v, in `[0, count)`.
+    pub label: Vec<u32>,
+    pub count: usize,
+}
+
+impl Components {
+    /// Vertices of each component.
+    pub fn members(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.count];
+        for (v, &c) in self.label.iter().enumerate() {
+            out[c as usize].push(v as u32);
+        }
+        out
+    }
+
+    /// Size of each component.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.count];
+        for &c in &self.label {
+            out[c as usize] += 1;
+        }
+        out
+    }
+
+    pub fn largest(&self) -> usize {
+        self.sizes().into_iter().max().unwrap_or(0)
+    }
+}
+
+/// BFS-based component labelling, O(n + m).
+pub fn components(g: &Graph) -> Components {
+    let n = g.n();
+    let mut label = vec![u32::MAX; n];
+    let mut count = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for start in 0..n as u32 {
+        if label[start as usize] != u32::MAX {
+            continue;
+        }
+        label[start as usize] = count;
+        queue.push_back(start);
+        while let Some(v) = queue.pop_front() {
+            for &u in g.neighbors(v) {
+                if label[u as usize] == u32::MAX {
+                    label[u as usize] = count;
+                    queue.push_back(u);
+                }
+            }
+        }
+        count += 1;
+    }
+    Components { label, count: count as usize }
+}
+
+/// Is the vertex set `vs` a clique in g? (Checks degrees first: in a
+/// clique of size k every member has >= k-1 neighbors inside.)
+pub fn is_clique(g: &Graph, vs: &[u32]) -> bool {
+    let k = vs.len();
+    if k <= 1 {
+        return true;
+    }
+    // Degree short-circuit: internal degree can't reach k-1 if total
+    // degree is below it.
+    if vs.iter().any(|&v| g.degree(v) < k - 1) {
+        return false;
+    }
+    let set: std::collections::HashSet<u32> = vs.iter().copied().collect();
+    for &v in vs {
+        let internal = g.neighbors(v).iter().filter(|u| set.contains(u)).count();
+        if internal < k - 1 {
+            return false;
+        }
+    }
+    true
+}
+
+/// Union-Find with path halving + union by size; used by the MPC
+/// connectivity primitives and matching algorithms.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    pub fn find(&mut self, mut v: u32) -> u32 {
+        while self.parent[v as usize] != v {
+            self.parent[v as usize] = self.parent[self.parent[v as usize] as usize];
+            v = self.parent[v as usize];
+        }
+        v
+    }
+
+    /// Union the sets of a and b; returns true if they were distinct.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+        true
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn set_size(&mut self, v: u32) -> usize {
+        let r = self.find(v);
+        self.size[r as usize] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{clique, disjoint_cliques, path};
+
+    #[test]
+    fn components_of_disjoint_cliques() {
+        let g = disjoint_cliques(3, 4);
+        let c = components(&g);
+        assert_eq!(c.count, 3);
+        assert_eq!(c.sizes(), vec![4, 4, 4]);
+        assert_eq!(c.largest(), 4);
+        for vs in c.members() {
+            assert!(is_clique(&g, &vs));
+        }
+    }
+
+    #[test]
+    fn path_is_single_component_not_clique() {
+        let g = path(5);
+        let c = components(&g);
+        assert_eq!(c.count, 1);
+        let vs: Vec<u32> = (0..5).collect();
+        assert!(!is_clique(&g, &vs));
+    }
+
+    #[test]
+    fn isolated_vertices_are_components_and_cliques() {
+        let g = Graph::empty(3);
+        let c = components(&g);
+        assert_eq!(c.count, 3);
+        assert!(is_clique(&g, &[0]));
+        assert!(is_clique(&g, &[]));
+    }
+
+    #[test]
+    fn clique_detection_positive() {
+        let g = clique(5);
+        assert!(is_clique(&g, &[0, 1, 2, 3, 4]));
+        assert!(is_clique(&g, &[1, 3]));
+    }
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new(6);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(1, 2));
+        assert!(!uf.union(0, 2));
+        assert!(uf.same(0, 2));
+        assert!(!uf.same(0, 3));
+        assert_eq!(uf.set_size(2), 3);
+        assert_eq!(uf.set_size(5), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Immutable CSR (compressed sparse row) undirected graph.
+//!
+//! This is the positive-edge graph `(V, E+)` of the paper's complete signed
+//! graph; negative edges are implicit (every non-adjacent vertex pair).
+//! Vertices are `u32` ids in `[0, n)`.  Every undirected edge {u, v} is
+//! stored twice (u→v and v→u); `m()` reports undirected edge count.
+
+/// CSR undirected graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    /// `offsets[v]..offsets[v+1]` indexes `neighbors` for vertex v.
+    offsets: Vec<usize>,
+    /// Concatenated sorted adjacency lists.
+    neighbors: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Self-loops are rejected,
+    /// duplicate edges are deduplicated.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            assert!(u != v, "self-loop {u}");
+            assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range n={n}");
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0);
+        for list in &mut adj {
+            list.sort_unstable();
+            list.dedup();
+            neighbors.extend_from_slice(list);
+            offsets.push(neighbors.len());
+        }
+        Graph { offsets, neighbors }
+    }
+
+    /// Build directly from CSR parts (used by generators that already
+    /// produce sorted unique adjacency).
+    pub fn from_csr(offsets: Vec<usize>, neighbors: Vec<u32>) -> Graph {
+        assert!(!offsets.is_empty());
+        assert_eq!(*offsets.last().unwrap(), neighbors.len());
+        Graph { offsets, neighbors }
+    }
+
+    /// Empty graph on n vertices.
+    pub fn empty(n: usize) -> Graph {
+        Graph { offsets: vec![0; n + 1], neighbors: Vec::new() }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Adjacency test via binary search (lists are sorted).
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Iterator over undirected edges (u < v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Induced subgraph on `keep`-marked vertices, **preserving vertex
+    /// ids** (dropped vertices become isolated).  This matches the paper's
+    /// operations (e.g. "remove high-degree vertices", "prefix graph"):
+    /// cluster labels must keep referring to original ids.
+    pub fn induced_in_place(&self, keep: &[bool]) -> Graph {
+        assert_eq!(keep.len(), self.n());
+        let n = self.n();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::with_capacity(self.neighbors.len());
+        offsets.push(0);
+        for v in 0..n as u32 {
+            if keep[v as usize] {
+                neighbors.extend(
+                    self.neighbors(v).iter().copied().filter(|&u| keep[u as usize]),
+                );
+            }
+            offsets.push(neighbors.len());
+        }
+        Graph { offsets, neighbors }
+    }
+
+    /// Compact induced subgraph: relabels kept vertices to `[0, k)`.
+    /// Returns the subgraph and the old-id-of-new-id mapping.
+    pub fn induced_compact(&self, keep: &[bool]) -> (Graph, Vec<u32>) {
+        assert_eq!(keep.len(), self.n());
+        let mut new_id = vec![u32::MAX; self.n()];
+        let mut old_id = Vec::new();
+        for v in 0..self.n() {
+            if keep[v] {
+                new_id[v] = old_id.len() as u32;
+                old_id.push(v as u32);
+            }
+        }
+        let mut offsets = Vec::with_capacity(old_id.len() + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0);
+        for &old in &old_id {
+            neighbors.extend(
+                self.neighbors(old)
+                    .iter()
+                    .copied()
+                    .filter(|&u| keep[u as usize])
+                    .map(|u| new_id[u as usize]),
+            );
+            offsets.push(neighbors.len());
+        }
+        (Graph { offsets, neighbors }, old_id)
+    }
+
+    /// Degree histogram (index = degree).
+    pub fn degree_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.max_degree() + 1];
+        for v in 0..self.n() as u32 {
+            h[self.degree(v)] += 1;
+        }
+        h
+    }
+
+    /// Union of two graphs on the same vertex set.
+    pub fn union(&self, other: &Graph) -> Graph {
+        assert_eq!(self.n(), other.n());
+        let mut edges: Vec<(u32, u32)> = self.edges().collect();
+        edges.extend(other.edges());
+        Graph::from_edges(self.n(), &edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_pendant() -> Graph {
+        // 0-1, 1-2, 0-2 triangle; 2-3 pendant.
+        Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)])
+    }
+
+    #[test]
+    fn basic_queries() {
+        let g = triangle_plus_pendant();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.max_degree(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn dedup_edges() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1)]);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        Graph::from_edges(2, &[(1, 1)]);
+    }
+
+    #[test]
+    fn edges_iter_yields_each_once() {
+        let g = triangle_plus_pendant();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges.len(), 4);
+        for (u, v) in edges {
+            assert!(u < v);
+        }
+    }
+
+    #[test]
+    fn induced_in_place_keeps_ids() {
+        let g = triangle_plus_pendant();
+        let keep = vec![true, false, true, true];
+        let sub = g.induced_in_place(&keep);
+        assert_eq!(sub.n(), 4);
+        assert_eq!(sub.m(), 2); // 0-2 and 2-3
+        assert_eq!(sub.degree(1), 0);
+        assert!(sub.has_edge(0, 2));
+        assert!(!sub.has_edge(0, 1));
+    }
+
+    #[test]
+    fn induced_compact_relabels() {
+        let g = triangle_plus_pendant();
+        let keep = vec![true, false, true, true];
+        let (sub, old_id) = g.induced_compact(&keep);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(old_id, vec![0, 2, 3]);
+        assert!(sub.has_edge(0, 1)); // old 0-2
+        assert!(sub.has_edge(1, 2)); // old 2-3
+        assert_eq!(sub.m(), 2);
+    }
+
+    #[test]
+    fn union_merges() {
+        let a = Graph::from_edges(4, &[(0, 1)]);
+        let b = Graph::from_edges(4, &[(1, 2), (0, 1)]);
+        let u = a.union(&b);
+        assert_eq!(u.m(), 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::empty(5);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+
+    #[test]
+    fn degree_histogram_sums_to_n() {
+        let g = triangle_plus_pendant();
+        let h = g.degree_histogram();
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        assert_eq!(h[3], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[2], 2);
+    }
+}

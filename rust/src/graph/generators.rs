@@ -1,0 +1,497 @@
+//! Workload generators for every graph family the paper reasons about.
+//!
+//! The paper's motivation is scale-free / low-arboricity graphs (§1):
+//! Barabási–Albert networks, forests (λ=1), planar-like grids, and
+//! adversarial tightness instances (barbell of Remark 33, P4 of Remark 30).
+//! The λ-arboric family is generated *by construction* as a union of λ
+//! random forests, which has arboricity ≤ λ by Nash-Williams.
+
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Uniform random labelled tree on n vertices via a random Prüfer sequence.
+pub fn random_tree(n: usize, rng: &mut Rng) -> Graph {
+    match n {
+        0 => return Graph::empty(0),
+        1 => return Graph::empty(1),
+        2 => return Graph::from_edges(2, &[(0, 1)]),
+        _ => {}
+    }
+    let seq: Vec<u32> = (0..n - 2).map(|_| rng.index(n) as u32).collect();
+    prufer_to_tree(n, &seq)
+}
+
+/// Decode a Prüfer sequence into its tree.
+pub fn prufer_to_tree(n: usize, seq: &[u32]) -> Graph {
+    assert_eq!(seq.len(), n - 2);
+    let mut degree = vec![1u32; n];
+    for &s in seq {
+        degree[s as usize] += 1;
+    }
+    // Min-heap of current leaves.
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<u32>> = (0..n as u32)
+        .filter(|&v| degree[v as usize] == 1)
+        .map(std::cmp::Reverse)
+        .collect();
+    let mut edges = Vec::with_capacity(n - 1);
+    for &s in seq {
+        let std::cmp::Reverse(leaf) = heap.pop().expect("prufer decode underflow");
+        edges.push((leaf, s));
+        degree[s as usize] -= 1;
+        if degree[s as usize] == 1 {
+            heap.push(std::cmp::Reverse(s));
+        }
+    }
+    let std::cmp::Reverse(a) = heap.pop().unwrap();
+    let std::cmp::Reverse(b) = heap.pop().unwrap();
+    edges.push((a, b));
+    Graph::from_edges(n, &edges)
+}
+
+/// Random forest: a random tree with each edge kept with probability
+/// `keep_p` (keep_p = 1 gives a spanning tree).
+pub fn random_forest(n: usize, keep_p: f64, rng: &mut Rng) -> Graph {
+    let tree = random_tree(n, rng);
+    let edges: Vec<(u32, u32)> = tree.edges().filter(|_| rng.bernoulli(keep_p)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// λ-arboric graph by construction: union of `lambda` random spanning
+/// trees (arboricity ≤ λ by Nash–Williams decomposition; ≥ λ w.h.p. for
+/// n large since the union has ~λ(n-1) distinct edges).
+pub fn lambda_arboric(n: usize, lambda: usize, rng: &mut Rng) -> Graph {
+    assert!(lambda >= 1);
+    let mut g = random_tree(n, rng);
+    for _ in 1..lambda {
+        g = g.union(&random_tree(n, rng));
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m_attach` existing vertices sampled proportionally to degree.
+/// Arboricity ≤ m_attach (edges orient from newer to older endpoint with
+/// out-degree m_attach), while the maximum degree grows like sqrt(n) —
+/// exactly the "few high degree nodes, small average degree" regime the
+/// paper targets.
+pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Graph {
+    assert!(m_attach >= 1 && n > m_attach);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_attach);
+    // Repeated-endpoint urn: sampling a uniform entry of `urn` is
+    // degree-proportional sampling.
+    let mut urn: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+    // Seed: star on m_attach + 1 vertices.
+    for v in 0..m_attach as u32 {
+        edges.push((v, m_attach as u32));
+        urn.push(v);
+        urn.push(m_attach as u32);
+    }
+    for v in (m_attach + 1) as u32..n as u32 {
+        let mut targets = std::collections::HashSet::with_capacity(m_attach);
+        let mut guard = 0;
+        while targets.len() < m_attach {
+            let t = urn[rng.index(urn.len())];
+            targets.insert(t);
+            guard += 1;
+            if guard > 100 * m_attach {
+                // Degenerate small graphs: fall back to uniform fill.
+                for u in 0..v {
+                    if targets.len() >= m_attach {
+                        break;
+                    }
+                    targets.insert(u);
+                }
+            }
+        }
+        for &t in &targets {
+            edges.push((v, t));
+            urn.push(v);
+            urn.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi G(n, p) — used as a *non*-bounded-arboricity contrast
+/// workload (its arboricity is Θ(np) for p above the connectivity
+/// threshold).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    // Geometric skipping for sparse p.
+    let mut edges = Vec::new();
+    if p <= 0.0 {
+        return Graph::empty(n);
+    }
+    if p >= 1.0 {
+        for u in 0..n as u32 {
+            for v in u + 1..n as u32 {
+                edges.push((u, v));
+            }
+        }
+        return Graph::from_edges(n, &edges);
+    }
+    let log1p = (1.0 - p).ln();
+    let total_pairs = n * (n - 1) / 2;
+    let mut idx: i64 = -1;
+    loop {
+        let r = rng.f64().max(f64::MIN_POSITIVE);
+        let skip = (r.ln() / log1p).floor() as i64 + 1;
+        idx += skip.max(1);
+        if idx as usize >= total_pairs {
+            break;
+        }
+        let (u, v) = pair_from_index(n, idx as usize);
+        edges.push((u, v));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Map a linear index to the (u, v) pair with u < v (row-major upper
+/// triangle).
+fn pair_from_index(n: usize, mut idx: usize) -> (u32, u32) {
+    for u in 0..n - 1 {
+        let row = n - 1 - u;
+        if idx < row {
+            return (u as u32, (u + 1 + idx) as u32);
+        }
+        idx -= row;
+    }
+    unreachable!("pair index out of range");
+}
+
+/// w×h grid graph — planar, arboricity ≤ 2, unbounded Δ=4 contrast.
+pub fn grid(w: usize, h: usize) -> Graph {
+    let n = w * h;
+    let mut edges = Vec::with_capacity(2 * n);
+    let id = |x: usize, y: usize| (y * w + x) as u32;
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < h {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Complete graph K_k.
+pub fn clique(k: usize) -> Graph {
+    let mut edges = Vec::with_capacity(k * (k - 1) / 2);
+    for u in 0..k as u32 {
+        for v in u + 1..k as u32 {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(k, &edges)
+}
+
+/// Disjoint union of `count` cliques of size `k` each.
+pub fn disjoint_cliques(count: usize, k: usize) -> Graph {
+    let n = count * k;
+    let mut edges = Vec::new();
+    for c in 0..count {
+        let base = (c * k) as u32;
+        for u in 0..k as u32 {
+            for v in u + 1..k as u32 {
+                edges.push((base + u, base + v));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Remark 33's tightness instance: two K_λ cliques joined by one edge.
+/// OPT clusters each clique (1 disagreement); singletons pay ≈ λ².
+pub fn barbell(lambda: usize) -> Graph {
+    assert!(lambda >= 1);
+    let n = 2 * lambda;
+    let mut edges = Vec::new();
+    for u in 0..lambda as u32 {
+        for v in u + 1..lambda as u32 {
+            edges.push((u, v));
+            edges.push((lambda as u32 + u, lambda as u32 + v));
+        }
+    }
+    edges.push((0, lambda as u32));
+    Graph::from_edges(n, &edges)
+}
+
+/// Path on n vertices. P4 is Remark 30's maximal-matching tightness case.
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (0..n.saturating_sub(1) as u32).map(|i| (i, i + 1)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Star K_{1,k}: the minimal unbounded-degree forest (λ=1, Δ=k).
+pub fn star(k: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..=k as u32).map(|v| (0, v)).collect();
+    Graph::from_edges(k + 1, &edges)
+}
+
+/// Caterpillar: a path spine with `legs` pendant vertices per spine vertex.
+pub fn caterpillar(spine: usize, legs: usize) -> Graph {
+    let n = spine + spine * legs;
+    let mut edges = Vec::new();
+    for i in 0..spine.saturating_sub(1) as u32 {
+        edges.push((i, i + 1));
+    }
+    for s in 0..spine as u32 {
+        for l in 0..legs as u32 {
+            edges.push((s, (spine as u32) + s * legs as u32 + l));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Planted-partition ("noisy cliques") instance: the community-detection
+/// workload correlation clustering is motivated by (§1).  `k` ground-truth
+/// communities of size `n/k`; intra-community positive edges appear with
+/// probability `p_in`, inter-community with `p_out`.  Returns the graph
+/// and the planted labels (ground truth for recovery metrics).
+///
+/// With p_in close to 1 and small communities this stays low-arboricity;
+/// with p_in·(n/k) large it leaves the bounded-arboricity regime — used as
+/// the contrast case in the recovery experiment.
+pub fn planted_partition(
+    n: usize,
+    k: usize,
+    p_in: f64,
+    p_out: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<u32>) {
+    assert!(k >= 1 && k <= n.max(1));
+    let labels: Vec<u32> = (0..n).map(|v| (v * k / n.max(1)) as u32).collect();
+    let mut edges = Vec::new();
+    // Dense sampling within communities (they are small), geometric
+    // skipping across communities (p_out is tiny).
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &l) in labels.iter().enumerate() {
+        members[l as usize].push(v as u32);
+    }
+    for comm in &members {
+        for (i, &u) in comm.iter().enumerate() {
+            for &v in &comm[i + 1..] {
+                if rng.bernoulli(p_in) {
+                    edges.push((u, v));
+                }
+            }
+        }
+    }
+    if p_out > 0.0 {
+        // Sample inter-community pairs by rejection over all pairs; for
+        // small p_out this is efficient via geometric skipping on the
+        // linearized pair index.
+        let total_pairs = n * (n - 1) / 2;
+        let log1p = (1.0 - p_out).ln();
+        let mut idx: i64 = -1;
+        loop {
+            let r = rng.f64().max(f64::MIN_POSITIVE);
+            let skip = (r.ln() / log1p).floor() as i64 + 1;
+            idx += skip.max(1);
+            if idx as usize >= total_pairs {
+                break;
+            }
+            let (u, v) = pair_from_index(n, idx as usize);
+            if labels[u as usize] != labels[v as usize] {
+                edges.push((u, v));
+            }
+        }
+    }
+    (Graph::from_edges(n, &edges), labels)
+}
+
+/// A named workload registry used by the bench harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Forest,
+    LambdaArboric(usize),
+    BarabasiAlbert(usize),
+    Grid,
+    Path,
+    Star,
+    Barbell(usize),
+    DisjointCliques(usize),
+}
+
+impl Family {
+    pub fn name(&self) -> String {
+        match self {
+            Family::Forest => "forest".into(),
+            Family::LambdaArboric(l) => format!("arboric-{l}"),
+            Family::BarabasiAlbert(m) => format!("ba-{m}"),
+            Family::Grid => "grid".into(),
+            Family::Path => "path".into(),
+            Family::Star => "star".into(),
+            Family::Barbell(l) => format!("barbell-{l}"),
+            Family::DisjointCliques(k) => format!("cliques-{k}"),
+        }
+    }
+
+    /// Generate an instance with ~n vertices.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Graph {
+        match *self {
+            Family::Forest => random_forest(n, 0.9, rng),
+            Family::LambdaArboric(l) => lambda_arboric(n, l, rng),
+            Family::BarabasiAlbert(m) => barabasi_albert(n.max(m + 2), m, rng),
+            Family::Grid => {
+                let side = (n as f64).sqrt().ceil() as usize;
+                grid(side.max(2), side.max(2))
+            }
+            Family::Path => path(n),
+            Family::Star => star(n.saturating_sub(1).max(1)),
+            Family::Barbell(l) => barbell(l),
+            Family::DisjointCliques(k) => disjoint_cliques((n / k).max(1), k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components::components;
+
+    #[test]
+    fn random_tree_is_tree() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 3, 10, 100] {
+            let t = random_tree(n, &mut rng);
+            assert_eq!(t.n(), n);
+            if n > 0 {
+                assert_eq!(t.m(), n - 1);
+                let comp = components(&t);
+                assert_eq!(comp.count, 1, "tree on {n} vertices must be connected");
+            }
+        }
+    }
+
+    #[test]
+    fn prufer_known_decode() {
+        // Sequence [3, 3] on n=4 gives star at 3 plus edge: edges (0,3),(1,3),(2,3).
+        let t = prufer_to_tree(4, &[3, 3]);
+        assert_eq!(t.m(), 3);
+        assert_eq!(t.degree(3), 3);
+    }
+
+    #[test]
+    fn lambda_arboric_edge_budget() {
+        let mut rng = Rng::new(2);
+        let g = lambda_arboric(200, 3, &mut rng);
+        assert!(g.m() <= 3 * 199);
+        assert!(g.m() > 199, "union of 3 trees should exceed one tree");
+    }
+
+    #[test]
+    fn ba_has_right_edge_count_and_skew() {
+        let mut rng = Rng::new(3);
+        let n = 2000;
+        let m_attach = 3;
+        let g = barabasi_albert(n, m_attach, &mut rng);
+        assert_eq!(g.n(), n);
+        // m_attach seed edges + m_attach per subsequent vertex.
+        assert!(g.m() <= m_attach + (n - m_attach - 1) * m_attach);
+        // Scale-free skew: max degree well above average.
+        let avg = 2.0 * g.m() as f64 / n as f64;
+        assert!(g.max_degree() as f64 > 4.0 * avg, "BA should have hubs");
+    }
+
+    #[test]
+    fn er_density_close_to_p() {
+        let mut rng = Rng::new(4);
+        let n = 300;
+        let p = 0.02;
+        let g = erdos_renyi(n, p, &mut rng);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        assert!((g.m() as f64) > expected * 0.7 && (g.m() as f64) < expected * 1.3);
+    }
+
+    #[test]
+    fn er_extremes() {
+        let mut rng = Rng::new(5);
+        assert_eq!(erdos_renyi(10, 0.0, &mut rng).m(), 0);
+        assert_eq!(erdos_renyi(10, 1.0, &mut rng).m(), 45);
+    }
+
+    #[test]
+    fn pair_from_index_bijective() {
+        let n = 7;
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..n * (n - 1) / 2 {
+            let (u, v) = pair_from_index(n, idx);
+            assert!(u < v && (v as usize) < n);
+            assert!(seen.insert((u, v)));
+        }
+    }
+
+    #[test]
+    fn grid_counts() {
+        let g = grid(4, 3);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.m(), 3 * 3 + 4 * 2); // horizontal + vertical
+        assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn barbell_shape() {
+        let g = barbell(5);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.m(), 2 * 10 + 1);
+        assert_eq!(g.degree(0), 5); // clique (4) + bridge (1)
+    }
+
+    #[test]
+    fn clique_star_path_caterpillar() {
+        assert_eq!(clique(6).m(), 15);
+        assert_eq!(star(7).max_degree(), 7);
+        assert_eq!(path(5).m(), 4);
+        let cat = caterpillar(4, 2);
+        assert_eq!(cat.n(), 12);
+        assert_eq!(cat.m(), 3 + 8);
+    }
+
+    #[test]
+    fn planted_partition_shapes() {
+        let mut rng = Rng::new(7);
+        let (g, labels) = planted_partition(300, 30, 0.9, 0.001, &mut rng);
+        assert_eq!(g.n(), 300);
+        assert_eq!(labels.len(), 300);
+        // Communities have size 10; intra edges dominate.
+        let intra = g.edges().filter(|&(u, v)| labels[u as usize] == labels[v as usize]).count();
+        let inter = g.m() - intra;
+        assert!(intra > 30 * 30, "intra {intra} too small");
+        assert!(inter < intra / 4, "inter {inter} should be sparse vs {intra}");
+        // Ground truth labels form k communities.
+        let distinct: std::collections::HashSet<u32> = labels.iter().copied().collect();
+        assert_eq!(distinct.len(), 30);
+    }
+
+    #[test]
+    fn planted_partition_extremes() {
+        let mut rng = Rng::new(8);
+        let (g, labels) = planted_partition(40, 4, 1.0, 0.0, &mut rng);
+        // Perfect cliques, no noise: each community is a K10.
+        let c = components(&g);
+        assert_eq!(c.count, 4);
+        assert_eq!(g.m(), 4 * 45);
+        let _ = labels;
+    }
+
+    #[test]
+    fn family_generate_smoke() {
+        let mut rng = Rng::new(6);
+        for fam in [
+            Family::Forest,
+            Family::LambdaArboric(2),
+            Family::BarabasiAlbert(2),
+            Family::Grid,
+            Family::Path,
+            Family::Star,
+            Family::Barbell(4),
+            Family::DisjointCliques(4),
+        ] {
+            let g = fam.generate(64, &mut rng);
+            assert!(g.n() > 0, "{}", fam.name());
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, generators for every workload family in
+//! the paper, arboricity estimation, and connectivity.
+//!
+//! Convention: a [`csr::Graph`] *is* the positive-edge graph `(V, E+)` of
+//! the paper's complete signed graph.  Negative edges are implicit — every
+//! non-adjacent pair of vertices is a negative edge — so `N = |E+|` is the
+//! input size, exactly as the paper's MPC accounting assumes (§1.1).
+
+pub mod arboricity;
+pub mod components;
+pub mod io;
+pub mod csr;
+pub mod generators;
+
+pub use csr::Graph;

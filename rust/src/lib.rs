@@ -1,0 +1,34 @@
+//! # arbocc
+//!
+//! A production-grade reproduction of **"Massively Parallel Correlation
+//! Clustering in Bounded Arboricity Graphs"** (Cambus, Choo, Miikonen,
+//! Uitto — DISC 2021) as a three-layer Rust + JAX + Pallas system.
+//!
+//! * [`graph`] — CSR graphs, workload generators, arboricity estimation.
+//! * [`mpc`] — the MPC model simulator: machines, rounds, memory budgets,
+//!   broadcast trees, graph exponentiation.
+//! * [`cluster`] — correlation-clustering core: costs, bad triangles,
+//!   exact small-instance optima, the Lemma 25 structural transform.
+//! * [`algorithms`] — the paper's algorithms (PIVOT, randomized greedy
+//!   MIS, Algorithms 1–4, matching-based forest algorithms, the O(λ²)
+//!   simple algorithm) and its baselines (ParallelPivot, C4,
+//!   ClusterWild!).
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`), with a bit-identical pure-Rust
+//!   fallback.
+//! * [`coordinator`] — leader/worker orchestration and the best-of-K
+//!   scoring driver (Remark 14).
+//! * [`bench`] — micro-benchmark harness and experiment workloads.
+//! * [`util`] — PRNG, statistics, JSON reports, property testing, CLI.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! measured results.
+
+pub mod algorithms;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod graph;
+pub mod mpc;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,358 @@
+//! `arbocc` — command-line launcher.
+//!
+//! Subcommands:
+//!   cluster   run a correlation-clustering algorithm on a generated
+//!             workload; report cost, lower-bound ratio and MPC rounds
+//!   mis       run the MPC greedy-MIS pipeline; report round counts
+//!   best-of-k the Remark 14 driver through the coordinator + PJRT engine
+//!   forest    matching-based forest algorithms (Corollary 31)
+//!   check     verify PJRT artifacts against the native fallback
+//!   info      environment / artifact status
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use arbocc::algorithms::alg4::alg4;
+use arbocc::algorithms::forest::clustering_from_matching;
+use arbocc::algorithms::matching::{approx_matching, maximal_matching, maximum_matching_forest};
+use arbocc::algorithms::mpc_mis::{
+    alg1_greedy_mis, direct_simulation_mis, mpc_pivot, Alg1Params, Alg2Params, Alg3Params,
+    Subroutine,
+};
+use arbocc::algorithms::pivot::pivot_random;
+use arbocc::algorithms::simple::simple_clustering;
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::triangles::packing_lower_bound;
+use arbocc::coordinator::{best_of_k, TrialSpec};
+use arbocc::graph::arboricity::estimate_arboricity;
+use arbocc::graph::generators::Family;
+use arbocc::graph::Graph;
+use arbocc::mpc::memory::Words;
+use arbocc::mpc::{MpcConfig, MpcSimulator};
+use arbocc::runtime::{BackendKind, CostEngine};
+use arbocc::util::cli::Args;
+use arbocc::util::rng::Rng;
+use arbocc::util::table::{fnum, Table};
+use arbocc::util::timer::Timer;
+
+fn parse_family(s: &str) -> Family {
+    if let Some(l) = s.strip_prefix("arboric-") {
+        return Family::LambdaArboric(l.parse().expect("arboric-<λ>"));
+    }
+    if let Some(m) = s.strip_prefix("ba-") {
+        return Family::BarabasiAlbert(m.parse().expect("ba-<m>"));
+    }
+    if let Some(l) = s.strip_prefix("barbell-") {
+        return Family::Barbell(l.parse().expect("barbell-<λ>"));
+    }
+    if let Some(k) = s.strip_prefix("cliques-") {
+        return Family::DisjointCliques(k.parse().expect("cliques-<k>"));
+    }
+    match s {
+        "forest" => Family::Forest,
+        "grid" => Family::Grid,
+        "path" => Family::Path,
+        "star" => Family::Star,
+        _ => panic!(
+            "unknown family '{s}' (try forest|arboric-K|ba-M|grid|path|star|barbell-K|cliques-K)"
+        ),
+    }
+}
+
+/// Workload source: `--input <edge-list file>` (SNAP format) or a named
+/// generator family (`--family`, `--n`).
+fn make_graph(args: &Args) -> (Graph, String, u64) {
+    let seed = args.get_u64("seed", 1);
+    if let Some(path) = args.get("input") {
+        let (g, _orig) =
+            arbocc::graph::io::read_edge_list_file(std::path::Path::new(path))
+                .unwrap_or_else(|e| panic!("reading --input {path}: {e}"));
+        return (g, format!("file:{path}"), seed);
+    }
+    let family = parse_family(&args.get_str("family", "arboric-3"));
+    let n = args.get_usize("n", 10_000);
+    let mut rng = Rng::new(seed);
+    let g = family.generate(n, &mut rng);
+    (g, family.name(), seed)
+}
+
+fn sim_for(g: &Graph, model: &str, delta: f64) -> MpcSimulator {
+    let words = (g.n() + 2 * g.m()).max(4) as Words;
+    let cfg = match model {
+        "m2" => MpcConfig::model2(g.n().max(2), words, delta),
+        _ => MpcConfig::model1(g.n().max(2), words, delta),
+    };
+    MpcSimulator::new(cfg)
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let (g, family, seed) = make_graph(args);
+    let algo = args.get_str("algo", "alg4-pivot");
+    let model = args.get_str("model", "m1");
+    let delta = args.get_f64("delta", 0.5);
+    let eps = args.get_f64("eps", 2.0);
+    let est = estimate_arboricity(&g);
+    let lambda = args.get_usize("lambda", est.degeneracy.max(1));
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+
+    println!(
+        "graph: {} n={} m={} Δ={} λ∈[{},{}]",
+        family,
+        g.n(),
+        g.m(),
+        g.max_degree(),
+        est.density_lower_bound,
+        est.degeneracy
+    );
+
+    let timer = Timer::start();
+    let mut rounds = None;
+    let clustering = match algo.as_str() {
+        "pivot" => pivot_random(&g, &mut rng),
+        "alg4-pivot" => alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng)),
+        "mpc-pivot" => {
+            let mut sim = sim_for(&g, &model, delta);
+            let sub = if model == "m2" {
+                Subroutine::Alg3(Alg3Params::default())
+            } else {
+                Subroutine::Alg2(Alg2Params::default())
+            };
+            let perm = rng.permutation(g.n());
+            let run =
+                mpc_pivot(&g, &perm, &Alg1Params { c_prefix: 1.0, subroutine: sub }, &mut sim);
+            rounds = Some(sim.n_rounds());
+            run.clustering
+        }
+        "simple" => {
+            let mut sim = sim_for(&g, &model, delta);
+            let run = simple_clustering(&g, lambda, &mut sim);
+            rounds = Some(run.rounds);
+            run.clustering
+        }
+        other => panic!("unknown --algo '{other}' (pivot|alg4-pivot|mpc-pivot|simple)"),
+    };
+    let elapsed = timer.elapsed_s();
+
+    let c = cost(&g, &clustering);
+    let lb = packing_lower_bound(&g);
+    println!(
+        "algo={algo} cost={} (pos {}, neg {}) clusters={} max|C|={}",
+        c.total(),
+        c.positive,
+        c.negative,
+        clustering.n_clusters(),
+        clustering.max_cluster_size()
+    );
+    if lb > 0 {
+        println!(
+            "bad-triangle packing LB={} ⇒ ratio ≤ {}",
+            lb,
+            fnum(c.total() as f64 / lb as f64)
+        );
+    }
+    if let Some(r) = rounds {
+        println!("MPC rounds={r} (model={model}, δ={delta})");
+    }
+    println!("wall time: {elapsed:.3}s");
+    Ok(())
+}
+
+fn cmd_mis(args: &Args) -> Result<()> {
+    let (g, family, seed) = make_graph(args);
+    let delta = args.get_f64("delta", 0.5);
+    let method = args.get_str("method", "alg2");
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let perm = rng.permutation(g.n());
+
+    let mut table = Table::new(
+        &format!("greedy MIS rounds — {} n={} Δ={}", family, g.n(), g.max_degree()),
+        &["method", "model", "rounds", "|MIS|"],
+    );
+    let run_one = |method: &str, table: &mut Table| {
+        let (model, sub) = match method {
+            "alg2" => ("m1", Subroutine::Alg2(Alg2Params::default())),
+            "alg3" => ("m2", Subroutine::Alg3(Alg3Params::default())),
+            "direct" => ("m1", Subroutine::Alg2(Alg2Params::default())),
+            other => panic!("unknown --method '{other}' (alg2|alg3|direct|all)"),
+        };
+        let mut sim = sim_for(&g, model, delta);
+        let mis = if method == "direct" {
+            direct_simulation_mis(&g, &perm, &mut sim)
+        } else {
+            alg1_greedy_mis(&g, &perm, &Alg1Params { c_prefix: 1.0, subroutine: sub }, &mut sim)
+                .in_mis
+        };
+        let size = mis.iter().filter(|&&b| b).count();
+        table.row(&[
+            method.to_string(),
+            model.to_string(),
+            sim.n_rounds().to_string(),
+            size.to_string(),
+        ]);
+    };
+    if method == "all" {
+        for m in ["direct", "alg2", "alg3"] {
+            run_one(m, &mut table);
+        }
+    } else {
+        run_one(&method, &mut table);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_best_of_k(args: &Args) -> Result<()> {
+    let (g, family, seed) = make_graph(args);
+    let k = args.get_usize("k", 16);
+    let workers = args.get_usize("workers", 4);
+    let eps = args.get_f64("eps", 2.0);
+    let est = estimate_arboricity(&g);
+    let lambda = args.get_usize("lambda", est.degeneracy.max(1));
+    let engine =
+        if args.get_bool("native") { CostEngine::native() } else { CostEngine::auto_default() };
+    println!(
+        "backend: {:?}; workload {} n={} m={}; K={k}, workers={workers}",
+        engine.kind(),
+        family,
+        g.n(),
+        g.m()
+    );
+    let g = Arc::new(g);
+    let timer = Timer::start();
+    let run = best_of_k(&g, &TrialSpec::Alg4Pivot { lambda, eps }, k, workers, seed, &engine)?;
+    let elapsed = timer.elapsed_s();
+    let lb = packing_lower_bound(&g);
+    let worst = *run.costs.iter().max().unwrap();
+    println!(
+        "best={} worst={} (spread {}); LB={} ⇒ best ratio ≤ {}",
+        run.best_cost.total(),
+        worst,
+        worst - run.best_cost.total(),
+        lb,
+        if lb > 0 { fnum(run.best_cost.total() as f64 / lb as f64) } else { "n/a".into() }
+    );
+    println!("scored {k} clusterings in {elapsed:.3}s ({:.1} trials/s)", k as f64 / elapsed);
+    Ok(())
+}
+
+fn cmd_forest(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000);
+    let seed = args.get_u64("seed", 1);
+    let eps = args.get_f64("eps", 0.5);
+    let mut rng = Rng::new(seed);
+    let g = arbocc::graph::generators::random_forest(n, 0.9, &mut rng);
+
+    let mut table = Table::new(
+        &format!("forest algorithms — n={} m={}", g.n(), g.m()),
+        &["algorithm", "|M|", "cost", "rounds"],
+    );
+    // Corollary 31(i): exact maximum matching.
+    let m_star = maximum_matching_forest(&g);
+    let c = clustering_from_matching(g.n(), &m_star);
+    table.row(&[
+        "maximum (opt)".into(),
+        m_star.len().to_string(),
+        cost(&g, &c).total().to_string(),
+        "-".into(),
+    ]);
+    // Maximal (2-approx).
+    let mut sim = sim_for(&g, "m1", 0.5);
+    let maximal = maximal_matching(&g, &mut rng, &mut sim, 64);
+    let cm = clustering_from_matching(g.n(), &maximal.matching);
+    table.row(&[
+        "maximal (2-approx)".into(),
+        maximal.matching.len().to_string(),
+        cost(&g, &cm).total().to_string(),
+        sim.n_rounds().to_string(),
+    ]);
+    // (1+ε).
+    let mut sim2 = sim_for(&g, "m1", 0.5);
+    let approx = approx_matching(&g, maximal.matching.clone(), eps, &mut sim2);
+    let ca = clustering_from_matching(g.n(), &approx.matching);
+    table.row(&[
+        format!("(1+{eps})-approx"),
+        approx.matching.len().to_string(),
+        cost(&g, &ca).total().to_string(),
+        sim2.n_rounds().to_string(),
+    ]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_check(_args: &Args) -> Result<()> {
+    let engine = CostEngine::auto_default();
+    match engine.kind() {
+        BackendKind::Native => {
+            println!("artifacts/ missing or unloadable — run `make artifacts` first");
+            return Ok(());
+        }
+        BackendKind::Pjrt => println!("PJRT engine loaded from artifacts/"),
+    }
+    let native = CostEngine::native();
+    let mut rng = Rng::new(123);
+    let mut checked = 0;
+    for lambda in [1usize, 2, 4] {
+        let g = arbocc::graph::generators::lambda_arboric(200, lambda, &mut rng);
+        let c = pivot_random(&g, &mut rng);
+        let a = engine.cost(&g, &c)?;
+        let b = native.cost(&g, &c)?;
+        anyhow::ensure!(a == b, "cost mismatch: pjrt {a:?} vs native {b:?}");
+        let ta = engine.bad_triangles_single_block(&g)?;
+        let tb = native.bad_triangles_single_block(&g)?;
+        anyhow::ensure!(ta == tb, "triangles mismatch: {ta} vs {tb}");
+        let cs: Vec<_> = (0..9).map(|_| pivot_random(&g, &mut rng)).collect();
+        let ba = engine.cost_batch_single_block(&g, &cs)?;
+        let bb = native.cost_batch_single_block(&g, &cs)?;
+        anyhow::ensure!(ba == bb, "batch mismatch");
+        checked += 3;
+    }
+    println!("self-check OK: {checked} PJRT-vs-native comparisons identical");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("arbocc {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "artifacts present: {}",
+        arbocc::runtime::client::PjrtEngine::artifacts_present(std::path::Path::new("artifacts"))
+    );
+    println!(
+        "block protocol: N={} batch={}",
+        arbocc::runtime::blocks::BLOCK_N,
+        arbocc::runtime::blocks::BLOCK_BATCH
+    );
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let reports = arbocc::bench::report::load_reports(std::path::Path::new("reports"))?;
+    if reports.is_empty() {
+        println!("no reports found — run `cargo bench` first");
+        return Ok(());
+    }
+    let md = arbocc::bench::report::render_markdown(&reports);
+    let out = std::path::Path::new("reports/SUMMARY.md");
+    std::fs::write(out, &md)?;
+    println!("{} reports aggregated -> {}", reports.len(), out.display());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "cluster" => cmd_cluster(&args),
+        "mis" => cmd_mis(&args),
+        "best-of-k" => cmd_best_of_k(&args),
+        "forest" => cmd_forest(&args),
+        "check" => cmd_check(&args),
+        "report" => cmd_report(),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!("usage: arbocc <cluster|mis|best-of-k|forest|check|report|info> [--flags]");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Broadcast / convergecast trees (paper §2.1.5, Goodrich–Sitchinava–
+//! Zhang) executed on the message router.
+//!
+//! An S-ary virtual tree is laid over the machines; a convergecast
+//! aggregates one value per machine to the root in ⌈log_S M⌉ real routed
+//! rounds, and a broadcast pushes the result back down in the same number
+//! of rounds.  For constant δ this is O(1/δ) = O(1) rounds, which is what
+//! lets Corollary 32's "simple algorithm" run in O(1) MPC rounds.
+
+use crate::mpc::router::Router;
+use crate::mpc::simulator::MpcSimulator;
+
+/// A distributive aggregate function over u64-encoded values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregate {
+    Sum,
+    Min,
+    Max,
+}
+
+impl Aggregate {
+    /// Identity element (exposed for callers that fold partial streams).
+    pub fn identity(&self) -> u64 {
+        match self {
+            Aggregate::Sum => 0,
+            Aggregate::Min => u64::MAX,
+            Aggregate::Max => 0,
+        }
+    }
+
+    fn combine(&self, a: u64, b: u64) -> u64 {
+        match self {
+            Aggregate::Sum => a + b,
+            Aggregate::Min => a.min(b),
+            Aggregate::Max => a.max(b),
+        }
+    }
+}
+
+/// S-ary broadcast tree over the machines of a simulator's config.
+#[derive(Debug)]
+pub struct BroadcastTree {
+    machines: usize,
+    /// Tree arity: how many children each internal node has.
+    arity: usize,
+}
+
+impl BroadcastTree {
+    /// Arity is capped by S (each parent exchanges O(1) words with each of
+    /// its ≤ S children per round).
+    pub fn new(machines: usize, s_words: u64) -> BroadcastTree {
+        let arity = (s_words.min(machines.max(2) as u64) as usize).max(2);
+        BroadcastTree { machines, arity }
+    }
+
+    /// Tree depth = number of convergecast rounds.
+    pub fn depth(&self) -> usize {
+        if self.machines <= 1 {
+            return 1;
+        }
+        let mut depth = 0;
+        let mut reach = 1usize;
+        while reach < self.machines {
+            reach = reach.saturating_mul(self.arity);
+            depth += 1;
+        }
+        depth
+    }
+
+    fn parent(&self, m: usize) -> usize {
+        (m - 1) / self.arity
+    }
+
+    /// Convergecast: aggregate one value per machine to machine 0.
+    /// Executes `depth()` routed rounds.
+    pub fn aggregate(
+        &self,
+        sim: &mut MpcSimulator,
+        router: &Router,
+        values: &[u64],
+        f: Aggregate,
+    ) -> u64 {
+        assert_eq!(values.len(), self.machines);
+        if self.machines == 1 {
+            sim.round("convergecast[trivial]", 0, 0, 0, 1);
+            return values[0];
+        }
+        // acc[m] = partial aggregate held by machine m. Each machine
+        // sends exactly once: when all of its children have reported.
+        // Leaves fire in the first round, so the run takes depth() rounds.
+        let mut acc: Vec<u64> = values.to_vec();
+        let mut pending: Vec<usize> = (0..self.machines)
+            .map(|m| {
+                (1..=self.arity)
+                    .map(|c| m * self.arity + c)
+                    .filter(|&child| child < self.machines)
+                    .count()
+            })
+            .collect();
+        let mut sent = vec![false; self.machines];
+        let mut level = 0usize;
+        loop {
+            let mut outboxes: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); self.machines];
+            let mut any = false;
+            for m in 1..self.machines {
+                if !sent[m] && pending[m] == 0 {
+                    outboxes[m].push((self.parent(m), vec![acc[m]]));
+                    sent[m] = true;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            let inboxes = router.step(sim, &format!("convergecast[{level}]"), outboxes);
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                for msg in inbox {
+                    acc[m] = f.combine(acc[m], msg.payload[0]);
+                    pending[m] -= 1;
+                }
+            }
+            level += 1;
+            assert!(level <= self.depth() + 1, "convergecast failed to converge");
+        }
+        assert_eq!(pending[0], 0, "root did not hear from all children");
+        acc[0]
+    }
+
+    /// Broadcast a value from machine 0 to all machines.
+    pub fn broadcast(&self, sim: &mut MpcSimulator, router: &Router, value: u64) -> Vec<u64> {
+        if self.machines == 1 {
+            sim.round("broadcast[trivial]", 0, 0, 0, 1);
+            return vec![value];
+        }
+        let mut have: Vec<Option<u64>> = vec![None; self.machines];
+        have[0] = Some(value);
+        let mut level = 0usize;
+        while have.iter().any(Option::is_none) {
+            let mut outboxes: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); self.machines];
+            for m in 0..self.machines {
+                if let Some(v) = have[m] {
+                    // Send to children that don't have it yet.
+                    for c in 1..=self.arity {
+                        let child = m * self.arity + c;
+                        if child < self.machines && have[child].is_none() {
+                            outboxes[m].push((child, vec![v]));
+                        }
+                    }
+                }
+            }
+            let inboxes = router.step(sim, &format!("broadcast[{level}]"), outboxes);
+            for (m, inbox) in inboxes.into_iter().enumerate() {
+                if let Some(msg) = inbox.first() {
+                    have[m] = Some(msg.payload[0]);
+                }
+            }
+            level += 1;
+            assert!(level <= self.depth() + 1, "broadcast failed to converge");
+        }
+        have.into_iter().map(|v| v.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::model::MpcConfig;
+
+    fn setup(machines: usize, arity_s: u64) -> (MpcSimulator, Router, BroadcastTree) {
+        let mut cfg = MpcConfig::model1(100_000, 1_000_000, 0.5);
+        cfg.machines = machines;
+        let sim = MpcSimulator::new(cfg);
+        (sim, Router::new(machines), BroadcastTree::new(machines, arity_s))
+    }
+
+    #[test]
+    fn aggregate_sum_min_max() {
+        let (mut sim, router, tree) = setup(10, 3);
+        let values: Vec<u64> = (1..=10).collect();
+        assert_eq!(tree.aggregate(&mut sim, &router, &values, Aggregate::Sum), 55);
+        assert_eq!(tree.aggregate(&mut sim, &router, &values, Aggregate::Min), 1);
+        assert_eq!(tree.aggregate(&mut sim, &router, &values, Aggregate::Max), 10);
+    }
+
+    #[test]
+    fn broadcast_reaches_all() {
+        let (mut sim, router, tree) = setup(17, 4);
+        let got = tree.broadcast(&mut sim, &router, 99);
+        assert_eq!(got, vec![99; 17]);
+    }
+
+    #[test]
+    fn depth_is_logarithmic() {
+        let tree = BroadcastTree::new(1_000_000, 100);
+        assert_eq!(tree.depth(), 3); // 100^3 = 10^6
+        let wide = BroadcastTree::new(1000, 1_000_000);
+        assert_eq!(wide.depth(), 1);
+    }
+
+    #[test]
+    fn rounds_charged_at_most_depth_plus_slack() {
+        let (mut sim, router, tree) = setup(64, 4);
+        let values = vec![1u64; 64];
+        tree.aggregate(&mut sim, &router, &values, Aggregate::Sum);
+        assert!(sim.n_rounds() <= tree.depth());
+        let before = sim.n_rounds();
+        tree.broadcast(&mut sim, &router, 5);
+        assert!(sim.n_rounds() - before <= tree.depth() + 1);
+    }
+
+    #[test]
+    fn single_machine_trivial() {
+        let (mut sim, router, tree) = setup(1, 4);
+        assert_eq!(tree.aggregate(&mut sim, &router, &[7], Aggregate::Sum), 7);
+        assert_eq!(tree.broadcast(&mut sim, &router, 3), vec![3]);
+    }
+}

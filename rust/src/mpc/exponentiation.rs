@@ -1,0 +1,260 @@
+//! Graph exponentiation (paper §2.1.3, Lenzen–Wattenhofer; Figures 1–2).
+//!
+//! Each vertex starts knowing its 1-hop ball; in round k, vertices
+//! exchange their current balls and learn the 2^k-hop ball:
+//! `ball_{2r}(v) = ∪_{u ∈ ball_r(v)} ball_r(u)`.  A radius-R ball is thus
+//! gathered in ⌈log₂ R⌉ + 1 MPC rounds, memory permitting.
+//!
+//! The gatherer charges the simulator one round per doubling with the
+//! *measured* maximal ball topology size, so the memory feasibility the
+//! paper argues (e.g. Δ^R ∈ O(n^δ) in Lemma 21) is checked, not assumed.
+
+use crate::graph::Graph;
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// Result of a ball-gathering run.
+#[derive(Debug, Clone)]
+pub struct Balls {
+    /// `balls[i]` = sorted vertex ids within distance `radius` of
+    /// `targets[i]`.
+    pub balls: Vec<Vec<u32>>,
+    /// Radius actually reached (== requested unless capped by memory).
+    pub radius: usize,
+    /// Rounds charged.
+    pub rounds: usize,
+    /// True if growth stopped early due to the memory cap.
+    pub memory_capped: bool,
+}
+
+/// Words needed to store a ball's topology: one word per member plus one
+/// per adjacency entry of members (the induced edges a vertex must hold to
+/// simulate LOCAL rounds inside its ball).
+fn ball_words(g: &Graph, ball: &[u32]) -> Words {
+    ball.iter().map(|&u| 1 + g.degree(u) as Words).sum()
+}
+
+fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Gather balls of radius `target_radius` around `targets` by repeated
+/// doubling, charging `sim` one round per doubling.
+///
+/// `mem_cap` bounds the per-vertex ball topology in words (typically
+/// `sim.config.s_words`); growth stops before exceeding it, mirroring
+/// "collect the largest possible neighborhood" from §2.1.4 step 1.
+pub fn gather_balls(
+    g: &Graph,
+    targets: &[u32],
+    target_radius: usize,
+    mem_cap: Words,
+    sim: &mut MpcSimulator,
+    label: &str,
+) -> Balls {
+    // Radius 1 balls: v plus its neighbors (known without communication —
+    // the input distribution already co-locates a vertex with its edges).
+    let mut balls: Vec<Vec<u32>> = targets
+        .iter()
+        .map(|&v| {
+            let mut b = vec![v];
+            b.extend_from_slice(g.neighbors(v));
+            b.sort_unstable();
+            b.dedup();
+            b
+        })
+        .collect();
+    let mut radius = 1usize;
+    let mut rounds = 0usize;
+    let mut memory_capped = false;
+
+    // Ball lookup for union steps: we need balls of *all* vertices that
+    // appear inside target balls, not just targets. Maintain a global map
+    // lazily (radius-1 balls are cheap to recompute).
+    let ball_of = |v: u32| -> Vec<u32> {
+        let mut b = vec![v];
+        b.extend_from_slice(g.neighbors(v));
+        b.sort_unstable();
+        b.dedup();
+        b
+    };
+
+    // For doubling to be exact we must also grow balls of non-target
+    // vertices; to keep memory honest we grow *all* vertices' balls when
+    // targets don't cover V (the paper's algorithms run with one ball per
+    // alive vertex anyway).
+    let all_vertices: Vec<u32> = (0..g.n() as u32).collect();
+    let growing_all = targets.len() == g.n();
+    let mut global_balls: Vec<Vec<u32>> = if growing_all {
+        Vec::new() // `balls` already covers everything
+    } else {
+        all_vertices.iter().map(|&v| ball_of(v)).collect()
+    };
+
+    while radius < target_radius {
+        // Tentatively double.
+        let source = |v: u32, balls: &Vec<Vec<u32>>, global: &Vec<Vec<u32>>| -> Vec<u32> {
+            if growing_all {
+                balls[v as usize].clone()
+            } else {
+                global[v as usize].clone()
+            }
+        };
+        // Abort the tentative doubling as soon as any ball would exceed
+        // the memory cap (avoids quadratic wasted work on dense balls).
+        let mut doubled: Vec<Vec<u32>> = Vec::with_capacity(balls.len());
+        let mut over_cap = false;
+        'outer: for ball in &balls {
+            let mut acc: Vec<u32> = Vec::new();
+            for &u in ball {
+                acc = union_sorted(&acc, &source(u, &balls, &global_balls));
+                if ball_words(g, &acc) > mem_cap {
+                    over_cap = true;
+                    break 'outer;
+                }
+            }
+            doubled.push(acc);
+        }
+        if over_cap {
+            memory_capped = true;
+            break;
+        }
+        let max_words = doubled.iter().map(|b| ball_words(g, b)).max().unwrap_or(0);
+        // Commit: charge one exchange round with the measured footprint.
+        let total: Words = doubled.iter().map(|b| ball_words(g, b)).sum();
+        rounds += 1;
+        sim.round(&format!("{label}/double[{rounds}]"), max_words, max_words, total, max_words);
+        balls = doubled;
+        if !growing_all {
+            let doubled_global: Vec<Vec<u32>> = global_balls
+                .iter()
+                .map(|ball| {
+                    let mut acc: Vec<u32> = Vec::new();
+                    for &u in ball {
+                        acc = union_sorted(&acc, &global_balls[u as usize]);
+                    }
+                    acc
+                })
+                .collect();
+            global_balls = doubled_global;
+        }
+        radius *= 2;
+        // Converged (ball = component) — further doubling is free.
+        if radius >= g.n() {
+            break;
+        }
+    }
+
+    Balls { balls, radius: radius.min(target_radius.max(1)), rounds, memory_capped }
+}
+
+/// Exact BFS ball (oracle for tests).
+pub fn bfs_ball(g: &Graph, v: u32, radius: usize) -> Vec<u32> {
+    let mut dist = std::collections::HashMap::new();
+    dist.insert(v, 0usize);
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(v);
+    while let Some(u) = queue.pop_front() {
+        let d = dist[&u];
+        if d == radius {
+            continue;
+        }
+        for &w in g.neighbors(u) {
+            if let std::collections::hash_map::Entry::Vacant(e) = dist.entry(w) {
+                e.insert(d + 1);
+                queue.push_back(w);
+            }
+        }
+    }
+    let mut ball: Vec<u32> = dist.into_keys().collect();
+    ball.sort_unstable();
+    ball
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{grid, path, random_tree};
+    use crate::mpc::model::MpcConfig;
+    use crate::util::rng::Rng;
+
+    fn sim() -> MpcSimulator {
+        MpcSimulator::new(MpcConfig::model2(4096, 40_960, 0.99))
+    }
+
+    #[test]
+    fn doubling_matches_bfs() {
+        let mut rng = Rng::new(50);
+        let g = random_tree(200, &mut rng);
+        let targets: Vec<u32> = (0..200).collect();
+        let mut s = sim();
+        let res = gather_balls(&g, &targets, 8, u64::MAX, &mut s, "test");
+        assert_eq!(res.radius, 8);
+        for (i, ball) in res.balls.iter().enumerate() {
+            assert_eq!(ball, &bfs_ball(&g, i as u32, 8), "vertex {i}");
+        }
+    }
+
+    #[test]
+    fn log_rounds_for_radius() {
+        let g = path(600);
+        let targets: Vec<u32> = (0..600).collect();
+        let mut s = sim();
+        let res = gather_balls(&g, &targets, 16, u64::MAX, &mut s, "test");
+        // radius 1 -> 2 -> 4 -> 8 -> 16: 4 doublings.
+        assert_eq!(res.rounds, 4);
+        assert_eq!(s.n_rounds(), 4);
+    }
+
+    #[test]
+    fn memory_cap_stops_growth() {
+        let g = grid(30, 30);
+        let targets: Vec<u32> = (0..900).collect();
+        let mut s = sim();
+        // Tiny cap: radius-2 balls of the grid need > 26 words.
+        let res = gather_balls(&g, &targets, 32, 26, &mut s, "test");
+        assert!(res.memory_capped);
+        assert_eq!(res.radius, 1);
+        assert_eq!(res.rounds, 0);
+    }
+
+    #[test]
+    fn subset_targets_match_bfs() {
+        let mut rng = Rng::new(51);
+        let g = random_tree(150, &mut rng);
+        let targets = vec![0u32, 5, 17];
+        let mut s = sim();
+        let res = gather_balls(&g, &targets, 4, u64::MAX, &mut s, "test");
+        for (i, &t) in targets.iter().enumerate() {
+            assert_eq!(res.balls[i], bfs_ball(&g, t, 4));
+        }
+    }
+
+    #[test]
+    fn ball_words_counts_topology() {
+        let g = path(5);
+        // Ball {1,2,3}: members 3 + degrees 2+2+2 = 9.
+        assert_eq!(ball_words(&g, &[1, 2, 3]), 9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Word-based memory accounting for the MPC simulator.
+//!
+//! The MPC model measures everything in machine words (a vertex id, an
+//! edge endpoint pair, a permutation rank are O(1) words each).  Budgets
+//! are enforced, not advisory: exceeding a per-machine or global budget is
+//! a *model violation* and fails the run — that is how the simulator
+//! certifies that an algorithm really fits the regime it claims.
+
+/// Number of machine words.
+pub type Words = u64;
+
+/// Outcome of a budget charge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BudgetError {
+    /// A single machine exceeded its local memory S.
+    LocalExceeded { machine: usize, used: Words, budget: Words },
+    /// Total memory across machines exceeded the global budget.
+    GlobalExceeded { used: Words, budget: Words },
+}
+
+impl std::fmt::Display for BudgetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetError::LocalExceeded { machine, used, budget } => write!(
+                f,
+                "MPC model violation: machine {machine} used {used} words (budget S = {budget})"
+            ),
+            BudgetError::GlobalExceeded { used, budget } => write!(
+                f,
+                "MPC model violation: global memory {used} words (budget {budget})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BudgetError {}
+
+/// Tracks per-machine usage against local and global budgets.
+#[derive(Debug, Clone)]
+pub struct MemoryLedger {
+    local_budget: Words,
+    global_budget: Words,
+    used: Vec<Words>,
+    total: Words,
+    /// High-water marks for reporting.
+    pub peak_local: Words,
+    pub peak_total: Words,
+}
+
+impl MemoryLedger {
+    pub fn new(machines: usize, local_budget: Words, global_budget: Words) -> MemoryLedger {
+        MemoryLedger {
+            local_budget,
+            global_budget,
+            used: vec![0; machines],
+            total: 0,
+            peak_local: 0,
+            peak_total: 0,
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.used.len()
+    }
+
+    pub fn local_budget(&self) -> Words {
+        self.local_budget
+    }
+
+    pub fn charge(&mut self, machine: usize, words: Words) -> Result<(), BudgetError> {
+        let used = &mut self.used[machine];
+        *used += words;
+        self.total += words;
+        self.peak_local = self.peak_local.max(*used);
+        self.peak_total = self.peak_total.max(self.total);
+        if *used > self.local_budget {
+            return Err(BudgetError::LocalExceeded {
+                machine,
+                used: *used,
+                budget: self.local_budget,
+            });
+        }
+        if self.total > self.global_budget {
+            return Err(BudgetError::GlobalExceeded { used: self.total, budget: self.global_budget });
+        }
+        Ok(())
+    }
+
+    pub fn release(&mut self, machine: usize, words: Words) {
+        let used = &mut self.used[machine];
+        debug_assert!(*used >= words, "releasing more than charged");
+        *used = used.saturating_sub(words);
+        self.total = self.total.saturating_sub(words);
+    }
+
+    /// Release everything on every machine (round teardown).
+    pub fn reset(&mut self) {
+        for u in &mut self.used {
+            *u = 0;
+        }
+        self.total = 0;
+    }
+
+    pub fn used(&self, machine: usize) -> Words {
+        self.used[machine]
+    }
+
+    pub fn total(&self) -> Words {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_and_releases() {
+        let mut l = MemoryLedger::new(2, 100, 150);
+        l.charge(0, 60).unwrap();
+        l.charge(1, 60).unwrap();
+        assert_eq!(l.total(), 120);
+        l.release(0, 60);
+        assert_eq!(l.used(0), 0);
+        assert_eq!(l.total(), 60);
+        assert_eq!(l.peak_total, 120);
+    }
+
+    #[test]
+    fn local_violation_detected() {
+        let mut l = MemoryLedger::new(1, 10, 1000);
+        assert!(l.charge(0, 5).is_ok());
+        let err = l.charge(0, 6).unwrap_err();
+        assert!(matches!(err, BudgetError::LocalExceeded { used: 11, .. }));
+    }
+
+    #[test]
+    fn global_violation_detected() {
+        let mut l = MemoryLedger::new(3, 100, 150);
+        l.charge(0, 80).unwrap();
+        let err = l.charge(1, 80).unwrap_err();
+        assert!(matches!(err, BudgetError::GlobalExceeded { used: 160, .. }));
+    }
+
+    #[test]
+    fn reset_clears_usage_keeps_peaks() {
+        let mut l = MemoryLedger::new(2, 100, 200);
+        l.charge(0, 90).unwrap();
+        l.reset();
+        assert_eq!(l.total(), 0);
+        assert_eq!(l.peak_local, 90);
+    }
+}

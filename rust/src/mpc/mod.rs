@@ -1,0 +1,25 @@
+//! The MPC (Massively Parallel Computation) simulator: the paper's
+//! computational model, built for real.
+//!
+//! * [`model`] — Model 1 / Model 2 parameterizations (S = Õ(n^δ), machine
+//!   fleets, global memory budgets).
+//! * [`memory`] — word-granular budget ledger; violations fail runs.
+//! * [`simulator`] — synchronous round accounting and traces; the round
+//!   counts reported by every experiment come from here.
+//! * [`router`] — executable all-to-all message delivery with O(S)
+//!   per-machine send/receive enforcement.
+//! * [`broadcast`] — S-ary broadcast/convergecast trees (§2.1.5) running
+//!   on the router.
+//! * [`exponentiation`] — graph exponentiation (§2.1.3): 2^k-hop ball
+//!   gathering with measured memory footprints.
+
+pub mod broadcast;
+pub mod connectivity;
+pub mod exponentiation;
+pub mod memory;
+pub mod model;
+pub mod router;
+pub mod simulator;
+
+pub use model::{ModelKind, MpcConfig};
+pub use simulator::MpcSimulator;

@@ -1,0 +1,178 @@
+//! MPC model configurations (paper §1.3.2, Models 1 and 2).
+//!
+//! * **Model 1** (strongly sublinear): `S = Θ̃(n^δ)` words per machine,
+//!   `M = Θ(N / S)` machines, global memory `M · S ≥ N`.
+//! * **Model 2** (≥ n machines): every vertex owns a machine with
+//!   `S = Θ̃(n^δ)`; global memory may reach `Θ̃(n^{1+δ})`.
+//!
+//! `Θ̃` hides polylog(n) factors; the `polylog_slack` knob makes that
+//! hidden factor explicit so experiments can report *which* constant was
+//! needed — e.g. Algorithm 2's component gathering needs S large enough
+//! for poly(log n)-sized components, which is exactly the paper's
+//! assumption.
+
+use crate::mpc::memory::Words;
+
+/// Which memory regime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Model 1: M = Θ(N/S) machines.
+    M1,
+    /// Model 2: M ≥ n machines, one per vertex.
+    M2,
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelKind::M1 => write!(f, "Model1"),
+            ModelKind::M2 => write!(f, "Model2"),
+        }
+    }
+}
+
+/// A concrete instantiation of the model for an input instance.
+#[derive(Debug, Clone)]
+pub struct MpcConfig {
+    pub kind: ModelKind,
+    /// Number of vertices of the input graph.
+    pub n: usize,
+    /// Input size in words (N = |E+| edge records, at least n).
+    pub input_words: Words,
+    /// Memory exponent δ ∈ (0, 1).
+    pub delta: f64,
+    /// Hidden polylog factor: S = polylog_slack · log²(n) · n^δ.
+    pub polylog_slack: f64,
+    /// Per-machine memory in words.
+    pub s_words: Words,
+    /// Number of machines.
+    pub machines: usize,
+    /// Global memory budget in words.
+    pub global_words: Words,
+}
+
+impl MpcConfig {
+    /// Standard strongly-sublinear configuration (Model 1).
+    pub fn model1(n: usize, input_words: Words, delta: f64) -> MpcConfig {
+        Self::model1_slack(n, input_words, delta, 4.0)
+    }
+
+    pub fn model1_slack(n: usize, input_words: Words, delta: f64, slack: f64) -> MpcConfig {
+        assert!((0.0..1.0).contains(&delta), "δ must be in (0,1)");
+        let s = s_words(n, delta, slack);
+        // M = Θ(N/S), with headroom 2 for round scratch; at least 1.
+        let machines = ((2 * input_words).div_ceil(s) as usize).max(1);
+        MpcConfig {
+            kind: ModelKind::M1,
+            n,
+            input_words,
+            delta,
+            polylog_slack: slack,
+            s_words: s,
+            machines,
+            // M·S ≥ N by construction; allow the model's Õ slack globally.
+            global_words: s * machines as Words,
+        }
+    }
+
+    /// Model 2: at least n machines (one per vertex plus the M1 fleet).
+    pub fn model2(n: usize, input_words: Words, delta: f64) -> MpcConfig {
+        Self::model2_slack(n, input_words, delta, 4.0)
+    }
+
+    pub fn model2_slack(n: usize, input_words: Words, delta: f64, slack: f64) -> MpcConfig {
+        assert!((0.0..1.0).contains(&delta), "δ must be in (0,1)");
+        let s = s_words(n, delta, slack);
+        let m1_machines = ((2 * input_words).div_ceil(s) as usize).max(1);
+        let machines = m1_machines.max(n.max(1));
+        MpcConfig {
+            kind: ModelKind::M2,
+            n,
+            input_words,
+            delta,
+            polylog_slack: slack,
+            s_words: s,
+            machines,
+            global_words: s * machines as Words,
+        }
+    }
+
+    /// Rounds needed by a broadcast/convergecast tree (§2.1.5):
+    /// ⌈log_S(machines)⌉, i.e. O(1/δ) for constant δ.
+    pub fn broadcast_tree_depth(&self) -> usize {
+        if self.machines <= 1 {
+            return 1;
+        }
+        let s = (self.s_words as f64).max(2.0);
+        let mut depth = 0usize;
+        let mut reach = 1f64;
+        while reach < self.machines as f64 {
+            reach *= s;
+            depth += 1;
+        }
+        depth
+    }
+
+    /// Does a per-vertex state of `words` fit a single machine?
+    pub fn fits_machine(&self, words: Words) -> bool {
+        words <= self.s_words
+    }
+}
+
+/// S = slack · log2(n)^2 · n^δ words (the Õ(n^δ) of the paper, with the
+/// polylog factor explicit).
+pub fn s_words(n: usize, delta: f64, slack: f64) -> Words {
+    let n = n.max(2) as f64;
+    let log2n = n.log2().max(1.0);
+    (slack * log2n * log2n * n.powf(delta)).ceil() as Words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model1_memory_identity() {
+        // Large n so the Õ polylog slack doesn't dominate n^δ.
+        let n = 1_000_000;
+        let cfg = MpcConfig::model1(n, 3 * n as Words, 0.3);
+        assert_eq!(cfg.kind, ModelKind::M1);
+        // Global memory covers the input.
+        assert!(cfg.global_words >= cfg.input_words);
+        // Strongly sublinear: S ≪ N.
+        assert!(cfg.s_words < cfg.input_words);
+    }
+
+    #[test]
+    fn model2_has_n_machines() {
+        let n = 5_000;
+        let cfg = MpcConfig::model2(n, 2 * n as Words, 0.3);
+        assert!(cfg.machines >= n);
+    }
+
+    #[test]
+    fn s_grows_with_delta() {
+        let n = 100_000;
+        assert!(s_words(n, 0.8, 1.0) > s_words(n, 0.3, 1.0));
+    }
+
+    #[test]
+    fn broadcast_depth_is_small() {
+        let cfg = MpcConfig::model1(1_000_000, 10_000_000, 0.5);
+        // S ~ 4·20²·1000 = 1.6M words, machines ~ 13 ⇒ depth 1.
+        assert!(cfg.broadcast_tree_depth() <= 2, "depth {}", cfg.broadcast_tree_depth());
+    }
+
+    #[test]
+    fn fits_machine_respects_s() {
+        let cfg = MpcConfig::model1(1000, 5000, 0.5);
+        assert!(cfg.fits_machine(cfg.s_words));
+        assert!(!cfg.fits_machine(cfg.s_words + 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "δ must be in")]
+    fn bad_delta_panics() {
+        MpcConfig::model1(100, 100, 1.5);
+    }
+}

@@ -1,0 +1,136 @@
+//! Synchronous message router: the executable all-to-all layer.
+//!
+//! One call to [`Router::step`] is one MPC communication round: every
+//! machine's outbox is validated against the O(S) send budget, every
+//! inbox against the O(S) receive budget, messages are delivered, and the
+//! round is recorded on the [`MpcSimulator`].  The broadcast/convergecast
+//! trees (§2.1.5) run on top of this for real, so their round counts are
+//! measured rather than asserted.
+
+use crate::mpc::memory::Words;
+use crate::mpc::simulator::MpcSimulator;
+
+/// A message between machines: opaque words plus the sender id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub from: usize,
+    pub payload: Vec<u64>,
+}
+
+impl Message {
+    pub fn words(&self) -> Words {
+        // +1 word of envelope (sender id).
+        self.payload.len() as Words + 1
+    }
+}
+
+/// Stateless router over `machines` mailboxes.
+#[derive(Debug)]
+pub struct Router {
+    machines: usize,
+}
+
+impl Router {
+    pub fn new(machines: usize) -> Router {
+        Router { machines }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Execute one synchronous round.
+    ///
+    /// `outboxes[m]` is the list of `(dst, payload)` machine `m` sends.
+    /// Returns `inboxes[m]`: messages delivered to machine `m`, in
+    /// deterministic (sender-ordered) order.
+    pub fn step(
+        &self,
+        sim: &mut MpcSimulator,
+        label: &str,
+        outboxes: Vec<Vec<(usize, Vec<u64>)>>,
+    ) -> Vec<Vec<Message>> {
+        assert_eq!(outboxes.len(), self.machines, "outbox per machine required");
+        let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); self.machines];
+        let mut max_out: Words = 0;
+        let mut total: Words = 0;
+        for (from, outbox) in outboxes.into_iter().enumerate() {
+            let mut sent: Words = 0;
+            for (dst, payload) in outbox {
+                assert!(dst < self.machines, "message to unknown machine {dst}");
+                let msg = Message { from, payload };
+                sent += msg.words();
+                inboxes[dst].push(msg);
+            }
+            max_out = max_out.max(sent);
+            total += sent;
+        }
+        let max_in: Words = inboxes
+            .iter()
+            .map(|inbox| inbox.iter().map(Message::words).sum::<Words>())
+            .max()
+            .unwrap_or(0);
+        // Resident state during a routing round is bounded by the larger
+        // of what a machine sent or received.
+        sim.round(label, max_out, max_in, total, max_out.max(max_in));
+        inboxes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::model::MpcConfig;
+
+    fn sim_for(machines: usize) -> MpcSimulator {
+        // Large-ish S so normal tests pass budgets.
+        MpcSimulator::new(MpcConfig::model1(10_000, 100_000, 0.6))
+        .into_with(machines)
+    }
+
+    trait With {
+        fn into_with(self, machines: usize) -> MpcSimulator;
+    }
+    impl With for MpcSimulator {
+        fn into_with(mut self, machines: usize) -> MpcSimulator {
+            self.config.machines = machines;
+            self
+        }
+    }
+
+    #[test]
+    fn delivers_messages() {
+        let router = Router::new(3);
+        let mut sim = sim_for(3);
+        let out = vec![
+            vec![(1, vec![42]), (2, vec![7, 8])],
+            vec![(0, vec![1])],
+            vec![],
+        ];
+        let inboxes = router.step(&mut sim, "test", out);
+        assert_eq!(inboxes[1].len(), 1);
+        assert_eq!(inboxes[1][0].payload, vec![42]);
+        assert_eq!(inboxes[1][0].from, 0);
+        assert_eq!(inboxes[2][0].payload, vec![7, 8]);
+        assert_eq!(inboxes[0][0].from, 1);
+        assert_eq!(sim.n_rounds(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "model violation")]
+    fn oversized_send_violates() {
+        let router = Router::new(2);
+        let mut sim = sim_for(2);
+        let huge = vec![0u64; sim.config.s_words as usize + 10];
+        router.step(&mut sim, "big", vec![vec![(1, huge)], vec![]]);
+    }
+
+    #[test]
+    fn empty_round_counts() {
+        let router = Router::new(2);
+        let mut sim = sim_for(2);
+        let inboxes = router.step(&mut sim, "idle", vec![vec![], vec![]]);
+        assert!(inboxes.iter().all(|i| i.is_empty()));
+        assert_eq!(sim.n_rounds(), 1);
+    }
+}

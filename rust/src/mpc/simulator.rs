@@ -1,0 +1,201 @@
+//! Round-accounting MPC simulator.
+//!
+//! Algorithms in `algorithms/mpc_mis/` execute their *logic* in plain Rust
+//! (the MPC model allows arbitrary local computation) while reporting every
+//! synchronous communication round to this simulator: what the round was
+//! for, the maximum per-machine words sent/received, and the per-machine
+//! state held.  The simulator enforces the model:
+//!
+//! * a round whose max per-machine traffic exceeds O(S) fails the run;
+//! * per-machine state beyond S words fails the run;
+//! * the reported round count *is* the experiment's measured quantity.
+//!
+//! This is the standard methodology for evaluating MPC algorithms without
+//! a 10,000-node cluster: round complexity and memory feasibility are
+//! properties of the communication schedule, which is executed faithfully;
+//! wall-clock of an actual deployment is out of scope (the paper never
+//! reports one).
+
+use crate::mpc::memory::{BudgetError, Words};
+use crate::mpc::model::MpcConfig;
+
+/// Statistics of one synchronous round.
+#[derive(Debug, Clone)]
+pub struct RoundStat {
+    pub label: String,
+    /// Max words sent by any machine this round.
+    pub max_out: Words,
+    /// Max words received by any machine this round.
+    pub max_in: Words,
+    /// Total words moved this round.
+    pub total: Words,
+    /// Max per-machine resident state this round.
+    pub max_state: Words,
+}
+
+/// Error type: a model violation with the offending round.
+#[derive(Debug)]
+pub struct MpcViolation {
+    pub round: usize,
+    pub label: String,
+    pub error: BudgetError,
+}
+
+impl std::fmt::Display for MpcViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "round {} ({}): {}", self.round, self.label, self.error)
+    }
+}
+
+impl std::error::Error for MpcViolation {}
+
+/// The simulator. Cheap to clone-free pass by `&mut` through algorithms.
+#[derive(Debug)]
+pub struct MpcSimulator {
+    pub config: MpcConfig,
+    trace: Vec<RoundStat>,
+    /// When true, budget violations panic immediately (tests/benches);
+    /// when false they are recorded and surfaced at the end.
+    strict: bool,
+    violations: Vec<MpcViolation>,
+}
+
+impl MpcSimulator {
+    pub fn new(config: MpcConfig) -> MpcSimulator {
+        MpcSimulator { config, trace: Vec::new(), strict: true, violations: Vec::new() }
+    }
+
+    pub fn lenient(config: MpcConfig) -> MpcSimulator {
+        MpcSimulator { config, trace: Vec::new(), strict: false, violations: Vec::new() }
+    }
+
+    /// Record one synchronous round.
+    ///
+    /// `max_out` / `max_in`: maximum words any machine sends/receives.
+    /// `max_state`: maximum words any machine holds while computing.
+    /// `total`: total words communicated (for the report; not a budget).
+    pub fn round(&mut self, label: &str, max_out: Words, max_in: Words, total: Words, max_state: Words) {
+        let stat = RoundStat {
+            label: label.to_string(),
+            max_out,
+            max_in,
+            total,
+            max_state,
+        };
+        let round_idx = self.trace.len();
+        // The model allows messages of size O(S); we use the literal S as
+        // the constant (the polylog slack already lives inside S).
+        let s = self.config.s_words;
+        let violation = if max_out > s || max_in > s {
+            Some(BudgetError::LocalExceeded {
+                machine: 0,
+                used: max_out.max(max_in),
+                budget: s,
+            })
+        } else if max_state > s {
+            Some(BudgetError::LocalExceeded { machine: 0, used: max_state, budget: s })
+        } else if total > self.config.global_words {
+            Some(BudgetError::GlobalExceeded { used: total, budget: self.config.global_words })
+        } else {
+            None
+        };
+        self.trace.push(stat);
+        if let Some(error) = violation {
+            let v = MpcViolation { round: round_idx, label: label.to_string(), error };
+            if self.strict {
+                panic!("{v}");
+            }
+            self.violations.push(v);
+        }
+    }
+
+    /// Record `k` rounds of identical shape (e.g. a broadcast tree pass).
+    pub fn rounds(&mut self, label: &str, k: usize, max_words: Words, total: Words) {
+        for i in 0..k {
+            self.round(&format!("{label}[{i}]"), max_words, max_words, total, max_words);
+        }
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.trace.len()
+    }
+
+    pub fn trace(&self) -> &[RoundStat] {
+        &self.trace
+    }
+
+    pub fn violations(&self) -> &[MpcViolation] {
+        &self.violations
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Peak per-machine words observed over all rounds.
+    pub fn peak_machine_words(&self) -> Words {
+        self.trace
+            .iter()
+            .map(|r| r.max_out.max(r.max_in).max(r.max_state))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total communication over the whole run.
+    pub fn total_communication(&self) -> Words {
+        self.trace.iter().map(|r| r.total).sum()
+    }
+
+    /// Rounds whose label starts with the given phase prefix.
+    pub fn rounds_with_prefix(&self, prefix: &str) -> usize {
+        self.trace.iter().filter(|r| r.label.starts_with(prefix)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::model::MpcConfig;
+
+    fn sim() -> MpcSimulator {
+        MpcSimulator::new(MpcConfig::model1(10_000, 50_000, 0.5))
+    }
+
+    #[test]
+    fn counts_rounds_and_peaks() {
+        let mut s = sim();
+        s.round("a", 10, 20, 100, 30);
+        s.round("b", 5, 5, 50, 40);
+        assert_eq!(s.n_rounds(), 2);
+        assert_eq!(s.peak_machine_words(), 40);
+        assert_eq!(s.total_communication(), 150);
+        assert!(s.ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "model violation")]
+    fn strict_violation_panics() {
+        let mut s = sim();
+        let too_much = s.config.s_words + 1;
+        s.round("overflow", too_much, 0, too_much, 0);
+    }
+
+    #[test]
+    fn lenient_records_violation() {
+        let cfg = MpcConfig::model1(10_000, 50_000, 0.5);
+        let mut s = MpcSimulator::lenient(cfg);
+        let too_much = s.config.s_words + 1;
+        s.round("overflow", too_much, 0, too_much, 0);
+        assert!(!s.ok());
+        assert_eq!(s.violations().len(), 1);
+    }
+
+    #[test]
+    fn rounds_with_prefix_filters() {
+        let mut s = sim();
+        s.rounds("phase1/bcast", 3, 1, 1);
+        s.round("phase2", 1, 1, 1, 1);
+        assert_eq!(s.rounds_with_prefix("phase1"), 3);
+        assert_eq!(s.n_rounds(), 4);
+    }
+}

@@ -1,0 +1,239 @@
+//! Dense-block packing: the protocol between the sparse graph world and
+//! the fixed-shape AOT kernels.
+//!
+//! The exported XLA executables work on dense blocks of `AOT_N` (=256)
+//! vertices (`python/compile/model.py`).  To score a clustering of an
+//! arbitrary graph *exactly* with them, vertices are packed into blocks
+//! such that **no cluster crosses a block boundary** (clusters are tiny —
+//! Lemma 25 bounds them by 4λ−2 — so first-fit-decreasing packs well).
+//! Then:
+//!
+//! * intra-block costs come from the dense kernel per block;
+//! * every cross-block positive edge joins two different clusters by
+//!   construction ⇒ it is exactly one positive disagreement;
+//! * cross-block negative pairs join different clusters ⇒ never disagree.
+//!
+//! Total cost = Σ_blocks dense(block) + #cross-block positive edges, with
+//! no approximation.
+
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+
+/// Block size of the AOT artifacts — must match `python/compile/kernels/
+/// common.py::AOT_N` (checked against `artifacts/manifest.json` at load).
+pub const BLOCK_N: usize = 256;
+
+/// Batch size of the batched scorer artifact (`AOT_BATCH`).
+pub const BLOCK_BATCH: usize = 8;
+
+/// One dense block: up to BLOCK_N vertices plus their block-local data.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Original vertex ids, in block order.
+    pub vertices: Vec<u32>,
+}
+
+/// A full packing of a clustering into blocks.
+#[derive(Debug, Clone)]
+pub struct BlockPlan {
+    pub blocks: Vec<Block>,
+    /// Positive edges whose endpoints fall in different blocks.
+    pub cross_edges: u64,
+}
+
+/// Pack the clusters of `clustering` into blocks of ≤ BLOCK_N vertices,
+/// first-fit-decreasing.  Fails if any single cluster exceeds BLOCK_N
+/// (callers then use the sparse path; the paper's algorithms never emit
+/// such clusters on bounded-arboricity inputs).
+pub fn plan_blocks(g: &Graph, clustering: &Clustering) -> Result<BlockPlan, String> {
+    let members = clustering.members();
+    let mut order: Vec<usize> = (0..members.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(members[i].len()));
+
+    let mut blocks: Vec<Vec<u32>> = Vec::new();
+    let mut loads: Vec<usize> = Vec::new();
+    for &ci in &order {
+        let c = &members[ci];
+        if c.len() > BLOCK_N {
+            return Err(format!(
+                "cluster of size {} exceeds dense block capacity {}",
+                c.len(),
+                BLOCK_N
+            ));
+        }
+        // First fit.
+        match loads.iter().position(|&l| l + c.len() <= BLOCK_N) {
+            Some(b) => {
+                blocks[b].extend_from_slice(c);
+                loads[b] += c.len();
+            }
+            None => {
+                blocks.push(c.clone());
+                loads.push(c.len());
+            }
+        }
+    }
+
+    // Cross-block edge count.
+    let mut block_of = vec![u32::MAX; g.n()];
+    for (b, blk) in blocks.iter().enumerate() {
+        for &v in blk {
+            block_of[v as usize] = b as u32;
+        }
+    }
+    let cross_edges = g
+        .edges()
+        .filter(|&(u, v)| block_of[u as usize] != block_of[v as usize])
+        .count() as u64;
+
+    Ok(BlockPlan {
+        blocks: blocks.into_iter().map(|vertices| Block { vertices }).collect(),
+        cross_edges,
+    })
+}
+
+/// Dense tensors of one block in the kernels' layout: returns
+/// (adj f32[N·N], onehot f32[N·N], valid f32[N]).
+pub fn block_tensors(
+    g: &Graph,
+    clustering: &Clustering,
+    block: &Block,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = BLOCK_N;
+    let k = block.vertices.len();
+    assert!(k <= n);
+    let mut adj = vec![0f32; n * n];
+    let mut onehot = vec![0f32; n * n];
+    let mut valid = vec![0f32; n];
+
+    let mut local_of: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::with_capacity(k);
+    for (i, &v) in block.vertices.iter().enumerate() {
+        local_of.insert(v, i);
+        valid[i] = 1.0;
+    }
+    // Block-local cluster columns.
+    let mut col_of: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for (i, &v) in block.vertices.iter().enumerate() {
+        let label = clustering.label(v);
+        let next = col_of.len();
+        let col = *col_of.entry(label).or_insert(next);
+        onehot[i * n + col] = 1.0;
+    }
+    for (i, &v) in block.vertices.iter().enumerate() {
+        for &u in g.neighbors(v) {
+            if let Some(&j) = local_of.get(&u) {
+                adj[i * n + j] = 1.0;
+            }
+        }
+    }
+    (adj, onehot, valid)
+}
+
+/// Dense tensors for a whole (small) graph padded to BLOCK_N — the
+/// single-block fast path used by the batched scorer and the triangle
+/// kernel. Requires `g.n() <= BLOCK_N`.
+pub fn whole_graph_tensors(g: &Graph) -> (Vec<f32>, Vec<f32>) {
+    let n = BLOCK_N;
+    assert!(g.n() <= n, "graph exceeds single dense block");
+    let mut adj = vec![0f32; n * n];
+    let mut valid = vec![0f32; n];
+    for v in 0..g.n() as u32 {
+        valid[v as usize] = 1.0;
+        for &u in g.neighbors(v) {
+            adj[v as usize * n + u as usize] = 1.0;
+        }
+    }
+    (adj, valid)
+}
+
+/// One-hot tensor of a clustering of a single-block graph.
+pub fn whole_graph_onehot(g: &Graph, clustering: &Clustering) -> Vec<f32> {
+    let n = BLOCK_N;
+    assert!(g.n() <= n);
+    let norm = clustering.normalize();
+    let mut onehot = vec![0f32; n * n];
+    for v in 0..g.n() {
+        onehot[v * n + norm.label(v as u32) as usize] = 1.0;
+    }
+    onehot
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pivot::pivot_random;
+    use crate::graph::generators::lambda_arboric;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_keeps_clusters_whole() {
+        let mut rng = Rng::new(210);
+        let g = lambda_arboric(600, 2, &mut rng);
+        let c = pivot_random(&g, &mut rng);
+        let plan = plan_blocks(&g, &c).unwrap();
+        // Every cluster fully inside one block.
+        let mut block_of = std::collections::HashMap::new();
+        for (b, blk) in plan.blocks.iter().enumerate() {
+            for &v in &blk.vertices {
+                block_of.insert(v, b);
+            }
+        }
+        assert_eq!(block_of.len(), 600, "every vertex packed exactly once");
+        for members in c.members() {
+            let b0 = block_of[&members[0]];
+            assert!(members.iter().all(|v| block_of[v] == b0), "cluster split across blocks");
+        }
+        for blk in &plan.blocks {
+            assert!(blk.vertices.len() <= BLOCK_N);
+        }
+    }
+
+    #[test]
+    fn cross_edges_counted() {
+        let mut rng = Rng::new(211);
+        let g = lambda_arboric(600, 3, &mut rng);
+        let c = pivot_random(&g, &mut rng);
+        let plan = plan_blocks(&g, &c).unwrap();
+        let mut block_of = vec![0usize; 600];
+        for (b, blk) in plan.blocks.iter().enumerate() {
+            for &v in &blk.vertices {
+                block_of[v as usize] = b;
+            }
+        }
+        let manual = g
+            .edges()
+            .filter(|&(u, v)| block_of[u as usize] != block_of[v as usize])
+            .count() as u64;
+        assert_eq!(plan.cross_edges, manual);
+    }
+
+    #[test]
+    fn oversized_cluster_rejected() {
+        let g = Graph::empty(300);
+        let c = crate::cluster::Clustering::single_cluster(300);
+        assert!(plan_blocks(&g, &c).is_err());
+    }
+
+    #[test]
+    fn tensors_are_symmetric_and_padded() {
+        let mut rng = Rng::new(212);
+        let g = lambda_arboric(100, 2, &mut rng);
+        let c = pivot_random(&g, &mut rng);
+        let plan = plan_blocks(&g, &c).unwrap();
+        let (adj, onehot, valid) = block_tensors(&g, &c, &plan.blocks[0]);
+        let n = BLOCK_N;
+        let k = plan.blocks[0].vertices.len();
+        assert_eq!(valid.iter().filter(|&&x| x > 0.0).count(), k);
+        for i in 0..n {
+            assert_eq!(adj[i * n + i], 0.0, "no self loops");
+            for j in 0..n {
+                assert_eq!(adj[i * n + j], adj[j * n + i], "symmetry");
+            }
+        }
+        // Padded rows of onehot are zero.
+        for i in k..n {
+            assert!(onehot[i * n..(i + 1) * n].iter().all(|&x| x == 0.0));
+        }
+    }
+}

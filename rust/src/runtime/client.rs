@@ -1,0 +1,106 @@
+//! PJRT executor for the AOT artifacts.
+//!
+//! Loads `artifacts/{cost_eval,cost_eval_batch,triangles}.hlo.txt` (HLO
+//! *text* — see `python/compile/aot.py` for why not serialized protos),
+//! compiles each once on the CPU PJRT client, and exposes typed execute
+//! wrappers.  Lives on a single thread (`PjRtClient` is `Rc`-based); the
+//! coordinator routes scoring work to it from worker threads.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::blocks::{BLOCK_BATCH, BLOCK_N};
+
+/// Handle to the three compiled executables.
+pub struct PjrtEngine {
+    _client: xla::PjRtClient,
+    cost_eval: xla::PjRtLoadedExecutable,
+    cost_eval_batch: xla::PjRtLoadedExecutable,
+    triangles: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtEngine {
+    /// Load and compile all artifacts from a directory.
+    pub fn load(dir: &std::path::Path) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {name}"))
+        };
+        let engine = PjrtEngine {
+            cost_eval: compile("cost_eval")?,
+            cost_eval_batch: compile("cost_eval_batch")?,
+            triangles: compile("triangles")?,
+            _client: client,
+        };
+        Ok(engine)
+    }
+
+    /// Artifacts present?
+    pub fn artifacts_present(dir: &std::path::Path) -> bool {
+        ["cost_eval", "cost_eval_batch", "triangles"]
+            .iter()
+            .all(|n| dir.join(format!("{n}.hlo.txt")).exists())
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn literal_3d(data: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), a * b * c);
+        Ok(xla::Literal::vec1(data).reshape(&[a as i64, b as i64, c as i64])?)
+    }
+
+    /// Disagreement cost of one dense block: returns (pos, neg).
+    pub fn cost_eval(&self, adj: &[f32], onehot: &[f32], valid: &[f32]) -> Result<(f64, f64)> {
+        let n = BLOCK_N;
+        let args = [
+            Self::literal_2d(adj, n, n)?,
+            Self::literal_2d(onehot, n, n)?,
+            xla::Literal::vec1(valid),
+        ];
+        let result = self.cost_eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let pos = outs[0].to_vec::<f32>()?[0] as f64;
+        let neg = outs[1].to_vec::<f32>()?[0] as f64;
+        Ok((pos, neg))
+    }
+
+    /// Batched scorer: K=BLOCK_BATCH onehots of the same block; returns
+    /// per-candidate (pos, neg).
+    pub fn cost_eval_batch(
+        &self,
+        adj: &[f32],
+        onehots: &[f32],
+        valid: &[f32],
+    ) -> Result<Vec<(f64, f64)>> {
+        let n = BLOCK_N;
+        let b = BLOCK_BATCH;
+        let args = [
+            Self::literal_2d(adj, n, n)?,
+            Self::literal_3d(onehots, b, n, n)?,
+            xla::Literal::vec1(valid),
+        ];
+        let result =
+            self.cost_eval_batch.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let pos = outs[0].to_vec::<f32>()?;
+        let neg = outs[1].to_vec::<f32>()?;
+        Ok(pos.into_iter().zip(neg).map(|(p, q)| (p as f64, q as f64)).collect())
+    }
+
+    /// Bad-triangle count of one dense block.
+    pub fn triangles(&self, adj: &[f32], valid: &[f32]) -> Result<f64> {
+        let n = BLOCK_N;
+        let args = [Self::literal_2d(adj, n, n)?, xla::Literal::vec1(valid)];
+        let result = self.triangles.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        Ok(outs[0].to_vec::<f32>()?[0] as f64)
+    }
+}

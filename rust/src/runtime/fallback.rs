@@ -1,0 +1,158 @@
+//! Pure-Rust twin of the dense kernels — the same block protocol, the
+//! same arithmetic, no PJRT.
+//!
+//! Used (a) as the backend when `artifacts/` is missing, (b) by tests to
+//! assert the PJRT path is numerically identical, and (c) as the baseline
+//! the §Perf pass measures the XLA path against.
+
+use crate::runtime::blocks::BLOCK_N;
+
+/// Dense disagreement count of one block, mirroring
+/// `python/compile/model.py::cost_eval` exactly (same reduction, same
+/// corrections). Returns (pos, neg).
+///
+/// Perf note (§Perf L3-2): rows of `onehot` are one-hot (or all-zero for
+/// padding) by the block protocol, so the O(N) dot product collapses to a
+/// label-equality test — this O(N²) pass produces the *identical* integer
+/// counts as the O(N³) kernel arithmetic (asserted against
+/// [`dense_cost_block_reference`] in tests).
+pub fn dense_cost_block(adj: &[f32], onehot: &[f32], valid: &[f32]) -> (f64, f64) {
+    let n = BLOCK_N;
+    assert_eq!(adj.len(), n * n);
+    assert_eq!(onehot.len(), n * n);
+    assert_eq!(valid.len(), n);
+    // Extract the hot column per row (u32::MAX = all-zero/padded row).
+    let mut label = vec![u32::MAX; n];
+    for (i, l) in label.iter_mut().enumerate() {
+        let row = &onehot[i * n..(i + 1) * n];
+        if let Some(col) = row.iter().position(|&x| x != 0.0) {
+            *l = col as u32;
+        }
+    }
+    let mut raw_pos = 0f64;
+    let mut raw_neg = 0f64;
+    for i in 0..n {
+        if valid[i] == 0.0 {
+            continue; // padded rows contribute 0 (zero onehot + zero adj)
+        }
+        let li = label[i];
+        let arow = &adj[i * n..(i + 1) * n];
+        for (j, &a) in arow.iter().enumerate() {
+            let c = (label[j] == li && li != u32::MAX) as u32 as f32;
+            raw_pos += (a * (1.0 - c)) as f64;
+            raw_neg += ((1.0 - a) * c * valid[i] * valid[j]) as f64;
+        }
+    }
+    let n_valid: f64 = valid.iter().map(|&x| x as f64).sum();
+    (raw_pos * 0.5, (raw_neg - n_valid) * 0.5)
+}
+
+/// The kernel-arithmetic-identical O(N³) variant (full `L @ Lᵀ` dot
+/// products) kept as the parity oracle for [`dense_cost_block`].
+pub fn dense_cost_block_reference(adj: &[f32], onehot: &[f32], valid: &[f32]) -> (f64, f64) {
+    let n = BLOCK_N;
+    assert_eq!(adj.len(), n * n);
+    assert_eq!(onehot.len(), n * n);
+    assert_eq!(valid.len(), n);
+    let mut raw_pos = 0f64;
+    let mut raw_neg = 0f64;
+    for i in 0..n {
+        if valid[i] == 0.0 {
+            continue;
+        }
+        let oi = &onehot[i * n..(i + 1) * n];
+        for j in 0..n {
+            let a = adj[i * n + j];
+            let oj = &onehot[j * n..(j + 1) * n];
+            let c: f32 = oi.iter().zip(oj).map(|(x, y)| x * y).sum();
+            raw_pos += (a * (1.0 - c)) as f64;
+            raw_neg += ((1.0 - a) * c * valid[i] * valid[j]) as f64;
+        }
+    }
+    let n_valid: f64 = valid.iter().map(|&x| x as f64).sum();
+    (raw_pos * 0.5, (raw_neg - n_valid) * 0.5)
+}
+
+/// Dense bad-triangle count of one block, mirroring
+/// `python/compile/model.py::bad_triangles` (P2 = A@A, masked reduce, /2).
+pub fn dense_triangles_block(adj: &[f32], valid: &[f32]) -> f64 {
+    let n = BLOCK_N;
+    assert_eq!(adj.len(), n * n);
+    let mut raw = 0f64;
+    for u in 0..n {
+        if valid[u] == 0.0 {
+            continue;
+        }
+        for w in 0..n {
+            if w == u || valid[w] == 0.0 || adj[u * n + w] != 0.0 {
+                continue;
+            }
+            // P2[u, w] = Σ_v A[u,v]·A[v,w].
+            let mut p2 = 0f32;
+            for v in 0..n {
+                p2 += adj[u * n + v] * adj[v * n + w];
+            }
+            raw += p2 as f64;
+        }
+    }
+    raw * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pivot::pivot_random;
+    use crate::cluster::cost::cost;
+    use crate::cluster::triangles::count_bad_triangles;
+    use crate::graph::generators::lambda_arboric;
+    use crate::runtime::blocks::{plan_blocks, whole_graph_tensors, block_tensors};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn block_costs_sum_to_sparse_cost() {
+        let mut rng = Rng::new(220);
+        for trial in 0..5 {
+            let g = lambda_arboric(700, 1 + trial % 3, &mut rng);
+            let c = pivot_random(&g, &mut rng);
+            let plan = plan_blocks(&g, &c).unwrap();
+            let mut total = plan.cross_edges as f64;
+            for b in &plan.blocks {
+                let (adj, onehot, valid) = block_tensors(&g, &c, b);
+                let (pos, neg) = dense_cost_block(&adj, &onehot, &valid);
+                total += pos + neg;
+            }
+            assert_eq!(total as u64, cost(&g, &c).total(), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn fast_block_cost_equals_kernel_arithmetic() {
+        // §Perf L3-2 safety: the O(N²) label-equality pass must produce
+        // identical counts to the O(N³) kernel-identical arithmetic.
+        let mut rng = Rng::new(222);
+        for trial in 0..5 {
+            let g = lambda_arboric(230, 1 + trial % 3, &mut rng);
+            let c = pivot_random(&g, &mut rng);
+            let plan = plan_blocks(&g, &c).unwrap();
+            for b in &plan.blocks {
+                let (adj, onehot, valid) = block_tensors(&g, &c, b);
+                assert_eq!(
+                    dense_cost_block(&adj, &onehot, &valid),
+                    dense_cost_block_reference(&adj, &onehot, &valid),
+                    "trial {trial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_triangles_match_sparse() {
+        let mut rng = Rng::new(221);
+        for trial in 0..5 {
+            let g = lambda_arboric(200, 1 + trial % 3, &mut rng);
+            let (adj, valid) = whole_graph_tensors(&g);
+            let dense = dense_triangles_block(&adj, &valid);
+            assert_eq!(dense as u64, count_bad_triangles(&g), "trial {trial}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Numeric runtime: PJRT execution of the AOT JAX/Pallas artifacts, with
+//! a bit-identical native fallback.
+//!
+//! * [`client`] — compile-once PJRT wrappers for the three artifacts;
+//! * [`blocks`] — the dense-block packing protocol (exact, cluster-whole);
+//! * [`fallback`] — pure-Rust twin of the kernels.
+//!
+//! [`CostEngine`] is the façade the coordinator and benches use: it
+//! dispatches to PJRT when `artifacts/` is present and to the native twin
+//! otherwise, with identical results either way (asserted by integration
+//! tests).
+
+pub mod blocks;
+pub mod client;
+pub mod fallback;
+
+use anyhow::Result;
+
+use crate::cluster::cost::Cost;
+use crate::cluster::Clustering;
+use crate::graph::Graph;
+use blocks::{block_tensors, plan_blocks, whole_graph_onehot, whole_graph_tensors, BLOCK_BATCH, BLOCK_N};
+use client::PjrtEngine;
+
+/// Which backend a [`CostEngine`] ended up with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Native,
+}
+
+/// Dense scoring engine over the AOT block protocol.
+pub enum CostEngine {
+    Pjrt(PjrtEngine),
+    Native,
+}
+
+impl CostEngine {
+    /// Load PJRT from `dir` if the artifacts exist, else native fallback.
+    pub fn auto(dir: &std::path::Path) -> CostEngine {
+        if PjrtEngine::artifacts_present(dir) {
+            match PjrtEngine::load(dir) {
+                Ok(engine) => return CostEngine::Pjrt(engine),
+                Err(err) => {
+                    eprintln!("warning: PJRT load failed ({err:#}); using native fallback");
+                }
+            }
+        }
+        CostEngine::Native
+    }
+
+    /// Default artifact location (`artifacts/` under the repo root).
+    pub fn auto_default() -> CostEngine {
+        Self::auto(std::path::Path::new("artifacts"))
+    }
+
+    pub fn native() -> CostEngine {
+        CostEngine::Native
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            CostEngine::Pjrt(_) => BackendKind::Pjrt,
+            CostEngine::Native => BackendKind::Native,
+        }
+    }
+
+    /// Exact disagreement cost via the dense block protocol.
+    ///
+    /// Falls back to the sparse formula if a cluster exceeds the block
+    /// capacity (cannot happen for Lemma 25-shaped clusterings).
+    pub fn cost(&self, g: &Graph, clustering: &Clustering) -> Result<Cost> {
+        let plan = match plan_blocks(g, clustering) {
+            Ok(p) => p,
+            Err(_) => return Ok(crate::cluster::cost::cost(g, clustering)),
+        };
+        let mut pos_total = plan.cross_edges as f64;
+        let mut neg_total = 0f64;
+        for b in &plan.blocks {
+            let (adj, onehot, valid) = block_tensors(g, clustering, b);
+            let (pos, neg) = match self {
+                CostEngine::Pjrt(engine) => engine.cost_eval(&adj, &onehot, &valid)?,
+                CostEngine::Native => fallback::dense_cost_block(&adj, &onehot, &valid),
+            };
+            pos_total += pos;
+            neg_total += neg;
+        }
+        Ok(Cost { positive: pos_total as u64, negative: neg_total as u64 })
+    }
+
+    /// Score K clusterings of a single-block graph (n ≤ BLOCK_N) — the
+    /// Remark 14 best-of-K hot path. Pads the batch to BLOCK_BATCH.
+    pub fn cost_batch_single_block(
+        &self,
+        g: &Graph,
+        clusterings: &[Clustering],
+    ) -> Result<Vec<Cost>> {
+        assert!(g.n() <= BLOCK_N, "single-block scorer needs n ≤ {BLOCK_N}");
+        let (adj, valid) = whole_graph_tensors(g);
+        let mut out = Vec::with_capacity(clusterings.len());
+        for group in clusterings.chunks(BLOCK_BATCH) {
+            match self {
+                CostEngine::Pjrt(engine) => {
+                    let mut onehots = vec![0f32; BLOCK_BATCH * BLOCK_N * BLOCK_N];
+                    for (i, c) in group.iter().enumerate() {
+                        let oh = whole_graph_onehot(g, c);
+                        onehots[i * BLOCK_N * BLOCK_N..(i + 1) * BLOCK_N * BLOCK_N]
+                            .copy_from_slice(&oh);
+                    }
+                    let scored = engine.cost_eval_batch(&adj, &onehots, &valid)?;
+                    for (i, _) in group.iter().enumerate() {
+                        let (pos, neg) = scored[i];
+                        out.push(Cost { positive: pos as u64, negative: neg as u64 });
+                    }
+                }
+                CostEngine::Native => {
+                    for c in group {
+                        let oh = whole_graph_onehot(g, c);
+                        let (pos, neg) = fallback::dense_cost_block(&adj, &oh, &valid);
+                        out.push(Cost { positive: pos as u64, negative: neg as u64 });
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Bad-triangle count of a single-block graph (n ≤ BLOCK_N).
+    pub fn bad_triangles_single_block(&self, g: &Graph) -> Result<u64> {
+        assert!(g.n() <= BLOCK_N, "single-block triangles needs n ≤ {BLOCK_N}");
+        let (adj, valid) = whole_graph_tensors(g);
+        let t = match self {
+            CostEngine::Pjrt(engine) => engine.triangles(&adj, &valid)?,
+            CostEngine::Native => fallback::dense_triangles_block(&adj, &valid),
+        };
+        Ok(t as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::pivot::pivot_random;
+    use crate::cluster::cost::cost;
+    use crate::cluster::triangles::count_bad_triangles;
+    use crate::graph::generators::lambda_arboric;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_engine_matches_sparse_cost() {
+        let mut rng = Rng::new(230);
+        let engine = CostEngine::native();
+        for trial in 0..5 {
+            let g = lambda_arboric(500, 1 + trial % 3, &mut rng);
+            let c = pivot_random(&g, &mut rng);
+            assert_eq!(engine.cost(&g, &c).unwrap(), cost(&g, &c), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn native_batch_matches_individual() {
+        let mut rng = Rng::new(231);
+        let g = lambda_arboric(200, 2, &mut rng);
+        let engine = CostEngine::native();
+        let cs: Vec<_> = (0..5).map(|_| pivot_random(&g, &mut rng)).collect();
+        let batch = engine.cost_batch_single_block(&g, &cs).unwrap();
+        for (i, c) in cs.iter().enumerate() {
+            assert_eq!(batch[i], cost(&g, c), "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn native_triangles_match() {
+        let mut rng = Rng::new(232);
+        let g = lambda_arboric(180, 2, &mut rng);
+        let engine = CostEngine::native();
+        assert_eq!(
+            engine.bad_triangles_single_block(&g).unwrap(),
+            count_bad_triangles(&g)
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Tiny CLI flag parser used by `main.rs`, the examples and bench bins
+//! (clap is unavailable in the offline registry).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments.  Typed getters parse on access and report precise
+//! errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (prod).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(raw) = item.strip_prefix("--") {
+                if let Some((k, v)) = raw.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().expect("peeked");
+                    args.flags.entry(raw.to_string()).or_default().push(v);
+                } else {
+                    args.flags
+                        .entry(raw.to_string())
+                        .or_default()
+                        .push("true".to_string());
+                }
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments, skipping argv[0].
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values provided for a repeatable flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        match self.get(key) {
+            None => false,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => true,
+        }
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => {
+                    panic!("invalid value for --{key}: '{s}' ({e})")
+                }
+            },
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_parsed(key, default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_parsed(key, default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get_parsed(key, default)
+    }
+
+    /// Comma-separated list flag: `--ns 100,1000,10000`.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|part| !part.is_empty())
+                .map(|part| {
+                    part.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("invalid item in --{key}: '{part}' ({e})"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_value_styles() {
+        // NOTE: bare boolean flags are greedy — `--verbose run` would read
+        // `run` as the flag value. Convention: positionals (subcommands)
+        // come first, or use `--flag=true`.
+        let a = parse("run --n 100 --eps=0.5 --verbose");
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert_eq!(a.get_f64("eps", 0.0), 0.5);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("n", 42), 42);
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.get_str("mode", "m1"), "m1");
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("--ns 1,2,3");
+        assert_eq!(a.get_list("ns", &[9usize]), vec![1, 2, 3]);
+        let b = parse("");
+        assert_eq!(b.get_list("ns", &[9usize]), vec![9]);
+    }
+
+    #[test]
+    fn repeated_flags_collect() {
+        let a = parse("--algo pivot --algo c4");
+        assert_eq!(a.get_all("algo"), vec!["pivot", "c4"]);
+        assert_eq!(a.get("algo"), Some("c4")); // last wins for scalar get
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --n")]
+    fn bad_parse_panics() {
+        let a = parse("--n abc");
+        let _ = a.get_usize("n", 0);
+    }
+}

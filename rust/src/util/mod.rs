@@ -1,0 +1,13 @@
+//! Shared infrastructure: PRNG, statistics, JSON reports, property testing,
+//! CLI parsing, tables and timers.
+//!
+//! These replace `rand`, `proptest`, `serde`, `clap` and `criterion`, none
+//! of which are available in the offline crate registry (see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

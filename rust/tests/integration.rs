@@ -1,0 +1,189 @@
+//! Cross-module integration tests: whole pipelines composing, plus the
+//! PJRT-vs-native parity checks (run when `artifacts/` is present — CI
+//! should always run them after `make artifacts`).
+
+use std::sync::Arc;
+
+use arbocc::algorithms::alg4::alg4;
+use arbocc::algorithms::forest::clustering_from_matching;
+use arbocc::algorithms::matching::maximum_matching_forest;
+use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Alg2Params, Alg3Params, Subroutine};
+use arbocc::algorithms::pivot::{pivot, pivot_random};
+use arbocc::algorithms::simple::simple_clustering;
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::exact::exact_cost;
+use arbocc::cluster::triangles::{count_bad_triangles, packing_lower_bound};
+use arbocc::coordinator::{best_of_k, TrialSpec};
+use arbocc::graph::arboricity::estimate_arboricity;
+use arbocc::graph::generators::{barabasi_albert, lambda_arboric, random_forest};
+use arbocc::mpc::memory::Words;
+use arbocc::mpc::{MpcConfig, MpcSimulator};
+use arbocc::runtime::{BackendKind, CostEngine};
+use arbocc::util::rng::Rng;
+
+fn artifacts_engine() -> Option<CostEngine> {
+    let engine = CostEngine::auto_default();
+    match engine.kind() {
+        BackendKind::Pjrt => Some(engine),
+        BackendKind::Native => None,
+    }
+}
+
+#[test]
+fn full_mpc_pipeline_matches_sequential_pivot() {
+    // Graph → π → Alg1+Alg2 MIS → join: must equal sequential PIVOT,
+    // within memory budgets, on both models.
+    let mut rng = Rng::new(501);
+    let g = barabasi_albert(5_000, 3, &mut rng);
+    let perm = rng.permutation(g.n());
+    let words = (g.n() + 2 * g.m()) as Words;
+    let expected = pivot(&g, &perm).normalize();
+
+    let mut sim1 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+    let run1 = mpc_pivot(
+        &g,
+        &perm,
+        &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) },
+        &mut sim1,
+    );
+    assert_eq!(run1.clustering.normalize(), expected);
+    assert!(sim1.ok(), "model-1 budgets violated");
+
+    let mut sim2 = MpcSimulator::new(MpcConfig::model2(g.n(), words, 0.5));
+    let run2 = mpc_pivot(
+        &g,
+        &perm,
+        &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg3(Alg3Params::default()) },
+        &mut sim2,
+    );
+    assert_eq!(run2.clustering.normalize(), expected);
+    assert!(sim2.ok(), "model-2 budgets violated");
+}
+
+#[test]
+fn alg4_pipeline_ratio_certified() {
+    // End-to-end Corollary 28 shape: Alg4(PIVOT) cost within 3× of the
+    // bad-triangle packing LB on a scale-free graph.
+    let mut rng = Rng::new(502);
+    let g = barabasi_albert(20_000, 3, &mut rng);
+    let est = estimate_arboricity(&g);
+    let c = alg4(&g, est.degeneracy.max(1), 2.0, |sub| pivot_random(sub, &mut rng));
+    let total = cost(&g, &c).total();
+    let lb = packing_lower_bound(&g).max(1);
+    let ratio = total as f64 / lb as f64;
+    assert!(ratio <= 3.0, "certified ratio {ratio} > 3 on BA(20k)");
+}
+
+#[test]
+fn forest_pipeline_is_optimal() {
+    let mut rng = Rng::new(503);
+    for _ in 0..10 {
+        let g = random_forest(13, 0.85, &mut rng);
+        let m = maximum_matching_forest(&g);
+        let c = clustering_from_matching(g.n(), &m);
+        assert_eq!(cost(&g, &c).total(), exact_cost(&g));
+    }
+}
+
+#[test]
+fn simple_algorithm_on_mixed_components() {
+    // Cliques + non-clique components mixed in one graph.
+    let mut rng = Rng::new(504);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    // K4 on 0..4, path on 4..8, isolated 8..10.
+    for u in 0..4u32 {
+        for v in (u + 1)..4 {
+            edges.push((u, v));
+        }
+    }
+    edges.push((4, 5));
+    edges.push((5, 6));
+    edges.push((6, 7));
+    let g = arbocc::graph::Graph::from_edges(10, &edges);
+    let words = (g.n() + 2 * g.m()) as Words;
+    let mut sim = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+    let run = simple_clustering(&g, 2, &mut sim);
+    // K4 clustered (zero cost), path singletons (3 disagreements).
+    assert_eq!(cost(&g, &run.clustering).total(), 3);
+    assert!(run.clique_clusters >= 1);
+    let _ = rng;
+}
+
+#[test]
+fn coordinator_end_to_end_native() {
+    let mut rng = Rng::new(505);
+    let g = Arc::new(lambda_arboric(2_000, 3, &mut rng));
+    let engine = CostEngine::native();
+    let run = best_of_k(&g, &TrialSpec::Alg4Pivot { lambda: 3, eps: 2.0 }, 8, 3, 77, &engine)
+        .unwrap();
+    assert_eq!(cost(&g, &run.best).total(), run.best_cost.total());
+    assert_eq!(run.best_cost.total(), *run.costs.iter().min().unwrap());
+}
+
+// ---------------------------------------------------------------------
+// PJRT parity (requires `make artifacts`).
+// ---------------------------------------------------------------------
+
+#[test]
+fn pjrt_cost_matches_native_and_sparse() {
+    let Some(engine) = artifacts_engine() else {
+        eprintln!("skipping: artifacts/ not present");
+        return;
+    };
+    let native = CostEngine::native();
+    let mut rng = Rng::new(506);
+    for lambda in [1usize, 3, 6] {
+        let g = lambda_arboric(600, lambda, &mut rng);
+        let c = pivot_random(&g, &mut rng);
+        let pjrt_cost = engine.cost(&g, &c).unwrap();
+        assert_eq!(pjrt_cost, native.cost(&g, &c).unwrap(), "λ={lambda}");
+        assert_eq!(pjrt_cost, cost(&g, &c), "λ={lambda} vs sparse");
+    }
+}
+
+#[test]
+fn pjrt_batch_matches_loop() {
+    let Some(engine) = artifacts_engine() else {
+        eprintln!("skipping: artifacts/ not present");
+        return;
+    };
+    let mut rng = Rng::new(507);
+    let g = lambda_arboric(200, 2, &mut rng);
+    let cs: Vec<_> = (0..13).map(|_| pivot_random(&g, &mut rng)).collect();
+    let batch = engine.cost_batch_single_block(&g, &cs).unwrap();
+    for (i, c) in cs.iter().enumerate() {
+        assert_eq!(batch[i], cost(&g, c), "candidate {i}");
+    }
+}
+
+#[test]
+fn pjrt_triangles_match_sparse() {
+    let Some(engine) = artifacts_engine() else {
+        eprintln!("skipping: artifacts/ not present");
+        return;
+    };
+    let mut rng = Rng::new(508);
+    for lambda in [1usize, 2, 5] {
+        let g = lambda_arboric(250, lambda, &mut rng);
+        assert_eq!(
+            engine.bad_triangles_single_block(&g).unwrap(),
+            count_bad_triangles(&g),
+            "λ={lambda}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_best_of_k_equals_native_best_of_k() {
+    let Some(engine) = artifacts_engine() else {
+        eprintln!("skipping: artifacts/ not present");
+        return;
+    };
+    let mut rng = Rng::new(509);
+    let g = Arc::new(lambda_arboric(220, 3, &mut rng));
+    let native = CostEngine::native();
+    let a = best_of_k(&g, &TrialSpec::Pivot, 10, 2, 31, &engine).unwrap();
+    let b = best_of_k(&g, &TrialSpec::Pivot, 10, 2, 31, &native).unwrap();
+    assert_eq!(a.costs, b.costs, "identical trials must score identically on both backends");
+    assert_eq!(a.best_cost, b.best_cost);
+}

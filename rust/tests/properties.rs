@@ -1,0 +1,249 @@
+//! Property-based tests over the whole stack (in-repo prop harness —
+//! proptest is unavailable offline; see DESIGN.md §2).
+//!
+//! Each property runs against many seeded random instances with
+//! size-ramped inputs and shrink-on-failure. These are the paper's
+//! *invariants*, as opposed to the per-module unit tests' examples.
+
+use arbocc::algorithms::greedy_mis::{greedy_mis, is_valid_mis, parallel_greedy_rounds};
+use arbocc::algorithms::matching::{
+    is_matching, is_maximal, maximal_matching, maximum_matching_forest,
+};
+use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
+use arbocc::algorithms::mpc_mis::alg3::{alg3_process, Alg3Params};
+use arbocc::algorithms::pivot::{pivot, pivot_via_mis};
+use arbocc::cluster::cost::{cost, cost_brute};
+use arbocc::cluster::structural::bound_cluster_sizes;
+use arbocc::cluster::Clustering;
+use arbocc::graph::arboricity::estimate_arboricity;
+use arbocc::graph::generators::{lambda_arboric, random_forest};
+use arbocc::mpc::memory::Words;
+use arbocc::mpc::{MpcConfig, MpcSimulator};
+use arbocc::prop_check;
+use arbocc::runtime::CostEngine;
+use arbocc::util::prop::forall;
+use arbocc::util::rng::Rng;
+
+fn random_lambda_graph(rng: &mut Rng, size: usize) -> (arbocc::graph::Graph, usize) {
+    let lambda = 1 + rng.index(4);
+    (lambda_arboric(size.max(2), lambda, rng), lambda)
+}
+
+#[test]
+fn prop_cost_formulas_agree() {
+    forall("sparse cost == brute-force cost == dense engine cost", 60, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size);
+        let labels: Vec<u32> = (0..g.n()).map(|_| rng.index(g.n().max(1)) as u32).collect();
+        let c = Clustering::from_labels(labels);
+        let sparse = cost(&g, &c);
+        let brute = cost_brute(&g, &c);
+        prop_check!(sparse == brute, "sparse {sparse:?} vs brute {brute:?}");
+        let engine = CostEngine::native();
+        let dense = engine.cost(&g, &c).map_err(|e| e.to_string())?;
+        prop_check!(dense == sparse, "dense {dense:?} vs sparse {sparse:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pivot_is_mis_clustering() {
+    forall("PIVOT == greedy-MIS-derived clustering; clusters have centers", 60, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size);
+        let perm = rng.permutation(g.n());
+        let direct = pivot(&g, &perm).normalize();
+        let via_mis = pivot_via_mis(&g, &perm).normalize();
+        prop_check!(direct == via_mis);
+        // Every cluster has a member adjacent to all others.
+        for members in direct.members() {
+            if members.len() > 1 {
+                let centered = members
+                    .iter()
+                    .any(|&p| members.iter().all(|&u| u == p || g.has_edge(p, u)));
+                prop_check!(centered, "cluster {members:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mpc_simulations_are_exact() {
+    forall("Alg2 and Alg3 reproduce sequential greedy MIS exactly", 40, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size);
+        let perm = rng.permutation(g.n());
+        let expected = greedy_mis(&g, &perm);
+        let words = (g.n() + 2 * g.m()).max(4) as Words;
+
+        let mut sim = MpcSimulator::lenient(MpcConfig::model1(g.n().max(2), words, 0.5));
+        let mut blocked = vec![false; g.n()];
+        let mut in_mis = vec![false; g.n()];
+        alg2_process(&g, &perm, &mut blocked, &mut in_mis, &mut sim, &Alg2Params::default());
+        prop_check!(in_mis == expected, "alg2 mismatch");
+
+        let mut sim3 = MpcSimulator::lenient(MpcConfig::model2(g.n().max(2), words, 0.5));
+        let mut blocked3 = vec![false; g.n()];
+        let mut in_mis3 = vec![false; g.n()];
+        alg3_process(&g, &perm, &mut blocked3, &mut in_mis3, &mut sim3, &Alg3Params::default());
+        prop_check!(in_mis3 == expected, "alg3 mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_mis_is_valid_and_fixpoint_agrees() {
+    forall("greedy MIS valid; parallel fixpoint equals it", 60, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size);
+        let perm = rng.permutation(g.n());
+        let mis = greedy_mis(&g, &perm);
+        prop_check!(is_valid_mis(&g, &mis));
+        let (par, iters) = parallel_greedy_rounds(&g, &perm);
+        prop_check!(par == mis);
+        prop_check!(iters >= 1 || g.n() == 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_structural_transform_invariants() {
+    forall("Lemma 25 transform: no cost increase, sizes ≤ 4λ−2", 40, |rng, size| {
+        let (g, lambda) = random_lambda_graph(rng, size);
+        // Arbitrary random clustering as the start point.
+        let labels: Vec<u32> =
+            (0..g.n()).map(|_| rng.index((g.n() / 2).max(1)) as u32).collect();
+        let start = Clustering::from_labels(labels);
+        let before = cost(&g, &start).total();
+        let res = bound_cluster_sizes(&g, &start, lambda);
+        let after = cost(&g, &res.clustering).total();
+        prop_check!(after <= before, "{after} > {before}");
+        prop_check!(res.max_cluster_size <= 4 * lambda - 2);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matchings() {
+    forall("maximal matching valid+maximal; ≥ half of maximum on forests", 40, |rng, size| {
+        let g = random_forest(size.max(4), 0.85, rng);
+        let words = (g.n() + 2 * g.m()).max(4) as Words;
+        let mut sim = MpcSimulator::lenient(MpcConfig::model1(g.n().max(2), words, 0.5));
+        let run = maximal_matching(&g, rng, &mut sim, 128);
+        prop_check!(is_matching(&g, &run.matching));
+        prop_check!(is_maximal(&g, &run.matching));
+        let opt = maximum_matching_forest(&g);
+        prop_check!(is_matching(&g, &opt));
+        prop_check!(2 * run.matching.len() >= opt.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arboricity_sandwich() {
+    forall("density LB ≤ construction λ; degeneracy ≤ 2λ", 40, |rng, size| {
+        let lambda = 1 + rng.index(4);
+        let g = lambda_arboric(size.max(8), lambda, rng);
+        let est = estimate_arboricity(&g);
+        let (lo, hi) = est.bounds();
+        prop_check!(lo <= lambda, "density witness {lo} above construction λ {lambda}");
+        prop_check!(hi <= 2 * lambda, "degeneracy {hi} above 2λ");
+        prop_check!(lo <= hi);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_local_search_monotone_and_valid() {
+    use arbocc::algorithms::local_search::local_search;
+    forall("local search never increases cost; result is a partition", 40, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size);
+        let start = arbocc::algorithms::pivot::pivot_random(&g, rng);
+        let run = local_search(&g, &start, 8);
+        prop_check!(run.final_cost <= run.initial_cost);
+        prop_check!(run.clustering.n() == g.n());
+        prop_check!(cost(&g, &run.clustering).total() == run.final_cost);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_identities() {
+    use arbocc::cluster::metrics::{adjusted_rand_index, pair_confusion, rand_index};
+    forall("pair confusion covers all pairs; self-comparison is perfect", 60, |rng, size| {
+        let n = size.max(2);
+        let labels: Vec<u32> = (0..n).map(|_| rng.index(4) as u32).collect();
+        let a = Clustering::from_labels(labels.clone());
+        let b = Clustering::from_labels((0..n).map(|_| rng.index(4) as u32).collect());
+        let c = pair_confusion(&a, &b);
+        let total = c.tt + c.tf + c.ft + c.ff;
+        prop_check!(total == (n as u64) * (n as u64 - 1) / 2);
+        prop_check!(rand_index(&a, &a) == 1.0);
+        prop_check!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        let r = rand_index(&a, &b);
+        prop_check!((0.0..=1.0).contains(&r));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_list_roundtrip() {
+    forall("edge-list IO preserves the edge multiset", 30, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size.max(4));
+        let mut buf = Vec::new();
+        arbocc::graph::io::write_edge_list(&g, &mut buf).map_err(|e| e.to_string())?;
+        let (g2, orig) =
+            arbocc::graph::io::read_edge_list(std::io::Cursor::new(buf)).map_err(|e| e.to_string())?;
+        prop_check!(g2.m() == g.m());
+        let mut back: Vec<(u32, u32)> = g2
+            .edges()
+            .map(|(u, v)| {
+                let (a, b) = (orig[u as usize] as u32, orig[v as usize] as u32);
+                if a < b { (a, b) } else { (b, a) }
+            })
+            .collect();
+        back.sort_unstable();
+        let mut fwd: Vec<(u32, u32)> = g.edges().collect();
+        fwd.sort_unstable();
+        prop_check!(back == fwd);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mpc_connectivity_matches_bfs() {
+    use arbocc::mpc::connectivity::mpc_components;
+    forall("MPC components == BFS components", 30, |rng, size| {
+        let g = random_forest(size.max(4), 0.7, rng);
+        let words = (g.n() + 2 * g.m()).max(4) as Words;
+        let mut sim = MpcSimulator::lenient(MpcConfig::model1(g.n().max(2), words, 0.5));
+        let mpc = mpc_components(&g, &mut sim);
+        let reference = arbocc::graph::components::components(&g);
+        let distinct: std::collections::HashSet<u32> = mpc.label.iter().copied().collect();
+        prop_check!(distinct.len() == reference.count);
+        for u in 0..g.n() as u32 {
+            for &v in g.neighbors(u) {
+                prop_check!(mpc.label[u as usize] == mpc.label[v as usize],
+                    "edge ({u},{v}) split across components");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clustering_partition_closure() {
+    forall("normalize/merge keep partitions consistent", 60, |rng, size| {
+        let n = size.max(2);
+        let labels: Vec<u32> = (0..n).map(|_| rng.index(n) as u32).collect();
+        let c = Clustering::from_labels(labels);
+        let norm = c.normalize();
+        prop_check!(norm.n_clusters() == c.n_clusters());
+        // Same co-membership relation.
+        for _ in 0..20 {
+            let u = rng.index(n) as u32;
+            let v = rng.index(n) as u32;
+            prop_check!(c.same_cluster(u, v) == norm.same_cluster(u, v));
+        }
+        let total: usize = c.sizes().iter().sum();
+        prop_check!(total == n);
+        Ok(())
+    });
+}
