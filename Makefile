@@ -1,0 +1,18 @@
+# Repo-level driver targets. The crate lives in rust/.
+
+CARGO ?= cargo
+
+.PHONY: tier1 fmt ci bench
+
+# The gate every change must pass: release build + full test suite.
+tier1:
+	cd rust && $(CARGO) build --release && $(CARGO) test -q
+
+# Style gate (kept separate so tier1 failures are always real breakage).
+fmt:
+	cd rust && $(CARGO) fmt --check
+
+ci: tier1 fmt
+
+bench:
+	cd rust && $(CARGO) bench

@@ -24,7 +24,7 @@ use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
 use arbocc::util::table::{fnum, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("n", 4_000);
     let k = args.get_usize("k", 400); // communities of size 10

@@ -34,7 +34,7 @@ use arbocc::util::json::{write_report, Json};
 use arbocc::util::rng::Rng;
 use arbocc::util::timer::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
     let n = args.get_usize("n", 1 << 16);
     let k = args.get_usize("k", 8);

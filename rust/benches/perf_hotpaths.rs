@@ -6,12 +6,16 @@
 //! P4  greedy MIS simulation (vertices/s)          — L3 target ≥ 10 M/s
 //! P5  bad-triangle counting + packing
 //! P6  MPC router (messages/s)
+//! P7  end-to-end best-of-K through the coordinator
+//! P8  sharded MPC executor: sequential vs multi-threaded MIS pipeline,
+//!     and best-of-K at 1 vs N workers — the measured shard speedups
 //!
 //! Results are recorded in EXPERIMENTS.md §Perf with the iteration log.
 
 use std::sync::Arc;
 
 use arbocc::algorithms::greedy_mis::greedy_mis;
+use arbocc::algorithms::mpc_mis::{alg1_greedy_mis, Alg1Params};
 use arbocc::algorithms::pivot::pivot_random;
 use arbocc::bench::harness::{bench_with, quick, throughput};
 use arbocc::cluster::cost::cost;
@@ -136,8 +140,50 @@ fn main() {
     println!("{m}");
     report.set("p7_best_of_8_s", Json::num(m.median_s));
 
-    let words: Words = 0;
-    let _ = words;
+    // P8: the sharded executor — same seed, same rounds, N threads.
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let gshard = barabasi_albert(60_000, 3, &mut rng);
+    let perm_shard = rng.permutation(gshard.n());
+    let words_shard = (gshard.n() + 2 * gshard.m()) as Words;
+    let mut mis_rounds = [0usize; 2];
+    let mut run_mis = |n_shards: usize, rounds_slot: &mut usize| {
+        let cfg = MpcConfig::model1(gshard.n(), words_shard, 0.5);
+        let mut sim = MpcSimulator::lenient_sharded(cfg, n_shards);
+        std::hint::black_box(alg1_greedy_mis(
+            &gshard,
+            &perm_shard,
+            &Alg1Params::default(),
+            &mut sim,
+        ));
+        *rounds_slot = sim.n_rounds();
+    };
+    let m1 = bench_with("P8 MIS pipeline Alg1+Alg2 (1 shard)", &cfg, || {
+        run_mis(1, &mut mis_rounds[0])
+    });
+    println!("{m1}");
+    let mn = bench_with(&format!("P8 MIS pipeline Alg1+Alg2 ({shards} shards)"), &cfg, || {
+        run_mis(shards, &mut mis_rounds[1])
+    });
+    println!("{mn}");
+    assert_eq!(mis_rounds[0], mis_rounds[1], "sharding must not change round counts");
+    let mis_speedup = m1.median_s / mn.median_s;
+    println!(
+        "    ⇒ MIS pipeline shard speedup ×{} ({} rounds at both shard counts)",
+        fnum(mis_speedup),
+        mis_rounds[0]
+    );
+    report.set("p8_mis_shard_speedup", Json::num(mis_speedup));
+    report.set("p8_shards", Json::num(shards as f64));
+
+    // P8b: best-of-K trials sharded across the same pool.
+    let b1 = bench_with("P8 best-of-8 (1 worker)", &cfg, || {
+        std::hint::black_box(best_of_k(&gbig, &TrialSpec::Pivot, 8, 1, 1, &engine2).unwrap());
+    });
+    println!("{b1}");
+    let bok_speedup = b1.median_s / m.median_s;
+    println!("    ⇒ best-of-K pool speedup ×{} (vs P7 at 4 workers)", fnum(bok_speedup));
+    report.set("p8_bok_pool_speedup", Json::num(bok_speedup));
+
     let path = write_report("perf_hotpaths", &report).unwrap();
     println!("\nreport: {}", path.display());
 }

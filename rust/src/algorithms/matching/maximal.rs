@@ -41,7 +41,11 @@ pub fn maximal_matching(
 
     while rounds < max_rounds && live_edge_exists(&matched) {
         rounds += 1;
-        // Proposal phase.
+        // Proposal phase: vertex v's machine flips its own coins. The
+        // stream is a function of (caller stream, simulator seed, v,
+        // round) only — never of shard scheduling or visit order — so
+        // proposal schedules are reproducible on the sharded executor.
+        let round_tag = rng.next_u64();
         let mut proposal: Vec<Option<u32>> = vec![None; n];
         for v in 0..n as u32 {
             if matched[v as usize] {
@@ -54,7 +58,8 @@ pub fn maximal_matching(
                 .filter(|&u| !matched[u as usize])
                 .collect();
             if !cand.is_empty() {
-                proposal[v as usize] = Some(cand[rng.index(cand.len())]);
+                let mut vrng = sim.machine_stream(v as usize, round_tag);
+                proposal[v as usize] = Some(cand[vrng.index(cand.len())]);
             }
         }
         // Acceptance: u accepts the smallest proposer; the pair matches if

@@ -96,6 +96,7 @@ pub fn alg1_greedy_mis(
 
     let delta0 = g.max_degree().max(2);
     let logn = (n.max(2) as f64).log2();
+    let pool = sim.pool();
     let mut pos = 0usize;
     let mut phase = 0usize;
     while pos < n {
@@ -106,14 +107,14 @@ pub fn alg1_greedy_mis(
         let order = &perm[pos..pos + t_i];
         pos += t_i;
 
-        // Prefix-graph max degree (measured, for the Chernoff claim).
-        let alive_set: std::collections::HashSet<u32> =
+        // Prefix-graph max degree (measured, for the Chernoff claim) — a
+        // shard-parallel scan over the alive prefix vertices.
+        let alive: Vec<u32> =
             order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
-        let prefix_max_degree = alive_set
-            .iter()
-            .map(|&v| g.neighbors(v).iter().filter(|u| alive_set.contains(u)).count())
-            .max()
-            .unwrap_or(0);
+        let alive_set: std::collections::HashSet<u32> = alive.iter().copied().collect();
+        let prefix_max_degree = pool.max_by(alive.len(), |i| {
+            g.neighbors(alive[i]).iter().filter(|&&u| alive_set.contains(&u)).count() as u64
+        }) as usize;
 
         let rounds_before = sim.n_rounds();
         match &params.subroutine {
@@ -128,18 +129,20 @@ pub fn alg1_greedy_mis(
             }
         }
 
-        // Residual degree among unprocessed alive vertices (Lemma 22).
+        // Residual degree among unprocessed alive vertices (Lemma 22) —
+        // the heaviest per-phase scan, sharded across the pool.
         let mut unprocessed = vec![false; n];
         for &v in &perm[pos..] {
             if !blocked[v as usize] {
                 unprocessed[v as usize] = true;
             }
         }
-        let residual_max_degree = (0..n as u32)
-            .filter(|&v| unprocessed[v as usize])
-            .map(|v| g.neighbors(v).iter().filter(|&&u| unprocessed[u as usize]).count())
-            .max()
-            .unwrap_or(0);
+        let residual_max_degree = pool.max_by(n, |v| {
+            if !unprocessed[v] {
+                return 0;
+            }
+            g.neighbors(v as u32).iter().filter(|&&u| unprocessed[u as usize]).count() as u64
+        }) as usize;
 
         run.phases.push(PhaseStat {
             phase,

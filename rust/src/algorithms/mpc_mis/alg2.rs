@@ -77,15 +77,15 @@ pub fn alg2_process(
         return stats;
     }
     // Δ' = max degree of the prefix graph (induced on currently-alive
-    // prefix vertices). Computing it is one aggregate (charged below).
-    let in_prefix: std::collections::HashSet<u32> =
+    // prefix vertices). Computing it is one aggregate (charged below);
+    // the scan itself is the round's local compute, sharded on the pool.
+    let pool = sim.pool();
+    let alive_prefix: Vec<u32> =
         order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
-    let delta_p = order
-        .iter()
-        .filter(|&&v| !blocked[v as usize])
-        .map(|&v| g.neighbors(v).iter().filter(|u| in_prefix.contains(u)).count())
-        .max()
-        .unwrap_or(0)
+    let in_prefix: std::collections::HashSet<u32> = alive_prefix.iter().copied().collect();
+    let delta_p = (pool.max_by(alive_prefix.len(), |i| {
+        g.neighbors(alive_prefix[i]).iter().filter(|&&u| in_prefix.contains(&u)).count() as u64
+    }) as usize)
         .max(1);
     sim.round("alg2/degree-aggregate", 1, 1, nprefix as Words, 2);
 
@@ -149,7 +149,7 @@ fn process_chunk(
         let root = uf.find(i as u32);
         *comp_size.entry(root).or_insert(0) += 1;
         let internal_deg =
-            g.neighbors(v).iter().filter(|u| index.contains_key(u)).count() as Words;
+            g.neighbors(v).iter().filter(|&&u| index.contains_key(&u)).count() as Words;
         *comp_words.entry(root).or_insert(0) += 1 + internal_deg;
     }
     let max_comp = comp_size.values().copied().max().unwrap_or(1);

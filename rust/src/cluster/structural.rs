@@ -59,7 +59,7 @@ pub fn bound_cluster_sizes(g: &Graph, input: &Clustering, lambda: usize) -> Stru
             let (v_star, d_int) = cluster
                 .iter()
                 .map(|&v| {
-                    let d = g.neighbors(v).iter().filter(|u| in_cluster.contains(u)).count();
+                    let d = g.neighbors(v).iter().filter(|&&u| in_cluster.contains(&u)).count();
                     (v, d)
                 })
                 .min_by_key(|&(_, d)| d)

@@ -3,20 +3,23 @@
 //! PIVOT's 3-approximation holds *in expectation*; running O(log n)
 //! parallel copies and keeping the cheapest converts it to a
 //! with-high-probability guarantee at a log-factor memory cost.  This is
-//! the system's end-to-end hot path: workers produce K clusterings, the
-//! leader scores them through the PJRT engine (batched when the graph
-//! fits one dense block) and streams the running best.
+//! the system's end-to-end hot path: the K trials are sharded across the
+//! same scoped-thread [`ShardPool`] that powers the MPC executor — each
+//! trial's RNG stream is a function of the trial id alone, so results are
+//! identical at every worker count — and the leader scores the candidates
+//! through the PJRT engine (batched when the graph fits one dense block).
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::cluster::cost::Cost;
 use crate::cluster::Clustering;
-use crate::coordinator::run_trials;
+use crate::coordinator::trial_rng;
 use crate::graph::Graph;
-use crate::runtime::blocks::BLOCK_N;
+use crate::mpc::pool::ShardPool;
+use crate::runtime::blocks::{BLOCK_BATCH, BLOCK_N};
 use crate::runtime::CostEngine;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
 
 /// What each trial runs.
 #[derive(Debug, Clone)]
@@ -36,7 +39,27 @@ pub struct BestOfK {
     pub costs: Vec<u64>,
 }
 
-/// Run K trials over `workers` threads and score on `engine`.
+fn run_trial(g: &Graph, spec: &TrialSpec, rng: &mut Rng) -> Clustering {
+    match *spec {
+        TrialSpec::Pivot => crate::algorithms::pivot::pivot_random(g, rng),
+        TrialSpec::Alg4Pivot { lambda, eps } => {
+            crate::algorithms::alg4::alg4(g, lambda, eps, |sub| {
+                crate::algorithms::pivot::pivot_random(sub, rng)
+            })
+        }
+    }
+}
+
+/// Run K trials over a `workers`-shard pool and score on `engine`.
+///
+/// Trials run in *waves* of a few batches each: a wave is produced in
+/// parallel on the pool, scored by the leader, and dropped before the
+/// next wave starts — so resident memory is bounded by the wave size,
+/// not K, while per-trial seeds keep results identical at every worker
+/// count and wave boundary. (Deliberate tradeoff: the wave barrier gives
+/// up overlap between production and scoring in exchange for bounded
+/// memory, a single fan-out mechanism, and a leader-affine engine — the
+/// PJRT client must not cross threads.)
 pub fn best_of_k(
     g: &Arc<Graph>,
     spec: &TrialSpec,
@@ -46,55 +69,56 @@ pub fn best_of_k(
     engine: &CostEngine,
 ) -> Result<BestOfK> {
     assert!(k >= 1);
-    let spec2 = spec.clone();
-    let rx = run_trials(Arc::clone(g), k, workers, base_seed, move |g, rng| match spec2 {
-        TrialSpec::Pivot => crate::algorithms::pivot::pivot_random(g, rng),
-        TrialSpec::Alg4Pivot { lambda, eps } => {
-            crate::algorithms::alg4::alg4(g, lambda, eps, |sub| {
-                crate::algorithms::pivot::pivot_random(sub, rng)
-            })
-        }
-    });
-
+    let pool = ShardPool::new(workers);
+    let graph: &Graph = g;
     let single_block = g.n() <= BLOCK_N;
+    let wave_size = workers.max(1) * BLOCK_BATCH;
+
     let mut costs = vec![u64::MAX; k];
     let mut best: Option<(Clustering, Cost)> = None;
+    let mut start = 0usize;
+    while start < k {
+        let end = (start + wave_size).min(k);
+        // Produce this wave's candidates, sharded across the pool and
+        // collected in trial order.
+        let mut wave: Vec<Clustering> = pool
+            .run(end - start, |_, range| {
+                range
+                    .map(|i| {
+                        let mut rng = trial_rng(base_seed, start + i);
+                        run_trial(graph, spec, &mut rng)
+                    })
+                    .collect::<Vec<Clustering>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
 
-    if single_block {
-        // Batch-friendly: buffer trials and score in kernel batches.
-        let mut pending: Vec<(usize, Clustering)> = Vec::new();
-        let flush = |pending: &mut Vec<(usize, Clustering)>,
-                     costs: &mut Vec<u64>,
-                     best: &mut Option<(Clustering, Cost)>|
-         -> Result<()> {
-            if pending.is_empty() {
-                return Ok(());
+        // Leader half: score the wave.
+        let scored: Vec<Cost> = if single_block {
+            engine.cost_batch_single_block(g, &wave)?
+        } else {
+            let mut out = Vec::with_capacity(wave.len());
+            for c in &wave {
+                out.push(engine.cost(g, c)?);
             }
-            let cs: Vec<Clustering> = pending.iter().map(|(_, c)| c.clone()).collect();
-            let scored = engine.cost_batch_single_block(g, &cs)?;
-            for ((trial, c), cost) in pending.drain(..).zip(scored) {
-                costs[trial] = cost.total();
-                if best.as_ref().map(|(_, b)| cost.total() < b.total()).unwrap_or(true) {
-                    *best = Some((c, cost));
-                }
-            }
-            Ok(())
+            out
         };
-        for result in rx {
-            pending.push((result.trial, result.clustering));
-            if pending.len() >= crate::runtime::blocks::BLOCK_BATCH {
-                flush(&mut pending, &mut costs, &mut best)?;
+        // Record costs and fold the wave's first minimum into the running
+        // best; ties break toward the lowest trial id, deterministic
+        // regardless of worker count.
+        let mut wave_best: Option<usize> = None;
+        for (i, cost) in scored.iter().enumerate() {
+            costs[start + i] = cost.total();
+            if wave_best.map(|j| cost.total() < scored[j].total()).unwrap_or(true) {
+                wave_best = Some(i);
             }
         }
-        flush(&mut pending, &mut costs, &mut best)?;
-    } else {
-        for result in rx {
-            let cost = engine.cost(g, &result.clustering)?;
-            costs[result.trial] = cost.total();
-            if best.as_ref().map(|(_, b)| cost.total() < b.total()).unwrap_or(true) {
-                best = Some((result.clustering, cost));
-            }
+        let i = wave_best.expect("non-empty wave");
+        if best.as_ref().map(|(_, b)| scored[i].total() < b.total()).unwrap_or(true) {
+            best = Some((wave.swap_remove(i), scored[i]));
         }
+        start = end;
     }
 
     let (best, best_cost) = best.expect("k >= 1 produces at least one trial");
@@ -142,5 +166,23 @@ mod tests {
             best_of_k(&g, &TrialSpec::Alg4Pivot { lambda: 3, eps: 2.0 }, 6, 2, 11, &engine)
                 .unwrap();
         assert_eq!(run.best.n(), 400);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let mut rng = Rng::new(253);
+        let g = Arc::new(lambda_arboric(200, 2, &mut rng));
+        let engine = CostEngine::native();
+        let one = best_of_k(&g, &TrialSpec::Pivot, 9, 1, 41, &engine).unwrap();
+        for workers in [2usize, 4, 8] {
+            let many = best_of_k(&g, &TrialSpec::Pivot, 9, workers, 41, &engine).unwrap();
+            assert_eq!(many.costs, one.costs, "{workers} workers");
+            assert_eq!(many.best_cost, one.best_cost, "{workers} workers");
+            assert_eq!(
+                many.best.normalize().labels(),
+                one.best.normalize().labels(),
+                "{workers} workers"
+            );
+        }
     }
 }

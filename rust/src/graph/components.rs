@@ -74,7 +74,7 @@ pub fn is_clique(g: &Graph, vs: &[u32]) -> bool {
     }
     let set: std::collections::HashSet<u32> = vs.iter().copied().collect();
     for &v in vs {
-        let internal = g.neighbors(v).iter().filter(|u| set.contains(u)).count();
+        let internal = g.neighbors(v).iter().filter(|&&u| set.contains(&u)).count();
         if internal < k - 1 {
             return false;
         }

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use arbocc::util::error::Result;
 
 use arbocc::algorithms::alg4::alg4;
 use arbocc::algorithms::forest::clustering_from_matching;
@@ -77,13 +77,15 @@ fn make_graph(args: &Args) -> (Graph, String, u64) {
     (g, family.name(), seed)
 }
 
-fn sim_for(g: &Graph, model: &str, delta: f64) -> MpcSimulator {
+fn sim_for(g: &Graph, model: &str, delta: f64, seed: u64) -> MpcSimulator {
     let words = (g.n() + 2 * g.m()).max(4) as Words;
     let cfg = match model {
         "m2" => MpcConfig::model2(g.n().max(2), words, delta),
         _ => MpcConfig::model1(g.n().max(2), words, delta),
     };
-    MpcSimulator::new(cfg)
+    // Seed keys the per-machine RNG streams (randomized schedules such as
+    // the matching proposal phase), keeping whole runs reproducible.
+    MpcSimulator::new(cfg).with_seed(seed)
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
@@ -112,7 +114,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "pivot" => pivot_random(&g, &mut rng),
         "alg4-pivot" => alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng)),
         "mpc-pivot" => {
-            let mut sim = sim_for(&g, &model, delta);
+            let mut sim = sim_for(&g, &model, delta, seed);
             let sub = if model == "m2" {
                 Subroutine::Alg3(Alg3Params::default())
             } else {
@@ -125,7 +127,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             run.clustering
         }
         "simple" => {
-            let mut sim = sim_for(&g, &model, delta);
+            let mut sim = sim_for(&g, &model, delta, seed);
             let run = simple_clustering(&g, lambda, &mut sim);
             rounds = Some(run.rounds);
             run.clustering
@@ -176,7 +178,7 @@ fn cmd_mis(args: &Args) -> Result<()> {
             "direct" => ("m1", Subroutine::Alg2(Alg2Params::default())),
             other => panic!("unknown --method '{other}' (alg2|alg3|direct|all)"),
         };
-        let mut sim = sim_for(&g, model, delta);
+        let mut sim = sim_for(&g, model, delta, seed);
         let mis = if method == "direct" {
             direct_simulation_mis(&g, &perm, &mut sim)
         } else {
@@ -257,7 +259,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
         "-".into(),
     ]);
     // Maximal (2-approx).
-    let mut sim = sim_for(&g, "m1", 0.5);
+    let mut sim = sim_for(&g, "m1", 0.5, seed);
     let maximal = maximal_matching(&g, &mut rng, &mut sim, 64);
     let cm = clustering_from_matching(g.n(), &maximal.matching);
     table.row(&[
@@ -267,7 +269,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
         sim.n_rounds().to_string(),
     ]);
     // (1+ε).
-    let mut sim2 = sim_for(&g, "m1", 0.5);
+    let mut sim2 = sim_for(&g, "m1", 0.5, seed);
     let approx = approx_matching(&g, maximal.matching.clone(), eps, &mut sim2);
     let ca = clustering_from_matching(g.n(), &approx.matching);
     table.row(&[
@@ -297,14 +299,14 @@ fn cmd_check(_args: &Args) -> Result<()> {
         let c = pivot_random(&g, &mut rng);
         let a = engine.cost(&g, &c)?;
         let b = native.cost(&g, &c)?;
-        anyhow::ensure!(a == b, "cost mismatch: pjrt {a:?} vs native {b:?}");
+        arbocc::ensure!(a == b, "cost mismatch: pjrt {a:?} vs native {b:?}");
         let ta = engine.bad_triangles_single_block(&g)?;
         let tb = native.bad_triangles_single_block(&g)?;
-        anyhow::ensure!(ta == tb, "triangles mismatch: {ta} vs {tb}");
+        arbocc::ensure!(ta == tb, "triangles mismatch: {ta} vs {tb}");
         let cs: Vec<_> = (0..9).map(|_| pivot_random(&g, &mut rng)).collect();
         let ba = engine.cost_batch_single_block(&g, &cs)?;
         let bb = native.cost_batch_single_block(&g, &cs)?;
-        anyhow::ensure!(ba == bb, "batch mismatch");
+        arbocc::ensure!(ba == bb, "batch mismatch");
         checked += 3;
     }
     println!("self-check OK: {checked} PJRT-vs-native comparisons identical");

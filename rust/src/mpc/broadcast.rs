@@ -100,19 +100,28 @@ impl BroadcastTree {
         let mut sent = vec![false; self.machines];
         let mut level = 0usize;
         loop {
-            let mut outboxes: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); self.machines];
-            let mut any = false;
-            for m in 1..self.machines {
-                if !sent[m] && pending[m] == 0 {
-                    outboxes[m].push((self.parent(m), vec![acc[m]]));
-                    sent[m] = true;
-                    any = true;
-                }
-            }
-            if !any {
+            // Which machines fire this round (all children reported, not
+            // yet sent). A plain scan: the predicate is a few loads per
+            // machine, far below the cost of fanning out to the pool —
+            // the sharded work is the outbox construction below.
+            let firing: Vec<bool> = (0..self.machines)
+                .map(|m| m > 0 && !sent[m] && pending[m] == 0)
+                .collect();
+            if !firing.iter().any(|&fires| fires) {
                 break;
             }
-            let inboxes = router.step(sim, &format!("convergecast[{level}]"), outboxes);
+            let inboxes = router.step_sharded(sim, &format!("convergecast[{level}]"), |m| {
+                if firing[m] {
+                    vec![(self.parent(m), vec![acc[m]])]
+                } else {
+                    Vec::new()
+                }
+            });
+            for (m, &fires) in firing.iter().enumerate() {
+                if fires {
+                    sent[m] = true;
+                }
+            }
             for (m, inbox) in inboxes.into_iter().enumerate() {
                 for msg in inbox {
                     acc[m] = f.combine(acc[m], msg.payload[0]);
@@ -136,19 +145,16 @@ impl BroadcastTree {
         have[0] = Some(value);
         let mut level = 0usize;
         while have.iter().any(Option::is_none) {
-            let mut outboxes: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); self.machines];
-            for m in 0..self.machines {
-                if let Some(v) = have[m] {
-                    // Send to children that don't have it yet.
-                    for c in 1..=self.arity {
-                        let child = m * self.arity + c;
-                        if child < self.machines && have[child].is_none() {
-                            outboxes[m].push((child, vec![v]));
-                        }
-                    }
-                }
-            }
-            let inboxes = router.step(sim, &format!("broadcast[{level}]"), outboxes);
+            // Each holder sends to children that don't have the value yet;
+            // outboxes are built on the shard owning the sender.
+            let inboxes = router.step_sharded(sim, &format!("broadcast[{level}]"), |m| {
+                let Some(v) = have[m] else { return Vec::new() };
+                (1..=self.arity)
+                    .map(|c| m * self.arity + c)
+                    .filter(|&child| child < self.machines && have[child].is_none())
+                    .map(|child| (child, vec![v]))
+                    .collect()
+            });
             for (m, inbox) in inboxes.into_iter().enumerate() {
                 if let Some(msg) = inbox.first() {
                     have[m] = Some(msg.payload[0]);
@@ -213,5 +219,30 @@ mod tests {
         let (mut sim, router, tree) = setup(1, 4);
         assert_eq!(tree.aggregate(&mut sim, &router, &[7], Aggregate::Sum), 7);
         assert_eq!(tree.broadcast(&mut sim, &router, 3), vec![3]);
+    }
+
+    #[test]
+    fn sharded_tree_matches_serial_tree() {
+        let machines = 23;
+        let values: Vec<u64> = (0..machines as u64).map(|v| v * 3 + 1).collect();
+        let run = |shards: usize| {
+            let mut cfg = MpcConfig::model1(100_000, 1_000_000, 0.5);
+            cfg.machines = machines;
+            let mut sim = MpcSimulator::sharded(cfg, shards);
+            let router = Router::new(machines);
+            let tree = BroadcastTree::new(machines, 3);
+            let agg = tree.aggregate(&mut sim, &router, &values, Aggregate::Max);
+            let bcast = tree.broadcast(&mut sim, &router, agg);
+            let trace: Vec<_> = sim
+                .trace()
+                .iter()
+                .map(|r| (r.label.clone(), r.max_out, r.max_in, r.total, r.max_state))
+                .collect();
+            (agg, bcast, trace)
+        };
+        let serial = run(1);
+        for shards in [2usize, 8] {
+            assert_eq!(run(shards), serial, "{shards} shards");
+        }
     }
 }

@@ -8,10 +8,14 @@
 //! The gatherer charges the simulator one round per doubling with the
 //! *measured* maximal ball topology size, so the memory feasibility the
 //! paper argues (e.g. Δ^R ∈ O(n^δ) in Lemma 21) is checked, not assumed.
+//!
+//! Each doubling's per-ball unions — the round's local compute — fan out
+//! across the simulator's shard pool and are merged at the round barrier,
+//! so results and charged rounds are identical at every shard count.
 
 use crate::graph::Graph;
 use crate::mpc::memory::Words;
-use crate::mpc::simulator::MpcSimulator;
+use crate::mpc::simulator::{MpcSimulator, ShardRoundStat};
 
 /// Result of a ball-gathering run.
 #[derive(Debug, Clone)]
@@ -112,52 +116,75 @@ pub fn gather_balls(
         all_vertices.iter().map(|&v| ball_of(v)).collect()
     };
 
+    let pool = sim.pool();
     while radius < target_radius {
-        // Tentatively double.
-        let source = |v: u32, balls: &Vec<Vec<u32>>, global: &Vec<Vec<u32>>| -> Vec<u32> {
-            if growing_all {
-                balls[v as usize].clone()
-            } else {
-                global[v as usize].clone()
-            }
-        };
-        // Abort the tentative doubling as soon as any ball would exceed
-        // the memory cap (avoids quadratic wasted work on dense balls).
-        let mut doubled: Vec<Vec<u32>> = Vec::with_capacity(balls.len());
-        let mut over_cap = false;
-        'outer: for ball in &balls {
-            let mut acc: Vec<u32> = Vec::new();
-            for &u in ball {
-                acc = union_sorted(&acc, &source(u, &balls, &global_balls));
-                if ball_words(g, &acc) > mem_cap {
-                    over_cap = true;
-                    break 'outer;
+        // Tentatively double, one shard per contiguous slice of target
+        // balls (the round's per-machine local compute). A shard aborts as
+        // soon as any of its balls would exceed the memory cap — the
+        // sequential early-abort, applied shard-locally — and the barrier
+        // discards the whole tentative doubling if any shard aborted.
+        let shard_doubled: Vec<Result<Vec<Vec<u32>>, ()>> =
+            pool.run(balls.len(), |_, range| {
+                let mut out: Vec<Vec<u32>> = Vec::with_capacity(range.len());
+                for ball in &balls[range] {
+                    let mut acc: Vec<u32> = Vec::new();
+                    for &u in ball {
+                        let src: &[u32] = if growing_all {
+                            &balls[u as usize]
+                        } else {
+                            &global_balls[u as usize]
+                        };
+                        acc = union_sorted(&acc, src);
+                        if ball_words(g, &acc) > mem_cap {
+                            return Err(());
+                        }
+                    }
+                    out.push(acc);
                 }
-            }
-            doubled.push(acc);
-        }
-        if over_cap {
+                Ok(out)
+            });
+        if shard_doubled.iter().any(Result::is_err) {
             memory_capped = true;
             break;
         }
-        let max_words = doubled.iter().map(|b| ball_words(g, b)).max().unwrap_or(0);
+        let doubled: Vec<Vec<u32>> = shard_doubled
+            .into_iter()
+            .flat_map(|shard| shard.expect("over-cap shards handled above"))
+            .collect();
+        // Measure the committed footprint per shard; the partials are
+        // merged (max/max/sum/max) at the round barrier.
+        let partials: Vec<ShardRoundStat> = pool.run_fine(doubled.len(), |_, range| {
+            let mut stat = ShardRoundStat::default();
+            for b in &doubled[range] {
+                let w = ball_words(g, b);
+                stat.max_out = stat.max_out.max(w);
+                stat.total += w;
+            }
+            stat.max_in = stat.max_out;
+            stat.max_state = stat.max_out;
+            stat
+        });
         // Commit: charge one exchange round with the measured footprint.
-        let total: Words = doubled.iter().map(|b| ball_words(g, b)).sum();
         rounds += 1;
-        sim.round(&format!("{label}/double[{rounds}]"), max_words, max_words, total, max_words);
+        sim.round_from_shards(&format!("{label}/double[{rounds}]"), &partials);
         balls = doubled;
         if !growing_all {
-            let doubled_global: Vec<Vec<u32>> = global_balls
-                .iter()
-                .map(|ball| {
-                    let mut acc: Vec<u32> = Vec::new();
-                    for &u in ball {
-                        acc = union_sorted(&acc, &global_balls[u as usize]);
-                    }
-                    acc
+            global_balls = pool
+                .run(global_balls.len(), |_, range| {
+                    global_balls[range]
+                        .iter()
+                        .map(|ball| {
+                            let mut acc: Vec<u32> = Vec::new();
+                            for &u in ball {
+                                acc = union_sorted(&acc, &global_balls[u as usize]);
+                            }
+                            acc
+                        })
+                        .collect::<Vec<Vec<u32>>>()
                 })
+                .into_iter()
+                .flatten()
                 .collect();
-            global_balls = doubled_global;
         }
         radius *= 2;
         // Converged (ball = component) — further doubling is free.
@@ -256,5 +283,26 @@ mod tests {
         let g = path(5);
         // Ball {1,2,3}: members 3 + degrees 2+2+2 = 9.
         assert_eq!(ball_words(&g, &[1, 2, 3]), 9);
+    }
+
+    #[test]
+    fn sharded_gather_matches_serial() {
+        let mut rng = Rng::new(52);
+        let g = random_tree(400, &mut rng);
+        let targets: Vec<u32> = (0..400).collect();
+        let run = |shards: usize| {
+            let mut s = MpcSimulator::sharded(MpcConfig::model2(4096, 40_960, 0.99), shards);
+            let res = gather_balls(&g, &targets, 8, u64::MAX, &mut s, "test");
+            let trace: Vec<_> = s
+                .trace()
+                .iter()
+                .map(|r| (r.label.clone(), r.max_out, r.max_in, r.total, r.max_state))
+                .collect();
+            (res.balls, res.radius, res.rounds, res.memory_capped, trace)
+        };
+        let serial = run(1);
+        for shards in [2usize, 8] {
+            assert_eq!(run(shards), serial, "{shards} shards");
+        }
     }
 }

@@ -108,6 +108,78 @@ impl MemoryLedger {
     pub fn total(&self) -> Words {
         self.total
     }
+
+    /// Merge one shard's word tallies at the round barrier.
+    ///
+    /// Budget enforcement happens *here*, not in the shard: shards charge
+    /// without checking (they cannot see the fleet-wide total), and the
+    /// first violation found while absorbing — lowest machine id of the
+    /// lowest shard — is returned, exactly as sequential charging would
+    /// have found it.
+    pub fn absorb(&mut self, shard: &ShardLedger) -> Result<(), BudgetError> {
+        for (offset, &words) in shard.used.iter().enumerate() {
+            if words > 0 {
+                self.charge(shard.base + offset, words)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Unchecked per-shard word tally over a contiguous machine range.
+///
+/// The sharded executor gives each worker thread one of these; workers
+/// charge freely during the round's local-compute half, and the round
+/// barrier merges every shard into the fleet [`MemoryLedger`] via
+/// [`MemoryLedger::absorb`], where budget violations surface with the
+/// same semantics as sequential execution.
+#[derive(Debug, Clone)]
+pub struct ShardLedger {
+    base: usize,
+    used: Vec<Words>,
+}
+
+impl ShardLedger {
+    /// Ledger covering machines `range.start..range.end` (global ids).
+    pub fn new(range: std::ops::Range<usize>) -> ShardLedger {
+        ShardLedger { base: range.start, used: vec![0; range.len()] }
+    }
+
+    /// Charge `words` to a machine (global id) owned by this shard.
+    pub fn charge(&mut self, machine: usize, words: Words) {
+        debug_assert!(
+            machine >= self.base && machine < self.base + self.used.len(),
+            "machine {machine} outside shard {}..{}",
+            self.base,
+            self.base + self.used.len()
+        );
+        self.used[machine - self.base] += words;
+    }
+
+    /// First machine id covered by the shard.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Number of machines covered by the shard.
+    pub fn machines(&self) -> usize {
+        self.used.len()
+    }
+
+    /// Words charged to one machine (global id).
+    pub fn used(&self, machine: usize) -> Words {
+        self.used[machine - self.base]
+    }
+
+    /// Total words charged across the shard.
+    pub fn total(&self) -> Words {
+        self.used.iter().sum()
+    }
+
+    /// Largest per-machine tally in the shard.
+    pub fn max_local(&self) -> Words {
+        self.used.iter().copied().max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -149,5 +221,47 @@ mod tests {
         l.reset();
         assert_eq!(l.total(), 0);
         assert_eq!(l.peak_local, 90);
+    }
+
+    #[test]
+    fn absorb_merges_shards_like_sequential_charging() {
+        let mut fleet = MemoryLedger::new(6, 100, 1000);
+        let mut a = ShardLedger::new(0..3);
+        let mut b = ShardLedger::new(3..6);
+        a.charge(0, 10);
+        a.charge(2, 20);
+        b.charge(4, 30);
+        assert_eq!(a.total(), 30);
+        assert_eq!(b.max_local(), 30);
+        fleet.absorb(&a).unwrap();
+        fleet.absorb(&b).unwrap();
+        assert_eq!(fleet.used(0), 10);
+        assert_eq!(fleet.used(2), 20);
+        assert_eq!(fleet.used(4), 30);
+        assert_eq!(fleet.total(), 60);
+    }
+
+    #[test]
+    fn absorb_surfaces_local_violation_with_machine_id() {
+        let mut fleet = MemoryLedger::new(4, 50, 10_000);
+        let mut shard = ShardLedger::new(2..4);
+        shard.charge(3, 51);
+        let err = fleet.absorb(&shard).unwrap_err();
+        assert!(
+            matches!(err, BudgetError::LocalExceeded { machine: 3, used: 51, budget: 50 }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn absorb_surfaces_global_violation_across_shards() {
+        let mut fleet = MemoryLedger::new(4, 100, 150);
+        let mut a = ShardLedger::new(0..2);
+        let mut b = ShardLedger::new(2..4);
+        a.charge(0, 80);
+        b.charge(2, 80);
+        fleet.absorb(&a).unwrap();
+        let err = fleet.absorb(&b).unwrap_err();
+        assert!(matches!(err, BudgetError::GlobalExceeded { used: 160, .. }), "{err:?}");
     }
 }

@@ -12,14 +12,19 @@
 //!   on the router.
 //! * [`exponentiation`] — graph exponentiation (§2.1.3): 2^k-hop ball
 //!   gathering with measured memory footprints.
+//! * [`pool`] — the machine-sharded scoped-thread pool: per-machine local
+//!   compute fans out across shards and is merged deterministically at
+//!   every synchronous round barrier.
 
 pub mod broadcast;
 pub mod connectivity;
 pub mod exponentiation;
 pub mod memory;
 pub mod model;
+pub mod pool;
 pub mod router;
 pub mod simulator;
 
 pub use model::{ModelKind, MpcConfig};
+pub use pool::ShardPool;
 pub use simulator::MpcSimulator;

@@ -1,13 +1,25 @@
 //! Synchronous message router: the executable all-to-all layer.
 //!
-//! One call to [`Router::step`] is one MPC communication round: every
-//! machine's outbox is validated against the O(S) send budget, every
-//! inbox against the O(S) receive budget, messages are delivered, and the
+//! One call to [`Router::step`] (or [`Router::step_sharded`]) is one MPC
+//! communication round: every machine's outbox is tallied on a
+//! word-granular [`ShardLedger`], ledgers are merged into fleet
+//! [`MemoryLedger`]s at the round barrier — where O(S) send/receive and
+//! global budget violations surface exactly as in sequential execution —
+//! messages are delivered in deterministic (sender-ordered) order, and the
 //! round is recorded on the [`MpcSimulator`].  The broadcast/convergecast
 //! trees (§2.1.5) run on top of this for real, so their round counts are
 //! measured rather than asserted.
+//!
+//! [`Router::step_sharded`] is the multi-threaded path: outbox
+//! construction (the round's local-compute half) fans out across the
+//! simulator's [`ShardPool`], one contiguous machine range per shard, and
+//! the per-shard outbox batches are exchanged at the synchronous round
+//! boundary.  Inboxes, statistics and violations are bit-identical to
+//! [`Router::step`] at every shard count.
+//!
+//! [`ShardPool`]: crate::mpc::pool::ShardPool
 
-use crate::mpc::memory::Words;
+use crate::mpc::memory::{BudgetError, MemoryLedger, ShardLedger, Words};
 use crate::mpc::simulator::MpcSimulator;
 
 /// A message between machines: opaque words plus the sender id.
@@ -51,29 +63,102 @@ impl Router {
         outboxes: Vec<Vec<(usize, Vec<u64>)>>,
     ) -> Vec<Vec<Message>> {
         assert_eq!(outboxes.len(), self.machines, "outbox per machine required");
+        let mut send = ShardLedger::new(0..self.machines);
+        let mut recv = ShardLedger::new(0..self.machines);
         let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); self.machines];
-        let mut max_out: Words = 0;
-        let mut total: Words = 0;
         for (from, outbox) in outboxes.into_iter().enumerate() {
-            let mut sent: Words = 0;
             for (dst, payload) in outbox {
                 assert!(dst < self.machines, "message to unknown machine {dst}");
                 let msg = Message { from, payload };
-                sent += msg.words();
+                send.charge(from, msg.words());
+                recv.charge(dst, msg.words());
                 inboxes[dst].push(msg);
             }
-            max_out = max_out.max(sent);
-            total += sent;
         }
-        let max_in: Words = inboxes
-            .iter()
-            .map(|inbox| inbox.iter().map(Message::words).sum::<Words>())
-            .max()
-            .unwrap_or(0);
-        // Resident state during a routing round is bounded by the larger
-        // of what a machine sent or received.
-        sim.round(label, max_out, max_in, total, max_out.max(max_in));
+        self.barrier(sim, label, &[send], recv);
         inboxes
+    }
+
+    /// Execute one synchronous round with shard-parallel outbox building.
+    ///
+    /// `outbox_of(m)` produces machine `m`'s outbox — the round's local
+    /// compute — and is invoked on the shard that owns `m`.  Each shard
+    /// batches its machines' messages and tallies their send words on a
+    /// private [`ShardLedger`]; batches and ledgers are exchanged at the
+    /// round boundary, where delivery happens in sender order and budgets
+    /// are enforced on the merged fleet ledgers.
+    pub fn step_sharded<F>(
+        &self,
+        sim: &mut MpcSimulator,
+        label: &str,
+        outbox_of: F,
+    ) -> Vec<Vec<Message>>
+    where
+        F: Fn(usize) -> Vec<(usize, Vec<u64>)> + Sync,
+    {
+        let pool = sim.pool();
+        // Local-compute half, fanned out per machine shard (fine-grained:
+        // small fleets build their outboxes inline).
+        let shard_out: Vec<(Vec<(usize, Message)>, ShardLedger)> =
+            pool.run_fine(self.machines, |_, range| {
+                let mut ledger = ShardLedger::new(range.clone());
+                let mut msgs: Vec<(usize, Message)> = Vec::new();
+                for m in range {
+                    for (dst, payload) in outbox_of(m) {
+                        let msg = Message { from: m, payload };
+                        ledger.charge(m, msg.words());
+                        msgs.push((dst, msg));
+                    }
+                }
+                (msgs, ledger)
+            });
+        // Exchange at the synchronous round boundary: shards are drained
+        // in order, so inbox contents match the sequential sender order.
+        let mut send_ledgers = Vec::with_capacity(shard_out.len());
+        let mut recv = ShardLedger::new(0..self.machines);
+        let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); self.machines];
+        for (msgs, ledger) in shard_out {
+            for (dst, msg) in msgs {
+                assert!(dst < self.machines, "message to unknown machine {dst}");
+                recv.charge(dst, msg.words());
+                inboxes[dst].push(msg);
+            }
+            send_ledgers.push(ledger);
+        }
+        self.barrier(sim, label, &send_ledgers, recv);
+        inboxes
+    }
+
+    /// The round barrier: merge shard ledgers into fleet ledgers, surface
+    /// the first budget violation, record the round's merged statistics.
+    fn barrier(
+        &self,
+        sim: &mut MpcSimulator,
+        label: &str,
+        send: &[ShardLedger],
+        recv: ShardLedger,
+    ) {
+        // Statistics come from the raw shard tallies (complete even when a
+        // budget is blown, so traces are identical in strict and lenient
+        // mode and at every shard count).
+        let max_out: Words = send.iter().map(ShardLedger::max_local).max().unwrap_or(0);
+        let max_in: Words = recv.max_local();
+        let total: Words = send.iter().map(ShardLedger::total).sum();
+        // Budget enforcement on the merged ledgers. The global budget is
+        // charged once, on the send side (receive totals mirror it).
+        let s = sim.config.s_words;
+        let mut sent_fleet = MemoryLedger::new(self.machines, s, sim.config.global_words);
+        let mut recv_fleet = MemoryLedger::new(self.machines, s, Words::MAX);
+        let mut violation: Option<BudgetError> = None;
+        for shard in send {
+            if violation.is_none() {
+                violation = sent_fleet.absorb(shard).err();
+            }
+        }
+        if violation.is_none() {
+            violation = recv_fleet.absorb(&recv).err();
+        }
+        sim.round_checked(label, max_out, max_in, total, max_out.max(max_in), violation);
     }
 }
 
@@ -132,5 +217,64 @@ mod tests {
         let inboxes = router.step(&mut sim, "idle", vec![vec![], vec![]]);
         assert!(inboxes.iter().all(|i| i.is_empty()));
         assert_eq!(sim.n_rounds(), 1);
+    }
+
+    #[test]
+    fn sharded_step_matches_sequential_step() {
+        let machines = 13;
+        // All-to-some schedule with payload sizes varying by sender.
+        let outbox_of = |m: usize| -> Vec<(usize, Vec<u64>)> {
+            (0..machines)
+                .filter(|&d| (m + d) % 3 == 0)
+                .map(|d| (d, vec![m as u64; 1 + (m % 4)]))
+                .collect()
+        };
+        let router = Router::new(machines);
+        let mut seq = sim_for(machines);
+        let expected =
+            router.step(&mut seq, "x", (0..machines).map(|m| outbox_of(m)).collect());
+        for shards in [1usize, 2, 8] {
+            let mut sim = MpcSimulator::sharded(MpcConfig::model1(10_000, 100_000, 0.6), shards)
+                .into_with(machines);
+            let got = router.step_sharded(&mut sim, "x", outbox_of);
+            assert_eq!(got, expected, "{shards} shards");
+            assert_eq!(sim.trace(), seq.trace(), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_step_threads_on_large_fleets() {
+        // A fleet above the pool's SERIAL_CUTOFF drives the scoped-thread
+        // outbox path and the cross-shard ledger merge for real.
+        let machines = 600;
+        let outbox_of = |m: usize| -> Vec<(usize, Vec<u64>)> {
+            vec![((m * 7 + 1) % machines, vec![m as u64, (m / 3) as u64])]
+        };
+        let router = Router::new(machines);
+        let mut seq = sim_for(machines);
+        let expected =
+            router.step(&mut seq, "big", (0..machines).map(|m| outbox_of(m)).collect());
+        let mut sim = MpcSimulator::sharded(MpcConfig::model1(10_000, 100_000, 0.6), 8)
+            .into_with(machines);
+        let got = router.step_sharded(&mut sim, "big", outbox_of);
+        assert_eq!(got, expected);
+        assert_eq!(sim.trace(), seq.trace());
+    }
+
+    #[test]
+    fn sharded_violation_reports_offending_machine() {
+        let machines = 8;
+        let cfg = MpcConfig::model1(10_000, 100_000, 0.6);
+        let huge = cfg.s_words as usize + 10;
+        let mut sim = MpcSimulator::lenient_sharded(cfg, 4).into_with(machines);
+        let router = Router::new(machines);
+        let inboxes = router.step_sharded(&mut sim, "overflow", |m| {
+            if m == 5 { vec![(0, vec![9u64; huge])] } else { Vec::new() }
+        });
+        assert_eq!(inboxes[0].len(), 1, "messages still delivered for diagnosis");
+        assert!(!sim.ok());
+        assert_eq!(sim.violations().len(), 1);
+        let err = format!("{}", sim.violations()[0]);
+        assert!(err.contains("machine 5"), "{err}");
     }
 }

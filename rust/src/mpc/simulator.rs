@@ -18,9 +18,11 @@
 
 use crate::mpc::memory::{BudgetError, Words};
 use crate::mpc::model::MpcConfig;
+use crate::mpc::pool::{self, ShardPool};
+use crate::util::rng::Rng;
 
 /// Statistics of one synchronous round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RoundStat {
     pub label: String,
     /// Max words sent by any machine this round.
@@ -31,6 +33,28 @@ pub struct RoundStat {
     pub total: Words,
     /// Max per-machine resident state this round.
     pub max_state: Words,
+}
+
+/// One shard's partial statistics for a round in flight. Shards fill these
+/// independently during the round's local-compute half; the barrier merges
+/// them (max/max/sum/max) into the round's [`RoundStat`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardRoundStat {
+    pub max_out: Words,
+    pub max_in: Words,
+    pub total: Words,
+    pub max_state: Words,
+}
+
+impl ShardRoundStat {
+    pub fn merge(self, other: ShardRoundStat) -> ShardRoundStat {
+        ShardRoundStat {
+            max_out: self.max_out.max(other.max_out),
+            max_in: self.max_in.max(other.max_in),
+            total: self.total + other.total,
+            max_state: self.max_state.max(other.max_state),
+        }
+    }
 }
 
 /// Error type: a model violation with the offending round.
@@ -50,6 +74,12 @@ impl std::fmt::Display for MpcViolation {
 impl std::error::Error for MpcViolation {}
 
 /// The simulator. Cheap to clone-free pass by `&mut` through algorithms.
+///
+/// Carries the [`ShardPool`] the executor runs on: `new`/`lenient` build
+/// the sequential (one-shard) executor, `sharded` the multi-threaded one.
+/// Round *accounting* always happens on the caller's thread at the round
+/// barrier — shards only produce partials — so traces, violations and
+/// round counts are identical at every shard count.
 #[derive(Debug)]
 pub struct MpcSimulator {
     pub config: MpcConfig,
@@ -58,15 +88,67 @@ pub struct MpcSimulator {
     /// when false they are recorded and surfaced at the end.
     strict: bool,
     violations: Vec<MpcViolation>,
+    pool: ShardPool,
+    /// Base seed for the deterministic per-machine RNG streams.
+    seed: u64,
 }
 
 impl MpcSimulator {
     pub fn new(config: MpcConfig) -> MpcSimulator {
-        MpcSimulator { config, trace: Vec::new(), strict: true, violations: Vec::new() }
+        Self::build(config, ShardPool::serial(), true)
     }
 
     pub fn lenient(config: MpcConfig) -> MpcSimulator {
-        MpcSimulator { config, trace: Vec::new(), strict: false, violations: Vec::new() }
+        Self::build(config, ShardPool::serial(), false)
+    }
+
+    /// Strict simulator on a machine-sharded pool of `shards` threads.
+    pub fn sharded(config: MpcConfig, shards: usize) -> MpcSimulator {
+        Self::build(config, ShardPool::new(shards), true)
+    }
+
+    /// Lenient simulator on a machine-sharded pool of `shards` threads.
+    pub fn lenient_sharded(config: MpcConfig, shards: usize) -> MpcSimulator {
+        Self::build(config, ShardPool::new(shards), false)
+    }
+
+    fn build(config: MpcConfig, pool: ShardPool, strict: bool) -> MpcSimulator {
+        MpcSimulator {
+            config,
+            trace: Vec::new(),
+            strict,
+            violations: Vec::new(),
+            pool,
+            seed: 0,
+        }
+    }
+
+    /// Set the base seed for per-machine RNG streams (builder style).
+    pub fn with_seed(mut self, seed: u64) -> MpcSimulator {
+        self.seed = seed;
+        self
+    }
+
+    /// The executor's shard pool. Cloning is free; primitives grab a clone
+    /// so they can fan work out while holding `&mut self` for the barrier.
+    pub fn pool(&self) -> ShardPool {
+        self.pool.clone()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
+    }
+
+    /// Deterministic RNG stream for one machine: a function of the base
+    /// seed and the machine id only, never of shard count or scheduling.
+    pub fn machine_rng(&self, machine: usize) -> Rng {
+        pool::machine_rng(self.seed, machine)
+    }
+
+    /// Per-round machine stream: like [`Self::machine_rng`] but keyed on
+    /// an extra tag, built with a single generator construction.
+    pub fn machine_stream(&self, machine: usize, tag: u64) -> Rng {
+        pool::machine_stream(self.seed, machine, tag)
     }
 
     /// Record one synchronous round.
@@ -75,6 +157,31 @@ impl MpcSimulator {
     /// `max_state`: maximum words any machine holds while computing.
     /// `total`: total words communicated (for the report; not a budget).
     pub fn round(&mut self, label: &str, max_out: Words, max_in: Words, total: Words, max_state: Words) {
+        self.round_checked(label, max_out, max_in, total, max_state, None);
+    }
+
+    /// Merge per-shard partials at the round barrier and record the round.
+    pub fn round_from_shards(&mut self, label: &str, shards: &[ShardRoundStat]) {
+        let merged = shards
+            .iter()
+            .copied()
+            .fold(ShardRoundStat::default(), ShardRoundStat::merge);
+        self.round(label, merged.max_out, merged.max_in, merged.total, merged.max_state);
+    }
+
+    /// Record a round whose budgets were already checked against a merged
+    /// memory ledger (the router's barrier path). A `ledger_violation`
+    /// takes precedence — it carries the offending machine id — otherwise
+    /// the standard threshold checks run.
+    pub fn round_checked(
+        &mut self,
+        label: &str,
+        max_out: Words,
+        max_in: Words,
+        total: Words,
+        max_state: Words,
+        ledger_violation: Option<BudgetError>,
+    ) {
         let stat = RoundStat {
             label: label.to_string(),
             max_out,
@@ -86,7 +193,9 @@ impl MpcSimulator {
         // The model allows messages of size O(S); we use the literal S as
         // the constant (the polylog slack already lives inside S).
         let s = self.config.s_words;
-        let violation = if max_out > s || max_in > s {
+        let violation = if ledger_violation.is_some() {
+            ledger_violation
+        } else if max_out > s || max_in > s {
             Some(BudgetError::LocalExceeded {
                 machine: 0,
                 used: max_out.max(max_in),
@@ -197,5 +306,57 @@ mod tests {
         s.round("phase2", 1, 1, 1, 1);
         assert_eq!(s.rounds_with_prefix("phase1"), 3);
         assert_eq!(s.n_rounds(), 4);
+    }
+
+    #[test]
+    fn shard_partials_merge_like_one_round() {
+        let partials = [
+            ShardRoundStat { max_out: 10, max_in: 3, total: 100, max_state: 7 },
+            ShardRoundStat { max_out: 4, max_in: 20, total: 50, max_state: 9 },
+            ShardRoundStat::default(),
+        ];
+        let mut a = sim();
+        a.round_from_shards("merged", &partials);
+        let mut b = sim();
+        b.round("merged", 10, 20, 150, 9);
+        assert_eq!(a.trace(), b.trace());
+    }
+
+    #[test]
+    fn sharded_constructor_keeps_accounting_identical() {
+        let cfg = MpcConfig::model1(10_000, 50_000, 0.5);
+        let mut seq = MpcSimulator::new(cfg.clone());
+        let mut par = MpcSimulator::sharded(cfg, 8);
+        assert_eq!(par.shards(), 8);
+        for s in [&mut seq, &mut par] {
+            s.round("a", 10, 20, 100, 30);
+            s.rounds("b", 2, 5, 25);
+        }
+        assert_eq!(seq.trace(), par.trace());
+        assert_eq!(seq.peak_machine_words(), par.peak_machine_words());
+    }
+
+    #[test]
+    fn machine_rng_streams_stable_across_shard_counts() {
+        let cfg = MpcConfig::model1(10_000, 50_000, 0.5);
+        let a = MpcSimulator::new(cfg.clone()).with_seed(99);
+        let b = MpcSimulator::sharded(cfg, 4).with_seed(99);
+        for m in 0..16 {
+            assert_eq!(a.machine_rng(m).next_u64(), b.machine_rng(m).next_u64());
+        }
+    }
+
+    #[test]
+    fn ledger_violation_takes_precedence() {
+        let cfg = MpcConfig::model1(10_000, 50_000, 0.5);
+        let mut s = MpcSimulator::lenient(cfg);
+        let err = crate::mpc::memory::BudgetError::LocalExceeded {
+            machine: 5,
+            used: 123,
+            budget: 7,
+        };
+        s.round_checked("ledger", 1, 1, 1, 1, Some(err.clone()));
+        assert_eq!(s.violations().len(), 1);
+        assert_eq!(s.violations()[0].error, err);
     }
 }

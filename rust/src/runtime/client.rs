@@ -5,102 +5,208 @@
 //! compiles each once on the CPU PJRT client, and exposes typed execute
 //! wrappers.  Lives on a single thread (`PjRtClient` is `Rc`-based); the
 //! coordinator routes scoring work to it from worker threads.
+//!
+//! The whole executor sits behind the off-by-default `pjrt` cargo feature:
+//! the `xla` crate it wraps is unavailable in the offline registry (see
+//! README.md for how to vendor it).  Without the feature, [`PjrtEngine`]
+//! is a stub whose `load` always errors, so `CostEngine::auto` falls back
+//! to the bit-identical native runtime and the crate builds with zero
+//! network access.  The public API is identical either way.
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::runtime::blocks::{BLOCK_BATCH, BLOCK_N};
-
-/// Handle to the three compiled executables.
-pub struct PjrtEngine {
-    _client: xla::PjRtClient,
-    cost_eval: xla::PjRtLoadedExecutable,
-    cost_eval_batch: xla::PjRtLoadedExecutable,
-    triangles: xla::PjRtLoadedExecutable,
+/// Artifacts present on disk? (Feature-independent: used by `info` and by
+/// `CostEngine::auto` to decide whether loading is worth attempting.)
+pub(crate) fn artifacts_present_in(dir: &std::path::Path) -> bool {
+    ["cost_eval", "cost_eval_batch", "triangles"]
+        .iter()
+        .all(|n| dir.join(format!("{n}.hlo.txt")).exists())
 }
 
-impl PjrtEngine {
-    /// Load and compile all artifacts from a directory.
-    pub fn load(dir: &std::path::Path) -> Result<PjrtEngine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client.compile(&comp).with_context(|| format!("compiling {name}"))
-        };
-        let engine = PjrtEngine {
-            cost_eval: compile("cost_eval")?,
-            cost_eval_batch: compile("cost_eval_batch")?,
-            triangles: compile("triangles")?,
-            _client: client,
-        };
-        Ok(engine)
+#[cfg(feature = "pjrt")]
+mod engine {
+    use super::artifacts_present_in;
+    use crate::runtime::blocks::{BLOCK_BATCH, BLOCK_N};
+    use crate::util::error::{Error, Result, ResultExt};
+
+    /// Handle to the three compiled executables.
+    pub struct PjrtEngine {
+        _client: xla::PjRtClient,
+        cost_eval: xla::PjRtLoadedExecutable,
+        cost_eval_batch: xla::PjRtLoadedExecutable,
+        triangles: xla::PjRtLoadedExecutable,
     }
 
-    /// Artifacts present?
-    pub fn artifacts_present(dir: &std::path::Path) -> bool {
-        ["cost_eval", "cost_eval_batch", "triangles"]
-            .iter()
-            .all(|n| dir.join(format!("{n}.hlo.txt")).exists())
+    impl PjrtEngine {
+        /// Load and compile all artifacts from a directory.
+        pub fn load(dir: &std::path::Path) -> Result<PjrtEngine> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| Error::new("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client.compile(&comp).with_context(|| format!("compiling {name}"))
+            };
+            let engine = PjrtEngine {
+                cost_eval: compile("cost_eval")?,
+                cost_eval_batch: compile("cost_eval_batch")?,
+                triangles: compile("triangles")?,
+                _client: client,
+            };
+            Ok(engine)
+        }
+
+        /// Artifacts present?
+        pub fn artifacts_present(dir: &std::path::Path) -> bool {
+            artifacts_present_in(dir)
+        }
+
+        fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+            assert_eq!(data.len(), rows * cols);
+            xla::Literal::vec1(data)
+                .reshape(&[rows as i64, cols as i64])
+                .context("reshaping 2d literal")
+        }
+
+        fn literal_3d(data: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+            assert_eq!(data.len(), a * b * c);
+            xla::Literal::vec1(data)
+                .reshape(&[a as i64, b as i64, c as i64])
+                .context("reshaping 3d literal")
+        }
+
+        /// Disagreement cost of one dense block: returns (pos, neg).
+        pub fn cost_eval(&self, adj: &[f32], onehot: &[f32], valid: &[f32]) -> Result<(f64, f64)> {
+            let n = BLOCK_N;
+            let args = [
+                Self::literal_2d(adj, n, n)?,
+                Self::literal_2d(onehot, n, n)?,
+                xla::Literal::vec1(valid),
+            ];
+            let result = self
+                .cost_eval
+                .execute::<xla::Literal>(&args)
+                .context("executing cost_eval")?[0][0]
+                .to_literal_sync()
+                .context("fetching cost_eval result")?;
+            let outs = result.to_tuple().context("untupling cost_eval result")?;
+            let pos = outs[0].to_vec::<f32>().context("pos column")?[0] as f64;
+            let neg = outs[1].to_vec::<f32>().context("neg column")?[0] as f64;
+            Ok((pos, neg))
+        }
+
+        /// Batched scorer: K=BLOCK_BATCH onehots of the same block; returns
+        /// per-candidate (pos, neg).
+        pub fn cost_eval_batch(
+            &self,
+            adj: &[f32],
+            onehots: &[f32],
+            valid: &[f32],
+        ) -> Result<Vec<(f64, f64)>> {
+            let n = BLOCK_N;
+            let b = BLOCK_BATCH;
+            let args = [
+                Self::literal_2d(adj, n, n)?,
+                Self::literal_3d(onehots, b, n, n)?,
+                xla::Literal::vec1(valid),
+            ];
+            let result = self
+                .cost_eval_batch
+                .execute::<xla::Literal>(&args)
+                .context("executing cost_eval_batch")?[0][0]
+                .to_literal_sync()
+                .context("fetching cost_eval_batch result")?;
+            let outs = result.to_tuple().context("untupling batch result")?;
+            let pos = outs[0].to_vec::<f32>().context("pos column")?;
+            let neg = outs[1].to_vec::<f32>().context("neg column")?;
+            Ok(pos.into_iter().zip(neg).map(|(p, q)| (p as f64, q as f64)).collect())
+        }
+
+        /// Bad-triangle count of one dense block.
+        pub fn triangles(&self, adj: &[f32], valid: &[f32]) -> Result<f64> {
+            let n = BLOCK_N;
+            let args = [Self::literal_2d(adj, n, n)?, xla::Literal::vec1(valid)];
+            let result = self
+                .triangles
+                .execute::<xla::Literal>(&args)
+                .context("executing triangles")?[0][0]
+                .to_literal_sync()
+                .context("fetching triangles result")?;
+            let outs = result.to_tuple().context("untupling triangles result")?;
+            Ok(outs[0].to_vec::<f32>().context("count column")?[0] as f64)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    use super::artifacts_present_in;
+    use crate::util::error::{Error, Result};
+
+    /// Stub engine: the crate was built without the `pjrt` feature, so no
+    /// executor can be constructed — `load` always errors and the scoring
+    /// methods are unreachable (the `CostEngine::Pjrt` variant can never
+    /// hold a value).
+    pub struct PjrtEngine {
+        _unconstructible: std::convert::Infallible,
     }
 
-    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    impl PjrtEngine {
+        pub fn load(_dir: &std::path::Path) -> Result<PjrtEngine> {
+            Err(Error::new(
+                "built without the `pjrt` feature — enabling it first requires \
+                 vendoring the `xla` crate and declaring it in Cargo.toml \
+                 (exact dependency lines in rust/README.md), then rebuilding \
+                 with `--features pjrt`",
+            ))
+        }
+
+        pub fn artifacts_present(dir: &std::path::Path) -> bool {
+            artifacts_present_in(dir)
+        }
+
+        pub fn cost_eval(
+            &self,
+            _adj: &[f32],
+            _onehot: &[f32],
+            _valid: &[f32],
+        ) -> Result<(f64, f64)> {
+            match self._unconstructible {}
+        }
+
+        pub fn cost_eval_batch(
+            &self,
+            _adj: &[f32],
+            _onehots: &[f32],
+            _valid: &[f32],
+        ) -> Result<Vec<(f64, f64)>> {
+            match self._unconstructible {}
+        }
+
+        pub fn triangles(&self, _adj: &[f32], _valid: &[f32]) -> Result<f64> {
+            match self._unconstructible {}
+        }
+    }
+}
+
+pub use engine::PjrtEngine;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_absent_in_empty_dir() {
+        assert!(!PjrtEngine::artifacts_present(std::path::Path::new(
+            "/definitely/not/a/real/artifact/dir"
+        )));
     }
 
-    fn literal_3d(data: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
-        assert_eq!(data.len(), a * b * c);
-        Ok(xla::Literal::vec1(data).reshape(&[a as i64, b as i64, c as i64])?)
-    }
-
-    /// Disagreement cost of one dense block: returns (pos, neg).
-    pub fn cost_eval(&self, adj: &[f32], onehot: &[f32], valid: &[f32]) -> Result<(f64, f64)> {
-        let n = BLOCK_N;
-        let args = [
-            Self::literal_2d(adj, n, n)?,
-            Self::literal_2d(onehot, n, n)?,
-            xla::Literal::vec1(valid),
-        ];
-        let result = self.cost_eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let pos = outs[0].to_vec::<f32>()?[0] as f64;
-        let neg = outs[1].to_vec::<f32>()?[0] as f64;
-        Ok((pos, neg))
-    }
-
-    /// Batched scorer: K=BLOCK_BATCH onehots of the same block; returns
-    /// per-candidate (pos, neg).
-    pub fn cost_eval_batch(
-        &self,
-        adj: &[f32],
-        onehots: &[f32],
-        valid: &[f32],
-    ) -> Result<Vec<(f64, f64)>> {
-        let n = BLOCK_N;
-        let b = BLOCK_BATCH;
-        let args = [
-            Self::literal_2d(adj, n, n)?,
-            Self::literal_3d(onehots, b, n, n)?,
-            xla::Literal::vec1(valid),
-        ];
-        let result =
-            self.cost_eval_batch.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let pos = outs[0].to_vec::<f32>()?;
-        let neg = outs[1].to_vec::<f32>()?;
-        Ok(pos.into_iter().zip(neg).map(|(p, q)| (p as f64, q as f64)).collect())
-    }
-
-    /// Bad-triangle count of one dense block.
-    pub fn triangles(&self, adj: &[f32], valid: &[f32]) -> Result<f64> {
-        let n = BLOCK_N;
-        let args = [Self::literal_2d(adj, n, n)?, xla::Literal::vec1(valid)];
-        let result = self.triangles.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        Ok(outs[0].to_vec::<f32>()?[0] as f64)
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_errors_with_guidance() {
+        let err = PjrtEngine::load(std::path::Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

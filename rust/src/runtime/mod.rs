@@ -14,7 +14,7 @@ pub mod blocks;
 pub mod client;
 pub mod fallback;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::cluster::cost::Cost;
 use crate::cluster::Clustering;
@@ -37,12 +37,16 @@ pub enum CostEngine {
 
 impl CostEngine {
     /// Load PJRT from `dir` if the artifacts exist, else native fallback.
+    ///
+    /// Built without the `pjrt` cargo feature (the default — the `xla`
+    /// crate is unavailable offline), loading always fails and this falls
+    /// back to the bit-identical native runtime.
     pub fn auto(dir: &std::path::Path) -> CostEngine {
         if PjrtEngine::artifacts_present(dir) {
             match PjrtEngine::load(dir) {
                 Ok(engine) => return CostEngine::Pjrt(engine),
                 Err(err) => {
-                    eprintln!("warning: PJRT load failed ({err:#}); using native fallback");
+                    eprintln!("warning: PJRT load failed ({err}); using native fallback");
                 }
             }
         }

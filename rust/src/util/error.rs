@@ -1,0 +1,144 @@
+//! Minimal string-carrying error type — the `anyhow` replacement
+//! (unavailable in the offline registry; see DESIGN.md §2).
+//!
+//! Fallible system paths (runtime loading, report IO, the coordinator)
+//! return [`Result`]. Errors carry a human-readable message plus optional
+//! context frames added with [`Error::context`] / [`ResultExt::context`],
+//! mirroring the `anyhow::Context` idiom:
+//!
+//! ```ignore
+//! let proto = parse(&text).context("parsing cost_eval.hlo.txt")?;
+//! arbocc::ensure!(a == b, "cost mismatch: {a:?} vs {b:?}");
+//! ```
+
+/// Crate-wide error: a message with optional context frames.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), context: Vec::new() }
+    }
+
+    /// Attach a context frame (outermost printed first, like anyhow).
+    pub fn context(mut self, frame: impl Into<String>) -> Error {
+        self.context.push(frame.into());
+        self
+    }
+
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for frame in self.context.iter().rev() {
+            write!(f, "{frame}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::new(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::new(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style helper for adding frames to any fallible value.
+pub trait ResultExt<T> {
+    fn context(self, frame: impl Into<String>) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, frame: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> ResultExt<T> for std::result::Result<T, E> {
+    fn context(self, frame: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::new(e.to_string()).context(frame))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, frame: F) -> Result<T> {
+        self.map_err(|e| Error::new(e.to_string()).context(frame()))
+    }
+}
+
+/// `anyhow::ensure!` twin: early-return an [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::new(format!($($arg)+)).into());
+        }
+    };
+}
+
+/// `anyhow::bail!` twin: early-return an [`Error`] unconditionally.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::util::error::Error::new(format!($($arg)+)).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context_outermost_first() {
+        let e = Error::new("file missing").context("loading artifact").context("engine init");
+        assert_eq!(e.to_string(), "engine init: loading artifact: file missing");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn result_ext_adds_frames() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn ensure_macro_returns_error() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        assert_eq!(check(50).unwrap_err().to_string(), "x too big: 50");
+    }
+}

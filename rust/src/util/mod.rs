@@ -1,10 +1,12 @@
 //! Shared infrastructure: PRNG, statistics, JSON reports, property testing,
-//! CLI parsing, tables and timers.
+//! CLI parsing, error handling, tables and timers.
 //!
-//! These replace `rand`, `proptest`, `serde`, `clap` and `criterion`, none
-//! of which are available in the offline crate registry (see DESIGN.md §2).
+//! These replace `rand`, `proptest`, `serde`, `clap`, `anyhow` and
+//! `criterion`, none of which are available in the offline crate registry
+//! (see DESIGN.md §2).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -11,6 +11,7 @@ use arbocc::algorithms::matching::{
 };
 use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
 use arbocc::algorithms::mpc_mis::alg3::{alg3_process, Alg3Params};
+use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Subroutine};
 use arbocc::algorithms::pivot::{pivot, pivot_via_mis};
 use arbocc::cluster::cost::{cost, cost_brute};
 use arbocc::cluster::structural::bound_cluster_sizes;
@@ -21,7 +22,7 @@ use arbocc::mpc::memory::Words;
 use arbocc::mpc::{MpcConfig, MpcSimulator};
 use arbocc::prop_check;
 use arbocc::runtime::CostEngine;
-use arbocc::util::prop::forall;
+use arbocc::util::prop::{forall, forall_sized};
 use arbocc::util::rng::Rng;
 
 fn random_lambda_graph(rng: &mut Rng, size: usize) -> (arbocc::graph::Graph, usize) {
@@ -226,6 +227,88 @@ fn prop_mpc_connectivity_matches_bfs() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_sharded_executor_is_seed_deterministic() {
+    // The tentpole invariant of the machine-sharded executor: the same
+    // seed yields the identical clustering *and* the identical round
+    // trace at 1, 2 and 8 shards, with unchanged round counts, for both
+    // subroutines (Alg2 / Model 1 and Alg3 / Model 2). Sizes ramp past
+    // the pool's SERIAL_CUTOFF so real scoped threads are exercised, not
+    // just the inline fast path.
+    forall_sized("sharded MPC PIVOT: same clustering and trace at 1/2/8 shards", 10, 64, 512, |rng, size| {
+        let (g, _) = random_lambda_graph(rng, size.max(8));
+        let perm = rng.permutation(g.n());
+        let words = (g.n() + 2 * g.m()).max(4) as Words;
+        for model2 in [false, true] {
+            let run_at = |shards: usize| {
+                let cfg = if model2 {
+                    MpcConfig::model2(g.n().max(2), words, 0.5)
+                } else {
+                    MpcConfig::model1(g.n().max(2), words, 0.5)
+                };
+                let mut sim = MpcSimulator::lenient_sharded(cfg, shards);
+                let params = if model2 {
+                    Alg1Params {
+                        c_prefix: 1.0,
+                        subroutine: Subroutine::Alg3(Alg3Params::default()),
+                    }
+                } else {
+                    Alg1Params::default()
+                };
+                let run = mpc_pivot(&g, &perm, &params, &mut sim);
+                let trace: Vec<(String, Words, Words, Words, Words)> = sim
+                    .trace()
+                    .iter()
+                    .map(|r| (r.label.clone(), r.max_out, r.max_in, r.total, r.max_state))
+                    .collect();
+                (run.clustering.normalize().labels().to_vec(), run.rounds, trace)
+            };
+            let serial = run_at(1);
+            for shards in [2usize, 8] {
+                let sharded = run_at(shards);
+                prop_check!(
+                    sharded == serial,
+                    "model2={model2} shards={shards}: sharded run diverged from serial"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_ledger_still_enforces_memory_budgets() {
+    // Budget enforcement must survive sharding: a round whose traffic
+    // blows the O(S) per-machine budget is a recorded violation at every
+    // shard count, with the offending machine identified from the merged
+    // shard ledgers.
+    use arbocc::mpc::router::Router;
+    let machines = 12;
+    for shards in [1usize, 2, 8] {
+        let mut cfg = MpcConfig::model1(10_000, 100_000, 0.6);
+        cfg.machines = machines;
+        let huge = cfg.s_words as usize + 10;
+        let mut sim = MpcSimulator::lenient_sharded(cfg, shards);
+        let router = Router::new(machines);
+        // A normal round first: no violation.
+        router.step_sharded(&mut sim, "ok", |m| vec![((m + 1) % machines, vec![m as u64])]);
+        assert!(sim.ok(), "{shards} shards: clean round must not violate");
+        // Machine 7 exceeds its send budget.
+        router.step_sharded(&mut sim, "overflow", |m| {
+            if m == 7 {
+                vec![(0, vec![0u64; huge])]
+            } else {
+                Vec::new()
+            }
+        });
+        assert!(!sim.ok(), "{shards} shards: violation must be recorded");
+        assert_eq!(sim.violations().len(), 1, "{shards} shards");
+        let msg = format!("{}", sim.violations()[0]);
+        assert!(msg.contains("machine 7"), "{shards} shards: {msg}");
+        assert_eq!(sim.n_rounds(), 2, "{shards} shards: violating rounds still counted");
+    }
 }
 
 #[test]
