@@ -1,8 +1,24 @@
 # Repo-level driver targets. The crate lives in rust/.
+#
+#   tier1        release build + full test suite (the gate)
+#   fmt          rustfmt check (kept separate from tier1)
+#   clippy       cargo clippy --all-targets -D warnings
+#   ci           tier1 + fmt + clippy
+#   bench-smoke  perf-lab orchestrator, smoke tier (< ~5 min): runs every
+#                registered scenario at CI sizes and writes
+#                BENCH_$(BENCH_LABEL).json at the repo root
+#   bench-full   the paper-scale sweep (same scenarios, full sizes);
+#                writes BENCH_$(BENCH_LABEL)_full.json so it never
+#                clobbers the smoke baseline the gate diffs against
+#   bench-gate   bench-smoke + `--compare`: diff the fresh smoke run
+#                against the newest previous same-tier BENCH_*.json at
+#                the repo root, exit 1 on regression (DESIGN.md §5)
+#   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
+BENCH_LABEL ?= PR2
 
-.PHONY: tier1 fmt ci bench
+.PHONY: tier1 fmt clippy ci bench bench-smoke bench-full bench-gate
 
 # The gate every change must pass: release build + full test suite.
 tier1:
@@ -12,7 +28,22 @@ tier1:
 fmt:
 	cd rust && $(CARGO) fmt --check
 
-ci: tier1 fmt
+clippy:
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+ci: tier1 fmt clippy
 
 bench:
 	cd rust && $(CARGO) bench
+
+bench-smoke:
+	cd rust && $(CARGO) run --release -- bench --tier smoke \
+		--label $(BENCH_LABEL) --out ../BENCH_$(BENCH_LABEL).json
+
+bench-full:
+	cd rust && $(CARGO) run --release -- bench --tier full \
+		--label $(BENCH_LABEL)_full --out ../BENCH_$(BENCH_LABEL)_full.json
+
+bench-gate:
+	cd rust && $(CARGO) run --release -- bench --tier smoke \
+		--label $(BENCH_LABEL) --out ../BENCH_$(BENCH_LABEL).json --compare

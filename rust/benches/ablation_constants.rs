@@ -1,105 +1,11 @@
-//! Ablation — the design constants DESIGN.md calls out:
+//! Ablation — the design constants DESIGN.md calls out: Algorithm 2's
+//! chunk divisor, Algorithm 1's prefix constant, Algorithm 3's radius
+//! constant. All cells verify the MIS stays exactly sequential-greedy.
+//! Thin wrapper over `ablation/constants`
+//! (`arbocc::bench::scenarios::mis`).
 //!
-//! (a) Algorithm 2's chunk divisor: rounds vs max-component tradeoff
-//!     (subcritical sampling is load-bearing for Lemma 18/19);
-//! (b) Algorithm 1's prefix constant c_prefix: fewer/larger prefixes vs
-//!     more/smaller ones;
-//! (c) Algorithm 3's radius constant: gather cost vs compression factor.
-//!
-//! All cells verify the MIS stays exactly equal to sequential greedy —
-//! the constants only move the round/memory schedule.
-
-use arbocc::algorithms::greedy_mis::greedy_mis;
-use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
-use arbocc::algorithms::mpc_mis::{alg1_greedy_mis, Alg1Params, Alg3Params, Subroutine};
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::{fnum, Table};
+//!     cargo bench --bench ablation_constants [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-    let n = 40_000;
-    let lambda = 4usize;
-    let mut rng = Rng::new(14_000);
-    let g = lambda_arboric(n, lambda, &mut rng);
-    let perm = rng.permutation(n);
-    let words = (g.n() + 2 * g.m()) as Words;
-    let expected = greedy_mis(&g, &perm);
-
-    // (a) divisor sweep.
-    let mut ta = Table::new(
-        "ablation (a) — Alg2 chunk divisor (subcriticality)",
-        &["divisor", "rounds", "max component", "exact MIS"],
-    );
-    for &div in &[2.0f64, 4.0, 8.0, 16.0, 100.0] {
-        let mut sim = MpcSimulator::lenient(MpcConfig::model1(n, words, 0.5));
-        let mut blocked = vec![false; n];
-        let mut in_mis = vec![false; n];
-        let stats = alg2_process(
-            &g,
-            &perm,
-            &mut blocked,
-            &mut in_mis,
-            &mut sim,
-            &Alg2Params { divisor: div, iters_factor: 4.0 },
-        );
-        let maxc = stats.chunk_max_components.iter().copied().max().unwrap_or(0);
-        assert_eq!(in_mis, expected);
-        ta.row(&[
-            fnum(div),
-            sim.n_rounds().to_string(),
-            maxc.to_string(),
-            "yes".into(),
-        ]);
-        report.set(&format!("divisor_{div}_rounds"), Json::num(sim.n_rounds() as f64));
-        report.set(&format!("divisor_{div}_maxcomp"), Json::num(maxc as f64));
-    }
-    ta.print();
-    println!("small divisors: fewer, larger chunks ⇒ fewer rounds but components blow up");
-    println!("(memory risk); the default (8) keeps sampling subcritical.\n");
-
-    // (b) prefix constant sweep.
-    let mut tb = Table::new(
-        "ablation (b) — Alg1 prefix constant c_prefix",
-        &["c_prefix", "phases", "rounds", "exact MIS"],
-    );
-    for &c in &[0.05f64, 0.2, 1.0, 4.0] {
-        let mut sim = MpcSimulator::lenient(MpcConfig::model1(n, words, 0.5));
-        let params = Alg1Params { c_prefix: c, ..Default::default() };
-        let run = alg1_greedy_mis(&g, &perm, &params, &mut sim);
-        assert_eq!(run.in_mis, expected);
-        tb.row(&[
-            c.to_string(),
-            run.phases.len().to_string(),
-            sim.n_rounds().to_string(),
-            "yes".into(),
-        ]);
-        report.set(&format!("cprefix_{c}_rounds"), Json::num(sim.n_rounds() as f64));
-    }
-    tb.print();
-    println!();
-
-    // (c) Alg3 radius constant sweep.
-    let mut tc = Table::new(
-        "ablation (c) — Alg3 radius constant (compression factor)",
-        &["C", "rounds (M2)", "exact MIS"],
-    );
-    for &c in &[0.25f64, 0.5, 1.0] {
-        let mut sim = MpcSimulator::lenient(MpcConfig::model2(n, words, 0.5));
-        let params = Alg1Params {
-            c_prefix: 1.0,
-            subroutine: Subroutine::Alg3(Alg3Params { radius_constant: c, max_radius: 64 }),
-        };
-        let run = alg1_greedy_mis(&g, &perm, &params, &mut sim);
-        assert_eq!(run.in_mis, expected);
-        tc.row(&[c.to_string(), sim.n_rounds().to_string(), "yes".into()]);
-        report.set(&format!("radius_{c}_rounds"), Json::num(sim.n_rounds() as f64));
-    }
-    tc.print();
-    println!("\nall constants preserve exactness; they trade rounds against memory.");
-    let path = write_report("ablation_constants", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("ablation_constants");
 }

@@ -1,99 +1,9 @@
 //! E10 — §1.4 head-to-head: MPC PIVOT (ours) vs C4, ClusterWild! and
-//! ParallelPivot on shared workloads.
+//! ParallelPivot on shared workloads. Thin wrapper over `e10/baselines`
+//! (`arbocc::bench::scenarios::clustering`).
 //!
-//! Shape expectations from the paper: C4 matches PIVOT's cost exactly
-//! (it *is* greedy MIS); ClusterWild! trades a (3+ε) cost for fewer
-//! rounds; ParallelPivot is constant-approximate with O(log n · log Δ)
-//! epochs; our Alg1+Alg2 pipeline also matches PIVOT's cost with rounds
-//! governed by log λ · polyloglog n.
-
-use arbocc::algorithms::baselines::{c4, clusterwild, parallel_pivot};
-use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Alg2Params, Subroutine};
-use arbocc::algorithms::pivot::pivot;
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::triangles::packing_lower_bound;
-use arbocc::graph::generators::Family;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::mean;
-use arbocc::util::table::{fnum, Table};
+//!     cargo bench --bench e10_baselines [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-    let families = [Family::LambdaArboric(3), Family::BarabasiAlbert(3), Family::Forest];
-    let n = 20_000;
-    let seeds = 3u64;
-
-    let mut table = Table::new(
-        &format!("E10 — baselines on n={n} (mean over {seeds} seeds): ratio≤ vs LB | rounds"),
-        &["family", "PIVOT(seq)", "ours M1", "ours rounds", "C4", "C4 rounds", "Wild!", "Wild rounds", "PPivot", "PP rounds"],
-    );
-
-    for family in families {
-        let mut acc: std::collections::HashMap<&str, Vec<f64>> = Default::default();
-        for s in 0..seeds {
-            let mut rng = Rng::new(10_000 + s * 101);
-            let g = family.generate(n, &mut rng);
-            let perm = rng.permutation(g.n());
-            let lb = packing_lower_bound(&g).max(1) as f64;
-            let words = (g.n() + 2 * g.m()) as Words;
-            let sim = || MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-
-            let seq = pivot(&g, &perm);
-            acc.entry("pivot").or_default().push(cost(&g, &seq).total() as f64 / lb);
-
-            let mut s1 = sim();
-            let ours = mpc_pivot(
-                &g,
-                &perm,
-                &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) },
-                &mut s1,
-            );
-            assert_eq!(ours.clustering.normalize(), seq.normalize(), "ours ≡ PIVOT");
-            acc.entry("ours").or_default().push(cost(&g, &ours.clustering).total() as f64 / lb);
-            acc.entry("ours_r").or_default().push(s1.n_rounds() as f64);
-
-            let mut s2 = sim();
-            let r = c4::c4(&g, &perm, 0.9, &mut s2);
-            assert_eq!(r.clustering.normalize(), seq.normalize(), "C4 ≡ PIVOT");
-            acc.entry("c4").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
-            acc.entry("c4_r").or_default().push(r.rounds as f64);
-
-            let mut s3 = sim();
-            let r = clusterwild::clusterwild(&g, &perm, 0.9, &mut s3);
-            acc.entry("wild").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
-            acc.entry("wild_r").or_default().push(r.rounds as f64);
-
-            let mut s4 = sim();
-            let r = parallel_pivot::parallel_pivot(&g, &perm, 0.5, &mut rng, &mut s4);
-            acc.entry("pp").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
-            acc.entry("pp_r").or_default().push(r.rounds as f64);
-        }
-        let m = |k: &str| mean(&acc[k]);
-        table.row(&[
-            family.name(),
-            fnum(m("pivot")),
-            fnum(m("ours")),
-            fnum(m("ours_r")),
-            fnum(m("c4")),
-            fnum(m("c4_r")),
-            fnum(m("wild")),
-            fnum(m("wild_r")),
-            fnum(m("pp")),
-            fnum(m("pp_r")),
-        ]);
-        report.set(&format!("{}_ours_ratio", family.name()), Json::num(m("ours")));
-        report.set(&format!("{}_wild_ratio", family.name()), Json::num(m("wild")));
-        // Shape: ClusterWild! is never cheaper than PIVOT in cost but uses
-        // the fewest rounds of the epoch algorithms.
-        assert!(m("wild") + 1e-9 >= m("pivot") * 0.95, "Wild! shouldn't beat PIVOT systematically");
-        assert!(m("wild_r") <= m("c4_r") + 1e-9, "Wild! must not use more rounds than C4");
-    }
-    table.print();
-    println!("\npaper §1.4 comparative shape (C4 ≡ PIVOT cost; ClusterWild! trades cost for");
-    println!("rounds; ParallelPivot constant-approx) — CONFIRMED");
-    let path = write_report("e10_baselines", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e10_baselines");
 }

@@ -1,92 +1,10 @@
 //! E11 — Figures 1–2: graph exponentiation learns 2^k-hop balls in k
-//! rounds, and the virtual communication graph shrinks the effective
-//! diameter.
+//! rounds; memory caps halt growth; virtual diameter shrinks by ℓ. Thin
+//! wrapper over `e11/exponentiation`
+//! (`arbocc::bench::scenarios::pipelines`).
 //!
-//! (a) radius-vs-rounds traces on paths/trees/grids (radius doubles per
-//!     round — the Figure 1 geometry);
-//! (b) memory caps halt growth exactly where ball topology exceeds S
-//!     (the §2.1.4 "largest possible neighborhood" step);
-//! (c) virtual diameter: after gathering ℓ-hop balls, a path's effective
-//!     diameter divides by ℓ (Figure 2).
-
-use arbocc::graph::generators::{grid, path, random_tree};
-use arbocc::mpc::exponentiation::{bfs_ball, gather_balls};
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::Table;
-
-fn sim(n: usize, m: usize) -> MpcSimulator {
-    MpcSimulator::new(MpcConfig::model2(n.max(2), (n + 2 * m).max(4) as Words, 0.9))
-}
+//!     cargo bench --bench e11_exponentiation [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-
-    // (a) rounds = log2(radius).
-    let mut ta = Table::new(
-        "E11a — rounds to gather radius R (Figure 1: R doubles per round)",
-        &["graph", "R=4", "R=16", "R=64"],
-    );
-    let mut rng = Rng::new(11_000);
-    let graphs: Vec<(&str, arbocc::graph::Graph)> = vec![
-        ("path(4096)", path(4096)),
-        ("tree(4096)", random_tree(4096, &mut rng)),
-        ("grid(64x64)", grid(64, 64)),
-    ];
-    for (name, g) in &graphs {
-        let mut cells = Vec::new();
-        for &r in &[4usize, 16, 64] {
-            let mut s = sim(g.n(), g.m());
-            let targets: Vec<u32> = (0..g.n() as u32).collect();
-            let res = gather_balls(g, &targets, r, u64::MAX, &mut s, "e11");
-            assert_eq!(res.rounds, (r as f64).log2().ceil() as usize, "{name} R={r}");
-            // Spot-check correctness against BFS.
-            let v = (g.n() / 2) as u32;
-            assert_eq!(res.balls[v as usize], bfs_ball(g, v, res.radius));
-            cells.push(res.rounds.to_string());
-        }
-        ta.row(&[name.to_string(), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
-    }
-    ta.print();
-
-    // (b) memory caps.
-    let g = grid(64, 64);
-    let mut tb = Table::new(
-        "E11b — memory-capped growth on grid(64x64): radius reached vs cap",
-        &["cap (words)", "radius reached", "capped"],
-    );
-    for &cap in &[32u64, 256, 2048, 16384, u64::MAX] {
-        let mut s = sim(g.n(), g.m());
-        let targets: Vec<u32> = (0..g.n() as u32).collect();
-        let res = gather_balls(&g, &targets, 64, cap, &mut s, "e11b");
-        tb.row(&[
-            if cap == u64::MAX { "∞".into() } else { cap.to_string() },
-            res.radius.to_string(),
-            res.memory_capped.to_string(),
-        ]);
-        report.set(
-            &format!("grid_cap_{}_radius", if cap == u64::MAX { 0 } else { cap }),
-            Json::num(res.radius as f64),
-        );
-    }
-    tb.print();
-
-    // (c) virtual diameter (Figure 2).
-    let n = 1024;
-    let _g = path(n);
-    let mut tc = Table::new(
-        "E11c — Figure 2: path(1024) virtual diameter after gathering ℓ-hop balls",
-        &["ℓ", "virtual diameter ⌈(n-1)/ℓ⌉"],
-    );
-    for &l in &[1usize, 2, 4, 8, 16] {
-        let virt = (n - 1).div_ceil(l);
-        tc.row(&[l.to_string(), virt.to_string()]);
-    }
-    tc.print();
-
-    println!("\npaper: §2.1.3/Figures 1–2 (exponentiation geometry + memory feasibility) — CONFIRMED");
-    let path_ = write_report("e11_exponentiation", &report).unwrap();
-    println!("report: {}", path_.display());
+    arbocc::bench::suite::run_bin("e11_exponentiation");
 }

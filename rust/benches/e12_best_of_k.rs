@@ -1,72 +1,9 @@
-//! E12 — Remark 14: running O(log n) parallel PIVOT copies and keeping
-//! the best converts "3-approx in expectation" into a w.h.p. guarantee.
+//! E12 — Remark 14: best-of-K converts "3-approx in expectation" into a
+//! w.h.p. guarantee; cost-vs-K curve + scorer throughput. Thin wrapper
+//! over `e12/best_of_k` (`arbocc::bench::scenarios::clustering`).
 //!
-//! (a) cost-vs-K curve: best-of-K cost decreases (weakly) in K and its
-//!     spread over seeds shrinks;
-//! (b) scorer throughput: clusterings/second through the coordinator
-//!     (native backend here; the PJRT column is produced by
-//!     `arbocc best-of-k` / perf_hotpaths when artifacts are present).
-
-use std::sync::Arc;
-
-use arbocc::cluster::triangles::packing_lower_bound;
-use arbocc::coordinator::{best_of_k, TrialSpec};
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::runtime::CostEngine;
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::{max, mean, min};
-use arbocc::util::table::{fnum, Table};
-use arbocc::util::timer::Timer;
+//!     cargo bench --bench e12_best_of_k [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-    let n = 20_000;
-    let mut rng = Rng::new(12_000);
-    let g = Arc::new(lambda_arboric(n, 4, &mut rng));
-    let lb = packing_lower_bound(&g).max(1) as f64;
-    let engine = CostEngine::native();
-
-    let mut table = Table::new(
-        &format!("E12 — best-of-K on arboric-4 (n={n}), 5 seeds"),
-        &["K", "mean best ratio≤", "min", "max", "spread", "trials/s"],
-    );
-    let mut prev_mean = f64::INFINITY;
-    for &k in &[1usize, 2, 4, 8, 16, 32] {
-        let mut bests = Vec::new();
-        let mut thru = Vec::new();
-        for s in 0..5u64 {
-            let t = Timer::start();
-            let run = best_of_k(
-                &g,
-                &TrialSpec::Alg4Pivot { lambda: 4, eps: 2.0 },
-                k,
-                4,
-                999 + s, // different base seed per repetition
-                &engine,
-            )
-            .unwrap();
-            thru.push(k as f64 / t.elapsed_s());
-            bests.push(run.best_cost.total() as f64 / lb);
-        }
-        let m = mean(&bests);
-        table.row(&[
-            k.to_string(),
-            fnum(m),
-            fnum(min(&bests)),
-            fnum(max(&bests)),
-            fnum(max(&bests) - min(&bests)),
-            fnum(mean(&thru)),
-        ]);
-        report.set(&format!("k_{k}_mean_ratio"), Json::num(m));
-        report.set(&format!("k_{k}_spread"), Json::num(max(&bests) - min(&bests)));
-        // Weak monotonicity with sampling slack.
-        assert!(m <= prev_mean * 1.02, "best-of-K mean must not grow with K");
-        prev_mean = m;
-    }
-    table.print();
-    println!("\npaper: Remark 14 (expectation → w.h.p. via parallel copies) — shape CONFIRMED");
-    println!("(the spread column shrinking with K is the concentration the trick buys)");
-    let path = write_report("e12_best_of_k", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e12_best_of_k");
 }

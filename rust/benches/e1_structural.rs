@@ -1,96 +1,9 @@
 //! E1 — Lemma 25: there is an optimum clustering with clusters ≤ 4λ−2.
+//! Thin wrapper over `e1/structural_bound`
+//! (`arbocc::bench::scenarios::clustering`).
 //!
-//! Two validations:
-//!  (a) exact: on brute-force-solvable instances, applying the structural
-//!      transform to an exact optimum preserves its cost and caps sizes;
-//!  (b) scale: on large instances, the transform applied to adversarial
-//!      (single-cluster) and PIVOT clusterings never increases cost and
-//!      always lands within the bound.
-
-use arbocc::algorithms::pivot::pivot_random;
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::exact::solve_exact;
-use arbocc::cluster::structural::bound_cluster_sizes;
-use arbocc::cluster::Clustering;
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::Table;
+//!     cargo bench --bench e1_structural [-- --tier smoke]
 
 fn main() {
-    let mut table = Table::new(
-        "E1 — Lemma 25 structural bound (limit = 4λ−2)",
-        &["λ", "mode", "instances", "cost preserved", "max|C| ≤ 4λ−2", "worst max|C|"],
-    );
-    let mut report = Json::obj();
-
-    // (a) exact instances.
-    for lambda in [1usize, 2, 3] {
-        let mut rng = Rng::new(1000 + lambda as u64);
-        let trials = 30;
-        let mut preserved = 0;
-        let mut bounded = 0;
-        let mut worst = 0usize;
-        for _ in 0..trials {
-            let g = lambda_arboric(11, lambda, &mut rng);
-            let (opt, opt_cost) = solve_exact(&g);
-            let res = bound_cluster_sizes(&g, &opt, lambda);
-            if cost(&g, &res.clustering).total() == opt_cost.total() {
-                preserved += 1;
-            }
-            if res.max_cluster_size <= 4 * lambda - 2 {
-                bounded += 1;
-            }
-            worst = worst.max(res.max_cluster_size);
-        }
-        table.row(&[
-            lambda.to_string(),
-            "exact-opt (n=11)".into(),
-            trials.to_string(),
-            format!("{preserved}/{trials}"),
-            format!("{bounded}/{trials}"),
-            worst.to_string(),
-        ]);
-        assert_eq!(preserved, trials, "transform must preserve optimal cost");
-        assert_eq!(bounded, trials);
-    }
-
-    // (b) large instances.
-    for lambda in [1usize, 2, 4, 8] {
-        let mut rng = Rng::new(2000 + lambda as u64);
-        let trials = 5;
-        let mut non_increase = 0;
-        let mut bounded = 0;
-        let mut worst = 0usize;
-        for _ in 0..trials {
-            let g = lambda_arboric(5000, lambda, &mut rng);
-            for start in [Clustering::single_cluster(g.n()), pivot_random(&g, &mut rng)] {
-                let before = cost(&g, &start).total();
-                let res = bound_cluster_sizes(&g, &start, lambda);
-                if cost(&g, &res.clustering).total() <= before {
-                    non_increase += 1;
-                }
-                if res.max_cluster_size <= 4 * lambda - 2 {
-                    bounded += 1;
-                }
-                worst = worst.max(res.max_cluster_size);
-            }
-        }
-        table.row(&[
-            lambda.to_string(),
-            "large (n=5000)".into(),
-            (2 * trials).to_string(),
-            format!("{non_increase}/{}", 2 * trials),
-            format!("{bounded}/{}", 2 * trials),
-            worst.to_string(),
-        ]);
-        assert_eq!(non_increase, 2 * trials);
-        assert_eq!(bounded, 2 * trials);
-        report.set(&format!("lambda_{lambda}_worst_max_cluster"), Json::num(worst as f64));
-    }
-
-    table.print();
-    println!("\npaper: Lemma 25 (clusters ≤ 4λ−2 at no cost increase) — CONFIRMED");
-    let path = write_report("e1_structural", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e1_structural");
 }

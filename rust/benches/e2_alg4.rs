@@ -1,87 +1,9 @@
 //! E2 — Theorem 26 / Algorithm 4: ignoring high-degree vertices costs at
-//! most max{1+ε, α}.
+//! most max{1+ε, α}. Thin wrapper over `e2/alg4_filtering`
+//! (`arbocc::bench::scenarios::clustering`).
 //!
-//! (a) vs exact optima (n = 12): empirical ratio of Alg4(exact-inner)
-//!     against OPT across ε — must stay ≤ max{1+ε, 1};
-//! (b) at scale (n = 20k) with PIVOT inner: ratio vs the bad-triangle
-//!     packing LB across ε, plus the filtered-fraction column showing the
-//!     threshold 8(1+ε)λ/ε in action.
-
-use arbocc::algorithms::alg4::{alg4, split_high_degree};
-use arbocc::algorithms::pivot::pivot_random;
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::exact::{exact_cost, solve_exact};
-use arbocc::cluster::triangles::packing_lower_bound;
-use arbocc::graph::generators::{barabasi_albert, lambda_arboric};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::mean;
-use arbocc::util::table::{fnum, Table};
+//!     cargo bench --bench e2_alg4 [-- --tier smoke]
 
 fn main() {
-    let eps_sweep = [0.5f64, 1.0, 2.0, 4.0];
-    let mut report = Json::obj();
-
-    // (a) exact ------------------------------------------------------------
-    let mut ta = Table::new(
-        "E2a — Alg4(exact inner) vs OPT, n=12, λ=1 forests (worst over 25 seeds)",
-        &["ε", "bound max{1+ε,1}", "worst ratio", "mean ratio"],
-    );
-    for &eps in &eps_sweep {
-        let mut rng = Rng::new(3000);
-        let mut ratios = Vec::new();
-        for _ in 0..25 {
-            let g = lambda_arboric(12, 1, &mut rng);
-            let opt = exact_cost(&g);
-            let c = alg4(&g, 1, eps, |sub| solve_exact(sub).0);
-            let got = cost(&g, &c).total();
-            if opt > 0 {
-                ratios.push(got as f64 / opt as f64);
-            } else {
-                assert_eq!(got, 0, "zero-opt instance must stay zero");
-            }
-        }
-        let worst = ratios.iter().copied().fold(0.0, f64::max);
-        let bound = (1.0 + eps).max(1.0);
-        assert!(worst <= bound + 1e-9, "Theorem 26 violated: {worst} > {bound}");
-        ta.row(&[
-            eps.to_string(),
-            fnum(bound),
-            fnum(worst),
-            fnum(mean(&ratios)),
-        ]);
-    }
-    ta.print();
-
-    // (b) scale ------------------------------------------------------------
-    let mut tb = Table::new(
-        "E2b — Alg4(PIVOT) on BA(n=20000, m=3), λ=3: ratio vs triangle LB",
-        &["ε", "threshold", "filtered |H|", "mean cost", "ratio≤ (vs LB)"],
-    );
-    let mut rng = Rng::new(3100);
-    let g = barabasi_albert(20_000, 3, &mut rng);
-    let lambda = 3usize;
-    let lb = packing_lower_bound(&g).max(1);
-    for &eps in &eps_sweep {
-        let (_, high) = split_high_degree(&g, lambda, eps);
-        let costs: Vec<f64> = (0..5)
-            .map(|_| {
-                let c = alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng));
-                cost(&g, &c).total() as f64
-            })
-            .collect();
-        let m = mean(&costs);
-        tb.row(&[
-            eps.to_string(),
-            fnum(arbocc::algorithms::alg4::degree_threshold(lambda, eps)),
-            high.len().to_string(),
-            fnum(m),
-            fnum(m / lb as f64),
-        ]);
-        report.set(&format!("ba20k_eps_{eps}_ratio_ub"), Json::num(m / lb as f64));
-    }
-    tb.print();
-    println!("\npaper: Theorem 26 (max{{1+ε, α}}-approx after degree filtering) — shape CONFIRMED");
-    let path = write_report("e2_alg4", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e2_alg4");
 }

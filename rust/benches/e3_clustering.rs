@@ -1,117 +1,9 @@
-//! E3 — Corollary 28: 3-approximation (in expectation) in
-//! O(log λ · log³log n) MPC rounds (Model 1) / O(log λ · loglog n)
-//! (Model 2).
+//! E3 — Corollary 28: 3-approximation (in expectation) with rounds
+//! governed by log λ · polyloglog n, on both MPC models. Thin wrapper
+//! over `e3/mpc_pivot_rounds` (`arbocc::bench::scenarios::clustering`).
 //!
-//! Sweeps λ at fixed n and n at fixed λ; for each cell, runs the full
-//! MPC PIVOT pipeline on both models, reporting mean cost ratio vs the
-//! bad-triangle packing LB and simulated round counts, then fits
-//! rounds ~ log λ (the paper's dominant factor).
-
-use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Alg2Params, Alg3Params, Subroutine};
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::triangles::packing_lower_bound;
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::{linear_fit, mean};
-use arbocc::util::table::{fnum, Table};
-
-fn run_cell(
-    n: usize,
-    lambda: usize,
-    seeds: u64,
-) -> (f64, f64, f64) {
-    // Returns (mean ratio ub, mean rounds M1, mean rounds M2).
-    let mut ratios = Vec::new();
-    let mut rounds1 = Vec::new();
-    let mut rounds2 = Vec::new();
-    for s in 0..seeds {
-        let mut rng = Rng::new(4000 + s * 7919 + (n as u64) + ((lambda as u64) << 20));
-        let g = lambda_arboric(n, lambda, &mut rng);
-        let words = (g.n() + 2 * g.m()) as Words;
-        let perm = rng.permutation(g.n());
-        let lb = packing_lower_bound(&g).max(1);
-
-        let mut sim1 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-        let run1 = mpc_pivot(
-            &g,
-            &perm,
-            &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) },
-            &mut sim1,
-        );
-        ratios.push(cost(&g, &run1.clustering).total() as f64 / lb as f64);
-        rounds1.push(sim1.n_rounds() as f64);
-
-        let mut sim2 = MpcSimulator::new(MpcConfig::model2(g.n(), words, 0.5));
-        let run2 = mpc_pivot(
-            &g,
-            &perm,
-            &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg3(Alg3Params::default()) },
-            &mut sim2,
-        );
-        // Same π ⇒ identical clustering on both models.
-        assert_eq!(
-            run1.clustering.normalize(),
-            run2.clustering.normalize(),
-            "M1 and M2 pipelines must agree"
-        );
-        rounds2.push(sim2.n_rounds() as f64);
-    }
-    (mean(&ratios), mean(&rounds1), mean(&rounds2))
-}
+//!     cargo bench --bench e3_clustering [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-
-    // λ sweep at fixed n.
-    let n = 20_000;
-    let lambdas = [1usize, 2, 4, 8, 16];
-    let mut t1 = Table::new(
-        &format!("E3a — MPC PIVOT, n={n}, λ sweep (3 seeds each)"),
-        &["λ", "ratio≤ (vs LB)", "rounds M1", "rounds M2"],
-    );
-    let mut log_lams = Vec::new();
-    let mut r1s = Vec::new();
-    for &lambda in &lambdas {
-        let (ratio, r1, r2) = run_cell(n, lambda, 3);
-        t1.row(&[lambda.to_string(), fnum(ratio), fnum(r1), fnum(r2)]);
-        log_lams.push((lambda.max(2) as f64).log2());
-        r1s.push(r1);
-        report.set(&format!("lambda_{lambda}_ratio"), Json::num(ratio));
-        report.set(&format!("lambda_{lambda}_rounds_m1"), Json::num(r1));
-        report.set(&format!("lambda_{lambda}_rounds_m2"), Json::num(r2));
-    }
-    t1.print();
-    let (_, slope, r2fit) = linear_fit(&log_lams, &r1s);
-    println!(
-        "rounds(M1) vs log2 λ: slope {:.1} rounds per doubling of λ (r²={:.3}) — the paper's log λ factor\n",
-        slope, r2fit
-    );
-    report.set("rounds_vs_loglambda_slope", Json::num(slope));
-
-    // n sweep at fixed λ.
-    let lambda = 4usize;
-    let mut t2 = Table::new(
-        &format!("E3b — MPC PIVOT, λ={lambda}, n sweep (3 seeds each)"),
-        &["n", "ratio≤ (vs LB)", "rounds M1", "rounds M2", "loglog n"],
-    );
-    for &n in &[2_000usize, 8_000, 32_000, 128_000] {
-        let (ratio, r1, r2) = run_cell(n, lambda, 3);
-        t2.row(&[
-            n.to_string(),
-            fnum(ratio),
-            fnum(r1),
-            fnum(r2),
-            fnum((n as f64).log2().log2()),
-        ]);
-        report.set(&format!("n_{n}_rounds_m1"), Json::num(r1));
-        assert!(ratio <= 3.5, "ratio upper bound should stay near/below 3 (got {ratio})");
-    }
-    t2.print();
-    println!("\npaper: Corollary 28 (3-approx in expectation; rounds grow with log λ, only");
-    println!("polyloglog with n) — shape CONFIRMED (ratio column is an UPPER bound on truth)");
-    let path = write_report("e3_clustering", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e3_clustering");
 }

@@ -1,146 +1,11 @@
-//! E4 — Theorem 24: randomized greedy MIS in O(log Δ · log³log n) rounds
-//! (Model 1) / O(log Δ · loglog n) (Model 2), vs the O(log n) direct
-//! simulation.
+//! E4 — Theorem 24: randomized greedy MIS round counts (Δ and n sweeps,
+//! all pipelines verified identical to sequential greedy), plus the
+//! sequential-vs-sharded executor wall-clock comparison. Thin wrapper
+//! over `e4/mis_rounds` and `e4/shard_speedup`
+//! (`arbocc::bench::scenarios::mis`).
 //!
-//! Two sweeps on the same permutation per cell, all three pipelines
-//! verified to produce the identical MIS:
-//!   (a) Δ sweep at fixed n (Barabási–Albert attach parameter);
-//!   (b) n sweep at fixed λ — direct grows with log n, Alg1+Alg3 should
-//!       grow only in loglog n.
-
-use arbocc::algorithms::greedy_mis::greedy_mis;
-use arbocc::algorithms::mpc_mis::{
-    alg1_greedy_mis, direct_simulation_mis, Alg1Params, Alg2Params, Alg3Params, Subroutine,
-};
-use arbocc::graph::generators::{barabasi_albert, lambda_arboric};
-use arbocc::graph::Graph;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::{fnum, Table};
-use arbocc::util::timer::Timer;
-
-fn run_all(g: &Graph, seed: u64) -> (usize, usize, usize) {
-    let mut rng = Rng::new(seed);
-    let perm = rng.permutation(g.n());
-    let words = (g.n() + 2 * g.m()) as Words;
-    let reference = greedy_mis(g, &perm);
-
-    let mut s_d = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-    let direct = direct_simulation_mis(g, &perm, &mut s_d);
-    let mut s_2 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-    let a2 = alg1_greedy_mis(
-        g,
-        &perm,
-        &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) },
-        &mut s_2,
-    );
-    let mut s_3 = MpcSimulator::new(MpcConfig::model2(g.n(), words, 0.5));
-    let a3 = alg1_greedy_mis(
-        g,
-        &perm,
-        &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg3(Alg3Params::default()) },
-        &mut s_3,
-    );
-    assert_eq!(direct, reference);
-    assert_eq!(a2.in_mis, reference);
-    assert_eq!(a3.in_mis, reference);
-    (s_d.n_rounds(), s_2.n_rounds(), s_3.n_rounds())
-}
+//!     cargo bench --bench e4_mis_rounds [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-
-    // (a) Δ sweep.
-    let n = 30_000;
-    let mut ta = Table::new(
-        &format!("E4a — greedy MIS rounds, n={n}, Δ sweep via BA attach"),
-        &["attach", "Δ", "direct (M1)", "Alg1+Alg2 (M1)", "Alg1+Alg3 (M2)"],
-    );
-    for &attach in &[1usize, 2, 4, 8, 16] {
-        let mut rng = Rng::new(5000 + attach as u64);
-        let g = barabasi_albert(n, attach, &mut rng);
-        let (d, a2, a3) = run_all(&g, 5100 + attach as u64);
-        ta.row(&[
-            attach.to_string(),
-            g.max_degree().to_string(),
-            d.to_string(),
-            a2.to_string(),
-            a3.to_string(),
-        ]);
-        report.set(&format!("attach_{attach}_direct"), Json::num(d as f64));
-        report.set(&format!("attach_{attach}_alg2"), Json::num(a2 as f64));
-        report.set(&format!("attach_{attach}_alg3"), Json::num(a3 as f64));
-    }
-    ta.print();
-
-    // (b) n sweep.
-    let lambda = 3usize;
-    let mut tb = Table::new(
-        &format!("E4b — greedy MIS rounds, λ={lambda}, n sweep"),
-        &["n", "log2 n", "direct (M1)", "Alg1+Alg2 (M1)", "Alg1+Alg3 (M2)"],
-    );
-    let mut ns = Vec::new();
-    let mut directs = Vec::new();
-    let mut alg3s = Vec::new();
-    for &n in &[2_000usize, 8_000, 32_000, 128_000] {
-        let mut rng = Rng::new(5200 + n as u64);
-        let g = lambda_arboric(n, lambda, &mut rng);
-        let (d, a2, a3) = run_all(&g, 5300 + n as u64);
-        tb.row(&[
-            n.to_string(),
-            fnum((n as f64).log2()),
-            d.to_string(),
-            a2.to_string(),
-            a3.to_string(),
-        ]);
-        ns.push((n as f64).log2());
-        directs.push(d as f64);
-        alg3s.push(a3 as f64);
-        report.set(&format!("n_{n}_direct"), Json::num(d as f64));
-        report.set(&format!("n_{n}_alg3"), Json::num(a3 as f64));
-    }
-    tb.print();
-    let d_growth = directs.last().unwrap() / directs.first().unwrap();
-    let a3_growth = alg3s.last().unwrap() / alg3s.first().unwrap();
-    println!(
-        "\ngrowth 2k→128k: direct ×{:.2} (tracks log n), Alg1+Alg3 ×{:.2} (should be flatter)",
-        d_growth, a3_growth
-    );
-    report.set("direct_growth", Json::num(d_growth));
-    report.set("alg3_growth", Json::num(a3_growth));
-
-    // (c) executor comparison: the same Alg1+Alg2 cell, sequential (one
-    // shard) vs machine-sharded across the hardware threads. Round counts
-    // and the MIS are identical by construction; wall-clock is not.
-    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let n_big = 128_000usize;
-    let mut rng = Rng::new(5999);
-    let g = lambda_arboric(n_big, lambda, &mut rng);
-    let perm = rng.permutation(g.n());
-    let words = (g.n() + 2 * g.m()) as Words;
-    let mut cell = |n_shards: usize| -> (usize, Vec<bool>, f64) {
-        let mut sim =
-            MpcSimulator::lenient_sharded(MpcConfig::model1(g.n(), words, 0.5), n_shards);
-        let t = Timer::start();
-        let run = alg1_greedy_mis(&g, &perm, &Alg1Params::default(), &mut sim);
-        (sim.n_rounds(), run.in_mis, t.elapsed_s())
-    };
-    let (rounds_seq, mis_seq, secs_seq) = cell(1);
-    let (rounds_par, mis_par, secs_par) = cell(shards);
-    assert_eq!(rounds_seq, rounds_par, "sharding must not change round counts");
-    assert_eq!(mis_seq, mis_par, "sharding must not change the MIS");
-    println!(
-        "\nE4c — executor: n={n_big}, {rounds_seq} rounds; sequential {:.2}s vs {shards}-shard {:.2}s ⇒ speedup ×{}",
-        secs_seq,
-        secs_par,
-        fnum(secs_seq / secs_par.max(1e-9))
-    );
-    report.set("shard_count", Json::num(shards as f64));
-    report.set("shard_speedup", Json::num(secs_seq / secs_par.max(1e-9)));
-
-    println!("paper: Theorem 24 — exact simulation with Δ-dominated round counts — CONFIRMED");
-    let path = write_report("e4_mis_rounds", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e4_mis_rounds");
 }

@@ -1,76 +1,10 @@
 //! E5 — Lemma 18: connected components of Algorithm 2's chunk graphs are
-//! O(log n) w.h.p.
+//! O(log n) under subcritical sampling (with a supercritical contrast
+//! column). Thin wrapper over `e5/chunk_components`
+//! (`arbocc::bench::scenarios::mis`).
 //!
-//! Runs Alg1+Alg2 over an n sweep, collecting the maximum chunk-graph
-//! component size observed anywhere in the run, and compares against
-//! c·log₂ n.  The subcritical chunk sampling (divisor > 2) is what keeps
-//! components logarithmic; the bench also shows a *supercritical* divisor
-//! for contrast (components blow up — the constants matter).
-
-use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::{fnum, Table};
-
-fn max_component(n: usize, lambda: usize, params: &Alg2Params, seed: u64) -> usize {
-    let mut rng = Rng::new(seed);
-    let g = lambda_arboric(n, lambda, &mut rng);
-    let perm = rng.permutation(n);
-    let words = (g.n() + 2 * g.m()) as Words;
-    // Lenient simulator: the supercritical contrast is *expected* to blow
-    // memory budgets — that's the point being demonstrated.
-    let mut sim = MpcSimulator::lenient(MpcConfig::model1(n, words, 0.5));
-    let mut blocked = vec![false; n];
-    let mut in_mis = vec![false; n];
-    let stats = alg2_process(&g, &perm, &mut blocked, &mut in_mis, &mut sim, params);
-    stats.chunk_max_components.into_iter().max().unwrap_or(0)
-}
+//!     cargo bench --bench e5_components [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-    let lambda = 4usize;
-    let mut table = Table::new(
-        &format!("E5 — Lemma 18: max chunk-graph component, λ={lambda} (3 seeds, worst)"),
-        &["n", "log2 n", "subcritical (div=8)", "paper (div=100)", "supercritical (div=1.5)"],
-    );
-    for &n in &[4_000usize, 16_000, 64_000, 256_000] {
-        let worst = |params: &Alg2Params| {
-            (0..3)
-                .map(|s| max_component(n, lambda, params, 6000 + s * 31 + n as u64))
-                .max()
-                .unwrap()
-        };
-        let sub = worst(&Alg2Params::default());
-        let faithful = worst(&Alg2Params::faithful());
-        let sup = worst(&Alg2Params { divisor: 1.5, iters_factor: 4.0 });
-        let log2n = (n as f64).log2();
-        table.row(&[
-            n.to_string(),
-            fnum(log2n),
-            sub.to_string(),
-            faithful.to_string(),
-            sup.to_string(),
-        ]);
-        report.set(&format!("n_{n}_subcritical"), Json::num(sub as f64));
-        report.set(&format!("n_{n}_faithful"), Json::num(faithful as f64));
-        report.set(&format!("n_{n}_supercritical"), Json::num(sup as f64));
-        // Lemma 18's shape: O(log n) with the paper-style constants.
-        assert!(
-            (sub as f64) <= 6.0 * log2n,
-            "subcritical component {sub} exceeds 6·log2(n)={:.0}",
-            6.0 * log2n
-        );
-        assert!(
-            (faithful as f64) <= 4.0 * log2n,
-            "faithful component {faithful} exceeds 4·log2(n)"
-        );
-    }
-    table.print();
-    println!("\npaper: Lemma 18 (components O(log n) under subcritical chunk sampling) — CONFIRMED");
-    println!("the supercritical column shows why the divisor constant is load-bearing.");
-    let path = write_report("e5_components", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e5_components");
 }

@@ -1,62 +1,9 @@
-//! E6 — Lemma 22: after greedily processing a prefix of t vertices, the
-//! residual graph's max degree is O(n log n / t) w.h.p.
+//! E6 — Lemma 22: after a greedy prefix of t vertices, the residual max
+//! degree is O(n log n / t). Thin wrapper over `e6/degree_decay`
+//! (`arbocc::bench::scenarios::mis`).
 //!
-//! Runs sequential greedy MIS over a random π, pausing at checkpoints to
-//! measure the max degree among live (unprocessed, unblocked) vertices,
-//! and compares against the lemma's 10·n·ln(n)/t curve (the constant the
-//! appendix proof uses).
-
-use arbocc::algorithms::greedy_mis::greedy_mis_on_subset;
-use arbocc::graph::generators::barabasi_albert;
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::{fnum, Table};
+//!     cargo bench --bench e6_degree_decay [-- --tier smoke]
 
 fn main() {
-    let n = 100_000;
-    let mut rng = Rng::new(7000);
-    let g = barabasi_albert(n, 4, &mut rng);
-    let perm = rng.permutation(n);
-
-    let mut table = Table::new(
-        &format!("E6 — Lemma 22 degree decay, BA(n={n}, m=4), Δ₀={}", g.max_degree()),
-        &["t (prefix)", "measured max residual deg", "bound 10·n·ln(n)/t", "within"],
-    );
-    let mut report = Json::obj();
-
-    let checkpoints =
-        [n / 64, n / 32, n / 16, n / 8, n / 4, n / 2, (3 * n) / 4];
-    let mut blocked = vec![false; n];
-    let mut in_mis = vec![false; n];
-    let mut pos = 0usize;
-    for &t in &checkpoints {
-        greedy_mis_on_subset(&g, &perm[pos..t], &mut blocked, &mut in_mis);
-        pos = t;
-        // Residual: unprocessed and unblocked.
-        let mut live = vec![false; n];
-        for &v in &perm[pos..] {
-            if !blocked[v as usize] {
-                live[v as usize] = true;
-            }
-        }
-        let max_deg = (0..n as u32)
-            .filter(|&v| live[v as usize])
-            .map(|v| g.neighbors(v).iter().filter(|&&u| live[u as usize]).count())
-            .max()
-            .unwrap_or(0);
-        let bound = 10.0 * n as f64 * (n as f64).ln() / t as f64;
-        table.row(&[
-            t.to_string(),
-            max_deg.to_string(),
-            fnum(bound),
-            (if (max_deg as f64) <= bound { "yes" } else { "NO" }).to_string(),
-        ]);
-        assert!((max_deg as f64) <= bound, "Lemma 22 bound violated at t={t}");
-        report.set(&format!("t_{t}_max_degree"), Json::num(max_deg as f64));
-        report.set(&format!("t_{t}_bound"), Json::num(bound));
-    }
-    table.print();
-    println!("\npaper: Lemma 22 (residual degree O(n log n / t)) — CONFIRMED");
-    let path = write_report("e6_degree_decay", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e6_degree_decay");
 }

@@ -1,62 +1,9 @@
 //! E7 — Fischer–Noever Theorem 5: the dependency structure of randomized
-//! greedy MIS has length O(log n) w.h.p.
+//! greedy MIS has length O(log n). Thin wrapper over
+//! `e7/dependency_length` (`arbocc::bench::scenarios::mis`).
 //!
-//! Two measured series over an n sweep (5 seeds each):
-//!  * parallel fixpoint iterations (the BFS-depth the O(log n) direct
-//!    simulation pays);
-//!  * the longest dependency path (the quantity Fischer–Noever bound).
-//! Both are fitted against log₂ n.
-
-use arbocc::algorithms::greedy_mis::{longest_dependency_path, parallel_greedy_rounds};
-use arbocc::graph::generators::lambda_arboric;
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::{linear_fit, mean};
-use arbocc::util::table::{fnum, Table};
+//!     cargo bench --bench e7_dependency [-- --tier smoke]
 
 fn main() {
-    let lambda = 3usize;
-    let mut table = Table::new(
-        &format!("E7 — Fischer–Noever dependency lengths, arboric-{lambda} (5 seeds, mean)"),
-        &["n", "log2 n", "fixpoint iters", "dependency path", "iters/log2 n"],
-    );
-    let mut report = Json::obj();
-    let mut logs = Vec::new();
-    let mut iters_series = Vec::new();
-    for &n in &[1_000usize, 4_000, 16_000, 64_000, 256_000] {
-        let mut iters_v = Vec::new();
-        let mut dep_v = Vec::new();
-        for s in 0..5u64 {
-            let mut rng = Rng::new(8000 + s * 97 + n as u64);
-            let g = lambda_arboric(n, lambda, &mut rng);
-            let perm = rng.permutation(n);
-            let (_, iters) = parallel_greedy_rounds(&g, &perm);
-            iters_v.push(iters as f64);
-            dep_v.push(longest_dependency_path(&g, &perm) as f64);
-        }
-        let log2n = (n as f64).log2();
-        table.row(&[
-            n.to_string(),
-            fnum(log2n),
-            fnum(mean(&iters_v)),
-            fnum(mean(&dep_v)),
-            fnum(mean(&iters_v) / log2n),
-        ]);
-        logs.push(log2n);
-        iters_series.push(mean(&iters_v));
-        report.set(&format!("n_{n}_iters"), Json::num(mean(&iters_v)));
-        report.set(&format!("n_{n}_dependency"), Json::num(mean(&dep_v)));
-    }
-    table.print();
-    let (_, slope, r2) = linear_fit(&logs, &iters_series);
-    println!(
-        "\nfixpoint iters vs log2 n: slope {:.2} per log2 n (r²={:.3}) — linear in log n, as",
-        slope, r2
-    );
-    println!("Theorem 5 predicts (the iters/log2n column is flat).");
-    report.set("iters_vs_log2n_slope", Json::num(slope));
-    report.set("fit_r2", Json::num(r2));
-    assert!(r2 > 0.8, "iterations should correlate strongly with log n (r²={r2})");
-    let path = write_report("e7_dependency", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e7_dependency");
 }

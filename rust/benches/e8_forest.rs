@@ -1,102 +1,10 @@
 //! E8 — the λ=1 specialization: Corollary 27 (maximum matching ⇒ OPT),
-//! Lemma 29 (α-approx matching ⇒ α-approx clustering), Remark 30 (P4
-//! tightness), Corollary 31 (round counts of the three pipelines).
-
-use arbocc::algorithms::forest::{clustering_from_matching, matching_clustering_cost};
-use arbocc::algorithms::matching::{
-    approx_matching, is_maximal, maximal_matching, maximum_matching_forest,
-};
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::exact::exact_cost;
-use arbocc::graph::generators::{path, random_forest};
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::stats::mean;
-use arbocc::util::table::{fnum, Table};
+//! Lemma 29, Remark 30 (P4 tightness), Corollary 31 pipelines. Thin
+//! wrapper over `e8/forest_pipelines`
+//! (`arbocc::bench::scenarios::pipelines`).
+//!
+//!     cargo bench --bench e8_forest [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-
-    // Corollary 27: exact equality on solvable sizes.
-    let mut rng = Rng::new(9000);
-    let trials = 50;
-    let mut equal = 0;
-    for _ in 0..trials {
-        let g = random_forest(12, 0.85, &mut rng);
-        let m = maximum_matching_forest(&g);
-        let c = clustering_from_matching(g.n(), &m);
-        if cost(&g, &c).total() == exact_cost(&g) {
-            equal += 1;
-        }
-    }
-    println!("E8a — Corollary 27: maximum-matching clustering = OPT on {equal}/{trials} random forests (n=12)");
-    assert_eq!(equal, trials);
-    report.set("corollary27_equal", Json::num(equal as f64));
-
-    // Corollary 31 pipelines across sizes.
-    let mut table = Table::new(
-        "E8b — forest pipelines (3 seeds, mean): cost ratio vs OPT and rounds",
-        &["n", "maximal ratio", "maximal rounds", "(1+0.5) ratio", "(1+0.5) rounds", "(1+0.25) ratio"],
-    );
-    for &n in &[5_000usize, 20_000, 80_000] {
-        let mut maximal_ratio = Vec::new();
-        let mut maximal_rounds = Vec::new();
-        let mut a05_ratio = Vec::new();
-        let mut a05_rounds = Vec::new();
-        let mut a025_ratio = Vec::new();
-        for s in 0..3u64 {
-            let mut rng = Rng::new(9100 + s * 13 + n as u64);
-            let g = random_forest(n, 0.9, &mut rng);
-            let opt = matching_clustering_cost(g.m(), maximum_matching_forest(&g).len()).max(1);
-            let words = (g.n() + 2 * g.m()) as Words;
-
-            let mut sim = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-            let mm = maximal_matching(&g, &mut rng, &mut sim, 64);
-            assert!(is_maximal(&g, &mm.matching));
-            maximal_ratio
-                .push(matching_clustering_cost(g.m(), mm.matching.len()) as f64 / opt as f64);
-            maximal_rounds.push(sim.n_rounds() as f64);
-
-            let mut sim2 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-            let a = approx_matching(&g, mm.matching.clone(), 0.5, &mut sim2);
-            a05_ratio.push(matching_clustering_cost(g.m(), a.matching.len()) as f64 / opt as f64);
-            a05_rounds.push(sim2.n_rounds() as f64);
-
-            let mut sim3 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
-            let a2 = approx_matching(&g, mm.matching.clone(), 0.25, &mut sim3);
-            a025_ratio
-                .push(matching_clustering_cost(g.m(), a2.matching.len()) as f64 / opt as f64);
-        }
-        table.row(&[
-            n.to_string(),
-            fnum(mean(&maximal_ratio)),
-            fnum(mean(&maximal_rounds)),
-            fnum(mean(&a05_ratio)),
-            fnum(mean(&a05_rounds)),
-            fnum(mean(&a025_ratio)),
-        ]);
-        // Guarantees: maximal ≤ 2×, (1+ε) ≤ (1+ε)×.
-        assert!(mean(&maximal_ratio) <= 2.0 + 1e-9);
-        assert!(mean(&a05_ratio) <= 1.5 + 1e-9);
-        assert!(mean(&a025_ratio) <= 1.25 + 1e-9);
-        report.set(&format!("n_{n}_maximal_ratio"), Json::num(mean(&maximal_ratio)));
-        report.set(&format!("n_{n}_eps05_ratio"), Json::num(mean(&a05_ratio)));
-    }
-    table.print();
-
-    // Remark 30: P4 tightness of the maximal-matching bound.
-    let p4 = path(4);
-    let worst = matching_clustering_cost(p4.m(), 1); // middle-edge maximal
-    let best = matching_clustering_cost(p4.m(), maximum_matching_forest(&p4).len());
-    println!(
-        "\nE8c — Remark 30 (P4): worst maximal cost {worst} vs OPT {best} ⇒ ratio {} (tight at 2)",
-        fnum(worst as f64 / best as f64)
-    );
-    assert_eq!(worst / best.max(1), 2);
-
-    println!("\npaper: Corollaries 27/29/31 + Remark 30 — CONFIRMED");
-    let path_ = write_report("e8_forest", &report).unwrap();
-    println!("report: {}", path_.display());
+    arbocc::bench::suite::run_bin("e8_forest");
 }

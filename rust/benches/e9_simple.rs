@@ -1,80 +1,9 @@
-//! E9 — Corollary 32: O(λ²)-approximation (worst case) in O(1) MPC
-//! rounds, with Remark 33's barbell tightness.
+//! E9 — Corollary 32: O(λ²)-approximation in O(1) MPC rounds, with
+//! Remark 33's barbell tightness. Thin wrapper over
+//! `e9/simple_clustering` (`arbocc::bench::scenarios::clustering`).
 //!
-//! (a) clique unions: cost 0 at constant rounds;
-//! (b) barbell K_λ–K_λ: measured ratio tracks λ² (tightness);
-//! (c) round counts flat across three orders of magnitude of n.
-
-use arbocc::algorithms::simple::simple_clustering;
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::exact::exact_cost;
-use arbocc::graph::generators::{barbell, disjoint_cliques, lambda_arboric};
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::{fnum, Table};
-
-fn sim_for(n: usize, m: usize) -> MpcSimulator {
-    MpcSimulator::new(MpcConfig::model1(n.max(2), (n + 2 * m).max(4) as Words, 0.5))
-}
+//!     cargo bench --bench e9_simple [-- --tier smoke]
 
 fn main() {
-    let mut report = Json::obj();
-
-    // (a) clique unions are solved exactly.
-    let g = disjoint_cliques(50, 6);
-    let mut s = sim_for(g.n(), g.m());
-    let run = simple_clustering(&g, 3, &mut s);
-    println!(
-        "E9a — 50×K6: cost {} (OPT 0), {} clique clusters, {} rounds",
-        cost(&g, &run.clustering).total(),
-        run.clique_clusters,
-        run.rounds
-    );
-    assert_eq!(cost(&g, &run.clustering).total(), 0);
-
-    // (b) barbell tightness (Remark 33).
-    let mut tb = Table::new(
-        "E9b — Remark 33 barbell K_λ–K_λ: simple vs OPT",
-        &["λ", "simple cost", "OPT", "ratio", "λ²"],
-    );
-    for &lambda in &[3usize, 4, 5, 6] {
-        let g = barbell(lambda);
-        let mut s = sim_for(g.n(), g.m());
-        let run = simple_clustering(&g, lambda, &mut s);
-        let got = cost(&g, &run.clustering).total();
-        let opt = exact_cost(&g);
-        tb.row(&[
-            lambda.to_string(),
-            got.to_string(),
-            opt.to_string(),
-            fnum(got as f64 / opt.max(1) as f64),
-            (lambda * lambda).to_string(),
-        ]);
-        assert_eq!(opt, 1);
-        assert!(got as f64 >= (lambda * (lambda - 1)) as f64, "tightness shape");
-        report.set(&format!("barbell_{lambda}_ratio"), Json::num(got as f64 / opt as f64));
-    }
-    tb.print();
-
-    // (c) O(1) rounds across n.
-    let mut tc = Table::new("E9c — round counts vs n (must be flat)", &["n", "rounds"]);
-    let mut rounds_seen = Vec::new();
-    for &n in &[1_000usize, 10_000, 100_000] {
-        let mut rng = Rng::new(9900 + n as u64);
-        let g = lambda_arboric(n, 2, &mut rng);
-        let mut s = sim_for(g.n(), g.m());
-        let run = simple_clustering(&g, 2, &mut s);
-        tc.row(&[n.to_string(), run.rounds.to_string()]);
-        rounds_seen.push(run.rounds);
-        report.set(&format!("n_{n}_rounds"), Json::num(run.rounds as f64));
-    }
-    tc.print();
-    let spread = rounds_seen.iter().max().unwrap() - rounds_seen.iter().min().unwrap();
-    assert!(spread <= 2, "rounds must be O(1): saw spread {spread}");
-
-    println!("\npaper: Corollary 32 (O(λ²) worst case, O(1) rounds) + Remark 33 tightness — CONFIRMED");
-    let path = write_report("e9_simple", &report).unwrap();
-    println!("report: {}", path.display());
+    arbocc::bench::suite::run_bin("e9_simple");
 }

@@ -1,189 +1,11 @@
-//! §Perf — hot-path micro-benchmarks (the criterion-style suite).
+//! §Perf — hot-path micro-benchmarks P1–P8 (sparse cost, block kernels,
+//! batched scoring, greedy MIS, triangles, router, best-of-K, shard
+//! speedups). Thin wrapper over the `perf/*` scenarios registered in
+//! `arbocc::bench::scenarios::perf`; run the whole lab with
+//! `arbocc bench` or just this bin's slice via
 //!
-//! P1  sparse cost evaluation (edges/s)            — L3 target ≥ 100 M/s
-//! P2  dense native block cost vs PJRT block cost  — kernel parity
-//! P3  batched PJRT scorer vs one-at-a-time        — the Remark 14 win
-//! P4  greedy MIS simulation (vertices/s)          — L3 target ≥ 10 M/s
-//! P5  bad-triangle counting + packing
-//! P6  MPC router (messages/s)
-//! P7  end-to-end best-of-K through the coordinator
-//! P8  sharded MPC executor: sequential vs multi-threaded MIS pipeline,
-//!     and best-of-K at 1 vs N workers — the measured shard speedups
-//!
-//! Results are recorded in EXPERIMENTS.md §Perf with the iteration log.
-
-use std::sync::Arc;
-
-use arbocc::algorithms::greedy_mis::greedy_mis;
-use arbocc::algorithms::mpc_mis::{alg1_greedy_mis, Alg1Params};
-use arbocc::algorithms::pivot::pivot_random;
-use arbocc::bench::harness::{bench_with, quick, throughput};
-use arbocc::cluster::cost::cost;
-use arbocc::cluster::triangles::{count_bad_triangles, greedy_packing};
-use arbocc::coordinator::{best_of_k, TrialSpec};
-use arbocc::graph::generators::{barabasi_albert, lambda_arboric};
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::router::Router;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
-use arbocc::runtime::blocks::{block_tensors, plan_blocks, whole_graph_onehot, whole_graph_tensors};
-use arbocc::runtime::fallback::dense_cost_block;
-use arbocc::runtime::{BackendKind, CostEngine};
-use arbocc::util::json::{write_report, Json};
-use arbocc::util::rng::Rng;
-use arbocc::util::table::fnum;
+//!     cargo bench --bench perf_hotpaths [-- --tier smoke]
 
 fn main() {
-    let cfg = quick();
-    let mut report = Json::obj();
-    println!("== §Perf hot paths ==\n");
-
-    // P1: sparse cost.
-    let mut rng = Rng::new(13_000);
-    let g = lambda_arboric(200_000, 4, &mut rng);
-    let c = pivot_random(&g, &mut rng);
-    let m = bench_with("P1 sparse cost (n=200k, m≈800k)", &cfg, || {
-        std::hint::black_box(cost(&g, &c));
-    });
-    let eps = throughput(&m, g.m() as f64);
-    println!("{m}\n    ⇒ {:.1} M edges/s", eps / 1e6);
-    report.set("p1_edges_per_s", Json::num(eps));
-
-    // P2: dense block cost, native vs PJRT.
-    let gsmall = lambda_arboric(240, 3, &mut rng);
-    let csmall = pivot_random(&gsmall, &mut rng);
-    let plan = plan_blocks(&gsmall, &csmall).unwrap();
-    let (adj, onehot, valid) = block_tensors(&gsmall, &csmall, &plan.blocks[0]);
-    let m = bench_with("P2 dense block cost (native)", &cfg, || {
-        std::hint::black_box(dense_cost_block(&adj, &onehot, &valid));
-    });
-    println!("{m}");
-    report.set("p2_native_block_s", Json::num(m.median_s));
-    let engine = CostEngine::auto_default();
-    if engine.kind() == BackendKind::Pjrt {
-        let m = bench_with("P2 dense block cost (PJRT)", &cfg, || {
-            std::hint::black_box(engine.cost(&gsmall, &csmall).unwrap());
-        });
-        println!("{m}");
-        report.set("p2_pjrt_block_s", Json::num(m.median_s));
-
-        // P3: batched vs single scoring through PJRT.
-        let candidates: Vec<_> = (0..8).map(|_| pivot_random(&gsmall, &mut rng)).collect();
-        let mb = bench_with("P3 PJRT batched scorer (8 cand.)", &cfg, || {
-            std::hint::black_box(engine.cost_batch_single_block(&gsmall, &candidates).unwrap());
-        });
-        println!("{mb}");
-        let (wadj, wvalid) = whole_graph_tensors(&gsmall);
-        let ohs: Vec<Vec<f32>> =
-            candidates.iter().map(|c| whole_graph_onehot(&gsmall, c)).collect();
-        if let CostEngine::Pjrt(pj) = &engine {
-            let ms = bench_with("P3 PJRT one-at-a-time (8 cand.)", &cfg, || {
-                for oh in &ohs {
-                    std::hint::black_box(pj.cost_eval(&wadj, oh, &wvalid).unwrap());
-                }
-            });
-            println!("{ms}");
-            println!(
-                "    ⇒ batching speedup ×{}",
-                fnum(ms.median_s / mb.median_s)
-            );
-            report.set("p3_batch_speedup", Json::num(ms.median_s / mb.median_s));
-        }
-    } else {
-        println!("P2/P3 PJRT columns skipped (run `make artifacts` first)");
-    }
-
-    // P4: greedy MIS.
-    let gm = barabasi_albert(500_000, 3, &mut rng);
-    let perm = rng.permutation(gm.n());
-    let m = bench_with("P4 greedy MIS (n=500k)", &cfg, || {
-        std::hint::black_box(greedy_mis(&gm, &perm));
-    });
-    let vps = throughput(&m, gm.n() as f64);
-    println!("{m}\n    ⇒ {:.1} M vertices/s", vps / 1e6);
-    report.set("p4_vertices_per_s", Json::num(vps));
-
-    // P5: triangles.
-    let gt = lambda_arboric(50_000, 4, &mut rng);
-    let m = bench_with("P5 bad-triangle count (n=50k)", &cfg, || {
-        std::hint::black_box(count_bad_triangles(&gt));
-    });
-    println!("{m}");
-    report.set("p5_count_s", Json::num(m.median_s));
-    let m = bench_with("P5 greedy packing (n=50k)", &cfg, || {
-        std::hint::black_box(greedy_packing(&gt));
-    });
-    println!("{m}");
-    report.set("p5_packing_s", Json::num(m.median_s));
-
-    // P6: router.
-    let machines = 64;
-    let router = Router::new(machines);
-    let m = bench_with("P6 router round (64 machines × 64 msgs)", &cfg, || {
-        let mut sim = MpcSimulator::new(MpcConfig::model1(100_000, 1_000_000, 0.6));
-        let out: Vec<Vec<(usize, Vec<u64>)>> = (0..machines)
-            .map(|i| (0..machines).map(|j| (j, vec![i as u64])).collect())
-            .collect();
-        std::hint::black_box(router.step(&mut sim, "bench", out));
-    });
-    let msgs = (machines * machines) as f64;
-    println!("{m}\n    ⇒ {:.2} µs/message", m.median_s * 1e6 / msgs);
-    report.set("p6_us_per_message", Json::num(m.median_s * 1e6 / msgs));
-
-    // P7: end-to-end best-of-K (coordinator + engine).
-    let gbig = Arc::new(lambda_arboric(50_000, 4, &mut rng));
-    let engine2 = CostEngine::native();
-    let m = bench_with("P7 best-of-8 end-to-end (n=50k, native)", &cfg, || {
-        std::hint::black_box(
-            best_of_k(&gbig, &TrialSpec::Pivot, 8, 4, 1, &engine2).unwrap(),
-        );
-    });
-    println!("{m}");
-    report.set("p7_best_of_8_s", Json::num(m.median_s));
-
-    // P8: the sharded executor — same seed, same rounds, N threads.
-    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let gshard = barabasi_albert(60_000, 3, &mut rng);
-    let perm_shard = rng.permutation(gshard.n());
-    let words_shard = (gshard.n() + 2 * gshard.m()) as Words;
-    let mut mis_rounds = [0usize; 2];
-    let mut run_mis = |n_shards: usize, rounds_slot: &mut usize| {
-        let cfg = MpcConfig::model1(gshard.n(), words_shard, 0.5);
-        let mut sim = MpcSimulator::lenient_sharded(cfg, n_shards);
-        std::hint::black_box(alg1_greedy_mis(
-            &gshard,
-            &perm_shard,
-            &Alg1Params::default(),
-            &mut sim,
-        ));
-        *rounds_slot = sim.n_rounds();
-    };
-    let m1 = bench_with("P8 MIS pipeline Alg1+Alg2 (1 shard)", &cfg, || {
-        run_mis(1, &mut mis_rounds[0])
-    });
-    println!("{m1}");
-    let mn = bench_with(&format!("P8 MIS pipeline Alg1+Alg2 ({shards} shards)"), &cfg, || {
-        run_mis(shards, &mut mis_rounds[1])
-    });
-    println!("{mn}");
-    assert_eq!(mis_rounds[0], mis_rounds[1], "sharding must not change round counts");
-    let mis_speedup = m1.median_s / mn.median_s;
-    println!(
-        "    ⇒ MIS pipeline shard speedup ×{} ({} rounds at both shard counts)",
-        fnum(mis_speedup),
-        mis_rounds[0]
-    );
-    report.set("p8_mis_shard_speedup", Json::num(mis_speedup));
-    report.set("p8_shards", Json::num(shards as f64));
-
-    // P8b: best-of-K trials sharded across the same pool.
-    let b1 = bench_with("P8 best-of-8 (1 worker)", &cfg, || {
-        std::hint::black_box(best_of_k(&gbig, &TrialSpec::Pivot, 8, 1, 1, &engine2).unwrap());
-    });
-    println!("{b1}");
-    let bok_speedup = b1.median_s / m.median_s;
-    println!("    ⇒ best-of-K pool speedup ×{} (vs P7 at 4 workers)", fnum(bok_speedup));
-    report.set("p8_bok_pool_speedup", Json::num(bok_speedup));
-
-    let path = write_report("perf_hotpaths", &report).unwrap();
-    println!("\nreport: {}", path.display());
+    arbocc::bench::suite::run_bin("perf_hotpaths");
 }

@@ -1,0 +1,466 @@
+//! Baseline diffing for the perf lab: compare two `BENCH_*.json` suite
+//! results metric-by-metric with noise-aware thresholds, and report
+//! regressions/improvements so `arbocc bench --compare` can gate PRs.
+//!
+//! The threshold per metric is
+//! `max(rel_tolerance·|baseline|, noise_k·max(baseline_mad, current_mad))`
+//! — deterministic metrics (round counts, cost ratios at fixed seeds)
+//! carry zero noise and get the relative floor, while harness timings
+//! carry their measured MAD so a noisy box does not fail the gate.
+
+use std::path::{Path, PathBuf};
+
+use crate::bench::suite::{Direction, SuiteResult, Tier};
+use crate::util::json::parse;
+
+/// Comparison thresholds.
+#[derive(Debug, Clone)]
+pub struct CompareConfig {
+    /// Relative floor on the tolerance, as a fraction of the baseline.
+    pub rel_tolerance: f64,
+    /// Multiplier on the larger of the two MAD noise scales.
+    pub noise_k: f64,
+}
+
+impl Default for CompareConfig {
+    fn default() -> Self {
+        CompareConfig { rel_tolerance: 0.10, noise_k: 4.0 }
+    }
+}
+
+/// Per-metric outcome. Only `Regression` fails the gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Regression,
+    Improvement,
+    WithinNoise,
+    /// `Direction::Info` metric — diffed for the table, never gated.
+    Info,
+    /// Metric (or whole scenario) absent from the baseline.
+    New,
+    /// Metric (or whole scenario) absent from the current run.
+    Missing,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Regression => "REGRESSION",
+            Verdict::Improvement => "improvement",
+            Verdict::WithinNoise => "within noise",
+            Verdict::Info => "info",
+            Verdict::New => "new",
+            Verdict::Missing => "missing",
+        }
+    }
+}
+
+/// One metric's delta between baseline and current run.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    pub scenario: String,
+    pub metric: String,
+    /// NaN when the metric is `New`.
+    pub baseline: f64,
+    /// NaN when the metric is `Missing`.
+    pub current: f64,
+    pub tolerance: f64,
+    pub direction: Direction,
+    pub verdict: Verdict,
+}
+
+impl MetricDelta {
+    /// Relative change in percent; NaN when not comparable.
+    pub fn delta_pct(&self) -> f64 {
+        if !self.baseline.is_finite() || !self.current.is_finite() || self.baseline == 0.0 {
+            return f64::NAN;
+        }
+        100.0 * (self.current - self.baseline) / self.baseline.abs()
+    }
+}
+
+/// The full diff of two suite results.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub baseline_label: String,
+    pub current_label: String,
+    pub deltas: Vec<MetricDelta>,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> Vec<&MetricDelta> {
+        self.deltas.iter().filter(|d| d.verdict == Verdict::Regression).collect()
+    }
+
+    pub fn improvements(&self) -> Vec<&MetricDelta> {
+        self.deltas.iter().filter(|d| d.verdict == Verdict::Improvement).collect()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.deltas.iter().any(|d| d.verdict == Verdict::Regression)
+    }
+}
+
+fn judge(
+    baseline: &crate::bench::suite::Metric,
+    current: &crate::bench::suite::Metric,
+    cfg: &CompareConfig,
+) -> (f64, Verdict) {
+    if current.direction == Direction::Info {
+        return (0.0, Verdict::Info);
+    }
+    let tolerance = (cfg.rel_tolerance * baseline.value.abs())
+        .max(cfg.noise_k * baseline.noise.max(current.noise))
+        .max(1e-12);
+    let diff = current.value - baseline.value;
+    let worse = match current.direction {
+        Direction::Higher => -diff,
+        Direction::Lower => diff,
+        Direction::Info => 0.0,
+    };
+    let verdict = if worse > tolerance {
+        Verdict::Regression
+    } else if worse < -tolerance {
+        Verdict::Improvement
+    } else {
+        Verdict::WithinNoise
+    };
+    (tolerance, verdict)
+}
+
+/// Diff `current` against `baseline`.
+pub fn compare(baseline: &SuiteResult, current: &SuiteResult, cfg: &CompareConfig) -> Comparison {
+    let mut deltas = Vec::new();
+    for cs in &current.scenarios {
+        let bs = baseline.find(&cs.name);
+        for (key, cm) in &cs.metrics {
+            match bs.and_then(|b| b.metrics.get(key)) {
+                None => deltas.push(MetricDelta {
+                    scenario: cs.name.clone(),
+                    metric: key.clone(),
+                    baseline: f64::NAN,
+                    current: cm.value,
+                    tolerance: 0.0,
+                    direction: cm.direction,
+                    verdict: Verdict::New,
+                }),
+                Some(bm) => {
+                    let (tolerance, verdict) = judge(bm, cm, cfg);
+                    deltas.push(MetricDelta {
+                        scenario: cs.name.clone(),
+                        metric: key.clone(),
+                        baseline: bm.value,
+                        current: cm.value,
+                        tolerance,
+                        direction: cm.direction,
+                        verdict,
+                    });
+                }
+            }
+        }
+        // Metrics the baseline had but this run dropped.
+        if let Some(b) = bs {
+            for (key, bm) in &b.metrics {
+                if !cs.metrics.contains_key(key) {
+                    deltas.push(MetricDelta {
+                        scenario: cs.name.clone(),
+                        metric: key.clone(),
+                        baseline: bm.value,
+                        current: f64::NAN,
+                        tolerance: 0.0,
+                        direction: bm.direction,
+                        verdict: Verdict::Missing,
+                    });
+                }
+            }
+        }
+    }
+    // Scenarios the baseline had but this run dropped entirely.
+    for bs in &baseline.scenarios {
+        if current.find(&bs.name).is_none() {
+            for (key, bm) in &bs.metrics {
+                deltas.push(MetricDelta {
+                    scenario: bs.name.clone(),
+                    metric: key.clone(),
+                    baseline: bm.value,
+                    current: f64::NAN,
+                    tolerance: 0.0,
+                    direction: bm.direction,
+                    verdict: Verdict::Missing,
+                });
+            }
+        }
+    }
+    Comparison {
+        baseline_label: baseline.label.clone(),
+        current_label: current.label.clone(),
+        deltas,
+    }
+}
+
+/// Load a `BENCH_*.json` into a [`SuiteResult`].
+pub fn load(path: &Path) -> Result<SuiteResult, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let json = parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    SuiteResult::from_json(&json)
+}
+
+fn same_path(a: &Path, b: &Path) -> bool {
+    match (a.canonicalize(), b.canonicalize()) {
+        (Ok(x), Ok(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+/// Natural-order sort key: digit runs compare numerically, so on an
+/// mtime tie (e.g. a fresh checkout) `BENCH_PR10.json` sorts after
+/// `BENCH_PR9.json` instead of before it.
+fn natural_key(s: &str) -> Vec<(bool, u64, String)> {
+    let mut out = Vec::new();
+    let mut chars = s.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        if c.is_ascii_digit() {
+            let mut n = 0u64;
+            while let Some(d) = chars.peek().and_then(|d| d.to_digit(10)) {
+                n = n.saturating_mul(10).saturating_add(d as u64);
+                chars.next();
+            }
+            out.push((true, n, String::new()));
+        } else {
+            let mut text = String::new();
+            while let Some(&d) = chars.peek() {
+                if d.is_ascii_digit() {
+                    break;
+                }
+                text.push(d);
+                chars.next();
+            }
+            out.push((false, 0, text));
+        }
+    }
+    out
+}
+
+/// The most recent `BENCH_*.json` in `dir` (by modification time, then
+/// natural name order), excluding the file a fresh run just wrote.
+/// Unparseable and partial (`--filter` / single-bin) files never
+/// qualify; when `tier` is given, only baselines recorded at that tier
+/// do — smoke and full runs use ~10× different workload sizes under
+/// the same metric names, so diffing across tiers would produce
+/// spurious verdicts.
+pub fn find_previous_baseline(
+    dir: &Path,
+    exclude: Option<&Path>,
+    tier: Option<Tier>,
+) -> Option<PathBuf> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut candidates: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|s| s.to_str())
+                .map(|s| s.starts_with("BENCH_") && s.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .filter(|p| match exclude {
+            Some(x) => !same_path(p, x),
+            None => true,
+        })
+        .filter(|p| {
+            load(p)
+                .map(|s| !s.partial && tier.map(|t| s.tier == t).unwrap_or(true))
+                .unwrap_or(false)
+        })
+        .collect();
+    candidates.sort_by_key(|p| {
+        let name = p.file_name().and_then(|s| s.to_str()).unwrap_or("").to_string();
+        (std::fs::metadata(p).and_then(|m| m.modified()).ok(), natural_key(&name))
+    });
+    candidates.pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::suite::{Metric, SuiteScenarioResult, Tier};
+    use std::collections::BTreeMap;
+
+    fn suite(label: &str, metrics: &[(&str, f64, f64, Direction)]) -> SuiteResult {
+        let mut map = BTreeMap::new();
+        for (k, value, noise, direction) in metrics {
+            map.insert(
+                k.to_string(),
+                Metric { value: *value, noise: *noise, direction: *direction },
+            );
+        }
+        SuiteResult {
+            label: label.to_string(),
+            tier: Tier::Smoke,
+            partial: false,
+            scenarios: vec![SuiteScenarioResult {
+                name: "demo/scenario".to_string(),
+                bin: "demo".to_string(),
+                wall_s: 1.0,
+                metrics: map,
+            }],
+        }
+    }
+
+    fn verdict_of(cmp: &Comparison, metric: &str) -> Verdict {
+        cmp.deltas.iter().find(|d| d.metric == metric).unwrap().verdict
+    }
+
+    #[test]
+    fn detects_regressions_both_directions() {
+        let old = suite(
+            "old",
+            &[
+                ("throughput", 100.0, 0.0, Direction::Higher),
+                ("latency", 10.0, 0.0, Direction::Lower),
+            ],
+        );
+        let new = suite(
+            "new",
+            &[
+                ("throughput", 50.0, 0.0, Direction::Higher),
+                ("latency", 20.0, 0.0, Direction::Lower),
+            ],
+        );
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        assert_eq!(verdict_of(&cmp, "throughput"), Verdict::Regression);
+        assert_eq!(verdict_of(&cmp, "latency"), Verdict::Regression);
+        assert!(cmp.has_regressions());
+        assert_eq!(cmp.regressions().len(), 2);
+    }
+
+    #[test]
+    fn detects_improvements_and_within_noise() {
+        let old = suite(
+            "old",
+            &[
+                ("throughput", 100.0, 0.0, Direction::Higher),
+                ("latency", 10.0, 0.0, Direction::Lower),
+            ],
+        );
+        let new = suite(
+            "new",
+            &[
+                ("throughput", 104.0, 0.0, Direction::Higher), // +4% < 10% floor
+                ("latency", 5.0, 0.0, Direction::Lower),       // halved
+            ],
+        );
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        assert_eq!(verdict_of(&cmp, "throughput"), Verdict::WithinNoise);
+        assert_eq!(verdict_of(&cmp, "latency"), Verdict::Improvement);
+        assert!(!cmp.has_regressions());
+        assert_eq!(cmp.improvements().len(), 1);
+    }
+
+    #[test]
+    fn mad_noise_widens_the_gate() {
+        // -30% would regress on the 10% floor, but 4×MAD(10) = 40 absorbs it.
+        let old = suite("old", &[("throughput", 100.0, 10.0, Direction::Higher)]);
+        let new = suite("new", &[("throughput", 70.0, 0.0, Direction::Higher)]);
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        assert_eq!(verdict_of(&cmp, "throughput"), Verdict::WithinNoise);
+        // Beyond 4×MAD it regresses again.
+        let worse = suite("new", &[("throughput", 55.0, 0.0, Direction::Higher)]);
+        let cmp = compare(&old, &worse, &CompareConfig::default());
+        assert_eq!(verdict_of(&cmp, "throughput"), Verdict::Regression);
+    }
+
+    #[test]
+    fn info_new_and_missing_never_gate() {
+        let old = suite(
+            "old",
+            &[
+                ("shards", 8.0, 0.0, Direction::Info),
+                ("gone", 5.0, 0.0, Direction::Lower),
+            ],
+        );
+        let new = suite(
+            "new",
+            &[
+                ("shards", 2.0, 0.0, Direction::Info),
+                ("fresh", 3.0, 0.0, Direction::Lower),
+            ],
+        );
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        assert_eq!(verdict_of(&cmp, "shards"), Verdict::Info);
+        assert_eq!(verdict_of(&cmp, "fresh"), Verdict::New);
+        assert_eq!(verdict_of(&cmp, "gone"), Verdict::Missing);
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn missing_scenarios_are_reported() {
+        let old = suite("old", &[("x", 1.0, 0.0, Direction::Lower)]);
+        let mut new = suite("new", &[("x", 1.0, 0.0, Direction::Lower)]);
+        new.scenarios[0].name = "demo/renamed".to_string();
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        let verdicts: Vec<Verdict> = cmp.deltas.iter().map(|d| d.verdict).collect();
+        assert!(verdicts.contains(&Verdict::New));
+        assert!(verdicts.contains(&Verdict::Missing));
+        assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn delta_pct_handles_edge_cases() {
+        let d = MetricDelta {
+            scenario: "s".into(),
+            metric: "m".into(),
+            baseline: 100.0,
+            current: 110.0,
+            tolerance: 1.0,
+            direction: Direction::Higher,
+            verdict: Verdict::WithinNoise,
+        };
+        assert!((d.delta_pct() - 10.0).abs() < 1e-9);
+        let nan = MetricDelta { baseline: f64::NAN, ..d };
+        assert!(nan.delta_pct().is_nan());
+    }
+
+    #[test]
+    fn natural_key_orders_pr_numbers() {
+        assert!(natural_key("BENCH_PR10.json") > natural_key("BENCH_PR9.json"));
+        assert!(natural_key("BENCH_PR9.json") > natural_key("BENCH_PR8.json"));
+        assert!(natural_key("BENCH_PR2.json") < natural_key("BENCH_PR10.json"));
+        // Text segments still order lexicographically.
+        assert!(natural_key("BENCH_a.json") < natural_key("BENCH_b.json"));
+    }
+
+    #[test]
+    fn baseline_file_round_trip_and_discovery() {
+        let dir = std::env::temp_dir().join(format!(
+            "arbocc-compare-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let old = suite("PR1", &[("x", 1.0, 0.0, Direction::Lower)]);
+        let old_path = dir.join("BENCH_PR1.json");
+        std::fs::write(&old_path, old.to_json().pretty()).unwrap();
+        let fresh_path = dir.join("BENCH_PR2.json");
+        std::fs::write(&fresh_path, "{}").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+
+        let loaded = load(&old_path).unwrap();
+        assert_eq!(loaded, old);
+        let found = find_previous_baseline(&dir, Some(&fresh_path), None).unwrap();
+        assert!(same_path(&found, &old_path), "found {}", found.display());
+        // Tier-aware discovery: a smoke search finds the smoke baseline,
+        // a full search finds nothing (PR1 was recorded at smoke tier).
+        let found = find_previous_baseline(&dir, Some(&fresh_path), Some(Tier::Smoke)).unwrap();
+        assert!(same_path(&found, &old_path));
+        assert!(find_previous_baseline(&dir, Some(&fresh_path), Some(Tier::Full)).is_none());
+        // Partial (--filter / single-bin) files never become baselines.
+        let mut partial = suite("PARTIAL", &[("x", 1.0, 0.0, Direction::Lower)]);
+        partial.partial = true;
+        std::fs::write(dir.join("BENCH_ZZZ.json"), partial.to_json().pretty()).unwrap();
+        let found = find_previous_baseline(&dir, Some(&fresh_path), Some(Tier::Smoke)).unwrap();
+        assert!(same_path(&found, &old_path), "partial file must be skipped");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

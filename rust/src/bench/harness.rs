@@ -80,9 +80,21 @@ pub fn bench_with<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> Measur
     // Aim each sample group at measure_s / samples.
     let group_target = cfg.measure_s / cfg.samples as f64;
     let iters = ((group_target / per_iter.max(1e-9)).ceil() as usize).max(1);
+    // Calibration overshoot guard: for slow closures (per-iter above the
+    // group target) `iters` bottoms out at 1 but running all `samples`
+    // groups would still cost samples × per_iter — far past the budget.
+    // Clamp the total measured time to ~2× measure_s by shrinking the
+    // group count instead (fast closures keep all samples: their group
+    // estimate is measure_s / samples, so the ratio is 2·samples). Never
+    // drop below two groups (when configured for at least two): a single
+    // group has MAD 0, which would strip the noise scale from exactly
+    // the slowest scenarios.
+    let group_est = (iters as f64 * per_iter).max(1e-12);
+    let budget = (2.0 * cfg.measure_s).max(group_est);
+    let samples = cfg.samples.min(((budget / group_est).floor() as usize).max(2));
 
-    let mut groups = Vec::with_capacity(cfg.samples);
-    for _ in 0..cfg.samples {
+    let mut groups = Vec::with_capacity(samples);
+    for _ in 0..samples {
         let t = std::time::Instant::now();
         for _ in 0..iters {
             f();
@@ -95,7 +107,7 @@ pub fn bench_with<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> Measur
         mad_s: stats::mad(&groups),
         min_s: stats::min(&groups),
         iterations: iters,
-        samples: cfg.samples,
+        samples,
     }
 }
 
@@ -121,6 +133,32 @@ mod tests {
         assert!(m.median_s >= 0.0);
         assert!(m.iterations >= 1);
         assert_eq!(m.samples, 4);
+    }
+
+    #[test]
+    fn slow_closures_respect_the_time_budget() {
+        // Per-iter (~25 ms) is over the group target (50 ms / 12), so the
+        // full 12 groups would take ~0.3 s against a 0.05 s budget; the
+        // clamp must shrink the group count to ≈ 2×measure_s / per_iter.
+        let cfg = BenchConfig { measure_s: 0.05, warmup_s: 0.0, samples: 12 };
+        let t = std::time::Instant::now();
+        let m = bench_with("slow", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        });
+        assert_eq!(m.iterations, 1);
+        assert!(m.samples >= 1 && m.samples <= 5, "got {} samples", m.samples);
+        // Warmup (1 call) + measured groups; generous ceiling for CI noise.
+        assert!(t.elapsed().as_secs_f64() < 1.0, "took {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn fast_closures_keep_all_sample_groups() {
+        let cfg = BenchConfig { measure_s: 0.02, warmup_s: 0.005, samples: 6 };
+        let mut x = 0u64;
+        let m = bench_with("fast", &cfg, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(m.samples, 6);
     }
 
     #[test]

@@ -1,10 +1,20 @@
-//! Micro-benchmark harness + shared experiment plumbing (criterion is
-//! unavailable offline; see DESIGN.md §2).
+//! The perf lab: micro-benchmark harness, scenario registry, baseline
+//! comparison and shared experiment plumbing (criterion is unavailable
+//! offline; see DESIGN.md §2).
 //!
 //! * [`harness`] — warmup + timed iterations with median/MAD reporting;
 //! * [`workloads`] — the named graph-family × size sweeps the experiment
-//!   benches share, so every table is generated from the same instances.
+//!   benches share, so every table is generated from the same instances;
+//! * [`suite`] — the scenario registry behind `arbocc bench`: named
+//!   scenarios with `smoke`/`full` tiers and the `BENCH_*.json` schema;
+//! * [`scenarios`] — the registered scenarios (the former bench-bin
+//!   bodies, tier-parameterized);
+//! * [`compare`] — noise-aware baseline diffing and the regression gate;
+//! * [`report`] — markdown rendering of reports and comparisons.
 
+pub mod compare;
 pub mod harness;
 pub mod report;
+pub mod scenarios;
+pub mod suite;
 pub mod workloads;

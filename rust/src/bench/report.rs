@@ -1,10 +1,12 @@
-//! Report aggregation: collect `reports/*.json` (written by the bench
-//! bins) into one markdown summary — the mechanical half of keeping
-//! EXPERIMENTS.md in sync with reruns.
+//! Report rendering: collect `reports/*.json` (written by the bench
+//! bins) into one markdown summary, and render `bench::compare` results
+//! as the markdown delta table `arbocc bench --compare` prints.
 
 use std::path::Path;
 
+use crate::bench::compare::{Comparison, Verdict};
 use crate::util::json::{parse, Json};
+use crate::util::table::fnum;
 
 /// One loaded report.
 #[derive(Debug)]
@@ -38,6 +40,29 @@ pub fn load_reports(dir: &Path) -> std::io::Result<Vec<Report>> {
     Ok(out)
 }
 
+/// Render one suite-schema report (what `suite::run_bin` writes) as a
+/// table per scenario.
+fn render_suite(out: &mut String, suite: &crate::bench::suite::SuiteResult) {
+    out.push_str(&format!(
+        "tier `{}`, label `{}`, {} scenario(s).\n",
+        suite.tier.name(),
+        suite.label,
+        suite.scenarios.len()
+    ));
+    for s in &suite.scenarios {
+        out.push_str(&format!("\n### {} ({:.2}s)\n\n", s.name, s.wall_s));
+        out.push_str("| metric | value | noise | better |\n|---|---|---|---|\n");
+        for (k, m) in &s.metrics {
+            out.push_str(&format!(
+                "| {k} | {} | {} | {} |\n",
+                fnum(m.value),
+                fnum(m.noise),
+                m.direction.name()
+            ));
+        }
+    }
+}
+
 /// Render all reports as a markdown document.
 pub fn render_markdown(reports: &[Report]) -> String {
     let mut out = String::new();
@@ -45,6 +70,12 @@ pub fn render_markdown(reports: &[Report]) -> String {
     out.push_str(&format!("{} report file(s) aggregated from `reports/`.\n", reports.len()));
     for r in reports {
         out.push_str(&format!("\n## {}\n\n", r.name));
+        // Suite-schema reports (bench bins since the perf lab) get the
+        // structured rendering; flat key→value objects keep the old one.
+        if let Ok(suite) = crate::bench::suite::SuiteResult::from_json(&r.data) {
+            render_suite(&mut out, &suite);
+            continue;
+        }
         match &r.data {
             Json::Obj(map) => {
                 out.push_str("| key | value |\n|---|---|\n");
@@ -64,6 +95,42 @@ pub fn render_markdown(reports: &[Report]) -> String {
                 out.push_str("\n```\n");
             }
         }
+    }
+    out
+}
+
+/// Render a baseline comparison as a markdown delta table.
+pub fn render_comparison(cmp: &Comparison) -> String {
+    let fmt = |x: f64| if x.is_finite() { fnum(x) } else { "—".to_string() };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# bench delta — {} vs baseline {}\n\n",
+        cmp.current_label, cmp.baseline_label
+    ));
+    out.push_str(&format!(
+        "{} metric(s) diffed: {} regression(s), {} improvement(s).\n\n",
+        cmp.deltas.len(),
+        cmp.regressions().len(),
+        cmp.improvements().len()
+    ));
+    out.push_str("| scenario | metric | baseline | current | Δ% | tolerance | verdict |\n");
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for d in &cmp.deltas {
+        let verdict = if d.verdict == Verdict::Regression {
+            format!("**{}**", d.verdict.name())
+        } else {
+            d.verdict.name().to_string()
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} |\n",
+            d.scenario,
+            d.metric,
+            fmt(d.baseline),
+            fmt(d.current),
+            fmt(d.delta_pct()),
+            fmt(d.tolerance),
+            verdict
+        ));
     }
     out
 }
@@ -94,10 +161,81 @@ mod tests {
 
     #[test]
     fn empty_dir_ok() {
-        let dir = std::env::temp_dir().join("arbocc-report-test-none");
+        // Unique per process: a fixed name collides when several `cargo
+        // test` invocations run in parallel against the same temp dir.
+        let dir = std::env::temp_dir()
+            .join(format!("arbocc-report-test-none-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let reports = load_reports(&dir).unwrap();
         assert!(reports.is_empty());
         let md = render_markdown(&reports);
         assert!(md.contains("0 report file(s)"));
+    }
+
+    #[test]
+    fn renders_suite_reports_structurally() {
+        use crate::bench::suite::{Direction, Metric, SuiteResult, SuiteScenarioResult, Tier};
+        use std::collections::BTreeMap;
+
+        let mut metrics = BTreeMap::new();
+        metrics.insert(
+            "rounds".to_string(),
+            Metric { value: 34.0, noise: 0.0, direction: Direction::Lower },
+        );
+        let suite = SuiteResult {
+            label: "PR2".to_string(),
+            tier: Tier::Smoke,
+            partial: true,
+            scenarios: vec![SuiteScenarioResult {
+                name: "e4/mis_rounds".to_string(),
+                bin: "e4_mis_rounds".to_string(),
+                wall_s: 2.0,
+                metrics,
+            }],
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("arbocc-report-suite-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("e4_mis_rounds.json"), suite.to_json().pretty()).unwrap();
+
+        let reports = load_reports(&dir).unwrap();
+        let md = render_markdown(&reports);
+        assert!(md.contains("### e4/mis_rounds"), "got:\n{md}");
+        assert!(md.contains("| rounds | 34 | 0 | lower |"), "got:\n{md}");
+        assert!(!md.contains("\"schema\""), "suite docs must not fall back to raw JSON:\n{md}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn renders_comparison_table() {
+        use crate::bench::compare::{compare, CompareConfig};
+        use crate::bench::suite::{Direction, Metric, SuiteResult, SuiteScenarioResult, Tier};
+        use std::collections::BTreeMap;
+
+        let mk = |label: &str, value: f64| {
+            let mut metrics = BTreeMap::new();
+            metrics.insert(
+                "edges_per_s".to_string(),
+                Metric { value, noise: 0.0, direction: Direction::Higher },
+            );
+            SuiteResult {
+                label: label.to_string(),
+                tier: Tier::Smoke,
+                partial: false,
+                scenarios: vec![SuiteScenarioResult {
+                    name: "perf/p1".to_string(),
+                    bin: "perf_hotpaths".to_string(),
+                    wall_s: 1.0,
+                    metrics,
+                }],
+            }
+        };
+        let cmp = compare(&mk("PR1", 100.0), &mk("PR2", 50.0), &CompareConfig::default());
+        let md = render_comparison(&cmp);
+        assert!(md.contains("# bench delta — PR2 vs baseline PR1"), "got:\n{md}");
+        assert!(md.contains("1 regression(s)"));
+        assert!(md.contains("| perf/p1 | edges_per_s |"));
+        assert!(md.contains("**REGRESSION**"));
     }
 }

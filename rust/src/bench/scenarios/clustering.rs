@@ -1,0 +1,542 @@
+//! Cost/approximation scenarios: the Lemma 25 structural bound (E1),
+//! Algorithm 4 degree filtering (E2), the full MPC PIVOT round/ratio
+//! sweeps (E3), the O(λ²) simple algorithm (E9), the §1.4 baseline
+//! head-to-head (E10) and the Remark 14 best-of-K driver (E12).
+
+use std::sync::Arc;
+
+use crate::algorithms::alg4::{alg4, degree_threshold, split_high_degree};
+use crate::algorithms::baselines::{c4, clusterwild, parallel_pivot};
+use crate::algorithms::mpc_mis::{
+    mpc_pivot, Alg1Params, Alg2Params, Alg3Params, Subroutine,
+};
+use crate::algorithms::pivot::{pivot, pivot_random};
+use crate::algorithms::simple::simple_clustering;
+use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::bench::workloads;
+use crate::cluster::cost::cost;
+use crate::cluster::exact::{exact_cost, solve_exact};
+use crate::cluster::structural::bound_cluster_sizes;
+use crate::cluster::triangles::packing_lower_bound;
+use crate::cluster::Clustering;
+use crate::coordinator::{best_of_k, TrialSpec};
+use crate::graph::generators::{barabasi_albert, barbell, disjoint_cliques, lambda_arboric, Family};
+use crate::mpc::memory::Words;
+use crate::mpc::{MpcConfig, MpcSimulator};
+use crate::runtime::CostEngine;
+use crate::util::rng::Rng;
+use crate::util::stats::{linear_fit, max, mean, min};
+use crate::util::table::{fnum, Table};
+use crate::util::timer::Timer;
+
+pub fn register(r: &mut Registry) {
+    r.register(Scenario {
+        name: "e1/structural_bound",
+        bin: "e1_structural",
+        about: "Lemma 25: cluster sizes ≤ 4λ−2 at no cost increase",
+        run: e1_structural_bound,
+    });
+    r.register(Scenario {
+        name: "e2/alg4_filtering",
+        bin: "e2_alg4",
+        about: "Theorem 26: high-degree filtering costs ≤ max{1+ε, α}",
+        run: e2_alg4_filtering,
+    });
+    r.register(Scenario {
+        name: "e3/mpc_pivot_rounds",
+        bin: "e3_clustering",
+        about: "Corollary 28: MPC PIVOT ratio and round sweeps",
+        run: e3_mpc_pivot_rounds,
+    });
+    r.register(Scenario {
+        name: "e9/simple_clustering",
+        bin: "e9_simple",
+        about: "Corollary 32: O(λ²) worst case in O(1) rounds",
+        run: e9_simple_clustering,
+    });
+    r.register(Scenario {
+        name: "e10/baselines",
+        bin: "e10_baselines",
+        about: "§1.4 head-to-head vs C4, ClusterWild!, ParallelPivot",
+        run: e10_baselines,
+    });
+    r.register(Scenario {
+        name: "e12/best_of_k",
+        bin: "e12_best_of_k",
+        about: "Remark 14: best-of-K concentration and scorer throughput",
+        run: e12_best_of_k,
+    });
+}
+
+// ---------------------------------------------------------------- E1
+
+fn e1_structural_bound(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let mut table = Table::new(
+        "E1 — Lemma 25 structural bound (limit = 4λ−2)",
+        &["λ", "mode", "instances", "cost preserved", "max|C| ≤ 4λ−2", "worst max|C|"],
+    );
+
+    // (a) exact instances: the transform preserves optimal cost.
+    let exact_lambdas = ctx.sweep(&[1usize, 2], &[1, 2, 3]);
+    let trials = ctx.size(8, 30);
+    for &lambda in &exact_lambdas {
+        let mut rng = Rng::new(1000 + lambda as u64);
+        let mut preserved = 0;
+        let mut bounded = 0;
+        let mut worst = 0usize;
+        for _ in 0..trials {
+            let g = lambda_arboric(11, lambda, &mut rng);
+            let (opt, opt_cost) = solve_exact(&g);
+            let res = bound_cluster_sizes(&g, &opt, lambda);
+            if cost(&g, &res.clustering).total() == opt_cost.total() {
+                preserved += 1;
+            }
+            if res.max_cluster_size <= 4 * lambda - 2 {
+                bounded += 1;
+            }
+            worst = worst.max(res.max_cluster_size);
+        }
+        table.row(&[
+            lambda.to_string(),
+            "exact-opt (n=11)".into(),
+            trials.to_string(),
+            format!("{preserved}/{trials}"),
+            format!("{bounded}/{trials}"),
+            worst.to_string(),
+        ]);
+        assert_eq!(preserved, trials, "transform must preserve optimal cost");
+        assert_eq!(bounded, trials);
+    }
+
+    // (b) large instances: never increases cost, always lands in bound.
+    let large_lambdas = ctx.sweep(&[2usize, 8], &[1, 2, 4, 8]);
+    let n = ctx.size(1_500, 5_000);
+    let large_trials = ctx.size(2, 5);
+    for &lambda in &large_lambdas {
+        let mut rng = Rng::new(2000 + lambda as u64);
+        let mut non_increase = 0;
+        let mut bounded = 0;
+        let mut worst = 0usize;
+        for _ in 0..large_trials {
+            let g = lambda_arboric(n, lambda, &mut rng);
+            for start in [Clustering::single_cluster(g.n()), pivot_random(&g, &mut rng)] {
+                let before = cost(&g, &start).total();
+                let res = bound_cluster_sizes(&g, &start, lambda);
+                if cost(&g, &res.clustering).total() <= before {
+                    non_increase += 1;
+                }
+                if res.max_cluster_size <= 4 * lambda - 2 {
+                    bounded += 1;
+                }
+                worst = worst.max(res.max_cluster_size);
+            }
+        }
+        table.row(&[
+            lambda.to_string(),
+            format!("large (n={n})"),
+            (2 * large_trials).to_string(),
+            format!("{non_increase}/{}", 2 * large_trials),
+            format!("{bounded}/{}", 2 * large_trials),
+            worst.to_string(),
+        ]);
+        assert_eq!(non_increase, 2 * large_trials);
+        assert_eq!(bounded, 2 * large_trials);
+        if lambda == 8 {
+            rec.metric("worst_max_cluster_lambda8", worst as f64, Direction::Info);
+        }
+    }
+    table.print();
+    rec.metric("bound_violations", 0.0, Direction::Lower);
+    rec
+}
+
+// ---------------------------------------------------------------- E2
+
+fn e2_alg4_filtering(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let eps_sweep = ctx.sweep(&[1.0f64, 2.0], &[0.5, 1.0, 2.0, 4.0]);
+
+    // (a) vs exact optima.
+    let trials = ctx.size(8, 25);
+    let mut ta = Table::new(
+        &format!("E2a — Alg4(exact inner) vs OPT, n=12, λ=1 (worst over {trials} seeds)"),
+        &["ε", "bound max{1+ε,1}", "worst ratio", "mean ratio"],
+    );
+    let mut worst_exact = 0.0f64;
+    for &eps in &eps_sweep {
+        let mut rng = Rng::new(3000);
+        let mut ratios = Vec::new();
+        for _ in 0..trials {
+            let g = lambda_arboric(12, 1, &mut rng);
+            let opt = exact_cost(&g);
+            let c = alg4(&g, 1, eps, |sub| solve_exact(sub).0);
+            let got = cost(&g, &c).total();
+            if opt > 0 {
+                ratios.push(got as f64 / opt as f64);
+            } else {
+                assert_eq!(got, 0, "zero-opt instance must stay zero");
+            }
+        }
+        let worst = ratios.iter().copied().fold(0.0, f64::max);
+        let bound = (1.0 + eps).max(1.0);
+        assert!(worst <= bound + 1e-9, "Theorem 26 violated: {worst} > {bound}");
+        worst_exact = worst_exact.max(worst);
+        ta.row(&[eps.to_string(), fnum(bound), fnum(worst), fnum(mean(&ratios))]);
+    }
+    ta.print();
+    rec.metric("exact_worst_ratio", worst_exact, Direction::Info);
+
+    // (b) at scale with PIVOT inner.
+    let n = ctx.size(4_000, 20_000);
+    let repeats = ctx.size(2, 5);
+    let mut tb = Table::new(
+        &format!("E2b — Alg4(PIVOT) on BA(n={n}, m=3), λ=3: ratio vs triangle LB"),
+        &["ε", "threshold", "filtered |H|", "mean cost", "ratio≤ (vs LB)"],
+    );
+    let mut rng = Rng::new(3100);
+    let g = barabasi_albert(n, 3, &mut rng);
+    let lambda = 3usize;
+    let lb = packing_lower_bound(&g).max(1);
+    for &eps in &eps_sweep {
+        let (_, high) = split_high_degree(&g, lambda, eps);
+        let costs: Vec<f64> = (0..repeats)
+            .map(|_| {
+                let c = alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng));
+                cost(&g, &c).total() as f64
+            })
+            .collect();
+        let m = mean(&costs);
+        tb.row(&[
+            eps.to_string(),
+            fnum(degree_threshold(lambda, eps)),
+            high.len().to_string(),
+            fnum(m),
+            fnum(m / lb as f64),
+        ]);
+        if eps == 2.0 {
+            rec.metric("ba_ratio_ub_eps2", m / lb as f64, Direction::Lower);
+        }
+    }
+    tb.print();
+    rec
+}
+
+// ---------------------------------------------------------------- E3
+
+/// One (n, λ) cell: mean (ratio ub, rounds M1, rounds M2) over seeds.
+fn e3_cell(n: usize, lambda: usize, seeds: u64) -> (f64, f64, f64) {
+    let mut ratios = Vec::new();
+    let mut rounds1 = Vec::new();
+    let mut rounds2 = Vec::new();
+    for s in 0..seeds {
+        let mut rng = Rng::new(4000 + s * 7919 + (n as u64) + ((lambda as u64) << 20));
+        let g = lambda_arboric(n, lambda, &mut rng);
+        let words = (g.n() + 2 * g.m()) as Words;
+        let perm = rng.permutation(g.n());
+        let lb = packing_lower_bound(&g).max(1);
+
+        let mut sim1 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+        let run1 = mpc_pivot(
+            &g,
+            &perm,
+            &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg2(Alg2Params::default()) },
+            &mut sim1,
+        );
+        ratios.push(cost(&g, &run1.clustering).total() as f64 / lb as f64);
+        rounds1.push(sim1.n_rounds() as f64);
+
+        let mut sim2 = MpcSimulator::new(MpcConfig::model2(g.n(), words, 0.5));
+        let run2 = mpc_pivot(
+            &g,
+            &perm,
+            &Alg1Params { c_prefix: 1.0, subroutine: Subroutine::Alg3(Alg3Params::default()) },
+            &mut sim2,
+        );
+        assert_eq!(
+            run1.clustering.normalize(),
+            run2.clustering.normalize(),
+            "M1 and M2 pipelines must agree"
+        );
+        rounds2.push(sim2.n_rounds() as f64);
+    }
+    (mean(&ratios), mean(&rounds1), mean(&rounds2))
+}
+
+fn e3_mpc_pivot_rounds(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let seeds = ctx.pick(1u64, 3u64);
+
+    // λ sweep at fixed n.
+    let n = ctx.size(4_000, 20_000);
+    let lambdas = ctx.sweep(&[1usize, 4, 16], &[1, 2, 4, 8, 16]);
+    let mut t1 = Table::new(
+        &format!("E3a — MPC PIVOT, n={n}, λ sweep ({seeds} seed(s) each)"),
+        &["λ", "ratio≤ (vs LB)", "rounds M1", "rounds M2"],
+    );
+    let mut log_lams = Vec::new();
+    let mut r1s = Vec::new();
+    for &lambda in &lambdas {
+        let (ratio, r1, r2) = e3_cell(n, lambda, seeds);
+        t1.row(&[lambda.to_string(), fnum(ratio), fnum(r1), fnum(r2)]);
+        log_lams.push((lambda.max(2) as f64).log2());
+        r1s.push(r1);
+        rec.metric(&format!("lambda{lambda}_rounds_m1"), r1, Direction::Lower);
+        rec.metric(&format!("lambda{lambda}_rounds_m2"), r2, Direction::Lower);
+        if lambda == 4 {
+            rec.metric("ratio_lambda4", ratio, Direction::Lower);
+        }
+    }
+    t1.print();
+    let (_, slope, r2fit) = linear_fit(&log_lams, &r1s);
+    println!(
+        "rounds(M1) vs log2 λ: slope {slope:.1} per doubling (r²={r2fit:.3}) — the log λ factor"
+    );
+    rec.metric("rounds_vs_loglambda_slope", slope, Direction::Info);
+
+    // n sweep at fixed λ.
+    let lambda = 4usize;
+    let full_ns = [2_000usize, 8_000, 32_000, 128_000];
+    let ns = workloads::ladder(ctx.tier, &full_ns);
+    let mut t2 = Table::new(
+        &format!("E3b — MPC PIVOT, λ={lambda}, n sweep ({seeds} seed(s) each)"),
+        &["n", "ratio≤ (vs LB)", "rounds M1", "rounds M2", "loglog n"],
+    );
+    for &n in &ns {
+        let (ratio, r1, r2) = e3_cell(n, lambda, seeds);
+        t2.row(&[
+            n.to_string(),
+            fnum(ratio),
+            fnum(r1),
+            fnum(r2),
+            fnum((n as f64).log2().log2()),
+        ]);
+        rec.metric(&format!("n{n}_rounds_m1"), r1, Direction::Lower);
+        if n >= 2_000 {
+            assert!(ratio <= 3.5, "ratio upper bound should stay near/below 3 (got {ratio})");
+        }
+    }
+    t2.print();
+    rec
+}
+
+// ---------------------------------------------------------------- E9
+
+fn e9_sim_for(n: usize, m: usize) -> MpcSimulator {
+    MpcSimulator::new(MpcConfig::model1(n.max(2), (n + 2 * m).max(4) as Words, 0.5))
+}
+
+fn e9_simple_clustering(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+
+    // (a) clique unions are solved exactly.
+    let g = disjoint_cliques(50, 6);
+    let mut s = e9_sim_for(g.n(), g.m());
+    let run = simple_clustering(&g, 3, &mut s);
+    println!(
+        "E9a — 50×K6: cost {} (OPT 0), {} clique clusters, {} rounds",
+        cost(&g, &run.clustering).total(),
+        run.clique_clusters,
+        run.rounds
+    );
+    assert_eq!(cost(&g, &run.clustering).total(), 0);
+
+    // (b) barbell tightness (Remark 33).
+    let barbell_lambdas = ctx.sweep(&[3usize, 5], &[3, 4, 5, 6]);
+    let mut tb = Table::new(
+        "E9b — Remark 33 barbell K_λ–K_λ: simple vs OPT",
+        &["λ", "simple cost", "OPT", "ratio", "λ²"],
+    );
+    for &lambda in &barbell_lambdas {
+        let g = barbell(lambda);
+        let mut s = e9_sim_for(g.n(), g.m());
+        let run = simple_clustering(&g, lambda, &mut s);
+        let got = cost(&g, &run.clustering).total();
+        let opt = exact_cost(&g);
+        tb.row(&[
+            lambda.to_string(),
+            got.to_string(),
+            opt.to_string(),
+            fnum(got as f64 / opt.max(1) as f64),
+            (lambda * lambda).to_string(),
+        ]);
+        assert_eq!(opt, 1);
+        assert!(got as f64 >= (lambda * (lambda - 1)) as f64, "tightness shape");
+        if lambda == 5 {
+            rec.metric("barbell5_ratio", got as f64 / opt as f64, Direction::Info);
+        }
+    }
+    tb.print();
+
+    // (c) O(1) rounds across n.
+    let ns = ctx.sweep(&[1_000usize, 10_000], &[1_000, 10_000, 100_000]);
+    let mut tc = Table::new("E9c — round counts vs n (must be flat)", &["n", "rounds"]);
+    let mut rounds_seen = Vec::new();
+    for &n in &ns {
+        let mut rng = Rng::new(9900 + n as u64);
+        let g = lambda_arboric(n, 2, &mut rng);
+        let mut s = e9_sim_for(g.n(), g.m());
+        let run = simple_clustering(&g, 2, &mut s);
+        tc.row(&[n.to_string(), run.rounds.to_string()]);
+        rounds_seen.push(run.rounds);
+    }
+    tc.print();
+    let spread = rounds_seen.iter().max().unwrap() - rounds_seen.iter().min().unwrap();
+    assert!(spread <= 2, "rounds must be O(1): saw spread {spread}");
+    rec.metric("rounds_n1000", rounds_seen[0] as f64, Direction::Lower);
+    rec.metric("rounds_spread", spread as f64, Direction::Lower);
+    rec
+}
+
+// ---------------------------------------------------------------- E10
+
+fn e10_baselines(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let families = ctx.sweep(
+        &[Family::LambdaArboric(3), Family::Forest],
+        &[Family::LambdaArboric(3), Family::BarabasiAlbert(3), Family::Forest],
+    );
+    let n = ctx.size(4_000, 20_000);
+    let seeds = ctx.pick(1u64, 3u64);
+
+    let mut table = Table::new(
+        &format!("E10 — baselines on n={n} (mean over {seeds} seed(s)): ratio≤ vs LB | rounds"),
+        &[
+            "family", "PIVOT(seq)", "ours M1", "ours rounds", "C4", "C4 rounds", "Wild!",
+            "Wild rounds", "PPivot", "PP rounds",
+        ],
+    );
+
+    for &family in &families {
+        let mut acc: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+        for s in 0..seeds {
+            let mut rng = Rng::new(10_000 + s * 101);
+            let g = family.generate(n, &mut rng);
+            let perm = rng.permutation(g.n());
+            let lb = packing_lower_bound(&g).max(1) as f64;
+            let words = (g.n() + 2 * g.m()) as Words;
+            let sim = || MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+
+            let seq = pivot(&g, &perm);
+            acc.entry("pivot").or_default().push(cost(&g, &seq).total() as f64 / lb);
+
+            let mut s1 = sim();
+            let ours = mpc_pivot(
+                &g,
+                &perm,
+                &Alg1Params {
+                    c_prefix: 1.0,
+                    subroutine: Subroutine::Alg2(Alg2Params::default()),
+                },
+                &mut s1,
+            );
+            assert_eq!(ours.clustering.normalize(), seq.normalize(), "ours ≡ PIVOT");
+            acc.entry("ours").or_default().push(cost(&g, &ours.clustering).total() as f64 / lb);
+            acc.entry("ours_r").or_default().push(s1.n_rounds() as f64);
+
+            let mut s2 = sim();
+            let r = c4::c4(&g, &perm, 0.9, &mut s2);
+            assert_eq!(r.clustering.normalize(), seq.normalize(), "C4 ≡ PIVOT");
+            acc.entry("c4").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
+            acc.entry("c4_r").or_default().push(r.rounds as f64);
+
+            let mut s3 = sim();
+            let r = clusterwild::clusterwild(&g, &perm, 0.9, &mut s3);
+            acc.entry("wild").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
+            acc.entry("wild_r").or_default().push(r.rounds as f64);
+
+            let mut s4 = sim();
+            let r = parallel_pivot::parallel_pivot(&g, &perm, 0.5, &mut rng, &mut s4);
+            acc.entry("pp").or_default().push(cost(&g, &r.clustering).total() as f64 / lb);
+            acc.entry("pp_r").or_default().push(r.rounds as f64);
+        }
+        let m = |k: &str| mean(&acc[k]);
+        table.row(&[
+            family.name(),
+            fnum(m("pivot")),
+            fnum(m("ours")),
+            fnum(m("ours_r")),
+            fnum(m("c4")),
+            fnum(m("c4_r")),
+            fnum(m("wild")),
+            fnum(m("wild_r")),
+            fnum(m("pp")),
+            fnum(m("pp_r")),
+        ]);
+        let fam = family.name();
+        rec.metric(&format!("{fam}_ours_ratio"), m("ours"), Direction::Lower);
+        rec.metric(&format!("{fam}_ours_rounds"), m("ours_r"), Direction::Lower);
+        rec.metric(&format!("{fam}_wild_rounds"), m("wild_r"), Direction::Lower);
+        // Shape: ClusterWild! never beats PIVOT on cost but wins on rounds.
+        assert!(
+            m("wild") + 1e-9 >= m("pivot") * 0.95,
+            "Wild! shouldn't beat PIVOT systematically"
+        );
+        assert!(m("wild_r") <= m("c4_r") + 1e-9, "Wild! must not use more rounds than C4");
+    }
+    table.print();
+    rec
+}
+
+// ---------------------------------------------------------------- E12
+
+fn e12_best_of_k(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let n = ctx.size(5_000, 20_000);
+    let ks = ctx.sweep(&[1usize, 4, 8], &[1, 2, 4, 8, 16, 32]);
+    let seeds = ctx.pick(2u64, 5u64);
+    let slack = ctx.pick(1.08, 1.02);
+
+    let mut rng = Rng::new(12_000);
+    let g = Arc::new(lambda_arboric(n, 4, &mut rng));
+    let lb = packing_lower_bound(&g).max(1) as f64;
+    let engine = CostEngine::native();
+
+    let mut table = Table::new(
+        &format!("E12 — best-of-K on arboric-4 (n={n}), {seeds} seed(s)"),
+        &["K", "mean best ratio≤", "min", "max", "spread", "trials/s"],
+    );
+    let mut prev_mean = f64::INFINITY;
+    for &k in &ks {
+        let mut bests = Vec::new();
+        let mut thru = Vec::new();
+        for s in 0..seeds {
+            let t = Timer::start();
+            let run = best_of_k(
+                &g,
+                &TrialSpec::Alg4Pivot { lambda: 4, eps: 2.0 },
+                k,
+                4,
+                999 + s,
+                &engine,
+            )
+            .unwrap();
+            thru.push(k as f64 / t.elapsed_s());
+            bests.push(run.best_cost.total() as f64 / lb);
+        }
+        let m = mean(&bests);
+        table.row(&[
+            k.to_string(),
+            fnum(m),
+            fnum(min(&bests)),
+            fnum(max(&bests)),
+            fnum(max(&bests) - min(&bests)),
+            fnum(mean(&thru)),
+        ]);
+        if k == 8 {
+            rec.metric("k8_mean_ratio", m, Direction::Lower);
+            rec.metric("k8_spread", max(&bests) - min(&bests), Direction::Info);
+            let t = mean(&thru);
+            rec.metric_with_noise(
+                "k8_trials_per_s",
+                t,
+                t * 0.25 + crate::util::stats::mad(&thru),
+                Direction::Higher,
+            );
+        }
+        assert!(m <= prev_mean * slack, "best-of-K mean must not grow with K");
+        prev_mean = m;
+    }
+    table.print();
+    rec
+}

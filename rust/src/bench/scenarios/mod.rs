@@ -1,0 +1,31 @@
+//! The perf lab's scenario library: every experiment the 14 bench bins
+//! used to run inline now lives here as a registered [`Scenario`], so
+//! `arbocc bench` (and CI's bench-smoke job) can run the whole sweep at
+//! either tier and record one `BENCH_*.json`.
+//!
+//! Grouping mirrors the bins:
+//!
+//! * [`perf`] — §Perf hot paths P1–P8 (`perf_hotpaths`);
+//! * [`clustering`] — cost/approximation experiments (`e1_structural`,
+//!   `e2_alg4`, `e3_clustering`, `e9_simple`, `e10_baselines`,
+//!   `e12_best_of_k`);
+//! * [`mis`] — greedy-MIS round/structure experiments (`e4_mis_rounds`,
+//!   `e5_components`, `e6_degree_decay`, `e7_dependency`,
+//!   `ablation_constants`);
+//! * [`pipelines`] — forest matchings and exponentiation (`e8_forest`,
+//!   `e11_exponentiation`).
+
+use crate::bench::suite::Registry;
+
+pub mod clustering;
+pub mod mis;
+pub mod perf;
+pub mod pipelines;
+
+/// Register the whole perf lab (what [`Registry::standard`] calls).
+pub fn register_all(r: &mut Registry) {
+    perf::register(r);
+    clustering::register(r);
+    mis::register(r);
+    pipelines::register(r);
+}

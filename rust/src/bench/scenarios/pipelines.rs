@@ -1,0 +1,202 @@
+//! Matching-based forest pipelines (E8, Corollaries 27/29/31 + Remark 30)
+//! and graph-exponentiation geometry (E11, §2.1.3 / Figures 1–2).
+
+use crate::algorithms::forest::{clustering_from_matching, matching_clustering_cost};
+use crate::algorithms::matching::{
+    approx_matching, is_maximal, maximal_matching, maximum_matching_forest,
+};
+use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::cluster::cost::cost;
+use crate::cluster::exact::exact_cost;
+use crate::graph::generators::{grid, path, random_forest, random_tree};
+use crate::mpc::exponentiation::{bfs_ball, gather_balls};
+use crate::mpc::memory::Words;
+use crate::mpc::{MpcConfig, MpcSimulator};
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, Table};
+
+pub fn register(r: &mut Registry) {
+    r.register(Scenario {
+        name: "e8/forest_pipelines",
+        bin: "e8_forest",
+        about: "λ=1: matchings ⇒ clusterings (Corollaries 27/29/31)",
+        run: e8_forest_pipelines,
+    });
+    r.register(Scenario {
+        name: "e11/exponentiation",
+        bin: "e11_exponentiation",
+        about: "graph exponentiation: radius doubling + memory caps",
+        run: e11_exponentiation,
+    });
+}
+
+// ---------------------------------------------------------------- E8
+
+fn e8_forest_pipelines(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+
+    // Corollary 27: maximum-matching clustering is optimal on forests.
+    let mut rng = Rng::new(9000);
+    let trials = ctx.size(10, 50);
+    let mut equal = 0;
+    for _ in 0..trials {
+        let g = random_forest(12, 0.85, &mut rng);
+        let m = maximum_matching_forest(&g);
+        let c = clustering_from_matching(g.n(), &m);
+        if cost(&g, &c).total() == exact_cost(&g) {
+            equal += 1;
+        }
+    }
+    println!(
+        "E8a — Corollary 27: maximum-matching clustering = OPT on {equal}/{trials} random forests (n=12)"
+    );
+    assert_eq!(equal, trials);
+
+    // Corollary 31 pipelines across sizes.
+    let sizes = ctx.sweep(&[5_000usize], &[5_000, 20_000, 80_000]);
+    let seeds = ctx.pick(2u64, 3u64);
+    let mut table = Table::new(
+        &format!("E8b — forest pipelines ({seeds} seeds, mean): cost ratio vs OPT and rounds"),
+        &[
+            "n", "maximal ratio", "maximal rounds", "(1+0.5) ratio", "(1+0.5) rounds",
+            "(1+0.25) ratio",
+        ],
+    );
+    for &n in &sizes {
+        let mut maximal_ratio = Vec::new();
+        let mut maximal_rounds = Vec::new();
+        let mut a05_ratio = Vec::new();
+        let mut a05_rounds = Vec::new();
+        let mut a025_ratio = Vec::new();
+        for s in 0..seeds {
+            let mut rng = Rng::new(9100 + s * 13 + n as u64);
+            let g = random_forest(n, 0.9, &mut rng);
+            let opt = matching_clustering_cost(g.m(), maximum_matching_forest(&g).len()).max(1);
+            let words = (g.n() + 2 * g.m()) as Words;
+
+            let mut sim = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+            let mm = maximal_matching(&g, &mut rng, &mut sim, 64);
+            assert!(is_maximal(&g, &mm.matching));
+            maximal_ratio
+                .push(matching_clustering_cost(g.m(), mm.matching.len()) as f64 / opt as f64);
+            maximal_rounds.push(sim.n_rounds() as f64);
+
+            let mut sim2 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+            let a = approx_matching(&g, mm.matching.clone(), 0.5, &mut sim2);
+            a05_ratio.push(matching_clustering_cost(g.m(), a.matching.len()) as f64 / opt as f64);
+            a05_rounds.push(sim2.n_rounds() as f64);
+
+            let mut sim3 = MpcSimulator::new(MpcConfig::model1(g.n(), words, 0.5));
+            let a2 = approx_matching(&g, mm.matching.clone(), 0.25, &mut sim3);
+            a025_ratio
+                .push(matching_clustering_cost(g.m(), a2.matching.len()) as f64 / opt as f64);
+        }
+        table.row(&[
+            n.to_string(),
+            fnum(mean(&maximal_ratio)),
+            fnum(mean(&maximal_rounds)),
+            fnum(mean(&a05_ratio)),
+            fnum(mean(&a05_rounds)),
+            fnum(mean(&a025_ratio)),
+        ]);
+        // Guarantees: maximal ≤ 2×, (1+ε) ≤ (1+ε)×.
+        assert!(mean(&maximal_ratio) <= 2.0 + 1e-9);
+        assert!(mean(&a05_ratio) <= 1.5 + 1e-9);
+        assert!(mean(&a025_ratio) <= 1.25 + 1e-9);
+        if n == 5_000 {
+            rec.metric("maximal_ratio_n5000", mean(&maximal_ratio), Direction::Lower);
+            rec.metric("maximal_rounds_n5000", mean(&maximal_rounds), Direction::Lower);
+            rec.metric("eps05_ratio_n5000", mean(&a05_ratio), Direction::Lower);
+        }
+    }
+    table.print();
+
+    // Remark 30: P4 tightness of the maximal-matching bound.
+    let p4 = path(4);
+    let worst = matching_clustering_cost(p4.m(), 1); // middle-edge maximal
+    let best = matching_clustering_cost(p4.m(), maximum_matching_forest(&p4).len());
+    println!(
+        "E8c — Remark 30 (P4): worst maximal cost {worst} vs OPT {best} ⇒ ratio {} (tight at 2)",
+        fnum(worst as f64 / best as f64)
+    );
+    assert_eq!(worst / best.max(1), 2);
+    rec
+}
+
+// ---------------------------------------------------------------- E11
+
+fn e11_sim(n: usize, m: usize) -> MpcSimulator {
+    MpcSimulator::new(MpcConfig::model2(n.max(2), (n + 2 * m).max(4) as Words, 0.9))
+}
+
+fn e11_exponentiation(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+
+    // (a) rounds = log2(radius): R doubles every round (Figure 1).
+    let path_n = ctx.size(1_024, 4_096);
+    let grid_side = ctx.size(32, 64);
+    let radii = ctx.sweep(&[4usize, 16], &[4, 16, 64]);
+    let mut ta = Table::new(
+        "E11a — rounds to gather radius R (Figure 1: R doubles per round)",
+        &["graph", "R", "rounds"],
+    );
+    let mut rng = Rng::new(11_000);
+    let graphs: Vec<(String, crate::graph::Graph)> = vec![
+        (format!("path({path_n})"), path(path_n)),
+        (format!("tree({path_n})"), random_tree(path_n, &mut rng)),
+        (format!("grid({grid_side}x{grid_side})"), grid(grid_side, grid_side)),
+    ];
+    for (name, g) in &graphs {
+        for &r in &radii {
+            let mut s = e11_sim(g.n(), g.m());
+            let targets: Vec<u32> = (0..g.n() as u32).collect();
+            let res = gather_balls(g, &targets, r, u64::MAX, &mut s, "e11");
+            assert_eq!(res.rounds, (r as f64).log2().ceil() as usize, "{name} R={r}");
+            // Spot-check correctness against BFS.
+            let v = (g.n() / 2) as u32;
+            assert_eq!(res.balls[v as usize], bfs_ball(g, v, res.radius));
+            ta.row(&[name.clone(), r.to_string(), res.rounds.to_string()]);
+            if r == 16 && name.starts_with("grid") {
+                rec.metric("grid_rounds_r16", res.rounds as f64, Direction::Lower);
+            }
+        }
+    }
+    ta.print();
+
+    // (b) memory caps halt growth where ball topology exceeds S.
+    let g = grid(grid_side, grid_side);
+    let caps = ctx.sweep(&[32u64, 2_048, u64::MAX], &[32, 256, 2_048, 16_384, u64::MAX]);
+    let mut tb = Table::new(
+        &format!("E11b — memory-capped growth on grid({grid_side}x{grid_side}): radius vs cap"),
+        &["cap (words)", "radius reached", "capped"],
+    );
+    for &cap in &caps {
+        let mut s = e11_sim(g.n(), g.m());
+        let targets: Vec<u32> = (0..g.n() as u32).collect();
+        let res = gather_balls(&g, &targets, radii[radii.len() - 1], cap, &mut s, "e11b");
+        tb.row(&[
+            if cap == u64::MAX { "∞".into() } else { cap.to_string() },
+            res.radius.to_string(),
+            res.memory_capped.to_string(),
+        ]);
+        if cap == 2_048 {
+            rec.metric("grid_cap2048_radius", res.radius as f64, Direction::Info);
+        }
+    }
+    tb.print();
+
+    // (c) virtual diameter (Figure 2): gathering ℓ-hop balls divides a
+    // path's effective diameter by ℓ.
+    let n = 1024;
+    let mut tc = Table::new(
+        &format!("E11c — Figure 2: path({n}) virtual diameter after gathering ℓ-hop balls"),
+        &["ℓ", "virtual diameter ⌈(n-1)/ℓ⌉"],
+    );
+    for &l in &[1usize, 2, 4, 8, 16] {
+        let virt = (n - 1usize).div_ceil(l);
+        tc.row(&[l.to_string(), virt.to_string()]);
+    }
+    tc.print();
+    rec
+}

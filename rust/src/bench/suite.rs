@@ -1,0 +1,520 @@
+//! The perf-lab scenario registry: every bench bin registers named
+//! scenarios here, and the `arbocc bench` orchestrator runs them at a
+//! `smoke` or `full` tier, collecting domain metrics (edges/s, MPC
+//! rounds, cost ratios, shard speedups) into one machine-readable
+//! `BENCH_<label>.json` at the repo root.
+//!
+//! The file is the perf trajectory: `bench::compare` diffs two of them
+//! with noise-aware (MAD-based) thresholds and gates regressions, so
+//! every scaling PR is judged against the previous baseline instead of
+//! free-form stdout tables.
+//!
+//! Layout:
+//!
+//! * [`Scenario`] — a named `fn(&ScenarioCtx) -> ScenarioRecord` owned by
+//!   one bench bin; the bin itself is a thin wrapper (`run_bin`).
+//! * [`Registry::standard`] — all scenarios from `bench::scenarios`.
+//! * [`SuiteResult`] — the schema (`arbocc-bench/v1`) with a lossless
+//!   JSON round-trip via `util::json`.
+
+use std::collections::BTreeMap;
+
+use crate::bench::harness::{self, BenchConfig, Measurement};
+use crate::util::json::Json;
+use crate::util::table::fnum;
+use crate::util::timer::Timer;
+
+/// Schema tag written into every `BENCH_*.json`.
+pub const SCHEMA: &str = "arbocc-bench/v1";
+
+/// Which sweep sizes a run uses. `Smoke` is the CI tier (< ~5 minutes
+/// end to end); `Full` reproduces the paper-scale tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Smoke,
+    Full,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "smoke" => Some(Tier::Smoke),
+            "full" => Some(Tier::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Which way a metric is supposed to move. `Info` metrics are recorded
+/// and diffed but never gate a comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Higher,
+    Lower,
+    Info,
+}
+
+impl Direction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Info => "info",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            "info" => Some(Direction::Info),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded number with its noise scale (an absolute MAD-style
+/// spread; 0 for deterministic metrics such as simulated round counts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub value: f64,
+    pub noise: f64,
+    pub direction: Direction,
+}
+
+/// What a scenario hands back to the orchestrator.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioRecord {
+    pub metrics: BTreeMap<String, Metric>,
+}
+
+impl ScenarioRecord {
+    pub fn new() -> ScenarioRecord {
+        ScenarioRecord::default()
+    }
+
+    /// Record a deterministic metric (noise 0).
+    pub fn metric(&mut self, key: &str, value: f64, direction: Direction) -> &mut Self {
+        self.metric_with_noise(key, value, 0.0, direction)
+    }
+
+    pub fn metric_with_noise(
+        &mut self,
+        key: &str,
+        value: f64,
+        noise: f64,
+        direction: Direction,
+    ) -> &mut Self {
+        self.metrics.insert(key.to_string(), Metric { value, noise, direction });
+        self
+    }
+
+    /// Relative noise floor for wall-clock-derived metrics: even with a
+    /// tiny measured MAD (few sample groups), run-to-run variance of
+    /// timings on a shared machine rarely drops below a few percent.
+    /// Public so scenarios recording hand-rolled timing metrics apply
+    /// the same floor as the time/rate/speedup helpers.
+    pub const TIMING_REL_NOISE_FLOOR: f64 = 0.05;
+
+    /// Record a harness timing: `<key>_s` with the measurement's MAD
+    /// (floored at 5% of the median) as the noise scale.
+    pub fn time_metric(&mut self, key: &str, m: &Measurement) -> &mut Self {
+        let noise = m.mad_s.max(Self::TIMING_REL_NOISE_FLOOR * m.median_s);
+        self.metric_with_noise(&format!("{key}_s"), m.median_s, noise, Direction::Lower)
+    }
+
+    /// Record a throughput (items/second) derived from a measurement;
+    /// the relative MAD (floored at 5%) carries over as the noise scale.
+    pub fn rate_metric(&mut self, key: &str, m: &Measurement, items_per_iter: f64) -> &mut Self {
+        let denom = m.median_s.max(1e-12);
+        let value = items_per_iter / denom;
+        let rel = (m.mad_s / denom).max(Self::TIMING_REL_NOISE_FLOOR);
+        self.metric_with_noise(key, value, value * rel, Direction::Higher)
+    }
+
+    /// Record `slow/fast` as a speedup (higher is better) with the two
+    /// relative MADs (floored at 5% combined) summed into the noise.
+    pub fn speedup_metric(
+        &mut self,
+        key: &str,
+        slow: &Measurement,
+        fast: &Measurement,
+    ) -> &mut Self {
+        let s = slow.median_s.max(1e-12);
+        let f = fast.median_s.max(1e-12);
+        let value = s / f;
+        let rel = (slow.mad_s / s + fast.mad_s / f).max(Self::TIMING_REL_NOISE_FLOOR);
+        self.metric_with_noise(key, value, value * rel, Direction::Higher)
+    }
+}
+
+/// Tier-dependent knobs handed to every scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioCtx {
+    pub tier: Tier,
+}
+
+impl ScenarioCtx {
+    /// Pick a tier-dependent constant (sizes, seed counts, slices, …).
+    pub fn pick<T: Copy>(&self, smoke: T, full: T) -> T {
+        match self.tier {
+            Tier::Smoke => smoke,
+            Tier::Full => full,
+        }
+    }
+
+    pub fn size(&self, smoke: usize, full: usize) -> usize {
+        self.pick(smoke, full)
+    }
+
+    /// Pick a tier-dependent sweep, returning an owned copy (so callers
+    /// can pass inline array literals without borrow gymnastics).
+    pub fn sweep<T: Copy>(&self, smoke: &[T], full: &[T]) -> Vec<T> {
+        match self.tier {
+            Tier::Smoke => smoke.to_vec(),
+            Tier::Full => full.to_vec(),
+        }
+    }
+
+    /// Harness preset for this tier: smoke keeps each measurement to a
+    /// fraction of a second, full uses the quick preset the bins used.
+    pub fn bench_cfg(&self) -> BenchConfig {
+        match self.tier {
+            Tier::Smoke => BenchConfig { measure_s: 0.06, warmup_s: 0.02, samples: 4 },
+            Tier::Full => harness::quick(),
+        }
+    }
+}
+
+/// A registered scenario. `bin` names the owning bench bin so the thin
+/// wrappers in `benches/` can select their slice of the registry.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub run: fn(&ScenarioCtx) -> ScenarioRecord,
+}
+
+/// One scenario's row in a [`SuiteResult`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteScenarioResult {
+    pub name: String,
+    pub bin: String,
+    pub wall_s: f64,
+    pub metrics: BTreeMap<String, Metric>,
+}
+
+/// A whole suite run — what `BENCH_<label>.json` serializes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteResult {
+    pub label: String,
+    pub tier: Tier,
+    /// True when the run covered only a subset of the registry (a
+    /// `--filter` run or a single bin). Partial files are never picked
+    /// as baselines by `compare::find_previous_baseline` — a missing
+    /// scenario would silently un-gate everything it lacks.
+    pub partial: bool,
+    pub scenarios: Vec<SuiteScenarioResult>,
+}
+
+impl SuiteResult {
+    pub fn find(&self, name: &str) -> Option<&SuiteScenarioResult> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("schema", Json::str(SCHEMA))
+            .set("label", Json::str(self.label.clone()))
+            .set("tier", Json::str(self.tier.name()))
+            .set("partial", Json::Bool(self.partial));
+        let mut arr = Json::Arr(Vec::new());
+        for s in &self.scenarios {
+            let mut o = Json::obj();
+            o.set("name", Json::str(s.name.clone()))
+                .set("bin", Json::str(s.bin.clone()))
+                .set("wall_s", Json::num(s.wall_s));
+            let mut metrics = Json::obj();
+            for (k, m) in &s.metrics {
+                let mut mo = Json::obj();
+                mo.set("value", Json::num(m.value))
+                    .set("noise", Json::num(m.noise))
+                    .set("better", Json::str(m.direction.name()));
+                metrics.set(k, mo);
+            }
+            o.set("metrics", metrics);
+            arr.push(o);
+        }
+        root.set("scenarios", arr);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<SuiteResult, String> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if !schema.starts_with("arbocc-bench/") {
+            return Err(format!("not an arbocc bench report (schema '{schema}')"));
+        }
+        let label = j.get("label").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let tier = j
+            .get("tier")
+            .and_then(Json::as_str)
+            .and_then(Tier::parse)
+            .unwrap_or(Tier::Full);
+        let partial = matches!(j.get("partial"), Some(Json::Bool(true)));
+        let mut scenarios = Vec::new();
+        for s in j.get("scenarios").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "scenario entry missing 'name'".to_string())?
+                .to_string();
+            let bin = s.get("bin").and_then(Json::as_str).unwrap_or("").to_string();
+            let wall_s = s.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let mut metrics = BTreeMap::new();
+            if let Some(Json::Obj(map)) = s.get("metrics") {
+                for (k, v) in map {
+                    let value = v
+                        .get("value")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("metric '{name}/{k}' missing 'value'"))?;
+                    let noise = v.get("noise").and_then(Json::as_f64).unwrap_or(0.0);
+                    let direction = v
+                        .get("better")
+                        .and_then(Json::as_str)
+                        .and_then(Direction::parse)
+                        .unwrap_or(Direction::Info);
+                    metrics.insert(k.clone(), Metric { value, noise, direction });
+                }
+            }
+            scenarios.push(SuiteScenarioResult { name, bin, wall_s, metrics });
+        }
+        Ok(SuiteResult { label, tier, partial, scenarios })
+    }
+}
+
+/// The scenario registry.
+#[derive(Debug, Default)]
+pub struct Registry {
+    scenarios: Vec<Scenario>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Everything `bench::scenarios` registers — the whole perf lab.
+    pub fn standard() -> Registry {
+        let mut r = Registry::new();
+        crate::bench::scenarios::register_all(&mut r);
+        r
+    }
+
+    pub fn register(&mut self, scenario: Scenario) {
+        assert!(
+            self.scenarios.iter().all(|s| s.name != scenario.name),
+            "duplicate scenario name '{}'",
+            scenario.name
+        );
+        self.scenarios.push(scenario);
+    }
+
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.scenarios
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// Run every scenario the predicate keeps, in registration order.
+    pub fn run_filtered<F: Fn(&Scenario) -> bool>(
+        &self,
+        tier: Tier,
+        label: &str,
+        keep: F,
+    ) -> SuiteResult {
+        println!("== arbocc bench suite — tier {}, label {} ==", tier.name(), label);
+        let total = Timer::start();
+        let ctx = ScenarioCtx { tier };
+        let mut out = Vec::new();
+        for s in &self.scenarios {
+            if !keep(s) {
+                continue;
+            }
+            println!("\n-- {} — {} --", s.name, s.about);
+            let t = Timer::start();
+            let record = (s.run)(&ctx);
+            let wall_s = t.elapsed_s();
+            for (k, m) in &record.metrics {
+                println!("   metric {k} = {} ({})", fnum(m.value), m.direction.name());
+            }
+            println!("   scenario wall time {wall_s:.2}s");
+            out.push(SuiteScenarioResult {
+                name: s.name.to_string(),
+                bin: s.bin.to_string(),
+                wall_s,
+                metrics: record.metrics,
+            });
+        }
+        println!(
+            "\nsuite done: {} scenario(s) in {:.1}s",
+            out.len(),
+            total.elapsed_s()
+        );
+        let partial = out.len() != self.scenarios.len();
+        SuiteResult { label: label.to_string(), tier, partial, scenarios: out }
+    }
+
+    /// Run with an optional substring filter on scenario or bin name.
+    pub fn run(&self, tier: Tier, label: &str, filter: Option<&str>) -> SuiteResult {
+        self.run_filtered(tier, label, |s| match filter {
+            None => true,
+            Some(f) => s.name.contains(f) || s.bin.contains(f),
+        })
+    }
+}
+
+/// Entry point for the thin bench bins: run the scenarios registered
+/// under `bin` (default tier `full`, override with `-- --tier smoke`)
+/// and keep the `reports/<bin>.json` flow alive.
+pub fn run_bin(bin: &str) {
+    let args = crate::util::cli::Args::from_env();
+    let tier_s = args.get_str("tier", "full");
+    let tier = Tier::parse(&tier_s)
+        .unwrap_or_else(|| panic!("unknown --tier '{tier_s}' (smoke|full)"));
+    let registry = Registry::standard();
+    let result = registry.run_filtered(tier, bin, |s| s.bin == bin);
+    assert!(
+        !result.scenarios.is_empty(),
+        "no scenarios registered for bench bin '{bin}'"
+    );
+    let path = crate::util::json::write_report(bin, &result.to_json())
+        .expect("writing bench report");
+    println!("report: {}", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_result() -> SuiteResult {
+        let mut metrics = BTreeMap::new();
+        metrics.insert(
+            "edges_per_s".to_string(),
+            Metric { value: 1.25e8, noise: 2.5e6, direction: Direction::Higher },
+        );
+        metrics.insert(
+            "rounds".to_string(),
+            Metric { value: 34.0, noise: 0.0, direction: Direction::Lower },
+        );
+        metrics.insert(
+            "shards".to_string(),
+            Metric { value: 8.0, noise: 0.0, direction: Direction::Info },
+        );
+        SuiteResult {
+            label: "PR2".to_string(),
+            tier: Tier::Smoke,
+            partial: false,
+            scenarios: vec![SuiteScenarioResult {
+                name: "perf/p1_sparse_cost".to_string(),
+                bin: "perf_hotpaths".to_string(),
+                wall_s: 1.5,
+                metrics,
+            }],
+        }
+    }
+
+    #[test]
+    fn schema_round_trips() {
+        let r = demo_result();
+        let text = r.to_json().pretty();
+        let back = SuiteResult::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // The partial marker survives the trip too.
+        let mut p = demo_result();
+        p.partial = true;
+        let text = p.to_json().pretty();
+        let back = SuiteResult::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!(back.partial);
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_documents() {
+        let j = crate::util::json::parse("{\"schema\": \"something-else\"}").unwrap();
+        assert!(SuiteResult::from_json(&j).is_err());
+        let j = crate::util::json::parse("{\"n\": 3}").unwrap();
+        assert!(SuiteResult::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn registry_rejects_duplicates() {
+        fn noop(_: &ScenarioCtx) -> ScenarioRecord {
+            ScenarioRecord::new()
+        }
+        let mut r = Registry::new();
+        r.register(Scenario { name: "a/x", bin: "a", about: "", run: noop });
+        let dup = Scenario { name: "a/x", bin: "b", about: "", run: noop };
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            r.register(dup);
+        }));
+        assert!(got.is_err(), "duplicate registration must panic");
+    }
+
+    #[test]
+    fn standard_registry_is_populated() {
+        let r = Registry::standard();
+        assert!(
+            r.len() >= 10,
+            "perf lab needs at least 10 scenarios, found {}",
+            r.len()
+        );
+        let names: Vec<&str> = r.scenarios().iter().map(|s| s.name).collect();
+        assert!(names.contains(&"perf/p8_shard_speedup"), "{names:?}");
+        assert!(names.contains(&"e4/mis_rounds"), "{names:?}");
+    }
+
+    #[test]
+    fn record_helpers_set_directions() {
+        let m = Measurement {
+            name: "t".into(),
+            median_s: 0.5,
+            mad_s: 0.05,
+            min_s: 0.4,
+            iterations: 3,
+            samples: 4,
+        };
+        let mut rec = ScenarioRecord::new();
+        rec.time_metric("step", &m);
+        rec.rate_metric("items_per_s", &m, 100.0);
+        let t = &rec.metrics["step_s"];
+        assert_eq!(t.direction, Direction::Lower);
+        assert!((t.value - 0.5).abs() < 1e-12);
+        assert!((t.noise - 0.05).abs() < 1e-12);
+        let r = &rec.metrics["items_per_s"];
+        assert_eq!(r.direction, Direction::Higher);
+        assert!((r.value - 200.0).abs() < 1e-9);
+        assert!(r.noise > 0.0);
+    }
+
+    #[test]
+    fn tier_and_direction_parse() {
+        assert_eq!(Tier::parse("smoke"), Some(Tier::Smoke));
+        assert_eq!(Tier::parse("full"), Some(Tier::Full));
+        assert_eq!(Tier::parse("warp"), None);
+        assert_eq!(Direction::parse("higher"), Some(Direction::Higher));
+        assert_eq!(Direction::parse("sideways"), None);
+    }
+}

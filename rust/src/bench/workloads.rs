@@ -44,6 +44,27 @@ pub fn clustering_families() -> Vec<Family> {
     ]
 }
 
+/// Tier a full-scale size ladder: `Full` keeps it, `Smoke` divides each
+/// size by 8 and clamps into [512, 16384] (never above the full size),
+/// deduplicating while preserving order. Both the scenario registry and
+/// ad-hoc bins use this so smoke sweeps stay CI-sized but keep the same
+/// shape as the paper-scale tables.
+pub fn ladder(tier: crate::bench::suite::Tier, full: &[usize]) -> Vec<usize> {
+    match tier {
+        crate::bench::suite::Tier::Full => full.to_vec(),
+        crate::bench::suite::Tier::Smoke => {
+            let mut out: Vec<usize> = Vec::new();
+            for &n in full {
+                let scaled = (n / 8).clamp(512, 16_384).min(n);
+                if !out.contains(&scaled) {
+                    out.push(scaled);
+                }
+            }
+            out
+        }
+    }
+}
+
 /// Build a sweep: all families × all sizes, seeds derived from a base.
 pub fn sweep(families: &[Family], sizes: &[usize], base_seed: u64) -> Vec<Workload> {
     let mut out = Vec::new();
@@ -78,6 +99,19 @@ mod tests {
             assert_eq!(ga.n(), gb.n());
             assert_eq!(ga.m(), gb.m());
         }
+    }
+
+    #[test]
+    fn ladder_tiers() {
+        use crate::bench::suite::Tier;
+        let full = [2_000usize, 8_000, 32_000, 128_000];
+        assert_eq!(ladder(Tier::Full, &full), full.to_vec());
+        let smoke = ladder(Tier::Smoke, &full);
+        assert_eq!(smoke, vec![512, 1_000, 4_000, 16_000]);
+        // Dedup: tiny full sizes collapse onto the 512 floor once.
+        assert_eq!(ladder(Tier::Smoke, &[600, 700, 4_096]), vec![512]);
+        // Never scale a size *up* past the full value.
+        assert!(ladder(Tier::Smoke, &[100]) == vec![100]);
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!   mis       run the MPC greedy-MIS pipeline; report round counts
 //!   best-of-k the Remark 14 driver through the coordinator + PJRT engine
 //!   forest    matching-based forest algorithms (Corollary 31)
+//!   bench     the perf-lab orchestrator: run the scenario registry at a
+//!             tier, write BENCH_<label>.json, optionally gate against a
+//!             baseline (--compare [path]; exits 1 on regression)
 //!   check     verify PJRT artifacts against the native fallback
 //!   info      environment / artifact status
 
@@ -327,6 +330,137 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// The perf-lab orchestrator (see DESIGN.md §perf-lab):
+///
+///   arbocc bench [--tier smoke|full] [--label PR2] [--out path.json]
+///                [--filter substr] [--compare [baseline.json]]
+///                [--replay run.json] [--list]
+///
+/// Runs the registered scenarios, writes `BENCH_<label>.json`, and with
+/// `--compare` diffs against a baseline (explicit path, or the newest
+/// other same-tier `BENCH_*.json` next to the output) — exiting
+/// non-zero when any gated metric regresses beyond its noise-aware
+/// tolerance. `--replay` loads a previous run's JSON instead of
+/// re-running the suite, so CI can gate an already-recorded run.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use arbocc::bench::compare::{self, CompareConfig};
+    use arbocc::bench::suite::{Registry, Tier};
+
+    let registry = Registry::standard();
+    if args.get_bool("list") {
+        println!("{} registered scenario(s):", registry.len());
+        for s in registry.scenarios() {
+            println!("  {:<24} [{:<18}] {}", s.name, s.bin, s.about);
+        }
+        return Ok(());
+    }
+
+    let (result, out_path, prior) = if let Some(replay) = args.get("replay") {
+        let path = std::path::PathBuf::from(replay);
+        let result = match compare::load(&path) {
+            Ok(r) => r,
+            Err(e) => arbocc::bail!("loading --replay {}: {e}", path.display()),
+        };
+        println!(
+            "replayed {} ({} scenarios, tier {})",
+            path.display(),
+            result.scenarios.len(),
+            result.tier.name()
+        );
+        (result, path, None)
+    } else {
+        let tier_s = args.get_str("tier", "smoke");
+        let tier = match Tier::parse(&tier_s) {
+            Some(t) => t,
+            None => arbocc::bail!("unknown --tier '{tier_s}' (smoke|full)"),
+        };
+        let label = args.get_str("label", "local");
+        let filter = args.get("filter");
+        let result = registry.run(tier, &label, filter);
+        arbocc::ensure!(
+            !result.scenarios.is_empty(),
+            "no scenarios matched filter {:?}",
+            filter
+        );
+        let out = args.get_str("out", &format!("BENCH_{label}.json"));
+        let out_path = std::path::PathBuf::from(&out);
+        // A previous run at the same path is the natural baseline for a
+        // bare --compare — capture it before the write destroys it
+        // (otherwise `make bench-gate` would clobber the only baseline
+        // and then gate against nothing).
+        let prior = if args.has("compare") {
+            compare::load(&out_path).ok().filter(|b| !b.partial && b.tier == tier)
+        } else {
+            None
+        };
+        std::fs::write(&out_path, result.to_json().pretty())?;
+        println!("wrote {} ({} scenarios)", out_path.display(), result.scenarios.len());
+        (result, out_path, prior)
+    };
+
+    let Some(cmp_flag) = args.get("compare") else {
+        return Ok(());
+    };
+    let (baseline, baseline_name) = if cmp_flag == "true" {
+        if let Some(b) = prior {
+            // Pre-run contents of the output path.
+            (b, format!("{} (previous contents)", out_path.display()))
+        } else {
+            // Newest other same-tier BENCH_*.json next to the output
+            // (smoke and full runs are never diffed against each other —
+            // same metric names, ~10× different workloads).
+            let dir = match out_path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+                _ => std::path::PathBuf::from("."),
+            };
+            let found = compare::find_previous_baseline(&dir, Some(&out_path), Some(result.tier));
+            let path = match found {
+                Some(p) => p,
+                None => {
+                    println!(
+                        "no previous {}-tier BENCH_*.json in {} — baseline recorded, nothing to gate",
+                        result.tier.name(),
+                        dir.display()
+                    );
+                    return Ok(());
+                }
+            };
+            match compare::load(&path) {
+                Ok(b) => (b, path.display().to_string()),
+                Err(e) => arbocc::bail!("loading baseline {}: {e}", path.display()),
+            }
+        }
+    } else {
+        let path = std::path::PathBuf::from(cmp_flag);
+        match compare::load(&path) {
+            Ok(b) => (b, path.display().to_string()),
+            Err(e) => arbocc::bail!("loading baseline {}: {e}", path.display()),
+        }
+    };
+    arbocc::ensure!(
+        baseline.tier == result.tier,
+        "tier mismatch: baseline {baseline_name} is {}-tier but this run is {}-tier — \
+         smoke and full sweeps use different workload sizes and cannot be gated \
+         against each other",
+        baseline.tier.name(),
+        result.tier.name()
+    );
+    let cmp = compare::compare(&baseline, &result, &CompareConfig::default());
+    let md = arbocc::bench::report::render_comparison(&cmp);
+    println!("\n{md}");
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/COMPARE.md", &md)?;
+    if cmp.has_regressions() {
+        eprintln!(
+            "bench gate: {} regression(s) vs {baseline_name}",
+            cmp.regressions().len()
+        );
+        std::process::exit(1);
+    }
+    println!("bench gate: no regressions vs {baseline_name}");
+    Ok(())
+}
+
 fn cmd_report() -> Result<()> {
     let reports = arbocc::bench::report::load_reports(std::path::Path::new("reports"))?;
     if reports.is_empty() {
@@ -348,12 +482,15 @@ fn main() -> Result<()> {
         "mis" => cmd_mis(&args),
         "best-of-k" => cmd_best_of_k(&args),
         "forest" => cmd_forest(&args),
+        "bench" => cmd_bench(&args),
         "check" => cmd_check(&args),
         "report" => cmd_report(),
         "info" => cmd_info(),
         other => {
             eprintln!("unknown command '{other}'");
-            eprintln!("usage: arbocc <cluster|mis|best-of-k|forest|check|report|info> [--flags]");
+            eprintln!(
+                "usage: arbocc <cluster|mis|best-of-k|forest|bench|check|report|info> [--flags]"
+            );
             std::process::exit(2);
         }
     }

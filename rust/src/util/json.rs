@@ -182,7 +182,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, message: &str) -> ParseError {
         ParseError { offset: self.pos, message: message.to_string() }
     }
