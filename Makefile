@@ -4,6 +4,10 @@
 #   fmt          rustfmt check (kept separate from tier1)
 #   clippy       cargo clippy --all-targets -D warnings
 #   ci           tier1 + fmt + clippy
+#   examples     build + run the repo-root examples (quickstart + the
+#                solver-engine tour), as CI does
+#   solve-demo   the unified solver engine on a mixed multi-component
+#                workload: planner routing + sharded decomposition
 #   bench-smoke  perf-lab orchestrator, smoke tier (< ~5 min): runs every
 #                registered scenario at CI sizes and writes
 #                BENCH_$(BENCH_LABEL).json at the repo root
@@ -16,9 +20,9 @@
 #   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
-BENCH_LABEL ?= PR2
+BENCH_LABEL ?= PR3
 
-.PHONY: tier1 fmt clippy ci bench bench-smoke bench-full bench-gate
+.PHONY: tier1 fmt clippy ci examples solve-demo bench bench-smoke bench-full bench-gate
 
 # The gate every change must pass: release build + full test suite.
 tier1:
@@ -32,6 +36,16 @@ clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
 
 ci: tier1 fmt clippy
+
+examples:
+	cd rust && $(CARGO) run --release --example quickstart
+	cd rust && $(CARGO) run --release --example solver_engine
+
+solve-demo:
+	cd rust && $(CARGO) run --release -- solve --algo auto \
+		--family cliques-12 --n 2400 --seed 7
+	cd rust && $(CARGO) run --release -- solve --algo auto \
+		--family ba-3 --n 20000 --seed 7
 
 bench:
 	cd rust && $(CARGO) bench

@@ -1,0 +1,9 @@
+//! Solver-engine scenarios: planner overhead, per-component shard
+//! speedup, mixed-family auto routing. Thin wrapper over `solve/*`
+//! (`arbocc::bench::scenarios::solve`).
+//!
+//!     cargo bench --bench solve_engine [-- --tier smoke]
+
+fn main() {
+    arbocc::bench::suite::run_bin("solve_engine");
+}

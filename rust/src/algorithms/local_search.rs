@@ -30,15 +30,33 @@ pub struct LocalSearchRun {
 
 /// Refine `input` by single-vertex best moves until a pass makes no move
 /// or `max_passes` is hit. The cost never increases.
+///
+/// Perf note (§Perf P9): the labels are normalized to `[0, r)` up front
+/// and fresh singleton labels are recycled through a free list, so every
+/// label stays below `n + 2` — which lets the hot loop replace the three
+/// `HashMap`s (cluster sizes, per-vertex neighbor-label counts, and the
+/// size updates on move) with flat `Vec` tallies. The neighbor counts
+/// use scatter/gather with a `touched` list, so each vertex costs
+/// O(deg(v)) with no hashing and no per-vertex allocation. Candidate
+/// iteration follows adjacency order, making tie-breaking deterministic
+/// (the `HashMap` version's iteration order was not).
 pub fn local_search(g: &Graph, input: &Clustering, max_passes: usize) -> LocalSearchRun {
     let n = g.n();
     let norm = input.normalize();
     let mut labels: Vec<u32> = norm.labels().to_vec();
+    // Normalized labels are < n; recycled fresh labels never push the
+    // space past n + 1 (a fresh id is only minted when every smaller id
+    // is live, and at most n labels are ever live at once).
+    let cap = n + 2;
     let mut next_free = labels.iter().copied().max().map(|x| x + 1).unwrap_or(0);
-    let mut sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    let mut free: Vec<u32> = Vec::new();
+    let mut sizes: Vec<u64> = vec![0; cap];
     for &l in &labels {
-        *sizes.entry(l).or_insert(0) += 1;
+        sizes[l as usize] += 1;
     }
+    // Scatter/gather workspace for per-vertex neighbor-label counts.
+    let mut counts: Vec<u64> = vec![0; cap];
+    let mut touched: Vec<u32> = Vec::new();
 
     let initial_cost = cost(g, input).total();
     let mut moves = 0usize;
@@ -50,13 +68,15 @@ pub fn local_search(g: &Graph, input: &Clustering, max_passes: usize) -> LocalSe
         for v in 0..n as u32 {
             let current = labels[v as usize];
             // Count positive neighbors per adjacent cluster.
-            let mut nb_count: std::collections::HashMap<u32, u64> =
-                std::collections::HashMap::new();
             for &u in g.neighbors(v) {
-                *nb_count.entry(labels[u as usize]).or_insert(0) += 1;
+                let l = labels[u as usize];
+                if counts[l as usize] == 0 {
+                    touched.push(l);
+                }
+                counts[l as usize] += 1;
             }
-            let deg_in_current = nb_count.get(&current).copied().unwrap_or(0);
-            let size_current = sizes[&current];
+            let deg_in_current = counts[current as usize];
+            let size_current = sizes[current as usize];
             // Cost contribution of v in cluster C of size s with d
             // positive neighbors inside: (deg - d) positive disagreements
             // + (s - 1 - d) negative ones. The (deg) term is constant
@@ -69,11 +89,12 @@ pub fn local_search(g: &Graph, input: &Clustering, max_passes: usize) -> LocalSe
                 best_label = u32::MAX; // singleton marker
                 best_f = 0;
             }
-            for (&cand, &d) in &nb_count {
+            for &cand in &touched {
                 if cand == current {
                     continue;
                 }
-                let s = sizes[&cand];
+                let d = counts[cand as usize];
+                let s = sizes[cand as usize];
                 let f = s as i64 - 2 * d as i64; // joining: size becomes s+1
                 if f < best_f {
                     best_f = f;
@@ -82,17 +103,26 @@ pub fn local_search(g: &Graph, input: &Clustering, max_passes: usize) -> LocalSe
             }
             if best_label != current {
                 let target = if best_label == u32::MAX {
-                    let fresh = next_free;
-                    next_free += 1;
-                    fresh
+                    free.pop().unwrap_or_else(|| {
+                        let fresh = next_free;
+                        next_free += 1;
+                        fresh
+                    })
                 } else {
                     best_label
                 };
-                *sizes.get_mut(&current).unwrap() -= 1;
-                *sizes.entry(target).or_insert(0) += 1;
+                sizes[current as usize] -= 1;
+                if sizes[current as usize] == 0 {
+                    free.push(current);
+                }
+                sizes[target as usize] += 1;
                 labels[v as usize] = target;
                 moved_this_pass += 1;
             }
+            for &l in &touched {
+                counts[l as usize] = 0;
+            }
+            touched.clear();
         }
         moves += moved_this_pass;
         if moved_this_pass == 0 {

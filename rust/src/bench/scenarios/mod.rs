@@ -13,7 +13,10 @@
 //!   `e5_components`, `e6_degree_decay`, `e7_dependency`,
 //!   `ablation_constants`);
 //! * [`pipelines`] — forest matchings and exponentiation (`e8_forest`,
-//!   `e11_exponentiation`).
+//!   `e11_exponentiation`);
+//! * [`solve`] — the unified solver engine: planner overhead,
+//!   per-component shard speedup, mixed-family auto routing
+//!   (`solve_engine`).
 
 use crate::bench::suite::Registry;
 
@@ -21,6 +24,7 @@ pub mod clustering;
 pub mod mis;
 pub mod perf;
 pub mod pipelines;
+pub mod solve;
 
 /// Register the whole perf lab (what [`Registry::standard`] calls).
 pub fn register_all(r: &mut Registry) {
@@ -28,4 +32,5 @@ pub fn register_all(r: &mut Registry) {
     clustering::register(r);
     mis::register(r);
     pipelines::register(r);
+    solve::register(r);
 }

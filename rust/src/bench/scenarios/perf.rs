@@ -9,10 +9,12 @@
 //! P7  end-to-end best-of-K through the coordinator
 //! P8  sharded MPC executor: sequential vs multi-threaded MIS pipeline,
 //!     and best-of-K at 1 vs N workers — the measured shard speedups
+//! P9  local-search refinement passes (edges/s) — the Vec-tally hot loop
 
 use std::sync::Arc;
 
 use crate::algorithms::greedy_mis::greedy_mis;
+use crate::algorithms::local_search::local_search;
 use crate::algorithms::mpc_mis::{alg1_greedy_mis, Alg1Params};
 use crate::algorithms::pivot::pivot_random;
 use crate::bench::harness::bench_with;
@@ -80,6 +82,12 @@ pub fn register(r: &mut Registry) {
         bin: BIN,
         about: "sharded executor speedups (MIS pipeline + best-of-K pool)",
         run: p8_shard_speedup,
+    });
+    r.register(Scenario {
+        name: "perf/p9_local_search",
+        bin: BIN,
+        about: "local-search refinement passes (edges/s, Vec tallies)",
+        run: p9_local_search,
     });
 }
 
@@ -270,5 +278,25 @@ fn p8_shard_speedup(ctx: &ScenarioCtx) -> ScenarioRecord {
     rec.speedup_metric("bok_pool_speedup", &b1, &bw);
     rec.metric("shards", shards as f64, Direction::Info);
     rec.metric("mis_rounds", mis_rounds[0] as f64, Direction::Info);
+    rec
+}
+
+fn p9_local_search(ctx: &ScenarioCtx) -> ScenarioRecord {
+    // §Perf P9: the local-search hot loop (flat Vec tallies + label free
+    // list; the `HashMap`-tallied version this replaces is the perf-fix
+    // baseline the PR 3 delta is recorded against).
+    let cfg = ctx.bench_cfg();
+    let n = ctx.size(20_000, 200_000);
+    let mut rng = Rng::new(13_900);
+    let g = lambda_arboric(n, 4, &mut rng);
+    let start = pivot_random(&g, &mut rng);
+    let passes = 2usize;
+    let m = bench_with(&format!("P9 local search (n={n}, {passes} passes)"), &cfg, || {
+        std::hint::black_box(local_search(&g, &start, passes));
+    });
+    println!("{m}");
+    let mut rec = ScenarioRecord::new();
+    // Each pass touches every directed edge once: 2m per pass.
+    rec.rate_metric("edges_per_s", &m, (passes * 2 * g.m()) as f64);
     rec
 }

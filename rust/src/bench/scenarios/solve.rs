@@ -1,0 +1,160 @@
+//! Solver-engine scenarios (owned by the `solve_engine` bin):
+//!
+//! * `solve/planner_overhead`  — what the structure inspection costs
+//!   relative to the full auto-routed solve it steers;
+//! * `solve/component_speedup` — the per-component decomposition driver
+//!   at 1 shard vs all hardware threads on a multi-component workload
+//!   (the gated tentpole metric: sharding must beat a single shard);
+//! * `solve/mixed_families`    — auto-routed solves across forest, grid
+//!   and scale-free inputs, with the planner's routes asserted.
+
+use std::sync::Arc;
+
+use crate::bench::harness::bench_with;
+use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::graph::generators::{barabasi_albert, disjoint_union, grid, lambda_arboric, random_forest};
+use crate::graph::Graph;
+use crate::solve::{
+    plan, solve_decomposed, DriverConfig, SolveCtx, SolveRequest, SolverRegistry,
+};
+use crate::util::rng::Rng;
+use crate::util::table::fnum;
+
+const BIN: &str = "solve_engine";
+
+pub fn register(r: &mut Registry) {
+    r.register(Scenario {
+        name: "solve/planner_overhead",
+        bin: BIN,
+        about: "planner inspection cost vs the full auto-routed solve",
+        run: planner_overhead,
+    });
+    r.register(Scenario {
+        name: "solve/component_speedup",
+        bin: BIN,
+        about: "per-component sharded driver: 1 shard vs all threads",
+        run: component_speedup,
+    });
+    r.register(Scenario {
+        name: "solve/mixed_families",
+        bin: BIN,
+        about: "auto-routed solves across forest/grid/scale-free",
+        run: mixed_families,
+    });
+}
+
+fn planner_overhead(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let n = ctx.size(20_000, 200_000);
+    let mut rng = Rng::new(14_000);
+    let g = barabasi_albert(n, 3, &mut rng);
+    let mp = bench_with(&format!("planner inspection (n={n})"), &cfg, || {
+        std::hint::black_box(plan(&g, None));
+    });
+    println!("{mp}");
+    let registry = SolverRegistry::standard();
+    let auto = registry.get("auto").expect("auto registered");
+    let req = SolveRequest { seed: 42, ..SolveRequest::new(Arc::new(g)) };
+    let ms = bench_with(&format!("auto solve end-to-end (n={n})"), &cfg, || {
+        std::hint::black_box(auto.solve(&req, &mut SolveCtx::serial()));
+    });
+    println!("{ms}");
+    let frac = mp.median_s / ms.median_s.max(1e-12);
+    println!("    ⇒ planning is ×{} of the solve it steers", fnum(frac));
+    let mut rec = ScenarioRecord::new();
+    rec.time_metric("plan", &mp);
+    rec.time_metric("auto_solve", &ms);
+    rec.metric("plan_frac", frac, Direction::Info);
+    rec
+}
+
+fn component_speedup(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let k = 8usize;
+    let comp_n = ctx.size(4_000, 40_000);
+    let mut rng = Rng::new(14_100);
+    let parts: Vec<Graph> = (0..k).map(|_| lambda_arboric(comp_n, 3, &mut rng)).collect();
+    let g = Arc::new(disjoint_union(&parts));
+    let req = SolveRequest { seed: 7, ..SolveRequest::new(g) };
+    let registry = SolverRegistry::standard();
+
+    // Bit-identical stitched labels at both shard counts (the driver's
+    // tentpole invariant), checked outside the timed region.
+    let one = solve_decomposed(&req, &DriverConfig::auto(1), &registry).unwrap();
+    let many = solve_decomposed(&req, &DriverConfig::auto(shards), &registry).unwrap();
+    assert_eq!(
+        one.clustering.labels(),
+        many.clustering.labels(),
+        "sharded driver must be bit-identical to serial"
+    );
+
+    let m1 = bench_with(&format!("driver ({k}×{comp_n}, 1 shard)"), &cfg, || {
+        std::hint::black_box(
+            solve_decomposed(&req, &DriverConfig::auto(1), &registry).unwrap(),
+        );
+    });
+    println!("{m1}");
+    let mn = bench_with(&format!("driver ({k}×{comp_n}, {shards} shards)"), &cfg, || {
+        std::hint::black_box(
+            solve_decomposed(&req, &DriverConfig::auto(shards), &registry).unwrap(),
+        );
+    });
+    println!("{mn}");
+    println!(
+        "    ⇒ component-parallel speedup ×{}",
+        fnum(m1.median_s / mn.median_s.max(1e-12))
+    );
+
+    let mut rec = ScenarioRecord::new();
+    rec.speedup_metric("component_speedup", &m1, &mn);
+    rec.metric("components", k as f64, Direction::Info);
+    rec.metric("shards", shards as f64, Direction::Info);
+    rec
+}
+
+fn mixed_families(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let n = ctx.size(8_000, 80_000);
+    let side = (n as f64).sqrt().ceil() as usize;
+    let mut rng = Rng::new(14_200);
+    let workloads: Vec<(&str, Graph, &str)> = vec![
+        ("forest", random_forest(n, 0.9, &mut rng), "forest"),
+        ("grid", grid(side, side), "simple"),
+        ("ba", barabasi_albert(n, 3, &mut rng), "alg4-pivot"),
+    ];
+    let registry = SolverRegistry::standard();
+    let reqs: Vec<(&str, SolveRequest, &str)> = workloads
+        .into_iter()
+        .map(|(name, g, want)| (name, SolveRequest { seed: 5, ..SolveRequest::new(Arc::new(g)) }, want))
+        .collect();
+
+    // Route checks (cheap, outside the timed region): the planner picks
+    // the paper-correct solver per family.
+    for (name, req, want) in &reqs {
+        let p = plan(&req.graph, None);
+        assert_eq!(
+            &p.solver, want,
+            "{name}: planner picked {} instead of {want}",
+            p.solver
+        );
+    }
+
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let m = bench_with(&format!("auto solve, 3 families (n≈{n})"), &cfg, || {
+        for (_, req, _) in &reqs {
+            std::hint::black_box(
+                solve_decomposed(req, &DriverConfig::auto(shards), &registry).unwrap(),
+            );
+        }
+    });
+    println!("{m}");
+
+    let mut rec = ScenarioRecord::new();
+    rec.time_metric("three_family_solve", &m);
+    for (name, req, _) in &reqs {
+        let report = solve_decomposed(req, &DriverConfig::auto(shards), &registry).unwrap();
+        rec.metric(&format!("{name}_cost"), report.cost.total() as f64, Direction::Info);
+    }
+    rec
+}

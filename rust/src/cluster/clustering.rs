@@ -130,10 +130,35 @@ impl Clustering {
     /// `sub` are offset to avoid collisions.  This is the Algorithm 4 /
     /// Theorem 26 union step: `{{v} : v ∈ H} ∪ A(G')`.
     pub fn merge_subclustering(&mut self, sub: &Clustering, sub_old_ids: &[u32]) {
-        assert_eq!(sub.n(), sub_old_ids.len());
         let offset = self.labels.iter().copied().max().map(|x| x + 1).unwrap_or(0);
+        self.merge_subclustering_with_offset(sub, sub_old_ids, offset);
+    }
+
+    /// [`Self::merge_subclustering`] with the collision-avoiding offset
+    /// threaded explicitly: labels from `sub` land at `offset + label`,
+    /// and the first offset free *after* this merge is returned.
+    ///
+    /// This is the per-component stitch of the solve driver: merging k
+    /// component clusterings costs O(Σ|Cᵢ|) total instead of the O(k·n)
+    /// a max-scan per merge would pay, while the caller-supplied offsets
+    /// keep the result deterministic at every shard count.
+    pub fn merge_subclustering_with_offset(
+        &mut self,
+        sub: &Clustering,
+        sub_old_ids: &[u32],
+        offset: u32,
+    ) -> u32 {
+        assert_eq!(sub.n(), sub_old_ids.len());
+        let mut max_label = 0u32;
         for (i, &old) in sub_old_ids.iter().enumerate() {
-            self.labels[old as usize] = offset + sub.label(i as u32);
+            let l = sub.label(i as u32);
+            max_label = max_label.max(l);
+            self.labels[old as usize] = offset + l;
+        }
+        if sub_old_ids.is_empty() {
+            offset
+        } else {
+            offset + max_label + 1
         }
     }
 
@@ -197,6 +222,28 @@ mod tests {
         assert!(c.same_cluster(1, 3));
         assert!(!c.same_cluster(0, 1));
         assert_eq!(c.n_clusters(), 4);
+    }
+
+    #[test]
+    fn merge_with_offset_threads_disjoint_ranges() {
+        // Two disjoint sub-clusterings stitched with threaded offsets:
+        // labels never collide and the running offset advances by the
+        // sub label-space width each time.
+        let mut c = Clustering::singletons(6);
+        let a = Clustering::from_labels(vec![0, 0]);
+        let b = Clustering::from_labels(vec![1, 0, 1]);
+        let next = c.merge_subclustering_with_offset(&a, &[0, 1], 6);
+        assert_eq!(next, 7);
+        let next = c.merge_subclustering_with_offset(&b, &[2, 3, 4], next);
+        assert_eq!(next, 9);
+        assert!(c.same_cluster(0, 1));
+        assert!(c.same_cluster(2, 4));
+        assert!(!c.same_cluster(2, 3));
+        assert!(!c.same_cluster(1, 2));
+        assert_eq!(c.n_clusters(), 4); // {0,1}, {2,4}, {3}, {5}
+        // Empty merge is a no-op on the offset.
+        let empty = Clustering::from_labels(vec![]);
+        assert_eq!(c.merge_subclustering_with_offset(&empty, &[], 42), 42);
     }
 
     #[test]

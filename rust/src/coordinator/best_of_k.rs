@@ -13,11 +13,12 @@ use std::sync::Arc;
 
 use crate::cluster::cost::Cost;
 use crate::cluster::Clustering;
-use crate::coordinator::trial_rng;
+use crate::coordinator::{trial_rng, trial_seed};
 use crate::graph::Graph;
 use crate::mpc::pool::ShardPool;
 use crate::runtime::blocks::{BLOCK_BATCH, BLOCK_N};
 use crate::runtime::CostEngine;
+use crate::solve::{SolveCtx, SolveRequest, Solver};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -68,9 +69,56 @@ pub fn best_of_k(
     base_seed: u64,
     engine: &CostEngine,
 ) -> Result<BestOfK> {
+    let graph: &Graph = g;
+    best_of_k_with(g, k, workers, engine, |trial| {
+        let mut rng = trial_rng(base_seed, trial);
+        run_trial(graph, spec, &mut rng)
+    })
+}
+
+/// The solver-engine generalization of [`best_of_k`]: run `req.trials`
+/// independent copies of **any** registered [`Solver`], keep the best.
+///
+/// Each trial's request carries `trial_seed(req.seed, trial)` — the
+/// same per-trial derivation the closure path uses — so results are
+/// identical at every worker count, and a solver run through the
+/// coordinator at trial seed `s` reproduces a standalone
+/// `solver.solve` at seed `s`.
+pub fn best_of_k_solver(
+    req: &SolveRequest,
+    solver: &dyn Solver,
+    workers: usize,
+    engine: &CostEngine,
+) -> Result<BestOfK> {
+    let k = req.trials.max(1);
+    // Resolve the λ estimate once per run, not once per trial — the
+    // degeneracy peel is O(n + m) and the graph is the same every time.
+    let mut base = req.clone();
+    if base.lambda.is_none() {
+        base.lambda = Some(base.lambda_or_estimate());
+    }
+    best_of_k_with(&req.graph, k, workers, engine, |trial| {
+        let trial_req =
+            SolveRequest { seed: trial_seed(req.seed, trial), ..base.clone() };
+        solver.solve(&trial_req, &mut SolveCtx::serial()).clustering
+    })
+}
+
+/// Shared wave engine behind both entry points: `run(trial)` produces
+/// candidate `trial`'s clustering (it must be a function of the trial
+/// id only — never of scheduling).
+fn best_of_k_with<F>(
+    g: &Arc<Graph>,
+    k: usize,
+    workers: usize,
+    engine: &CostEngine,
+    run: F,
+) -> Result<BestOfK>
+where
+    F: Fn(usize) -> Clustering + Sync,
+{
     assert!(k >= 1);
     let pool = ShardPool::new(workers);
-    let graph: &Graph = g;
     let single_block = g.n() <= BLOCK_N;
     let wave_size = workers.max(1) * BLOCK_BATCH;
 
@@ -83,12 +131,7 @@ pub fn best_of_k(
         // collected in trial order.
         let mut wave: Vec<Clustering> = pool
             .run(end - start, |_, range| {
-                range
-                    .map(|i| {
-                        let mut rng = trial_rng(base_seed, start + i);
-                        run_trial(graph, spec, &mut rng)
-                    })
-                    .collect::<Vec<Clustering>>()
+                range.map(|i| run(start + i)).collect::<Vec<Clustering>>()
             })
             .into_iter()
             .flatten()
@@ -166,6 +209,40 @@ mod tests {
             best_of_k(&g, &TrialSpec::Alg4Pivot { lambda: 3, eps: 2.0 }, 6, 2, 11, &engine)
                 .unwrap();
         assert_eq!(run.best.n(), 400);
+    }
+
+    #[test]
+    fn solver_path_matches_closure_path() {
+        // TrialSpec::Pivot and the registered "pivot" solver share the
+        // per-trial seed derivation, so the generalized path reproduces
+        // the legacy closure path cost for cost.
+        let mut rng = Rng::new(254);
+        let g = Arc::new(lambda_arboric(180, 2, &mut rng));
+        let engine = CostEngine::native();
+        let via_spec = best_of_k(&g, &TrialSpec::Pivot, 6, 3, 17, &engine).unwrap();
+        let req = SolveRequest { seed: 17, trials: 6, ..SolveRequest::new(g.clone()) };
+        let solver = crate::solve::solvers::dispatch("pivot").unwrap();
+        let via_solver = best_of_k_solver(&req, solver.as_ref(), 3, &engine).unwrap();
+        assert_eq!(via_solver.costs, via_spec.costs);
+        assert_eq!(via_solver.best_cost, via_spec.best_cost);
+        assert_eq!(
+            via_solver.best.normalize().labels(),
+            via_spec.best.normalize().labels()
+        );
+    }
+
+    #[test]
+    fn solver_path_worker_count_invariant() {
+        let mut rng = Rng::new(255);
+        let g = Arc::new(lambda_arboric(150, 3, &mut rng));
+        let engine = CostEngine::native();
+        let req = SolveRequest { seed: 5, trials: 9, ..SolveRequest::new(g) };
+        let solver = crate::solve::solvers::dispatch("alg4-pivot").unwrap();
+        let one = best_of_k_solver(&req, solver.as_ref(), 1, &engine).unwrap();
+        for workers in [2usize, 8] {
+            let many = best_of_k_solver(&req, solver.as_ref(), workers, &engine).unwrap();
+            assert_eq!(many.costs, one.costs, "{workers} workers");
+        }
     }
 
     #[test]

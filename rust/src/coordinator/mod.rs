@@ -14,16 +14,22 @@
 
 pub mod best_of_k;
 
-pub use best_of_k::{best_of_k, BestOfK, TrialSpec};
+pub use best_of_k::{best_of_k, best_of_k_solver, BestOfK, TrialSpec};
 
 use crate::util::rng::Rng;
 
-/// Deterministic per-trial RNG: a function of `(base_seed, trial)` only,
-/// never of which worker thread runs the trial — the single source of the
-/// stream derivation, so trial results are identical at every worker
-/// count.
+/// Deterministic per-trial seed: a function of `(base_seed, trial)`
+/// only, never of which worker thread runs the trial — the single
+/// source of the stream derivation, so trial results are identical at
+/// every worker count. Solver-based trials feed this seed straight into
+/// `SolveRequest::seed`; RNG-based trials wrap it via [`trial_rng`].
+pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
+    base_seed ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Deterministic per-trial RNG over [`trial_seed`].
 pub fn trial_rng(base_seed: u64, trial: usize) -> Rng {
-    Rng::new(base_seed ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    Rng::new(trial_seed(base_seed, trial))
 }
 
 #[cfg(test)]

@@ -60,6 +60,42 @@ pub fn components(g: &Graph) -> Components {
     Components { label, count: count as usize }
 }
 
+/// Split a graph into one compact subgraph per connected component.
+///
+/// Returns, per component, the compacted [`Graph`] plus the
+/// old-id-of-new-id mapping (ascending original ids, so sorted CSR
+/// adjacency is preserved). One O(n + m) pass over the whole graph —
+/// unlike calling [`Graph::induced_compact`] per component, which would
+/// pay O(n) per component just for the keep mask. This is the substrate
+/// of the solve engine's per-component decomposition driver.
+pub fn split_components(g: &Graph, comps: &Components) -> Vec<(Graph, Vec<u32>)> {
+    let n = g.n();
+    assert_eq!(comps.label.len(), n);
+    let members = comps.members();
+    // Position of each vertex inside its own component.
+    let mut new_id = vec![0u32; n];
+    for m in &members {
+        for (i, &v) in m.iter().enumerate() {
+            new_id[v as usize] = i as u32;
+        }
+    }
+    members
+        .into_iter()
+        .map(|m| {
+            let mut offsets = Vec::with_capacity(m.len() + 1);
+            let mut neighbors = Vec::new();
+            offsets.push(0);
+            for &v in &m {
+                // Every neighbor shares v's component, so the mapped ids
+                // stay sorted (members are ascending original ids).
+                neighbors.extend(g.neighbors(v).iter().map(|&u| new_id[u as usize]));
+                offsets.push(neighbors.len());
+            }
+            (Graph::from_csr(offsets, neighbors), m)
+        })
+        .collect()
+}
+
 /// Is the vertex set `vs` a clique in g? (Checks degrees first: in a
 /// clique of size k every member has >= k-1 neighbors inside.)
 pub fn is_clique(g: &Graph, vs: &[u32]) -> bool {
@@ -167,6 +203,55 @@ mod tests {
         let g = clique(5);
         assert!(is_clique(&g, &[0, 1, 2, 3, 4]));
         assert!(is_clique(&g, &[1, 3]));
+    }
+
+    #[test]
+    fn split_components_partitions_edges_and_vertices() {
+        // Two cliques + an isolated vertex: 3 compact parts that cover
+        // every vertex and every edge exactly once.
+        let mut edges = vec![(0u32, 1u32), (1, 2), (0, 2)]; // K3 on {0,1,2}
+        edges.extend([(4, 5)]); // K2 on {4,5}; vertex 3 isolated
+        let g = Graph::from_edges(6, &edges);
+        let comps = components(&g);
+        let parts = split_components(&g, &comps);
+        assert_eq!(parts.len(), 3);
+        let total_n: usize = parts.iter().map(|(p, _)| p.n()).sum();
+        let total_m: usize = parts.iter().map(|(p, _)| p.m()).sum();
+        assert_eq!(total_n, 6);
+        assert_eq!(total_m, g.m());
+        // Mappings are ascending and mapped edges exist in the original.
+        for (part, old) in &parts {
+            assert_eq!(part.n(), old.len());
+            assert!(old.windows(2).all(|w| w[0] < w[1]));
+            for (u, v) in part.edges() {
+                assert!(g.has_edge(old[u as usize], old[v as usize]));
+            }
+        }
+        // The K3 part really is a clique.
+        let k3 = parts.iter().find(|(p, _)| p.n() == 3).unwrap();
+        assert!(is_clique(&k3.0, &[0, 1, 2]));
+    }
+
+    #[test]
+    fn split_components_random_forest_roundtrip() {
+        use crate::graph::generators::random_forest;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let g = random_forest(200, 0.7, &mut rng);
+        let comps = components(&g);
+        let parts = split_components(&g, &comps);
+        assert_eq!(parts.len(), comps.count);
+        let mut covered = vec![false; g.n()];
+        let mut total_m = 0usize;
+        for (part, old) in &parts {
+            total_m += part.m();
+            for &v in old {
+                assert!(!covered[v as usize], "vertex {v} in two parts");
+                covered[v as usize] = true;
+            }
+        }
+        assert!(covered.into_iter().all(|c| c));
+        assert_eq!(total_m, g.m());
     }
 
     #[test]

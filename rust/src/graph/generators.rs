@@ -302,6 +302,21 @@ pub fn planted_partition(
     (Graph::from_edges(n, &edges), labels)
 }
 
+/// Disjoint union of arbitrary parts: part `i`'s vertices are offset by
+/// the total size of parts `0..i`, with no cross edges.  The
+/// multi-component workload builder behind the solve engine's
+/// per-component decomposition tests and benchmarks.
+pub fn disjoint_union(parts: &[Graph]) -> Graph {
+    let n: usize = parts.iter().map(|g| g.n()).sum();
+    let mut edges = Vec::new();
+    let mut base = 0u32;
+    for g in parts {
+        edges.extend(g.edges().map(|(u, v)| (base + u, base + v)));
+        base += g.n() as u32;
+    }
+    Graph::from_edges(n, &edges)
+}
+
 /// A named workload registry used by the bench harness.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
@@ -475,6 +490,19 @@ mod tests {
         assert_eq!(c.count, 4);
         assert_eq!(g.m(), 4 * 45);
         let _ = labels;
+    }
+
+    #[test]
+    fn disjoint_union_offsets_parts() {
+        let u = disjoint_union(&[clique(3), path(4), Graph::empty(2)]);
+        assert_eq!(u.n(), 9);
+        assert_eq!(u.m(), 3 + 3);
+        let c = components(&u);
+        assert_eq!(c.count, 2 + 2); // K3, P4, two isolated vertices
+        assert!(u.has_edge(0, 2)); // inside the clique
+        assert!(u.has_edge(3, 4)); // path shifted by 3
+        assert!(!u.has_edge(2, 3)); // no cross edges
+        assert_eq!(disjoint_union(&[]).n(), 0);
     }
 
     #[test]

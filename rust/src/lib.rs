@@ -18,6 +18,10 @@
 //!   fallback.
 //! * [`coordinator`] — leader/worker orchestration and the best-of-K
 //!   scoring driver (Remark 14).
+//! * [`solve`] — the unified solver engine: one `Solver` trait over the
+//!   whole algorithm family, a structure-aware planner (Theorem 26 /
+//!   Corollary 27–32 decision tree), and the per-component sharded
+//!   decomposition driver.
 //! * [`bench`] — micro-benchmark harness and experiment workloads.
 //! * [`util`] — PRNG, statistics, JSON reports, property testing, CLI.
 //!
@@ -31,4 +35,5 @@ pub mod coordinator;
 pub mod graph;
 pub mod mpc;
 pub mod runtime;
+pub mod solve;
 pub mod util;

@@ -1,106 +1,132 @@
 //! `arbocc` — command-line launcher.
 //!
 //! Subcommands:
-//!   cluster   run a correlation-clustering algorithm on a generated
-//!             workload; report cost, lower-bound ratio and MPC rounds
+//!   solve     the unified solver engine: planner-routed (`--algo auto`)
+//!             or named solver, per-component sharded decomposition,
+//!             plan trace in the output
+//!   cluster   run one registered solver on a generated workload; report
+//!             cost, lower-bound ratio and MPC rounds
 //!   mis       run the MPC greedy-MIS pipeline; report round counts
-//!   best-of-k the Remark 14 driver through the coordinator + PJRT engine
+//!   best-of-k the Remark 14 driver: K trials of any registered solver
+//!             through the coordinator + PJRT engine
 //!   forest    matching-based forest algorithms (Corollary 31)
 //!   bench     the perf-lab orchestrator: run the scenario registry at a
 //!             tier, write BENCH_<label>.json, optionally gate against a
 //!             baseline (--compare [path]; exits 1 on regression)
 //!   check     verify PJRT artifacts against the native fallback
 //!   info      environment / artifact status
+//!
+//! Dispatch errors (unknown `--algo`, `--family`, `--method`, `--model`)
+//! exit with a one-line message, never a panic backtrace.
 
 use std::sync::Arc;
 
-use arbocc::util::error::Result;
+use arbocc::util::error::{Result, ResultExt};
 
-use arbocc::algorithms::alg4::alg4;
 use arbocc::algorithms::forest::clustering_from_matching;
 use arbocc::algorithms::matching::{approx_matching, maximal_matching, maximum_matching_forest};
 use arbocc::algorithms::mpc_mis::{
-    alg1_greedy_mis, direct_simulation_mis, mpc_pivot, Alg1Params, Alg2Params, Alg3Params,
-    Subroutine,
+    alg1_greedy_mis, direct_simulation_mis, Alg1Params, Alg2Params, Alg3Params, Subroutine,
 };
 use arbocc::algorithms::pivot::pivot_random;
-use arbocc::algorithms::simple::simple_clustering;
 use arbocc::cluster::cost::cost;
 use arbocc::cluster::triangles::packing_lower_bound;
-use arbocc::coordinator::{best_of_k, TrialSpec};
+use arbocc::coordinator::best_of_k_solver;
 use arbocc::graph::arboricity::estimate_arboricity;
 use arbocc::graph::generators::Family;
 use arbocc::graph::Graph;
-use arbocc::mpc::memory::Words;
-use arbocc::mpc::{MpcConfig, MpcSimulator};
+use arbocc::cluster::exact::MAX_EXACT_N;
 use arbocc::runtime::{BackendKind, CostEngine};
+use arbocc::solve::{
+    simulator_for, solve_decomposed, DriverConfig, ModelKind, SolveCtx, SolveReport,
+    SolveRequest, SolverRegistry,
+};
 use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
 use arbocc::util::table::{fnum, Table};
 use arbocc::util::timer::Timer;
 
-fn parse_family(s: &str) -> Family {
+fn parse_family(s: &str) -> Result<Family> {
+    fn parsed(part: &str, pat: &str) -> Result<usize> {
+        match part.parse() {
+            Ok(v) => Ok(v),
+            Err(_) => arbocc::bail!("bad --family parameter '{part}' (expected {pat})"),
+        }
+    }
     if let Some(l) = s.strip_prefix("arboric-") {
-        return Family::LambdaArboric(l.parse().expect("arboric-<λ>"));
+        return Ok(Family::LambdaArboric(parsed(l, "arboric-<λ>")?));
     }
     if let Some(m) = s.strip_prefix("ba-") {
-        return Family::BarabasiAlbert(m.parse().expect("ba-<m>"));
+        return Ok(Family::BarabasiAlbert(parsed(m, "ba-<m>")?));
     }
     if let Some(l) = s.strip_prefix("barbell-") {
-        return Family::Barbell(l.parse().expect("barbell-<λ>"));
+        return Ok(Family::Barbell(parsed(l, "barbell-<λ>")?));
     }
     if let Some(k) = s.strip_prefix("cliques-") {
-        return Family::DisjointCliques(k.parse().expect("cliques-<k>"));
+        return Ok(Family::DisjointCliques(parsed(k, "cliques-<k>")?));
     }
     match s {
-        "forest" => Family::Forest,
-        "grid" => Family::Grid,
-        "path" => Family::Path,
-        "star" => Family::Star,
-        _ => panic!(
-            "unknown family '{s}' (try forest|arboric-K|ba-M|grid|path|star|barbell-K|cliques-K)"
+        "forest" => Ok(Family::Forest),
+        "grid" => Ok(Family::Grid),
+        "path" => Ok(Family::Path),
+        "star" => Ok(Family::Star),
+        _ => arbocc::bail!(
+            "unknown --family '{s}' (try forest|arboric-K|ba-M|grid|path|star|barbell-K|cliques-K)"
         ),
     }
 }
 
 /// Workload source: `--input <edge-list file>` (SNAP format) or a named
 /// generator family (`--family`, `--n`).
-fn make_graph(args: &Args) -> (Graph, String, u64) {
+fn make_graph(args: &Args) -> Result<(Graph, String, u64)> {
     let seed = args.get_u64("seed", 1);
     if let Some(path) = args.get("input") {
-        let (g, _orig) =
-            arbocc::graph::io::read_edge_list_file(std::path::Path::new(path))
-                .unwrap_or_else(|e| panic!("reading --input {path}: {e}"));
-        return (g, format!("file:{path}"), seed);
+        let (g, _orig) = arbocc::graph::io::read_edge_list_file(std::path::Path::new(path))
+            .with_context(|| format!("reading --input {path}"))?;
+        return Ok((g, format!("file:{path}"), seed));
     }
-    let family = parse_family(&args.get_str("family", "arboric-3"));
+    let family = parse_family(&args.get_str("family", "arboric-3"))?;
     let n = args.get_usize("n", 10_000);
     let mut rng = Rng::new(seed);
     let g = family.generate(n, &mut rng);
-    (g, family.name(), seed)
+    Ok((g, family.name(), seed))
 }
 
-fn sim_for(g: &Graph, model: &str, delta: f64, seed: u64) -> MpcSimulator {
-    let words = (g.n() + 2 * g.m()).max(4) as Words;
-    let cfg = match model {
-        "m2" => MpcConfig::model2(g.n().max(2), words, delta),
-        _ => MpcConfig::model1(g.n().max(2), words, delta),
+/// The shared request shape every solver-engine command builds from the
+/// CLI flags (`--lambda`, `--eps`, `--model`, `--delta`, `--trials`).
+fn request_from_args(args: &Args, g: Graph, seed: u64) -> Result<SolveRequest> {
+    let model_s = args.get_str("model", "m1");
+    let Some(model) = ModelKind::parse(&model_s) else {
+        arbocc::bail!("unknown --model '{model_s}' (m1|m2)");
     };
-    // Seed keys the per-machine RNG streams (randomized schedules such as
-    // the matching proposal phase), keeping whole runs reproducible.
-    MpcSimulator::new(cfg).with_seed(seed)
+    let mut req = SolveRequest::new(Arc::new(g));
+    req.seed = seed;
+    req.lambda =
+        if args.has("lambda") { Some(args.get_usize("lambda", 1).max(1)) } else { None };
+    req.eps = args.get_f64("eps", 2.0);
+    req.model = model;
+    req.delta = args.get_f64("delta", 0.5);
+    req.trials = args.get_usize("trials", 1).max(1);
+    Ok(req)
 }
 
-fn cmd_cluster(args: &Args) -> Result<()> {
-    let (g, family, seed) = make_graph(args);
-    let algo = args.get_str("algo", "alg4-pivot");
-    let model = args.get_str("model", "m1");
-    let delta = args.get_f64("delta", 0.5);
-    let eps = args.get_f64("eps", 2.0);
-    let est = estimate_arboricity(&g);
-    let lambda = args.get_usize("lambda", est.degeneracy.max(1));
-    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+/// The standalone exact solver is hard-capped at n ≤ 14; dispatching it
+/// at a larger size must be a message, not a panic (the decomposition
+/// driver enforces its own per-component version of this).
+fn guard_exact_small(algo: &str, g: &Graph) -> Result<()> {
+    if algo == "exact-small" {
+        arbocc::ensure!(
+            g.n() <= MAX_EXACT_N,
+            "--algo exact-small is capped at n={MAX_EXACT_N} (got n={}); \
+             use --algo auto to solve tiny components exactly",
+            g.n()
+        );
+    }
+    Ok(())
+}
 
+fn print_graph_line(family: &str, g: &Graph) {
+    let est = estimate_arboricity(g);
     println!(
         "graph: {} n={} m={} Δ={} λ∈[{},{}]",
         family,
@@ -110,45 +136,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         est.density_lower_bound,
         est.degeneracy
     );
+}
 
-    let timer = Timer::start();
-    let mut rounds = None;
-    let clustering = match algo.as_str() {
-        "pivot" => pivot_random(&g, &mut rng),
-        "alg4-pivot" => alg4(&g, lambda, eps, |sub| pivot_random(sub, &mut rng)),
-        "mpc-pivot" => {
-            let mut sim = sim_for(&g, &model, delta, seed);
-            let sub = if model == "m2" {
-                Subroutine::Alg3(Alg3Params::default())
-            } else {
-                Subroutine::Alg2(Alg2Params::default())
-            };
-            let perm = rng.permutation(g.n());
-            let run =
-                mpc_pivot(&g, &perm, &Alg1Params { c_prefix: 1.0, subroutine: sub }, &mut sim);
-            rounds = Some(sim.n_rounds());
-            run.clustering
+fn print_report(req: &SolveRequest, report: &SolveReport) {
+    if !report.plan.is_empty() {
+        println!("plan:");
+        for line in &report.plan {
+            println!("  {line}");
         }
-        "simple" => {
-            let mut sim = sim_for(&g, &model, delta, seed);
-            let run = simple_clustering(&g, lambda, &mut sim);
-            rounds = Some(run.rounds);
-            run.clustering
-        }
-        other => panic!("unknown --algo '{other}' (pivot|alg4-pivot|mpc-pivot|simple)"),
-    };
-    let elapsed = timer.elapsed_s();
-
-    let c = cost(&g, &clustering);
-    let lb = packing_lower_bound(&g);
+    }
+    let c = report.cost;
     println!(
-        "algo={algo} cost={} (pos {}, neg {}) clusters={} max|C|={}",
+        "solver={} cost={} (pos {}, neg {}) clusters={} max|C|={}",
+        report.solver,
         c.total(),
         c.positive,
         c.negative,
-        clustering.n_clusters(),
-        clustering.max_cluster_size()
+        report.clustering.n_clusters(),
+        report.clustering.max_cluster_size()
     );
+    let lb = packing_lower_bound(&req.graph);
     if lb > 0 {
         println!(
             "bad-triangle packing LB={} ⇒ ratio ≤ {}",
@@ -156,17 +163,110 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             fnum(c.total() as f64 / lb as f64)
         );
     }
-    if let Some(r) = rounds {
-        println!("MPC rounds={r} (model={model}, δ={delta})");
+    if let Some(r) = report.mpc_rounds {
+        println!("MPC rounds={r} (model={}, δ={})", req.model.name(), req.delta);
     }
-    println!("wall time: {elapsed:.3}s");
+    println!("wall time: {:.3}s", report.wall_s);
+}
+
+/// The unified solver engine:
+///
+///   arbocc solve [--algo auto|<name>] [--family F --n N | --input path]
+///                [--shards S] [--exact-cutoff C] [--lambda λ] [--eps ε]
+///                [--model m1|m2] [--delta δ] [--trials K] [--list]
+///
+/// `--algo auto` routes each connected component through the planner's
+/// Theorem 26 / Corollary 27–32 decision tree; any registered solver
+/// name forces that algorithm. Components are solved concurrently on an
+/// S-shard pool (bit-identical results at every S). `--trials K > 1`
+/// runs the Remark 14 best-of-K driver over the whole graph instead.
+fn cmd_solve(args: &Args) -> Result<()> {
+    let registry = SolverRegistry::standard();
+    if args.get_bool("list") {
+        println!("{} registered solver(s):", registry.len());
+        for line in registry.describe() {
+            println!("  {line}");
+        }
+        return Ok(());
+    }
+    let (g, family, seed) = make_graph(args)?;
+    let algo = args.get_str("algo", "auto");
+    if registry.get(&algo).is_none() {
+        arbocc::bail!(
+            "unknown --algo '{algo}'; registered solvers:\n  {}",
+            registry.describe().join("\n  ")
+        );
+    }
+    let shards = args.get_usize(
+        "shards",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    );
+    let req = request_from_args(args, g, seed)?;
+    print_graph_line(&family, &req.graph);
+
+    if req.trials > 1 {
+        // Remark 14: K independent trials through the coordinator.
+        guard_exact_small(&algo, &req.graph)?;
+        let engine = if args.get_bool("native") {
+            CostEngine::native()
+        } else {
+            CostEngine::auto_default()
+        };
+        let solver = registry.get(&algo).expect("checked above");
+        let timer = Timer::start();
+        let run = best_of_k_solver(&req, solver, shards, &engine)?;
+        let worst = *run.costs.iter().max().unwrap();
+        println!(
+            "best-of-{} ({algo}): best={} worst={} (spread {}) in {:.3}s",
+            req.trials,
+            run.best_cost.total(),
+            worst,
+            worst - run.best_cost.total(),
+            timer.elapsed_s()
+        );
+        let lb = packing_lower_bound(&req.graph);
+        if lb > 0 {
+            println!(
+                "LB={lb} ⇒ best ratio ≤ {}",
+                fnum(run.best_cost.total() as f64 / lb as f64)
+            );
+        }
+        return Ok(());
+    }
+
+    let cfg = DriverConfig {
+        shards,
+        exact_cutoff: args.get_usize("exact-cutoff", 8),
+        algo: if algo == "auto" { None } else { Some(algo.clone()) },
+    };
+    let report = solve_decomposed(&req, &cfg, &registry)?;
+    print_report(&req, &report);
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let (g, family, seed) = make_graph(args)?;
+    let algo = args.get_str("algo", "alg4-pivot");
+    let registry = SolverRegistry::standard();
+    let Some(solver) = registry.get(&algo) else {
+        arbocc::bail!("unknown --algo '{algo}' (known: {})", registry.names().join("|"));
+    };
+    let req = request_from_args(args, g, seed ^ 0xC0FFEE)?;
+    guard_exact_small(&algo, &req.graph)?;
+    print_graph_line(&family, &req.graph);
+    let mut ctx = SolveCtx::serial();
+    let report = solver.solve(&req, &mut ctx);
+    print_report(&req, &report);
     Ok(())
 }
 
 fn cmd_mis(args: &Args) -> Result<()> {
-    let (g, family, seed) = make_graph(args);
+    let (g, family, seed) = make_graph(args)?;
     let delta = args.get_f64("delta", 0.5);
     let method = args.get_str("method", "alg2");
+    if !["alg2", "alg3", "direct", "all"].contains(&method.as_str()) {
+        arbocc::bail!("unknown --method '{method}' (alg2|alg3|direct|all)");
+    }
     let mut rng = Rng::new(seed ^ 0x5EED);
     let perm = rng.permutation(g.n());
 
@@ -176,12 +276,12 @@ fn cmd_mis(args: &Args) -> Result<()> {
     );
     let run_one = |method: &str, table: &mut Table| {
         let (model, sub) = match method {
-            "alg2" => ("m1", Subroutine::Alg2(Alg2Params::default())),
-            "alg3" => ("m2", Subroutine::Alg3(Alg3Params::default())),
-            "direct" => ("m1", Subroutine::Alg2(Alg2Params::default())),
-            other => panic!("unknown --method '{other}' (alg2|alg3|direct|all)"),
+            "alg2" => (ModelKind::M1, Subroutine::Alg2(Alg2Params::default())),
+            "alg3" => (ModelKind::M2, Subroutine::Alg3(Alg3Params::default())),
+            "direct" => (ModelKind::M1, Subroutine::Alg2(Alg2Params::default())),
+            other => unreachable!("--method '{other}' validated above"),
         };
-        let mut sim = sim_for(&g, model, delta, seed);
+        let mut sim = simulator_for(&g, model, delta, seed);
         let mis = if method == "direct" {
             direct_simulation_mis(&g, &perm, &mut sim)
         } else {
@@ -191,7 +291,7 @@ fn cmd_mis(args: &Args) -> Result<()> {
         let size = mis.iter().filter(|&&b| b).count();
         table.row(&[
             method.to_string(),
-            model.to_string(),
+            model.name().to_string(),
             sim.n_rounds().to_string(),
             size.to_string(),
         ]);
@@ -208,26 +308,30 @@ fn cmd_mis(args: &Args) -> Result<()> {
 }
 
 fn cmd_best_of_k(args: &Args) -> Result<()> {
-    let (g, family, seed) = make_graph(args);
+    let (g, family, seed) = make_graph(args)?;
     let k = args.get_usize("k", 16);
     let workers = args.get_usize("workers", 4);
-    let eps = args.get_f64("eps", 2.0);
-    let est = estimate_arboricity(&g);
-    let lambda = args.get_usize("lambda", est.degeneracy.max(1));
+    let algo = args.get_str("algo", "alg4-pivot");
+    let registry = SolverRegistry::standard();
+    let Some(solver) = registry.get(&algo) else {
+        arbocc::bail!("unknown --algo '{algo}' (known: {})", registry.names().join("|"));
+    };
+    let mut req = request_from_args(args, g, seed)?;
+    req.trials = k.max(1);
+    guard_exact_small(&algo, &req.graph)?;
     let engine =
         if args.get_bool("native") { CostEngine::native() } else { CostEngine::auto_default() };
     println!(
-        "backend: {:?}; workload {} n={} m={}; K={k}, workers={workers}",
+        "backend: {:?}; workload {} n={} m={}; algo={algo}, K={k}, workers={workers}",
         engine.kind(),
         family,
-        g.n(),
-        g.m()
+        req.graph.n(),
+        req.graph.m()
     );
-    let g = Arc::new(g);
     let timer = Timer::start();
-    let run = best_of_k(&g, &TrialSpec::Alg4Pivot { lambda, eps }, k, workers, seed, &engine)?;
+    let run = best_of_k_solver(&req, solver, workers, &engine)?;
     let elapsed = timer.elapsed_s();
-    let lb = packing_lower_bound(&g);
+    let lb = packing_lower_bound(&req.graph);
     let worst = *run.costs.iter().max().unwrap();
     println!(
         "best={} worst={} (spread {}); LB={} ⇒ best ratio ≤ {}",
@@ -262,7 +366,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
         "-".into(),
     ]);
     // Maximal (2-approx).
-    let mut sim = sim_for(&g, "m1", 0.5, seed);
+    let mut sim = simulator_for(&g, ModelKind::M1, 0.5, seed);
     let maximal = maximal_matching(&g, &mut rng, &mut sim, 64);
     let cm = clustering_from_matching(g.n(), &maximal.matching);
     table.row(&[
@@ -272,7 +376,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
         sim.n_rounds().to_string(),
     ]);
     // (1+ε).
-    let mut sim2 = sim_for(&g, "m1", 0.5, seed);
+    let mut sim2 = simulator_for(&g, ModelKind::M1, 0.5, seed);
     let approx = approx_matching(&g, maximal.matching.clone(), eps, &mut sim2);
     let ca = clustering_from_matching(g.n(), &approx.matching);
     table.row(&[
@@ -332,7 +436,7 @@ fn cmd_info() -> Result<()> {
 
 /// The perf-lab orchestrator (see DESIGN.md §perf-lab):
 ///
-///   arbocc bench [--tier smoke|full] [--label PR2] [--out path.json]
+///   arbocc bench [--tier smoke|full] [--label PR3] [--out path.json]
 ///                [--filter substr] [--compare [baseline.json]]
 ///                [--replay run.json] [--list]
 ///
@@ -474,10 +578,11 @@ fn cmd_report() -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn main() {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
-    match cmd {
+    let result = match cmd {
+        "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
         "mis" => cmd_mis(&args),
         "best-of-k" => cmd_best_of_k(&args),
@@ -489,9 +594,13 @@ fn main() -> Result<()> {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "usage: arbocc <cluster|mis|best-of-k|forest|bench|check|report|info> [--flags]"
+                "usage: arbocc <solve|cluster|mis|best-of-k|forest|bench|check|report|info> [--flags]"
             );
             std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
     }
 }

@@ -1,0 +1,300 @@
+//! The per-component decomposition driver: split, solve concurrently,
+//! stitch.
+//!
+//! Correlation clustering decomposes exactly over connected components
+//! of E+ (no optimal cluster ever spans two components — a split is
+//! free), so the driver:
+//!
+//! 1. splits the graph with `graph::components::split_components` (one
+//!    O(n + m) pass);
+//! 2. routes **and** solves each component concurrently on
+//!    [`ShardPool`] — the exact subset-DP solver on tiny components, the
+//!    planner's pick (or a caller-forced algorithm) elsewhere; the route
+//!    is a pure function of the component and each seed is a function of
+//!    `(request seed, component index)` only, so nothing depends on
+//!    scheduling — with every route recorded in the plan trace;
+//! 3. stitches labels back with
+//!    `Clustering::merge_subclustering_with_offset`, threading offsets
+//!    in component order.
+//!
+//! Partials are collected in shard order and every per-component seed is
+//! scheduling-independent, so the stitched clustering is **bit-identical
+//! at every shard count** — the same rule the PR 1 sharded MPC executor
+//! follows.
+
+use std::sync::Arc;
+
+use crate::cluster::cost::Cost;
+use crate::cluster::exact::MAX_EXACT_N;
+use crate::cluster::Clustering;
+use crate::graph::components::{components, split_components};
+use crate::mpc::pool::ShardPool;
+use crate::solve::{planner, SolveCtx, SolveReport, SolveRequest, SolverRegistry};
+use crate::util::error::Result;
+use crate::util::timer::Timer;
+
+/// How many routing lines the plan trace spells out per run; beyond
+/// this the trace summarizes (the decisions still happen, they just
+/// aren't individually printed).
+const TRACE_COMPONENT_CAP: usize = 16;
+
+/// Driver knobs.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// Shard-pool width for concurrent component solves.
+    pub shards: usize,
+    /// Components of at most this many vertices go to the exact
+    /// subset-DP solver (clamped to `cluster::exact::MAX_EXACT_N`).
+    pub exact_cutoff: usize,
+    /// Force one registry solver for all non-tiny components; `None`
+    /// lets the planner route each component.
+    pub algo: Option<String>,
+}
+
+impl DriverConfig {
+    /// Planner-routed driver at a given shard width.
+    pub fn auto(shards: usize) -> DriverConfig {
+        DriverConfig { shards, exact_cutoff: 8, algo: None }
+    }
+
+    /// Forced-algorithm driver at a given shard width.
+    pub fn named(algo: &str, shards: usize) -> DriverConfig {
+        DriverConfig { shards, exact_cutoff: 8, algo: Some(algo.to_string()) }
+    }
+}
+
+/// Stream tag separating component seeds from best-of-K trial seeds
+/// that may share the same base (a driver run inside trial `i` must not
+/// replay trial `i`'s own stream on its first component).
+const COMPONENT_STREAM_TAG: u64 = 0x636F_6D70_6F6E_656E; // "componen"
+
+/// Deterministic per-component seed: a function of `(base, component)`
+/// only, never of which shard solves the component. Derived through
+/// [`crate::coordinator::trial_seed`] so the index-mixing rule has one
+/// home, under a tag that decorrelates it from the trial streams.
+pub fn component_seed(base: u64, component: usize) -> u64 {
+    crate::coordinator::trial_seed(base ^ COMPONENT_STREAM_TAG, component)
+}
+
+/// Decompose, solve per component on the pool, stitch. Errors only on
+/// an unknown forced algorithm name.
+pub fn solve_decomposed(
+    req: &SolveRequest,
+    cfg: &DriverConfig,
+    registry: &SolverRegistry,
+) -> Result<SolveReport> {
+    let timer = Timer::start();
+    let g = &req.graph;
+    let n = g.n();
+    let mut ctx = SolveCtx::new(cfg.shards);
+
+    if let Some(name) = &cfg.algo {
+        crate::ensure!(
+            registry.get(name).is_some(),
+            "unknown solver '{name}' (known: {})",
+            registry.names().join("|")
+        );
+    }
+
+    let comps = components(g);
+    let parts: Vec<(Arc<crate::graph::Graph>, Vec<u32>)> = split_components(g, &comps)
+        .into_iter()
+        .map(|(part, old)| (Arc::new(part), old))
+        .collect();
+    // NB: the trace must stay shard-count independent (the tests pin
+    // run.plan across 1/2/8 shards), so the shard width is not noted.
+    let largest = parts.iter().map(|(p, _)| p.n()).max().unwrap_or(0);
+    ctx.note(format!("decompose: {} component(s), largest n={largest}", parts.len()));
+    // The subset-DP solver is hard-capped; clamp the cutoff (so an
+    // over-eager `--exact-cutoff` degrades to the cap instead of
+    // tripping the solver's assert) and refuse a forced exact-small on
+    // components beyond it — a message, never a panic backtrace.
+    let exact_cutoff = cfg.exact_cutoff.min(MAX_EXACT_N);
+    if cfg.algo.as_deref() == Some("exact-small") {
+        crate::ensure!(
+            largest <= MAX_EXACT_N,
+            "--algo exact-small is capped at component size {MAX_EXACT_N}, \
+             but the largest component has n={largest}"
+        );
+    }
+
+    // Forced algorithm, resolved once (a &'static str the pool threads
+    // can share).
+    let forced: Option<&'static str> =
+        cfg.algo.as_ref().map(|name| registry.get(name).expect("checked above").name());
+
+    // Route *and* solve each component on the pool. The route is a pure
+    // function of the component (planner inspection is O(n + m), a real
+    // share of small solves), and partials are collected in shard order,
+    // so both the trace and the clustering are shard-count independent.
+    let pool = ShardPool::new(cfg.shards);
+    let solved: Vec<(&'static str, Clustering, Option<usize>, Cost)> = pool
+        .run(parts.len(), |_, range| {
+            range
+                .map(|i| {
+                    let part = &parts[i].0;
+                    let route = if part.n() <= exact_cutoff {
+                        "exact-small"
+                    } else {
+                        match forced {
+                            Some(name) => name,
+                            None => planner::plan_component(part, req.lambda).solver,
+                        }
+                    };
+                    let sub_req = SolveRequest {
+                        graph: part.clone(),
+                        seed: component_seed(req.seed, i),
+                        lambda: req.lambda,
+                        eps: req.eps,
+                        model: req.model,
+                        delta: req.delta,
+                        trials: 1,
+                    };
+                    let solver = registry.get(route).expect("routes are registered");
+                    let mut sub_ctx = SolveCtx::serial();
+                    let rep = solver.solve(&sub_req, &mut sub_ctx);
+                    (route, rep.clustering, rep.mpc_rounds, rep.cost)
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+
+    for (i, ((part, _), (route, ..))) in parts.iter().zip(&solved).enumerate() {
+        if i < TRACE_COMPONENT_CAP {
+            ctx.note(format!("component {i}: n={} m={} -> {route}", part.n(), part.m()));
+        }
+    }
+    if parts.len() > TRACE_COMPONENT_CAP {
+        ctx.note(format!("… {} more component(s)", parts.len() - TRACE_COMPONENT_CAP));
+    }
+
+    // Stitch: labels [0, n) are the singleton base; component clusters
+    // land above it at threaded offsets, in component order.
+    let mut merged = Clustering::singletons(n);
+    let mut offset = n as u32;
+    let mut cost = Cost { positive: 0, negative: 0 };
+    let mut mpc_rounds: Option<usize> = None;
+    for ((_, clustering, rounds, part_cost), (_, old_ids)) in solved.iter().zip(&parts) {
+        offset = merged.merge_subclustering_with_offset(clustering, old_ids, offset);
+        cost.positive += part_cost.positive;
+        cost.negative += part_cost.negative;
+        // Components run on disjoint machine groups, so the fleet-wide
+        // round count is the slowest component, not the sum.
+        if let Some(r) = *rounds {
+            mpc_rounds = Some(mpc_rounds.unwrap_or(0).max(r));
+        }
+    }
+
+    let solver = format!("{}+components", cfg.algo.as_deref().unwrap_or("auto"));
+    Ok(SolveReport {
+        solver,
+        clustering: merged,
+        cost,
+        mpc_rounds,
+        wall_s: timer.elapsed_s(),
+        plan: ctx.trace().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost;
+    use crate::graph::generators::{clique, disjoint_union, grid, lambda_arboric, random_forest};
+    use crate::util::rng::Rng;
+
+    fn registry() -> SolverRegistry {
+        SolverRegistry::standard()
+    }
+
+    fn mixed_workload(seed: u64) -> crate::graph::Graph {
+        let mut rng = Rng::new(seed);
+        disjoint_union(&[
+            clique(6),
+            random_forest(60, 0.95, &mut rng),
+            grid(7, 7),
+            lambda_arboric(80, 3, &mut rng),
+        ])
+    }
+
+    #[test]
+    fn decomposed_cost_matches_stitched_clustering() {
+        let g = Arc::new(mixed_workload(600));
+        let req = SolveRequest { seed: 9, ..SolveRequest::new(g) };
+        let report = solve_decomposed(&req, &DriverConfig::auto(2), &registry()).unwrap();
+        assert_eq!(report.clustering.n(), req.graph.n());
+        // The summed per-component costs equal the cost of the stitched
+        // clustering (clusters never span components).
+        assert_eq!(report.cost, cost(&req.graph, &report.clustering));
+    }
+
+    #[test]
+    fn bit_identical_at_1_2_8_shards() {
+        let g = Arc::new(mixed_workload(601));
+        let req = SolveRequest { seed: 31, ..SolveRequest::new(g) };
+        let reg = registry();
+        let base = solve_decomposed(&req, &DriverConfig::auto(1), &reg).unwrap();
+        for shards in [2usize, 8] {
+            let run = solve_decomposed(&req, &DriverConfig::auto(shards), &reg).unwrap();
+            assert_eq!(
+                run.clustering.labels(),
+                base.clustering.labels(),
+                "{shards} shards must be bit-identical"
+            );
+            assert_eq!(run.cost, base.cost);
+            assert_eq!(run.mpc_rounds, base.mpc_rounds);
+        }
+    }
+
+    #[test]
+    fn tiny_components_go_exact() {
+        let g = Arc::new(disjoint_union(&[clique(4), clique(3), crate::graph::Graph::empty(1)]));
+        let req = SolveRequest::new(g);
+        let report = solve_decomposed(&req, &DriverConfig::auto(2), &registry()).unwrap();
+        // All components are cliques ≤ the exact cutoff: OPT is 0.
+        assert_eq!(report.cost.total(), 0);
+        assert!(report.plan.iter().any(|l| l.contains("exact-small")), "{:?}", report.plan);
+    }
+
+    #[test]
+    fn forced_algo_and_unknown_algo() {
+        let g = Arc::new(mixed_workload(602));
+        let req = SolveRequest::new(g);
+        let reg = registry();
+        let run = solve_decomposed(&req, &DriverConfig::named("pivot", 2), &reg).unwrap();
+        assert_eq!(run.clustering.n(), req.graph.n());
+        assert!(run.solver.starts_with("pivot"));
+        let err = solve_decomposed(&req, &DriverConfig::named("warp", 2), &reg);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("unknown solver"));
+    }
+
+    #[test]
+    fn exact_cutoff_clamps_and_forced_exact_small_errs() {
+        let g = Arc::new(lambda_arboric(40, 2, &mut Rng::new(604)));
+        let req = SolveRequest::new(g);
+        let reg = registry();
+        // An oversized cutoff degrades to the subset-DP cap instead of
+        // tripping the exact solver's assert.
+        let cfg = DriverConfig { shards: 2, exact_cutoff: 100, algo: None };
+        let run = solve_decomposed(&req, &cfg, &reg).unwrap();
+        assert_eq!(run.clustering.n(), req.graph.n());
+        // Forcing exact-small onto a too-big component is an error
+        // message, never a panic.
+        let err = solve_decomposed(&req, &DriverConfig::named("exact-small", 2), &reg);
+        assert!(err
+            .unwrap_err()
+            .to_string()
+            .contains("capped at component size"));
+    }
+
+    #[test]
+    fn component_seed_is_stable_and_decorrelated() {
+        assert_eq!(component_seed(7, 3), component_seed(7, 3));
+        let seeds: std::collections::HashSet<u64> =
+            (0..64).map(|i| component_seed(42, i)).collect();
+        assert_eq!(seeds.len(), 64);
+    }
+}

@@ -1,0 +1,254 @@
+//! The unified solver engine: one request → plan → execute → report
+//! surface over the paper's whole algorithm family.
+//!
+//! The paper is a *family* of algorithms keyed on structure — matching
+//! solvers for forests (Corollaries 27/29/31), the O(λ²) simple
+//! algorithm (Corollary 32), Algorithm 4 + PIVOT / MPC-PIVOT for general
+//! λ-arboric graphs (Theorem 26, Corollary 28) — and this module gives
+//! them a single shape:
+//!
+//! * [`SolveRequest`] — graph, seed, λ hint, ε, MPC model/budget, trials;
+//! * [`Solver`] — `fn solve(&self, req, ctx) -> SolveReport`, implemented
+//!   by an adapter per algorithm ([`solvers`]) and addressed by name
+//!   through [`registry::SolverRegistry`];
+//! * [`planner`] — inspects the input (arboricity sandwich, forest
+//!   detection, component histogram) and auto-selects the paper-correct
+//!   solver per the Theorem 26 / Corollary 27–32 decision tree;
+//! * [`driver`] — per-component decomposition: split with
+//!   `graph::components`, solve components concurrently on
+//!   `mpc::pool::ShardPool` (exact solver on tiny components, planned
+//!   solver elsewhere), stitch labels back deterministically.
+//!
+//! Every future algorithm lands as one registry entry; `arbocc solve`,
+//! the best-of-K coordinator and the bench scenarios all speak this API.
+
+pub mod driver;
+pub mod planner;
+pub mod registry;
+pub mod solvers;
+
+pub use driver::{solve_decomposed, DriverConfig};
+pub use planner::{plan, plan_component, Plan};
+pub use registry::SolverRegistry;
+
+use std::sync::Arc;
+
+use crate::cluster::cost::Cost;
+use crate::cluster::Clustering;
+use crate::graph::arboricity::estimate_arboricity;
+use crate::graph::Graph;
+use crate::mpc::memory::Words;
+use crate::mpc::{MpcConfig, MpcSimulator};
+use crate::util::timer::Timer;
+
+/// Which MPC model an MPC-backed solver simulates (paper §1.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Model 1: strongly sublinear local memory, Alg2 shattering.
+    M1,
+    /// Model 2: relaxed total memory, Alg3 exponentiation.
+    M2,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::M1 => "m1",
+            ModelKind::M2 => "m2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "m1" => Some(ModelKind::M1),
+            "m2" => Some(ModelKind::M2),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a solver needs to run: the shared request shape that
+/// replaces the old per-algorithm free-function signatures.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    /// The positive-edge graph.
+    pub graph: Arc<Graph>,
+    /// Base seed: every random choice a solver makes derives from it.
+    pub seed: u64,
+    /// Arboricity hint; `None` means "estimate via the degeneracy peel".
+    pub lambda: Option<usize>,
+    /// ε for Algorithm 4's degree threshold / (1+ε) matchings / baseline
+    /// sampling.
+    pub eps: f64,
+    /// MPC model simulated by MPC-backed solvers.
+    pub model: ModelKind,
+    /// Memory sublinearity parameter δ of the MPC budget.
+    pub delta: f64,
+    /// Best-of-K trials (Remark 14); 1 means a single run.
+    pub trials: usize,
+}
+
+impl SolveRequest {
+    /// Request with the conventional defaults (seed 1, ε = 2, Model 1,
+    /// δ = 0.5, one trial, λ estimated).
+    pub fn new(graph: Arc<Graph>) -> SolveRequest {
+        SolveRequest {
+            graph,
+            seed: 1,
+            lambda: None,
+            eps: 2.0,
+            model: ModelKind::M1,
+            delta: 0.5,
+            trials: 1,
+        }
+    }
+
+    /// The λ the algorithms should use: the hint when given, otherwise
+    /// the degeneracy end of the arboricity sandwich (≥ 1).
+    pub fn lambda_or_estimate(&self) -> usize {
+        match self.lambda {
+            Some(l) => l.max(1),
+            None => estimate_arboricity(&self.graph).degeneracy.max(1),
+        }
+    }
+
+    /// A fresh simulator sized for this request's graph and model, with
+    /// the request seed keying the per-machine RNG streams.
+    pub fn simulator(&self) -> MpcSimulator {
+        simulator_for(&self.graph, self.model, self.delta, self.seed)
+    }
+}
+
+/// The one home of the MPC budget sizing every CLI and solver path
+/// uses: input words `(n + 2m).max(4)`, Model 1/2 config, seeded
+/// per-machine RNG streams.
+pub fn simulator_for(g: &Graph, model: ModelKind, delta: f64, seed: u64) -> MpcSimulator {
+    let words = (g.n() + 2 * g.m()).max(4) as Words;
+    let cfg = match model {
+        ModelKind::M2 => MpcConfig::model2(g.n().max(2), words, delta),
+        ModelKind::M1 => MpcConfig::model1(g.n().max(2), words, delta),
+    };
+    MpcSimulator::new(cfg).with_seed(seed)
+}
+
+/// Per-solve execution context: shard width for anything that fans out,
+/// plus the plan trace the engine accumulates (planner decisions,
+/// per-component routing) and hands back in the report.
+#[derive(Debug, Clone)]
+pub struct SolveCtx {
+    shards: usize,
+    trace: Vec<String>,
+}
+
+impl SolveCtx {
+    pub fn new(shards: usize) -> SolveCtx {
+        SolveCtx { shards: shards.max(1), trace: Vec::new() }
+    }
+
+    /// Single-shard context (the sequential engine).
+    pub fn serial() -> SolveCtx {
+        SolveCtx::new(1)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Append a plan-trace line (shown in reports and asserted by the
+    /// planner tests).
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.trace.push(line.into());
+    }
+
+    pub fn trace(&self) -> &[String] {
+        &self.trace
+    }
+}
+
+/// What every solve hands back.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// Name of the solver that actually ran (registry key).
+    pub solver: String,
+    pub clustering: Clustering,
+    pub cost: Cost,
+    /// Simulated MPC rounds, when the solver charges them.
+    pub mpc_rounds: Option<usize>,
+    pub wall_s: f64,
+    /// The plan trace: planner decisions and per-component routing.
+    pub plan: Vec<String>,
+}
+
+/// A correlation-clustering solver behind the unified engine.
+///
+/// `Send + Sync` so solvers can be shared across the shard pool (the
+/// per-component driver and the best-of-K coordinator both fan solver
+/// calls out to scoped threads).
+pub trait Solver: Send + Sync {
+    /// Registry key (`arbocc solve --algo <name>`).
+    fn name(&self) -> &'static str;
+    /// One-line description for `--list`-style output.
+    fn about(&self) -> &'static str;
+    /// Run on the request's graph. Implementations must be deterministic
+    /// in `req.seed` and independent of `ctx.shards()`.
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport;
+}
+
+/// Shared tail of every adapter: score the clustering, snapshot the plan
+/// trace, stamp the wall time.
+pub(crate) fn finish(
+    req: &SolveRequest,
+    ctx: &SolveCtx,
+    solver: &str,
+    clustering: Clustering,
+    mpc_rounds: Option<usize>,
+    timer: Timer,
+) -> SolveReport {
+    let cost = crate::cluster::cost::cost(&req.graph, &clustering);
+    SolveReport {
+        solver: solver.to_string(),
+        clustering,
+        cost,
+        mpc_rounds,
+        wall_s: timer.elapsed_s(),
+        plan: ctx.trace().to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::lambda_arboric;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn request_defaults_and_lambda_estimate() {
+        let mut rng = Rng::new(400);
+        let g = Arc::new(lambda_arboric(200, 2, &mut rng));
+        let req = SolveRequest::new(g);
+        assert_eq!(req.seed, 1);
+        assert_eq!(req.trials, 1);
+        assert!(req.lambda_or_estimate() >= 1);
+        let hinted = SolveRequest { lambda: Some(7), ..req };
+        assert_eq!(hinted.lambda_or_estimate(), 7);
+    }
+
+    #[test]
+    fn model_kind_parses() {
+        assert_eq!(ModelKind::parse("m1"), Some(ModelKind::M1));
+        assert_eq!(ModelKind::parse("m2"), Some(ModelKind::M2));
+        assert_eq!(ModelKind::parse("m3"), None);
+        assert_eq!(ModelKind::M2.name(), "m2");
+    }
+
+    #[test]
+    fn ctx_trace_accumulates() {
+        let mut ctx = SolveCtx::new(4);
+        assert_eq!(ctx.shards(), 4);
+        ctx.note("planner: forest");
+        ctx.note("route -> forest");
+        assert_eq!(ctx.trace().len(), 2);
+        assert!(ctx.trace()[0].contains("forest"));
+        assert_eq!(SolveCtx::serial().shards(), 1);
+    }
+}

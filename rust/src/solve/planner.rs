@@ -1,0 +1,178 @@
+//! The structure-aware planner: inspect the input, pick the
+//! paper-correct solver.
+//!
+//! Decision tree (Theorem 26 / Corollaries 27–32):
+//!
+//! ```text
+//! n ≤ 14                 → exact-small   (subset DP is free at this size)
+//! degeneracy ≤ 1 (forest)→ forest        (maximum matching = OPT, Cor. 27)
+//! λ ≤ 2                  → simple        (O(λ²)-approx in O(1) rounds, Cor. 32)
+//! otherwise              → alg4-pivot    (Theorem 26: filter high degrees,
+//!                                         PIVOT inside, max{1+ε,3}-approx)
+//! ```
+//!
+//! λ is the hint when the caller supplies one, otherwise the degeneracy
+//! end of the arboricity sandwich (`graph::arboricity`). The plan also
+//! carries the evidence — bounds, forest flag, component histogram — so
+//! reports can show *why* a route was taken and tests can assert it.
+
+use crate::cluster::exact::MAX_EXACT_N;
+use crate::graph::arboricity::estimate_arboricity;
+use crate::graph::components::components;
+use crate::graph::Graph;
+
+/// Largest λ for which the O(λ²) simple algorithm is the planner's
+/// pick: at λ ≤ 2 its approximation factor matches the constant-factor
+/// alternatives while running in O(1) deterministic rounds.
+pub const SIMPLE_LAMBDA_MAX: usize = 2;
+
+/// A routing decision with its evidence.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Registry name of the chosen solver.
+    pub solver: &'static str,
+    /// Arboricity sandwich `[density witness, degeneracy]`.
+    pub lambda_bounds: (usize, usize),
+    /// λ the decision used (hint or degeneracy estimate).
+    pub lambda_used: usize,
+    pub is_forest: bool,
+    pub n_components: usize,
+    pub largest_component: usize,
+    /// Human-readable decision trail (becomes the plan trace).
+    pub reasons: Vec<String>,
+}
+
+/// Route a graph per the decision tree above.
+pub fn plan(g: &Graph, lambda_hint: Option<usize>) -> Plan {
+    let comps = components(g);
+    let largest = comps.sizes().into_iter().max().unwrap_or(0);
+    plan_inner(g, lambda_hint, comps.count, largest)
+}
+
+/// [`plan`] for a single connected component — the decomposition
+/// driver's per-part call. Skips the redundant component labelling (the
+/// part is connected by construction), saving an O(n + m) pass per
+/// component on the hot decomposition path.
+pub fn plan_component(g: &Graph, lambda_hint: Option<usize>) -> Plan {
+    plan_inner(g, lambda_hint, 1.min(g.n()), g.n())
+}
+
+fn plan_inner(
+    g: &Graph,
+    lambda_hint: Option<usize>,
+    n_components: usize,
+    largest: usize,
+) -> Plan {
+    let est = estimate_arboricity(g);
+    let bounds = est.bounds();
+    let lambda_used = lambda_hint.map(|l| l.max(1)).unwrap_or_else(|| est.degeneracy.max(1));
+    let is_forest = est.degeneracy <= 1;
+    let mut reasons = vec![format!(
+        "n={} m={} components={} largest={} λ∈[{},{}] λ_used={}{}",
+        g.n(),
+        g.m(),
+        n_components,
+        largest,
+        bounds.0,
+        bounds.1,
+        lambda_used,
+        if lambda_hint.is_some() { " (hint)" } else { "" }
+    )];
+
+    let solver = if g.n() <= MAX_EXACT_N {
+        reasons.push(format!("n ≤ {MAX_EXACT_N}: subset DP is exact and cheap"));
+        "exact-small"
+    } else if is_forest {
+        reasons.push("degeneracy ≤ 1: forest — maximum matching is optimal (Cor. 27)".into());
+        "forest"
+    } else if lambda_used <= SIMPLE_LAMBDA_MAX {
+        reasons.push(format!(
+            "λ ≤ {SIMPLE_LAMBDA_MAX}: O(λ²) simple algorithm in O(1) rounds (Cor. 32)"
+        ));
+        "simple"
+    } else {
+        reasons.push("general λ-arboric: Algorithm 4 + PIVOT (Theorem 26)".into());
+        "alg4-pivot"
+    };
+
+    Plan {
+        solver,
+        lambda_bounds: bounds,
+        lambda_used,
+        is_forest,
+        n_components,
+        largest_component: largest,
+        reasons,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{barabasi_albert, grid, lambda_arboric, random_forest};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiny_graphs_route_to_exact() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        assert_eq!(plan(&g, None).solver, "exact-small");
+    }
+
+    #[test]
+    fn forests_route_to_matching() {
+        let mut rng = Rng::new(500);
+        let g = random_forest(300, 0.9, &mut rng);
+        let p = plan(&g, None);
+        assert_eq!(p.solver, "forest");
+        assert!(p.is_forest);
+        // Even a λ hint does not override the structural forest check.
+        assert_eq!(plan(&g, Some(5)).solver, "forest");
+    }
+
+    #[test]
+    fn grids_route_to_simple() {
+        let g = grid(20, 20);
+        let p = plan(&g, None);
+        assert_eq!(p.solver, "simple", "grid degeneracy 2 → simple: {:?}", p.reasons);
+        assert_eq!(p.lambda_bounds.1, 2);
+    }
+
+    #[test]
+    fn scale_free_routes_to_alg4() {
+        let mut rng = Rng::new(501);
+        let g = barabasi_albert(2000, 3, &mut rng);
+        let p = plan(&g, None);
+        assert_eq!(p.solver, "alg4-pivot", "{:?}", p.reasons);
+    }
+
+    #[test]
+    fn hint_overrides_estimate() {
+        let mut rng = Rng::new(502);
+        // Union of 4 trees: degeneracy can exceed SIMPLE_LAMBDA_MAX, but
+        // an explicit λ=2 hint forces the simple route.
+        let g = lambda_arboric(500, 4, &mut rng);
+        if plan(&g, None).solver == "alg4-pivot" {
+            assert_eq!(plan(&g, Some(2)).solver, "simple");
+        }
+    }
+
+    #[test]
+    fn plan_component_matches_plan_on_connected_inputs() {
+        let g = grid(12, 12);
+        let a = plan(&g, None);
+        let b = plan_component(&g, None);
+        assert_eq!(a.solver, b.solver);
+        assert_eq!(a.n_components, b.n_components);
+        assert_eq!(a.largest_component, b.largest_component);
+        assert_eq!(a.reasons, b.reasons);
+    }
+
+    #[test]
+    fn plan_carries_component_evidence() {
+        let g = crate::graph::generators::disjoint_cliques(5, 17);
+        let p = plan(&g, None);
+        assert_eq!(p.n_components, 5);
+        assert_eq!(p.largest_component, 17);
+        assert!(!p.reasons.is_empty());
+    }
+}

@@ -1,0 +1,70 @@
+//! Name-addressable solver registry: the single lookup surface behind
+//! `arbocc solve --algo <name>`, the best-of-K coordinator and the
+//! bench scenarios.
+
+use crate::solve::solvers::{dispatch, SOLVER_NAMES};
+use crate::solve::Solver;
+
+/// All registered solvers, addressable by name.
+pub struct SolverRegistry {
+    solvers: Vec<Box<dyn Solver>>,
+}
+
+impl SolverRegistry {
+    /// Every adapter in [`crate::solve::solvers`].
+    pub fn standard() -> SolverRegistry {
+        let solvers = SOLVER_NAMES
+            .iter()
+            .map(|&name| dispatch(name).expect("SOLVER_NAMES entries must dispatch"))
+            .collect();
+        SolverRegistry { solvers }
+    }
+
+    /// Look a solver up by registry name.
+    pub fn get(&self, name: &str) -> Option<&dyn Solver> {
+        self.solvers.iter().find(|s| s.name() == name).map(|b| b.as_ref())
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.solvers.iter().map(|s| s.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.solvers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.solvers.is_empty()
+    }
+
+    /// `name (about)` lines for CLI listings and error messages.
+    pub fn describe(&self) -> Vec<String> {
+        self.solvers.iter().map(|s| format!("{:<16} {}", s.name(), s.about())).collect()
+    }
+}
+
+impl Default for SolverRegistry {
+    fn default() -> SolverRegistry {
+        SolverRegistry::standard()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_registry_has_all_families() {
+        let r = SolverRegistry::standard();
+        assert!(r.len() >= 12, "expected the full family, got {}", r.len());
+        for name in ["pivot", "alg4-pivot", "mpc-pivot", "simple", "forest", "exact-small",
+            "parallel-pivot", "c4", "clusterwild", "auto"]
+        {
+            assert!(r.get(name).is_some(), "{name} missing from registry");
+        }
+        assert!(r.get("unknown").is_none());
+        assert_eq!(r.names().len(), r.len());
+        assert_eq!(r.describe().len(), r.len());
+    }
+}

@@ -1,0 +1,450 @@
+//! Adapter implementations of [`Solver`]: one per algorithm in the
+//! paper (plus the §1.4 baselines), each translating the shared
+//! [`SolveRequest`] into the algorithm's native signature.
+//!
+//! [`dispatch`] is the single factory the registry and the auto solver
+//! both build from, so a solver exists exactly once and "every future
+//! algorithm lands as one registry entry" stays true.
+
+use crate::algorithms::alg4::alg4;
+use crate::algorithms::baselines::{c4, clusterwild, parallel_pivot};
+use crate::algorithms::forest::clustering_from_matching;
+use crate::algorithms::matching::{approx_matching, maximal_matching, maximum_matching_forest};
+use crate::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Alg2Params, Alg3Params, Subroutine};
+use crate::algorithms::pivot::pivot_random;
+use crate::algorithms::simple::simple_clustering;
+use crate::cluster::exact::{solve_exact, MAX_EXACT_N};
+use crate::graph::arboricity::estimate_arboricity;
+use crate::solve::{finish, planner, ModelKind, SolveCtx, SolveReport, SolveRequest, Solver};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Build a solver by registry name. `None` for unknown names — the
+/// caller (CLI, registry) turns that into a listed error.
+pub fn dispatch(name: &str) -> Option<Box<dyn Solver>> {
+    match name {
+        "pivot" => Some(Box::new(PivotSolver)),
+        "alg4-pivot" => Some(Box::new(Alg4PivotSolver)),
+        "mpc-pivot" => Some(Box::new(MpcPivotSolver)),
+        "simple" => Some(Box::new(SimpleSolver)),
+        "forest" => Some(Box::new(ForestSolver)),
+        "forest-maximal" => Some(Box::new(ForestMaximalSolver)),
+        "forest-approx" => Some(Box::new(ForestApproxSolver)),
+        "exact-small" => Some(Box::new(ExactSmallSolver)),
+        "parallel-pivot" => Some(Box::new(ParallelPivotSolver)),
+        "c4" => Some(Box::new(C4Solver)),
+        "clusterwild" => Some(Box::new(ClusterWildSolver)),
+        "auto" => Some(Box::new(AutoSolver)),
+        _ => None,
+    }
+}
+
+/// Every registry name, in registration order.
+pub const SOLVER_NAMES: &[&str] = &[
+    "pivot",
+    "alg4-pivot",
+    "mpc-pivot",
+    "simple",
+    "forest",
+    "forest-maximal",
+    "forest-approx",
+    "exact-small",
+    "parallel-pivot",
+    "c4",
+    "clusterwild",
+    "auto",
+];
+
+/// Sequential PIVOT (ACN'05) with a seed-derived permutation.
+pub struct PivotSolver;
+
+impl Solver for PivotSolver {
+    fn name(&self) -> &'static str {
+        "pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "PIVOT, 3-approx in expectation (ACN'05)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let c = pivot_random(&req.graph, &mut rng);
+        finish(req, ctx, self.name(), c, None, timer)
+    }
+}
+
+/// Algorithm 4 / Theorem 26: high-degree vertices become singletons,
+/// PIVOT runs inside on the bounded-degree rest.
+pub struct Alg4PivotSolver;
+
+impl Solver for Alg4PivotSolver {
+    fn name(&self) -> &'static str {
+        "alg4-pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "Algorithm 4 + PIVOT inside (Theorem 26, max{1+ε,3}-approx)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let lambda = req.lambda_or_estimate();
+        let mut rng = Rng::new(req.seed);
+        let c = alg4(&req.graph, lambda, req.eps, |sub| pivot_random(sub, &mut rng));
+        finish(req, ctx, self.name(), c, None, timer)
+    }
+}
+
+/// MPC PIVOT (Corollary 28): Algorithm 1's greedy MIS — Alg2 shattering
+/// in Model 1, Alg3 exponentiation in Model 2 — plus the cluster join.
+pub struct MpcPivotSolver;
+
+impl Solver for MpcPivotSolver {
+    fn name(&self) -> &'static str {
+        "mpc-pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "MPC PIVOT via Algorithms 1-3 (Corollary 28), rounds charged"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut sim = req.simulator();
+        let sub = match req.model {
+            ModelKind::M2 => Subroutine::Alg3(Alg3Params::default()),
+            ModelKind::M1 => Subroutine::Alg2(Alg2Params::default()),
+        };
+        let mut rng = Rng::new(req.seed);
+        let perm = rng.permutation(req.graph.n());
+        let run = mpc_pivot(
+            &req.graph,
+            &perm,
+            &Alg1Params { c_prefix: 1.0, subroutine: sub },
+            &mut sim,
+        );
+        let rounds = sim.n_rounds();
+        finish(req, ctx, self.name(), run.clustering, Some(rounds), timer)
+    }
+}
+
+/// The O(λ²) deterministic simple algorithm in O(1) rounds
+/// (Corollary 32): clique components become clusters.
+pub struct SimpleSolver;
+
+impl Solver for SimpleSolver {
+    fn name(&self) -> &'static str {
+        "simple"
+    }
+
+    fn about(&self) -> &'static str {
+        "O(λ²)-approx in O(1) MPC rounds (Corollary 32)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let lambda = req.lambda_or_estimate();
+        let mut sim = req.simulator();
+        let run = simple_clustering(&req.graph, lambda, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+    }
+}
+
+/// Matching-based forest solver (Corollary 27): a maximum matching's
+/// clustering is *optimal* on forests. On a non-forest input it degrades
+/// gracefully to the maximal-matching clustering (Lemma 29 shape).
+pub struct ForestSolver;
+
+impl Solver for ForestSolver {
+    fn name(&self) -> &'static str {
+        "forest"
+    }
+
+    fn about(&self) -> &'static str {
+        "maximum-matching clustering, optimal on forests (Corollary 27)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let g = &req.graph;
+        let is_forest = estimate_arboricity(g).degeneracy <= 1;
+        if is_forest {
+            let m = maximum_matching_forest(g);
+            let c = clustering_from_matching(g.n(), &m);
+            return finish(req, ctx, self.name(), c, None, timer);
+        }
+        // Cycles present: the leaf-peel solver does not apply; fall back
+        // to the 2-approximate maximal matching and say so in the trace.
+        ctx.note("forest: input has cycles -> maximal matching fallback (2-approx)");
+        let mut rng = Rng::new(req.seed);
+        let mut sim = req.simulator();
+        let run = maximal_matching(g, &mut rng, &mut sim, 64);
+        let c = clustering_from_matching(g.n(), &run.matching);
+        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+    }
+}
+
+/// Randomized MPC maximal matching (2-approx on forests, Corollary 31).
+pub struct ForestMaximalSolver;
+
+impl Solver for ForestMaximalSolver {
+    fn name(&self) -> &'static str {
+        "forest-maximal"
+    }
+
+    fn about(&self) -> &'static str {
+        "MPC maximal-matching clustering (2-approx on forests)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let mut sim = req.simulator();
+        let run = maximal_matching(&req.graph, &mut rng, &mut sim, 64);
+        let c = clustering_from_matching(req.graph.n(), &run.matching);
+        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+    }
+}
+
+/// (1+ε)-approximate matching via bounded augmenting paths
+/// (Corollary 29/31), seeded from a maximal matching.
+pub struct ForestApproxSolver;
+
+impl Solver for ForestApproxSolver {
+    fn name(&self) -> &'static str {
+        "forest-approx"
+    }
+
+    fn about(&self) -> &'static str {
+        "(1+eps)-approx matching clustering (Corollaries 29/31)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let mut sim = req.simulator();
+        let maximal = maximal_matching(&req.graph, &mut rng, &mut sim, 64);
+        let run = approx_matching(&req.graph, maximal.matching, req.eps, &mut sim);
+        let c = clustering_from_matching(req.graph.n(), &run.matching);
+        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+    }
+}
+
+/// Exact optimum by subset DP — tiny instances only (n ≤ 14).
+pub struct ExactSmallSolver;
+
+impl Solver for ExactSmallSolver {
+    fn name(&self) -> &'static str {
+        "exact-small"
+    }
+
+    fn about(&self) -> &'static str {
+        "exact optimum by subset DP (n <= 14)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        assert!(
+            req.graph.n() <= MAX_EXACT_N,
+            "exact-small is capped at n={MAX_EXACT_N}, got n={} — use the planner",
+            req.graph.n()
+        );
+        let timer = Timer::start();
+        let (c, _) = solve_exact(&req.graph);
+        finish(req, ctx, self.name(), c, None, timer)
+    }
+}
+
+/// ParallelPivot (CDK, KDD'14) — §1.4 baseline.
+pub struct ParallelPivotSolver;
+
+impl Solver for ParallelPivotSolver {
+    fn name(&self) -> &'static str {
+        "parallel-pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "ParallelPivot baseline (CDK KDD'14, §1.4)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let perm = rng.permutation(req.graph.n());
+        let mut sim = req.simulator();
+        let run = parallel_pivot(&req.graph, &perm, req.eps, &mut rng, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+    }
+}
+
+/// C4 (PPORRJ, NeurIPS'15) — §1.4 baseline.
+pub struct C4Solver;
+
+impl Solver for C4Solver {
+    fn name(&self) -> &'static str {
+        "c4"
+    }
+
+    fn about(&self) -> &'static str {
+        "C4 baseline (PPORRJ NeurIPS'15, §1.4)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let perm = rng.permutation(req.graph.n());
+        let mut sim = req.simulator();
+        let run = c4(&req.graph, &perm, req.eps, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+    }
+}
+
+/// ClusterWild! (PPORRJ, NeurIPS'15) — §1.4 baseline.
+pub struct ClusterWildSolver;
+
+impl Solver for ClusterWildSolver {
+    fn name(&self) -> &'static str {
+        "clusterwild"
+    }
+
+    fn about(&self) -> &'static str {
+        "ClusterWild! baseline (PPORRJ NeurIPS'15, §1.4)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let perm = rng.permutation(req.graph.n());
+        let mut sim = req.simulator();
+        let run = clusterwild(&req.graph, &perm, req.eps, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+    }
+}
+
+/// The planner-backed solver: inspect the input, route to the
+/// paper-correct algorithm, record the decision in the plan trace.
+pub struct AutoSolver;
+
+impl Solver for AutoSolver {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn about(&self) -> &'static str {
+        "planner: route per the Theorem 26 / Corollary 27-32 tree"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let plan = planner::plan(&req.graph, req.lambda);
+        for line in &plan.reasons {
+            ctx.note(format!("planner: {line}"));
+        }
+        ctx.note(format!("route -> {}", plan.solver));
+        let solver = dispatch(plan.solver).expect("planner routes to registered solvers");
+        let mut report = solver.solve(req, ctx);
+        report.solver = format!("auto:{}", plan.solver);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::cost;
+    use crate::graph::generators::{disjoint_cliques, lambda_arboric, random_forest};
+    use crate::graph::Graph;
+    use std::sync::Arc;
+
+    fn req_for(g: Graph) -> SolveRequest {
+        SolveRequest { seed: 77, ..SolveRequest::new(Arc::new(g)) }
+    }
+
+    #[test]
+    fn every_name_dispatches() {
+        for &name in SOLVER_NAMES {
+            let s = dispatch(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(s.name(), name);
+            assert!(!s.about().is_empty());
+        }
+        assert!(dispatch("nope").is_none());
+    }
+
+    #[test]
+    fn all_solvers_produce_valid_partitions() {
+        let mut rng = Rng::new(401);
+        let g = lambda_arboric(60, 2, &mut rng);
+        let req = req_for(g);
+        for &name in SOLVER_NAMES {
+            if name == "exact-small" {
+                continue; // capped at n <= 14, covered below
+            }
+            let solver = dispatch(name).unwrap();
+            let mut ctx = SolveCtx::serial();
+            let report = solver.solve(&req, &mut ctx);
+            assert_eq!(report.clustering.n(), req.graph.n(), "{name}");
+            assert_eq!(
+                report.cost,
+                cost(&req.graph, &report.clustering),
+                "{name}: reported cost must match the clustering"
+            );
+        }
+    }
+
+    #[test]
+    fn solvers_are_seed_deterministic() {
+        let mut rng = Rng::new(402);
+        let g = lambda_arboric(80, 3, &mut rng);
+        let req = req_for(g);
+        for &name in ["pivot", "alg4-pivot", "mpc-pivot", "auto"].iter() {
+            let solver = dispatch(name).unwrap();
+            let a = solver.solve(&req, &mut SolveCtx::serial());
+            let b = solver.solve(&req, &mut SolveCtx::serial());
+            assert_eq!(a.clustering, b.clustering, "{name}");
+        }
+    }
+
+    #[test]
+    fn exact_small_is_optimal() {
+        let mut rng = Rng::new(403);
+        let g = lambda_arboric(10, 2, &mut rng);
+        let opt = crate::cluster::exact::exact_cost(&g);
+        let req = req_for(g);
+        let report = dispatch("exact-small").unwrap().solve(&req, &mut SolveCtx::serial());
+        assert_eq!(report.cost.total(), opt);
+    }
+
+    #[test]
+    fn forest_solver_optimal_on_forest_and_graceful_on_cycles() {
+        let mut rng = Rng::new(404);
+        let f = random_forest(40, 0.9, &mut rng);
+        let req = req_for(f);
+        let report = dispatch("forest").unwrap().solve(&req, &mut SolveCtx::serial());
+        let opt_matching = maximum_matching_forest(&req.graph);
+        assert_eq!(
+            report.cost.total(),
+            (req.graph.m() - opt_matching.len()) as u64
+        );
+        // Non-forest input: no panic, fallback noted in the trace.
+        let g = disjoint_cliques(3, 4);
+        let req2 = req_for(g);
+        let mut ctx = SolveCtx::serial();
+        let report2 = dispatch("forest").unwrap().solve(&req2, &mut ctx);
+        assert_eq!(report2.clustering.n(), req2.graph.n());
+        assert!(report2.plan.iter().any(|l| l.contains("fallback")));
+    }
+
+    #[test]
+    fn auto_records_route_in_plan_trace() {
+        let mut rng = Rng::new(405);
+        let g = random_forest(80, 0.9, &mut rng);
+        let req = req_for(g);
+        let report = dispatch("auto").unwrap().solve(&req, &mut SolveCtx::serial());
+        assert!(report.solver.starts_with("auto:"));
+        assert!(
+            report.plan.iter().any(|l| l.starts_with("route -> ")),
+            "plan trace must record the route: {:?}",
+            report.plan
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Integration tests for the unified solver engine: planner-selection
+//! properties, per-component decomposition correctness, and the
+//! shard-count determinism of `solve --algo auto`.
+
+use std::sync::Arc;
+
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::exact::MAX_EXACT_N;
+use arbocc::cluster::Clustering;
+use arbocc::graph::components::{components, split_components};
+use arbocc::graph::generators::{
+    barabasi_albert, clique, disjoint_union, grid, lambda_arboric, random_forest, random_tree,
+};
+use arbocc::prop_check;
+use arbocc::solve::driver::component_seed;
+use arbocc::solve::{
+    plan, solve_decomposed, DriverConfig, SolveCtx, SolveRequest, SolverRegistry,
+};
+use arbocc::util::prop::forall;
+use arbocc::util::rng::Rng;
+
+#[test]
+fn prop_forests_route_to_matching_solvers() {
+    forall("forest inputs always route to matching solvers", 30, |rng, size| {
+        let g = random_forest(size.max(4), 0.85, rng);
+        let p = plan(&g, None);
+        if g.n() <= MAX_EXACT_N {
+            prop_check!(p.solver == "exact-small", "tiny forest: got {}", p.solver);
+        } else {
+            prop_check!(p.is_forest);
+            prop_check!(p.solver == "forest", "forest routed to {}", p.solver);
+            // A λ hint never overrides the structural forest check.
+            prop_check!(plan(&g, Some(4)).solver == "forest");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_low_lambda_routes_to_simple() {
+    forall("λ ≤ 2 routes to the simple algorithm (non-forest)", 25, |rng, size| {
+        let n = size.max(8) + MAX_EXACT_N; // always above the exact cutoff
+        let g = lambda_arboric(n, 2, rng);
+        let p = plan(&g, Some(2));
+        if p.is_forest {
+            prop_check!(p.solver == "forest");
+        } else {
+            prop_check!(p.solver == "simple", "λ=2 hint routed to {}", p.solver);
+        }
+        // Without the hint, a degeneracy estimate above 2 falls through
+        // to Algorithm 4 — the general-λ branch.
+        let free = plan(&g, None);
+        prop_check!(
+            ["forest", "simple", "alg4-pivot"].contains(&free.solver),
+            "unexpected route {}",
+            free.solver
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn auto_routes_are_paper_correct_per_family() {
+    // The acceptance check: forest, grid and scale-free inputs pick the
+    // paper-correct solver, asserted via the plan trace of an auto solve.
+    let mut rng = Rng::new(900);
+    let cases: Vec<(&str, arbocc::graph::Graph, &str)> = vec![
+        ("forest", random_tree(3_000, &mut rng), "-> forest"),
+        ("grid", grid(40, 40), "-> simple"),
+        ("scale-free", barabasi_albert(3_000, 3, &mut rng), "-> alg4-pivot"),
+    ];
+    let registry = SolverRegistry::standard();
+    for (family, g, want) in cases {
+        let req = SolveRequest { seed: 11, ..SolveRequest::new(Arc::new(g)) };
+        let report = solve_decomposed(&req, &DriverConfig::auto(2), &registry).unwrap();
+        assert!(
+            report.plan.iter().any(|line| line.ends_with(want)),
+            "{family}: no '{want}' in plan trace {:?}",
+            report.plan
+        );
+        assert_eq!(report.cost, cost(&req.graph, &report.clustering), "{family}");
+    }
+}
+
+#[test]
+fn disjoint_union_solve_equals_per_component_solve_merged() {
+    // The driver on a disjoint union must equal the hand-rolled serial
+    // reference: split, solve each component at its derived seed, stitch
+    // with threaded offsets.
+    let mut rng = Rng::new(901);
+    let g = disjoint_union(&[
+        random_tree(400, &mut rng),
+        grid(15, 15),
+        barabasi_albert(300, 3, &mut rng),
+        clique(5),
+        lambda_arboric(200, 2, &mut rng),
+    ]);
+    let registry = SolverRegistry::standard();
+    let req = SolveRequest { seed: 23, ..SolveRequest::new(Arc::new(g)) };
+    let cfg = DriverConfig::auto(4);
+
+    // Reference: strictly serial, one component at a time.
+    let comps = components(&req.graph);
+    let parts = split_components(&req.graph, &comps);
+    let mut merged = Clustering::singletons(req.graph.n());
+    let mut offset = req.graph.n() as u32;
+    let mut total = 0u64;
+    for (i, (part, old_ids)) in parts.into_iter().enumerate() {
+        let route = if part.n() <= cfg.exact_cutoff {
+            "exact-small"
+        } else {
+            plan(&part, None).solver
+        };
+        let sub_req = SolveRequest {
+            graph: Arc::new(part),
+            seed: component_seed(req.seed, i),
+            ..req.clone()
+        };
+        let rep = registry.get(route).unwrap().solve(&sub_req, &mut SolveCtx::serial());
+        total += rep.cost.total();
+        offset = merged.merge_subclustering_with_offset(&rep.clustering, &old_ids, offset);
+    }
+
+    let driver = solve_decomposed(&req, &cfg, &registry).unwrap();
+    assert_eq!(driver.clustering.labels(), merged.labels());
+    assert_eq!(driver.cost.total(), total);
+    // And the summed component costs are the true cost of the stitched
+    // clustering — disagreements never cross components.
+    assert_eq!(driver.cost, cost(&req.graph, &driver.clustering));
+}
+
+#[test]
+fn auto_solve_is_bit_identical_at_1_2_8_shards() {
+    let mut rng = Rng::new(902);
+    let g = disjoint_union(&[
+        random_forest(600, 0.9, &mut rng),
+        grid(20, 20),
+        barabasi_albert(500, 3, &mut rng),
+        lambda_arboric(400, 3, &mut rng),
+    ]);
+    let registry = SolverRegistry::standard();
+    let req = SolveRequest { seed: 37, ..SolveRequest::new(Arc::new(g)) };
+    let base = solve_decomposed(&req, &DriverConfig::auto(1), &registry).unwrap();
+    for shards in [2usize, 8] {
+        let run = solve_decomposed(&req, &DriverConfig::auto(shards), &registry).unwrap();
+        assert_eq!(
+            run.clustering.labels(),
+            base.clustering.labels(),
+            "{shards} shards diverged from serial"
+        );
+        assert_eq!(run.cost, base.cost, "{shards} shards");
+        assert_eq!(run.plan, base.plan, "{shards} shards: plan trace must not depend on shards");
+    }
+}
+
+#[test]
+fn forced_algo_applies_to_all_big_components() {
+    let mut rng = Rng::new(903);
+    let g = disjoint_union(&[
+        lambda_arboric(300, 2, &mut rng),
+        lambda_arboric(300, 3, &mut rng),
+    ]);
+    let registry = SolverRegistry::standard();
+    let req = SolveRequest { seed: 3, ..SolveRequest::new(Arc::new(g)) };
+    let run = solve_decomposed(&req, &DriverConfig::named("pivot", 2), &registry).unwrap();
+    assert!(run.solver.starts_with("pivot"));
+    assert!(
+        run.plan.iter().any(|l| l.ends_with("-> pivot")),
+        "forced route missing: {:?}",
+        run.plan
+    );
+}
