@@ -4,10 +4,13 @@
 #   fmt          rustfmt check (kept separate from tier1)
 #   clippy       cargo clippy --all-targets -D warnings
 #   ci           tier1 + fmt + clippy
-#   examples     build + run the repo-root examples (quickstart + the
-#                solver-engine tour), as CI does
+#   examples     build + run the repo-root examples (quickstart, the
+#                solver-engine tour and the dataset pipeline), as CI does
 #   solve-demo   the unified solver engine on a mixed multi-component
 #                workload: planner routing + sharded decomposition
+#   gen-demo     the dataset pipeline end to end: `arbocc gen` a corpus
+#                spec into an arbocc-csr snapshot, `arbocc convert` it to
+#                a text edge list, then `arbocc solve --input` both
 #   bench-smoke  perf-lab orchestrator, smoke tier (< ~5 min): runs every
 #                registered scenario at CI sizes and writes
 #                BENCH_$(BENCH_LABEL).json at the repo root
@@ -22,7 +25,7 @@
 CARGO ?= cargo
 BENCH_LABEL ?= PR3
 
-.PHONY: tier1 fmt clippy ci examples solve-demo bench bench-smoke bench-full bench-gate
+.PHONY: tier1 fmt clippy ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
 
 # The gate every change must pass: release build + full test suite.
 tier1:
@@ -40,6 +43,19 @@ ci: tier1 fmt clippy
 examples:
 	cd rust && $(CARGO) run --release --example quickstart
 	cd rust && $(CARGO) run --release --example solver_engine
+	cd rust && $(CARGO) run --release --example dataset_pipeline
+
+gen-demo:
+	cd rust && $(CARGO) run --release -- gen --list
+	cd rust && $(CARGO) run --release -- gen planted:n=2000,k=8,seed=7 \
+		-o /tmp/arbocc_gen_demo.csr
+	cd rust && $(CARGO) run --release -- convert /tmp/arbocc_gen_demo.csr \
+		/tmp/arbocc_gen_demo.edges
+	cd rust && $(CARGO) run --release -- solve --input /tmp/arbocc_gen_demo.csr \
+		--algo auto
+	cd rust && $(CARGO) run --release -- solve --input /tmp/arbocc_gen_demo.edges \
+		--algo auto
+	rm -f /tmp/arbocc_gen_demo.csr /tmp/arbocc_gen_demo.edges
 
 solve-demo:
 	cd rust && $(CARGO) run --release -- solve --algo auto \

@@ -1,0 +1,69 @@
+//! The dataset subsystem in one sitting:
+//!
+//!     cargo run --release --example dataset_pipeline
+//!
+//! Addresses a workload by corpus spec, snapshots it to the
+//! `arbocc-csr/v1` binary format, re-encodes it as a text edge list,
+//! reloads both with auto-detection, and feeds the snapshot to the
+//! unified solver engine — the same pipeline as
+//!
+//!     arbocc gen planted:n=2000,k=8,seed=7 -o g.csr
+//!     arbocc convert g.csr g.edges
+//!     arbocc solve --input g.csr --algo auto
+
+use std::sync::Arc;
+
+use arbocc::cluster::cost::cost;
+use arbocc::cluster::triangles::packing_lower_bound;
+use arbocc::data::corpus::{describe_families, WorkloadSpec};
+use arbocc::data::{load_graph, save_graph};
+use arbocc::solve::{solve_decomposed, DriverConfig, SolveRequest, SolverRegistry};
+
+fn main() {
+    // 1. The corpus: every workload family is addressable by string.
+    println!("generator corpus ({} families):", describe_families().len());
+    for line in describe_families().iter().take(5) {
+        println!("  {line}");
+    }
+    println!("  …");
+
+    // 2. Address one instance by spec and generate it.
+    let spec = WorkloadSpec::parse("planted:n=2000,k=8,seed=7").expect("spec parses");
+    let g = spec.generate().expect("spec generates");
+    println!("\nworkload {}: n={} m={} Δ={}", spec.canonical(), g.n(), g.m(), g.max_degree());
+
+    // 3. Snapshot + edge-list round trips through real files.
+    let dir = std::env::temp_dir().join(format!("arbocc_pipeline_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let csr = dir.join("g.csr");
+    let edges = dir.join("g.edges");
+    let fmt = save_graph(&g, &csr).expect("write snapshot");
+    println!("wrote {} ({fmt})", csr.display());
+    let (from_csr, stats) = load_graph(&csr).expect("load snapshot");
+    println!("reloaded: {}", stats.describe());
+    assert_eq!(from_csr, g, "snapshot round-trip must be lossless");
+    let fmt = save_graph(&from_csr, &edges).expect("write edge list");
+    println!("converted to {} ({fmt})", edges.display());
+    let (from_edges, stats) = load_graph(&edges).expect("load edge list");
+    println!("reloaded: {}", stats.describe());
+    assert_eq!(from_edges, g, "edge-list round-trip must be lossless");
+
+    // 4. Feed the snapshot to the solver engine, exactly as
+    //    `arbocc solve --input g.csr --algo auto` does.
+    let registry = SolverRegistry::standard();
+    let req = SolveRequest { seed: 7, ..SolveRequest::new(Arc::new(from_csr)) };
+    let report = solve_decomposed(&req, &DriverConfig::auto(2), &registry)
+        .expect("auto driver cannot fail");
+    assert_eq!(report.cost, cost(&req.graph, &report.clustering));
+    let lb = packing_lower_bound(&req.graph);
+    println!(
+        "\nsolver={} cost={} clusters={} (LB {lb} ⇒ ratio ≤ {:.3})",
+        report.solver,
+        report.cost.total(),
+        report.clustering.n_clusters(),
+        report.cost.total() as f64 / lb.max(1) as f64
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("dataset_pipeline OK");
+}

@@ -1,0 +1,10 @@
+//! Dataset-subsystem lab: ingest throughput (edge list / CSV /
+//! `arbocc-csr` snapshot), round-trip fidelity, and the corpus sweep.
+//! Thin wrapper over `data/*` + `solve/corpus_sweep`
+//! (`arbocc::bench::scenarios::data`).
+//!
+//!     cargo bench --bench data_lab [-- --tier smoke]
+
+fn main() {
+    arbocc::bench::suite::run_bin("data_lab");
+}

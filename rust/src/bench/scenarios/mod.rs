@@ -16,11 +16,14 @@
 //!   `e11_exponentiation`);
 //! * [`solve`] — the unified solver engine: planner overhead,
 //!   per-component shard speedup, mixed-family auto routing
-//!   (`solve_engine`).
+//!   (`solve_engine`);
+//! * [`data`] — the dataset subsystem: ingest/snapshot throughput and
+//!   the corpus sweep (`data_lab`).
 
 use crate::bench::suite::Registry;
 
 pub mod clustering;
+pub mod data;
 pub mod mis;
 pub mod perf;
 pub mod pipelines;
@@ -33,4 +36,5 @@ pub fn register_all(r: &mut Registry) {
     mis::register(r);
     pipelines::register(r);
     solve::register(r);
+    data::register(r);
 }

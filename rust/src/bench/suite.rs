@@ -156,9 +156,13 @@ impl ScenarioRecord {
 }
 
 /// Tier-dependent knobs handed to every scenario.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ScenarioCtx {
     pub tier: Tier,
+    /// The CLI's `--workload <spec>` override: corpus-driven scenarios
+    /// (`solve/corpus_sweep`) sweep this one instance instead of their
+    /// default slice. `None` everywhere else.
+    pub workload: Option<String>,
 }
 
 impl ScenarioCtx {
@@ -346,9 +350,21 @@ impl Registry {
         label: &str,
         keep: F,
     ) -> SuiteResult {
+        self.run_scoped(tier, label, keep, None)
+    }
+
+    /// [`run_filtered`](Registry::run_filtered) with the optional
+    /// `--workload` spec threaded into the scenario context.
+    pub fn run_scoped<F: Fn(&Scenario) -> bool>(
+        &self,
+        tier: Tier,
+        label: &str,
+        keep: F,
+        workload: Option<&str>,
+    ) -> SuiteResult {
         println!("== arbocc bench suite — tier {}, label {} ==", tier.name(), label);
         let total = Timer::start();
-        let ctx = ScenarioCtx { tier };
+        let ctx = ScenarioCtx { tier, workload: workload.map(str::to_string) };
         let mut out = Vec::new();
         for s in &self.scenarios {
             if !keep(s) {
@@ -380,10 +396,26 @@ impl Registry {
 
     /// Run with an optional substring filter on scenario or bin name.
     pub fn run(&self, tier: Tier, label: &str, filter: Option<&str>) -> SuiteResult {
-        self.run_filtered(tier, label, |s| match filter {
-            None => true,
-            Some(f) => s.name.contains(f) || s.bin.contains(f),
-        })
+        self.run_with(tier, label, filter, None)
+    }
+
+    /// [`run`](Registry::run) plus the `--workload` spec override.
+    pub fn run_with(
+        &self,
+        tier: Tier,
+        label: &str,
+        filter: Option<&str>,
+        workload: Option<&str>,
+    ) -> SuiteResult {
+        self.run_scoped(
+            tier,
+            label,
+            |s| match filter {
+                None => true,
+                Some(f) => s.name.contains(f) || s.bin.contains(f),
+            },
+            workload,
+        )
     }
 }
 
@@ -484,6 +516,8 @@ mod tests {
         let names: Vec<&str> = r.scenarios().iter().map(|s| s.name).collect();
         assert!(names.contains(&"perf/p8_shard_speedup"), "{names:?}");
         assert!(names.contains(&"e4/mis_rounds"), "{names:?}");
+        assert!(names.contains(&"data/snapshot_roundtrip"), "{names:?}");
+        assert!(names.contains(&"solve/corpus_sweep"), "{names:?}");
     }
 
     #[test]

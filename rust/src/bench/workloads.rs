@@ -1,7 +1,15 @@
 //! Shared experiment workloads: named family × size sweeps with
 //! deterministic per-cell seeds, so every bench table is regenerated from
 //! identical instances.
+//!
+//! Every cell is also *corpus-addressable*: [`Workload::spec`] renders
+//! the equivalent `data::corpus` spec string (pinned to generate the
+//! bit-identical graph), so any bench row can be reproduced from a shell
+//! with `arbocc gen <spec>` or pointed at the solver engine with
+//! `--workload <spec>`.  [`corpus`] is the standard corpus sweep the new
+//! data scenarios iterate.
 
+use crate::data::corpus::{sweep_corpus, WorkloadSpec};
 use crate::graph::generators::Family;
 use crate::graph::Graph;
 use crate::util::rng::Rng;
@@ -29,6 +37,36 @@ impl Workload {
     pub fn algo_rng(&self, trial: u64) -> Rng {
         Rng::new(self.seed ^ 0xA11C0DE ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
+
+    /// The `data::corpus` spec string generating the bit-identical graph
+    /// (pinned by `workloads_are_corpus_addressable`), so every bench
+    /// cell is reproducible by name from the CLI.
+    pub fn spec(&self) -> String {
+        let (n, seed) = (self.n, self.seed);
+        match self.family {
+            Family::Forest => format!("forest:n={n},keep=0.9,seed={seed}"),
+            Family::LambdaArboric(l) => format!("arboric:n={n},lambda={l},seed={seed}"),
+            Family::BarabasiAlbert(m) => format!("powerlaw:n={n},attach={m},seed={seed}"),
+            Family::Grid => {
+                let side = ((n as f64).sqrt().ceil() as usize).max(2);
+                format!("grid:w={side},h={side}")
+            }
+            Family::Path => format!("path:n={n}"),
+            Family::Star => format!("star:k={}", n.saturating_sub(1).max(1)),
+            Family::Barbell(l) => format!("barbell:lambda={l}"),
+            Family::DisjointCliques(k) => format!("cliques:count={},k={k}", (n / k).max(1)),
+        }
+    }
+}
+
+/// The standard corpus sweep (one spec per structural axis, sized by the
+/// caller) as parsed workload specs — what `solve/corpus_sweep` and the
+/// dataset example iterate.
+pub fn corpus(n: usize, seed: u64) -> Vec<WorkloadSpec> {
+    sweep_corpus(n, seed)
+        .iter()
+        .map(|s| WorkloadSpec::parse(s).expect("sweep_corpus specs always parse"))
+        .collect()
 }
 
 /// The standard family set for clustering experiments (bounded-arboricity
@@ -112,6 +150,40 @@ mod tests {
         assert_eq!(ladder(Tier::Smoke, &[600, 700, 4_096]), vec![512]);
         // Never scale a size *up* past the full value.
         assert!(ladder(Tier::Smoke, &[100]) == vec![100]);
+    }
+
+    #[test]
+    fn workloads_are_corpus_addressable() {
+        // Every Family cell and its corpus spec generate the identical
+        // graph — the bridge that makes bench rows reproducible by name.
+        let fams = [
+            Family::Forest,
+            Family::LambdaArboric(3),
+            Family::BarabasiAlbert(3),
+            Family::Grid,
+            Family::Path,
+            Family::Star,
+            Family::Barbell(6),
+            Family::DisjointCliques(5),
+        ];
+        for family in fams {
+            let w = Workload { family, n: 120, seed: 9 };
+            let spec = WorkloadSpec::parse(&w.spec()).unwrap_or_else(|e| {
+                panic!("{}: {e}", w.spec());
+            });
+            let direct = w.generate();
+            let via_corpus = spec.generate().unwrap();
+            assert_eq!(direct, via_corpus, "{}", w.spec());
+        }
+    }
+
+    #[test]
+    fn corpus_sweep_materializes() {
+        let specs = corpus(400, 7);
+        assert!(specs.len() >= 5);
+        let names: std::collections::HashSet<&str> =
+            specs.iter().map(|s| s.family()).collect();
+        assert_eq!(names.len(), specs.len(), "one spec per family axis");
     }
 
     #[test]

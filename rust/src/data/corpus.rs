@@ -1,0 +1,535 @@
+//! The generator corpus: every workload family behind one string key,
+//! so datasets are *addressable* — `planted:n=50000,k=40,p=0.05,seed=7`
+//! names the same graph everywhere (CLI `gen`, `--workload`, bench
+//! scenarios, the golden-ratio lab).
+//!
+//! A [`WorkloadSpec`] is `family[:k=v,...]`.  Every family declares its
+//! parameters with defaults, so specs stay terse and typos are strict
+//! errors (unknown family, unknown/duplicate key, bad value) instead of
+//! silently-default behavior.
+//!
+//! **Determinism contract:** `generate` is a pure function of the spec —
+//! same string, same [`crate::graph::Graph`], on any platform and from
+//! any thread (see `graph::generators`' module doc; pinned at 1/2/8
+//! shards by `tests/data_io.rs`).
+
+use crate::graph::generators::{
+    barabasi_albert, barbell, caterpillar, disjoint_cliques, disjoint_union, erdos_renyi,
+    grid, ladder, lambda_arboric, path, planted_partition, random_forest, random_tree,
+    star, with_flip_noise,
+};
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One declared parameter of a family.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    pub default: &'static str,
+    pub about: &'static str,
+}
+
+/// A registered generator family.
+pub struct FamilySpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub params: &'static [ParamSpec],
+    gen: fn(&Params) -> Result<Graph>,
+}
+
+/// Typed accessors over the resolved (given ∪ default) parameters.
+pub struct Params<'a> {
+    family: &'static str,
+    specs: &'static [ParamSpec],
+    given: &'a [(String, String)],
+}
+
+impl Params<'_> {
+    fn raw(&self, key: &str) -> &str {
+        if let Some((_, v)) = self.given.iter().find(|(k, _)| k == key) {
+            return v.as_str();
+        }
+        self.specs
+            .iter()
+            .find(|p| p.key == key)
+            .unwrap_or_else(|| panic!("family '{}' never declared parameter '{key}'", self.family))
+            .default
+    }
+
+    fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        let raw = self.raw(key);
+        raw.parse().map_err(|_| {
+            Error::new(format!(
+                "family '{}': parameter {key}='{raw}' is not a valid {}",
+                self.family,
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.parse(key)
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        self.parse(key)
+    }
+
+    /// An f64 parameter constrained to a probability.
+    pub fn prob(&self, key: &str) -> Result<f64> {
+        let v: f64 = self.parse(key)?;
+        crate::ensure!(
+            (0.0..=1.0).contains(&v),
+            "family '{}': parameter {key}={v} outside [0,1]",
+            self.family
+        );
+        Ok(v)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.parse(key)
+    }
+}
+
+const fn prm(
+    key: &'static str,
+    default: &'static str,
+    about: &'static str,
+) -> ParamSpec {
+    ParamSpec { key, default, about }
+}
+
+fn gen_forest(p: &Params) -> Result<Graph> {
+    let (n, keep, flip, seed) =
+        (p.usize("n")?, p.prob("keep")?, p.prob("flip")?, p.u64("seed")?);
+    let mut rng = Rng::new(seed);
+    let g = random_forest(n, keep, &mut rng);
+    Ok(with_flip_noise(&g, flip, &mut rng))
+}
+
+fn gen_tree(p: &Params) -> Result<Graph> {
+    Ok(random_tree(p.usize("n")?, &mut Rng::new(p.u64("seed")?)))
+}
+
+fn gen_arboric(p: &Params) -> Result<Graph> {
+    let (n, lambda, seed) = (p.usize("n")?, p.usize("lambda")?, p.u64("seed")?);
+    crate::ensure!(lambda >= 1, "family 'arboric': lambda must be >= 1");
+    Ok(lambda_arboric(n, lambda, &mut Rng::new(seed)))
+}
+
+fn gen_powerlaw(p: &Params) -> Result<Graph> {
+    let (n, attach, seed) = (p.usize("n")?, p.usize("attach")?, p.u64("seed")?);
+    crate::ensure!(attach >= 1, "family 'powerlaw': attach must be >= 1");
+    // Same clamp as `generators::Family::BarabasiAlbert` so the two
+    // addressing schemes generate identical graphs.
+    Ok(barabasi_albert(n.max(attach + 2), attach, &mut Rng::new(seed)))
+}
+
+fn gen_planted(p: &Params) -> Result<Graph> {
+    let (n, k) = (p.usize("n")?, p.usize("k")?);
+    let (pin, pout, seed) = (p.prob("pin")?, p.prob("p")?, p.u64("seed")?);
+    crate::ensure!(
+        k >= 1 && k <= n.max(1),
+        "family 'planted': k={k} outside 1..=n (n={n})"
+    );
+    Ok(planted_partition(n, k, pin, pout, &mut Rng::new(seed)).0)
+}
+
+fn gen_ladder(p: &Params) -> Result<Graph> {
+    let (n, flip, seed) = (p.usize("n")?, p.prob("flip")?, p.u64("seed")?);
+    crate::ensure!(n % 2 == 0, "family 'ladder': n={n} must be even (two rails)");
+    let g = ladder(n / 2);
+    Ok(with_flip_noise(&g, flip, &mut Rng::new(seed)))
+}
+
+fn gen_caterpillar(p: &Params) -> Result<Graph> {
+    Ok(caterpillar(p.usize("spine")?, p.usize("legs")?))
+}
+
+fn gen_star(p: &Params) -> Result<Graph> {
+    Ok(star(p.usize("k")?))
+}
+
+fn gen_path(p: &Params) -> Result<Graph> {
+    Ok(path(p.usize("n")?))
+}
+
+fn gen_grid(p: &Params) -> Result<Graph> {
+    Ok(grid(p.usize("w")?, p.usize("h")?))
+}
+
+fn gen_barbell(p: &Params) -> Result<Graph> {
+    let lambda = p.usize("lambda")?;
+    crate::ensure!(lambda >= 1, "family 'barbell': lambda must be >= 1");
+    Ok(barbell(lambda))
+}
+
+fn gen_cliques(p: &Params) -> Result<Graph> {
+    let (count, k) = (p.usize("count")?, p.usize("k")?);
+    crate::ensure!(count >= 1 && k >= 1, "family 'cliques': count and k must be >= 1");
+    Ok(disjoint_cliques(count, k))
+}
+
+fn gen_er(p: &Params) -> Result<Graph> {
+    let (n, prob, seed) = (p.usize("n")?, p.prob("p")?, p.u64("seed")?);
+    Ok(erdos_renyi(n, prob, &mut Rng::new(seed)))
+}
+
+fn gen_mixed(p: &Params) -> Result<Graph> {
+    let (n, seed) = (p.usize("n")?, p.u64("seed")?);
+    crate::ensure!(n >= 32, "family 'mixed': n={n} too small (needs four parts of >= 8)");
+    let q = n / 4;
+    let mut rng = Rng::new(seed);
+    let forest = random_forest(q, 0.9, &mut rng);
+    let rails = ladder(q / 2);
+    let hubs = barabasi_albert(q, 2, &mut rng);
+    let cliques = disjoint_cliques((q / 6).max(1), 6);
+    Ok(disjoint_union(&[forest, rails, hubs, cliques]))
+}
+
+/// Every registered family, in listing order.
+pub const FAMILIES: &[FamilySpec] = &[
+    FamilySpec {
+        name: "forest",
+        about: "random forest (λ=1), optional edge-flip noise",
+        params: &[
+            prm("n", "1000", "vertices"),
+            prm("keep", "0.9", "per-edge keep probability of the spanning tree"),
+            prm("flip", "0", "edge flip-noise probability"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_forest,
+    },
+    FamilySpec {
+        name: "tree",
+        about: "uniform random labelled tree (Prüfer)",
+        params: &[prm("n", "1000", "vertices"), prm("seed", "1", "generator seed")],
+        gen: gen_tree,
+    },
+    FamilySpec {
+        name: "arboric",
+        about: "union of λ random spanning trees (arboricity ≤ λ)",
+        params: &[
+            prm("n", "1000", "vertices"),
+            prm("lambda", "3", "number of spanning trees"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_arboric,
+    },
+    FamilySpec {
+        name: "powerlaw",
+        about: "Barabási–Albert preferential attachment (scale-free)",
+        params: &[
+            prm("n", "1000", "vertices"),
+            prm("attach", "3", "edges per new vertex"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_powerlaw,
+    },
+    FamilySpec {
+        name: "planted",
+        about: "planted communities with sign noise (recovery workload)",
+        params: &[
+            prm("n", "1000", "vertices"),
+            prm("k", "10", "ground-truth communities"),
+            prm("pin", "0.9", "intra-community positive-edge probability"),
+            prm("p", "0.01", "inter-community sign-noise probability"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_planted,
+    },
+    FamilySpec {
+        name: "ladder",
+        about: "2×(n/2) ladder (arboricity ≤ 2), optional flip noise",
+        params: &[
+            prm("n", "1000", "vertices (must be even)"),
+            prm("flip", "0", "edge flip-noise probability"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_ladder,
+    },
+    FamilySpec {
+        name: "caterpillar",
+        about: "path spine with pendant legs (adversarial forest)",
+        params: &[prm("spine", "16", "spine vertices"), prm("legs", "4", "legs per spine vertex")],
+        gen: gen_caterpillar,
+    },
+    FamilySpec {
+        name: "star",
+        about: "K_{1,k}: minimal unbounded-degree forest",
+        params: &[prm("k", "16", "leaves")],
+        gen: gen_star,
+    },
+    FamilySpec {
+        name: "path",
+        about: "path P_n (Remark 30 tightness at n=4)",
+        params: &[prm("n", "64", "vertices")],
+        gen: gen_path,
+    },
+    FamilySpec {
+        name: "grid",
+        about: "w×h grid (planar, arboricity ≤ 2)",
+        params: &[prm("w", "16", "width"), prm("h", "16", "height")],
+        gen: gen_grid,
+    },
+    FamilySpec {
+        name: "barbell",
+        about: "two K_λ joined by one edge (Remark 33 tightness)",
+        params: &[prm("lambda", "8", "clique size")],
+        gen: gen_barbell,
+    },
+    FamilySpec {
+        name: "cliques",
+        about: "disjoint K_k components (OPT = 0)",
+        params: &[prm("count", "8", "cliques"), prm("k", "8", "clique size")],
+        gen: gen_cliques,
+    },
+    FamilySpec {
+        name: "er",
+        about: "Erdős–Rényi G(n,p) — unbounded-arboricity contrast",
+        params: &[
+            prm("n", "1000", "vertices"),
+            prm("p", "0.01", "edge probability"),
+            prm("seed", "1", "generator seed"),
+        ],
+        gen: gen_er,
+    },
+    FamilySpec {
+        name: "mixed",
+        about: "disjoint union: forest + ladder + powerlaw + cliques",
+        params: &[prm("n", "2000", "total vertices"), prm("seed", "1", "generator seed")],
+        gen: gen_mixed,
+    },
+];
+
+/// A parsed `family[:k=v,...]` workload address.
+#[derive(Clone)]
+pub struct WorkloadSpec {
+    family: &'static FamilySpec,
+    /// Caller-provided parameters, canonicalized into declared order.
+    given: Vec<(String, String)>,
+}
+
+impl std::fmt::Debug for WorkloadSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkloadSpec({})", self.canonical())
+    }
+}
+
+impl WorkloadSpec {
+    pub fn parse(s: &str) -> Result<WorkloadSpec> {
+        let s = s.trim();
+        let (fam_s, rest) = match s.split_once(':') {
+            Some((f, r)) => (f.trim(), Some(r)),
+            None => (s, None),
+        };
+        let Some(family) = FAMILIES.iter().find(|f| f.name == fam_s) else {
+            crate::bail!(
+                "unknown workload family '{fam_s}' (registered: {})",
+                FAMILIES.iter().map(|f| f.name).collect::<Vec<_>>().join("|")
+            );
+        };
+        let mut given: Vec<(String, String)> = Vec::new();
+        if let Some(rest) = rest {
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let Some((k, v)) = part.split_once('=') else {
+                    crate::bail!("family '{}': parameter '{part}' is not key=value", family.name);
+                };
+                let (k, v) = (k.trim(), v.trim());
+                crate::ensure!(
+                    family.params.iter().any(|p| p.key == k),
+                    "family '{}': unknown parameter '{k}' (expected {})",
+                    family.name,
+                    family.params.iter().map(|p| p.key).collect::<Vec<_>>().join(", ")
+                );
+                crate::ensure!(
+                    !given.iter().any(|(gk, _)| gk == k),
+                    "family '{}': duplicate parameter '{k}'",
+                    family.name
+                );
+                crate::ensure!(!v.is_empty(), "family '{}': empty value for '{k}'", family.name);
+                given.push((k.to_string(), v.to_string()));
+            }
+        }
+        given.sort_by_key(|(k, _)| {
+            family.params.iter().position(|p| p.key == k.as_str()).unwrap_or(usize::MAX)
+        });
+        Ok(WorkloadSpec { family, given })
+    }
+
+    /// Family key (`planted`, `powerlaw`, …).
+    pub fn family(&self) -> &'static str {
+        self.family.name
+    }
+
+    /// The normalized spec string: given parameters in declared order.
+    pub fn canonical(&self) -> String {
+        if self.given.is_empty() {
+            self.family.name.to_string()
+        } else {
+            let params: Vec<String> =
+                self.given.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            format!("{}:{}", self.family.name, params.join(","))
+        }
+    }
+
+    /// Generate the graph — a pure function of the spec.
+    pub fn generate(&self) -> Result<Graph> {
+        let p = Params {
+            family: self.family.name,
+            specs: self.family.params,
+            given: &self.given,
+        };
+        (self.family.gen)(&p).map_err(|e| e.context(format!("generating '{}'", self.canonical())))
+    }
+}
+
+/// `name  signature  about` lines for `arbocc gen --list`.
+pub fn describe_families() -> Vec<String> {
+    FAMILIES
+        .iter()
+        .map(|f| {
+            let sig: Vec<String> =
+                f.params.iter().map(|p| format!("{}={}", p.key, p.default)).collect();
+            let addr = if sig.is_empty() {
+                f.name.to_string()
+            } else {
+                format!("{}:{}", f.name, sig.join(","))
+            };
+            format!("{:<12} {:<52} {}", f.name, addr, f.about)
+        })
+        .collect()
+}
+
+/// Exact-checkable corpus slice: every instance has n ≤
+/// [`crate::cluster::exact::MAX_EXACT_N`], so the golden-ratio lab can
+/// pin solver costs against true optima.
+pub fn tiny_corpus() -> Vec<&'static str> {
+    vec![
+        "path:n=8",
+        "path:n=12",
+        "star:k=9",
+        "barbell:lambda=5",
+        "cliques:count=3,k=4",
+        "forest:n=13,keep=0.85,seed=3",
+        "planted:n=12,k=3,pin=0.9,p=0.1,seed=5",
+        "ladder:n=12,flip=0.15,seed=2",
+        "caterpillar:spine=4,legs=2",
+    ]
+}
+
+/// The standard corpus sweep behind `solve/corpus_sweep` and the dataset
+/// example: one spec per structural axis the paper reasons about, sized
+/// by the caller.
+pub fn sweep_corpus(n: usize, seed: u64) -> Vec<String> {
+    // Inter-community noise scales as ~40/n so the planted instance
+    // keeps Θ(n) noise edges at every sweep size (p is a probability
+    // over all Θ(n²) pairs). Display (shortest round-trip, never
+    // scientific) keeps the spec parseable and exact at any n.
+    let pout = (40.0 / n.max(1) as f64).min(0.02).to_string();
+    vec![
+        format!("planted:n={n},k={},p={pout},seed={seed}", (n / 50).max(2)),
+        format!("powerlaw:n={n},attach=3,seed={seed}"),
+        format!("ladder:n={},flip=0.05,seed={seed}", n / 2 * 2),
+        format!("forest:n={n},keep=0.9,flip=0.02,seed={seed}"),
+        format!("mixed:n={n},seed={seed}"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_canonicalize() {
+        let spec = WorkloadSpec::parse("planted: seed=7, n=100 ,k=4").unwrap();
+        assert_eq!(spec.family(), "planted");
+        // Canonical order follows the declaration, not the input.
+        assert_eq!(spec.canonical(), "planted:n=100,k=4,seed=7");
+        let again = WorkloadSpec::parse(&spec.canonical()).unwrap();
+        assert_eq!(again.canonical(), spec.canonical());
+        assert_eq!(WorkloadSpec::parse("grid").unwrap().canonical(), "grid");
+    }
+
+    #[test]
+    fn defaults_apply_and_generate() {
+        let g = WorkloadSpec::parse("planted:n=120,k=4,seed=9").unwrap().generate().unwrap();
+        assert_eq!(g.n(), 120);
+        assert!(g.m() > 0);
+        let g = WorkloadSpec::parse("grid:w=5,h=4").unwrap().generate().unwrap();
+        assert_eq!(g.n(), 20);
+    }
+
+    #[test]
+    fn strict_parse_errors() {
+        for (spec, frag) in [
+            ("warp:n=3", "unknown workload family"),
+            ("planted:zz=3", "unknown parameter"),
+            ("planted:n", "not key=value"),
+            ("planted:n=2,n=3", "duplicate parameter"),
+            ("planted:n=", "empty value"),
+        ] {
+            let err = WorkloadSpec::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(frag), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn strict_generate_errors() {
+        for (spec, frag) in [
+            ("forest:n=10,keep=1.5", "outside [0,1]"),
+            ("ladder:n=7", "must be even"),
+            ("planted:n=4,k=9", "outside 1..=n"),
+            ("forest:n=x", "not a valid usize"),
+            ("mixed:n=8", "too small"),
+        ] {
+            let err = WorkloadSpec::parse(spec).unwrap().generate().unwrap_err().to_string();
+            assert!(err.contains(frag), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for spec_s in tiny_corpus() {
+            let spec = WorkloadSpec::parse(spec_s).unwrap();
+            assert_eq!(
+                spec.generate().unwrap(),
+                spec.generate().unwrap(),
+                "{spec_s}: same spec must regenerate the identical graph"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_corpus_is_exact_checkable() {
+        for spec_s in tiny_corpus() {
+            let g = WorkloadSpec::parse(spec_s).unwrap().generate().unwrap();
+            assert!(
+                g.n() <= crate::cluster::exact::MAX_EXACT_N,
+                "{spec_s}: n={} exceeds the exact solver cap",
+                g.n()
+            );
+        }
+    }
+
+    #[test]
+    fn sweep_corpus_parses_whole() {
+        for s in sweep_corpus(400, 9) {
+            let spec = WorkloadSpec::parse(&s).unwrap();
+            let g = spec.generate().unwrap();
+            assert!(g.n() > 0, "{s}");
+        }
+    }
+
+    #[test]
+    fn describe_lists_every_family() {
+        let lines = describe_families();
+        assert_eq!(lines.len(), FAMILIES.len());
+        assert!(lines.iter().any(|l| l.contains("planted:")));
+    }
+}

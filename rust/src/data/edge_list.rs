@@ -1,0 +1,313 @@
+//! Signed edge-list text IO: whitespace *and* CSV rows, strict
+//! line-numbered parse errors, and full normalization on ingest.
+//!
+//! Accepted rows (comments start with `#` or `%`):
+//!
+//! ```text
+//! # arbocc-edges/v1 n=6 m=3     <- optional directive: id space + edge count
+//! 0 1                           <- whitespace pair
+//! 2,3                           <- CSV pair
+//! 4,5,+                         <- optional sign column: + +1 1 - -1
+//! ```
+//!
+//! Negative rows are counted and dropped — in the paper's complete signed
+//! graph every non-adjacent pair *is* a negative edge, so only `E+` is
+//! materialized.  Self-loops and duplicates (in either orientation) are
+//! normalized away and counted in [`IngestStats`].
+//!
+//! Vertex ids are arbitrary `u64`s.  When the `arbocc-edges/v1` directive
+//! declares `n=`, ids are taken verbatim (must be `< n`; isolated
+//! vertices survive a round-trip).  Without it, ids are compacted by
+//! **numeric rank**, not first appearance — so permuting or duplicating
+//! input lines cannot change the parsed graph (pinned by
+//! `tests/data_io.rs`).
+
+use std::io::Write;
+
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+
+/// Output flavor of [`write_edges`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeListFormat {
+    Whitespace,
+    Csv,
+}
+
+/// What ingest normalized away, for CLI reporting and tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IngestStats {
+    /// Well-formed data rows seen (including dropped ones).
+    pub rows: usize,
+    /// Vertex count of the parsed graph.
+    pub n: usize,
+    /// Undirected positive edges kept (= `g.m()`).
+    pub edges: usize,
+    /// Duplicate rows dropped (either orientation).
+    pub duplicates: usize,
+    /// Self-loop rows dropped.
+    pub self_loops: usize,
+    /// Explicitly negative rows dropped (negatives are implicit).
+    pub negatives: usize,
+    /// `n=` from an `arbocc-edges/v1` directive, when present.
+    pub header_n: Option<usize>,
+}
+
+impl IngestStats {
+    pub fn describe(&self) -> String {
+        format!(
+            "{} vertices, {} positive edge(s) from {} row(s) \
+             ({} duplicate(s), {} self-loop(s), {} negative(s) dropped)",
+            self.n, self.edges, self.rows, self.duplicates, self.self_loops, self.negatives
+        )
+    }
+}
+
+/// Parse an edge list with strict, line-numbered errors.
+pub fn read_edges(text: &str) -> Result<(Graph, IngestStats)> {
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    let mut stats = IngestStats::default();
+    let mut header_n: Option<usize> = None;
+    let mut header_m: Option<usize> = None;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with('#') || t.starts_with('%') {
+            if t.contains("arbocc-edges/") {
+                crate::ensure!(
+                    t.contains("arbocc-edges/v1"),
+                    "line {lineno}: unsupported edge-list directive (reader speaks \
+                     arbocc-edges/v1): '{t}'"
+                );
+                for tok in t.split_whitespace() {
+                    if let Some(v) = tok.strip_prefix("n=") {
+                        let n = v.parse().map_err(|_| {
+                            Error::new(format!("line {lineno}: bad directive token 'n={v}'"))
+                        })?;
+                        if header_n.is_none() {
+                            header_n = Some(n);
+                        }
+                    }
+                    if let Some(v) = tok.strip_prefix("m=") {
+                        let m = v.parse().map_err(|_| {
+                            Error::new(format!("line {lineno}: bad directive token 'm={v}'"))
+                        })?;
+                        if header_m.is_none() {
+                            header_m = Some(m);
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        let fields: Vec<&str> = if t.contains(',') {
+            t.split(',').map(str::trim).collect()
+        } else {
+            t.split_whitespace().collect()
+        };
+        crate::ensure!(
+            fields.len() == 2 || fields.len() == 3,
+            "line {lineno}: expected 'u v' or 'u,v[,sign]', got {} field(s)",
+            fields.len()
+        );
+        let parse_id = |tok: &str| -> Result<u64> {
+            tok.parse().map_err(|_| {
+                Error::new(format!("line {lineno}: invalid vertex id '{tok}'"))
+            })
+        };
+        let u = parse_id(fields[0])?;
+        let v = parse_id(fields[1])?;
+        stats.rows += 1;
+        // Range-check before the drop rules: a dropped (negative or
+        // self-loop) row with an out-of-space id is still a malformed
+        // file under the declared-n contract.
+        if let Some(n) = header_n {
+            crate::ensure!(
+                (u as u128) < n as u128 && (v as u128) < n as u128,
+                "line {lineno}: vertex id out of range for declared n={n}"
+            );
+        }
+        if fields.len() == 3 {
+            match fields[2] {
+                "+" | "+1" | "1" => {}
+                "-" | "-1" => {
+                    stats.negatives += 1;
+                    continue;
+                }
+                s => crate::bail!(
+                    "line {lineno}: invalid sign '{s}' (expected +, +1, 1, - or -1)"
+                ),
+            }
+        }
+        if u == v {
+            stats.self_loops += 1;
+            continue;
+        }
+        raw.push((u, v));
+    }
+    let (n, edges): (usize, Vec<(u32, u32)>) = match header_n {
+        Some(n) => {
+            crate::ensure!(
+                n <= u32::MAX as usize,
+                "declared n={n} exceeds the u32 vertex-id space"
+            );
+            // Re-validate: rows parsed before a late directive line
+            // skipped the inline range check.
+            for &(u, v) in &raw {
+                crate::ensure!(
+                    u < n as u64 && v < n as u64,
+                    "vertex id {} out of range for declared n={n}",
+                    u.max(v)
+                );
+            }
+            (n, raw.iter().map(|&(u, v)| (u as u32, v as u32)).collect())
+        }
+        None => {
+            // Rank compaction: id order, not appearance order, so the
+            // parse is invariant under line permutation.
+            let mut ids: Vec<u64> = raw.iter().flat_map(|&(u, v)| [u, v]).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            crate::ensure!(
+                ids.len() <= u32::MAX as usize,
+                "{} distinct vertex ids exceed the u32 id space",
+                ids.len()
+            );
+            let rank = |x: u64| ids.binary_search(&x).expect("id interned") as u32;
+            (ids.len(), raw.iter().map(|&(u, v)| (rank(u), rank(v))).collect())
+        }
+    };
+    let g = Graph::from_edges(n, &edges);
+    if let Some(m) = header_m {
+        // The v1 writer records the normalized positive-edge count, so a
+        // truncated or concatenated file fails loudly (the text format
+        // has no checksum to catch it otherwise).
+        crate::ensure!(
+            g.m() == m,
+            "directive declares m={m} positive edge(s) but the file normalizes to {}",
+            g.m()
+        );
+    }
+    stats.duplicates = edges.len() - g.m();
+    stats.n = n;
+    stats.edges = g.m();
+    stats.header_n = header_n;
+    Ok((g, stats))
+}
+
+pub fn read_edges_file(path: &std::path::Path) -> Result<(Graph, IngestStats)> {
+    let bytes = std::fs::read(path)?;
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|_| Error::new(format!("{}: not valid UTF-8 text", path.display())))?;
+    read_edges(text).map_err(|e| e.context(format!("parsing {}", path.display())))
+}
+
+/// Write a graph with the `arbocc-edges/v1` directive (so a round-trip
+/// preserves isolated vertices).
+pub fn write_edges<W: Write>(g: &Graph, mut w: W, format: EdgeListFormat) -> Result<()> {
+    writeln!(w, "# arbocc-edges/v1 n={} m={}", g.n(), g.m())?;
+    for (u, v) in g.edges() {
+        match format {
+            EdgeListFormat::Whitespace => writeln!(w, "{u} {v}")?,
+            EdgeListFormat::Csv => writeln!(w, "{u},{v}")?,
+        }
+    }
+    Ok(())
+}
+
+pub fn write_edges_file(g: &Graph, path: &std::path::Path, format: EdgeListFormat) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    write_edges(g, &mut w, format)?;
+    // BufWriter's Drop swallows I/O errors — surface a failed flush
+    // (full disk, quota) instead of reporting a truncated file as Ok.
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whitespace_and_csv_rows_mix() {
+        let text = "# comment\n0 1\n1,2\n2 , 3\n";
+        let (g, stats) = read_edges(text).unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3);
+        assert_eq!(stats.rows, 3);
+    }
+
+    #[test]
+    fn sign_column_drops_negatives() {
+        let text = "0,1,+\n1,2,-\n2,3,1\n3,0,-1\n0 2 +1\n";
+        let (g, stats) = read_edges(text).unwrap();
+        assert_eq!(g.m(), 3);
+        assert_eq!(stats.negatives, 2);
+    }
+
+    #[test]
+    fn directive_preserves_isolated_vertices() {
+        let g = Graph::from_edges(5, &[(0, 1), (3, 4)]); // vertex 2 isolated
+        for format in [EdgeListFormat::Whitespace, EdgeListFormat::Csv] {
+            let mut buf = Vec::new();
+            write_edges(&g, &mut buf, format).unwrap();
+            let (back, stats) = read_edges(std::str::from_utf8(&buf).unwrap()).unwrap();
+            assert_eq!(back, g);
+            assert_eq!(stats.header_n, Some(5));
+        }
+    }
+
+    #[test]
+    fn rank_compaction_is_order_invariant() {
+        let a = read_edges("10 20\n20 30\n").unwrap().0;
+        let b = read_edges("20 30\n20 10\n10 20\n").unwrap().0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, frag) in [
+            ("0 1\n1 2\nx 3\n", "line 3"),
+            ("0,1\n1,2,maybe\n", "line 2"),
+            ("0 1 2 3\n", "line 1"),
+            ("# arbocc-edges/v1 n=abc\n0 1\n", "line 1"),
+            ("3\n", "line 1"),
+            ("# arbocc-edges/v1 n=2\n0 1\n0 5\n", "line 3"),
+        ] {
+            let err = read_edges(text).unwrap_err().to_string();
+            assert!(err.contains(frag), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn directive_m_and_version_are_validated() {
+        // Truncation: declared m disagrees with the parsed edge count.
+        let err = read_edges("# arbocc-edges/v1 n=4 m=3\n0 1\n").unwrap_err().to_string();
+        assert!(err.contains("m=3") && err.contains("normalizes to 1"), "{err}");
+        // Unknown format version is rejected, not silently parsed.
+        let err = read_edges("# arbocc-edges/v2 n=2\n0 1\n").unwrap_err().to_string();
+        assert!(err.contains("unsupported") && err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn stats_count_normalization() {
+        let text = "0 1\n1 0\n0 1\n2 2\n1 2\n";
+        let (g, stats) = read_edges(text).unwrap();
+        assert_eq!(g.m(), 2);
+        assert_eq!(stats.duplicates, 2);
+        assert_eq!(stats.self_loops, 1);
+        assert_eq!(stats.rows, 5);
+        assert!(stats.describe().contains("2 duplicate(s)"));
+    }
+
+    #[test]
+    fn empty_input_is_the_empty_graph() {
+        let (g, stats) = read_edges("# nothing\n\n").unwrap();
+        assert_eq!(g.n(), 0);
+        assert_eq!(stats.rows, 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! The dataset subsystem: graph IO + the generator corpus.
+//!
+//! Everything above this layer — the solver engine, the perf lab, the
+//! CLI — addresses inputs through two currencies:
+//!
+//! * **files** — [`edge_list`] (whitespace/CSV signed edge lists with
+//!   strict line-numbered errors and sort/dedup/self-loop normalization)
+//!   and [`snapshot`] (the `arbocc-csr/v1` versioned binary CSR format);
+//!   [`load_graph`] auto-detects which one a path holds by its magic.
+//! * **specs** — [`corpus`]'s `family:k=v,...` strings naming seeded
+//!   generator instances (`planted:n=50000,k=40,p=0.05,seed=7`), so any
+//!   workload in a bench table, test, or shell command is reproducible
+//!   from its name alone.
+//!
+//! `arbocc gen <spec> -o g.csr && arbocc solve --input g.csr` is the
+//! whole pipeline; see DESIGN.md §7.
+
+pub mod corpus;
+pub mod edge_list;
+pub mod snapshot;
+
+use std::path::Path;
+
+use crate::graph::Graph;
+use crate::util::error::{Error, Result};
+
+/// What [`load_graph`] found at the path.
+#[derive(Debug, Clone)]
+pub enum LoadStats {
+    Snapshot { bytes: usize },
+    EdgeList(edge_list::IngestStats),
+}
+
+impl LoadStats {
+    pub fn describe(&self) -> String {
+        match self {
+            LoadStats::Snapshot { bytes } => {
+                format!("arbocc-csr/v1 snapshot ({bytes} bytes)")
+            }
+            LoadStats::EdgeList(stats) => format!("edge list: {}", stats.describe()),
+        }
+    }
+}
+
+/// Load a graph from disk, auto-detecting the format: `arbocc-csr/v1`
+/// by its magic, anything else as a text edge list.
+pub fn load_graph(path: &Path) -> Result<(Graph, LoadStats)> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::new(format!("{}: {e}", path.display())))?;
+    if bytes.starts_with(snapshot::MAGIC) {
+        let g = snapshot::read_snapshot_bytes(&bytes)
+            .map_err(|e| e.context(format!("reading snapshot {}", path.display())))?;
+        return Ok((g, LoadStats::Snapshot { bytes: bytes.len() }));
+    }
+    let text = std::str::from_utf8(&bytes).map_err(|_| {
+        Error::new(format!(
+            "{}: neither an arbocc-csr snapshot nor UTF-8 edge-list text",
+            path.display()
+        ))
+    })?;
+    let (g, stats) = edge_list::read_edges(text)
+        .map_err(|e| e.context(format!("parsing {}", path.display())))?;
+    Ok((g, LoadStats::EdgeList(stats)))
+}
+
+/// Save a graph, choosing the format from the extension: `.csr` /
+/// `.snapshot` / `.bin` write the binary snapshot, `.csv` a CSV edge
+/// list, anything else a whitespace edge list.  Returns the format label
+/// for CLI reporting.
+pub fn save_graph(g: &Graph, path: &Path) -> Result<&'static str> {
+    let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+    let label = match ext {
+        "csr" | "snapshot" | "bin" => {
+            snapshot::write_snapshot_file(g, path)?;
+            "arbocc-csr/v1 snapshot"
+        }
+        "csv" => {
+            edge_list::write_edges_file(g, path, edge_list::EdgeListFormat::Csv)?;
+            "csv edge list"
+        }
+        _ => {
+            edge_list::write_edges_file(g, path, edge_list::EdgeListFormat::Whitespace)?;
+            "whitespace edge list"
+        }
+    };
+    Ok(label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::lambda_arboric;
+    use crate::util::rng::Rng;
+
+    fn temp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("arbocc_data_mod_{}_{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn save_and_load_every_format() {
+        let g = lambda_arboric(80, 2, &mut Rng::new(55));
+        for (tag, expect) in [
+            ("a.csr", "snapshot"),
+            ("b.csv", "csv"),
+            ("c.edges", "whitespace"),
+        ] {
+            let path = temp(tag);
+            let label = save_graph(&g, &path).unwrap();
+            assert!(label.contains(expect), "{tag}: {label}");
+            let (back, stats) = load_graph(&path).unwrap();
+            assert_eq!(back, g, "{tag}");
+            assert!(!stats.describe().is_empty());
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn load_missing_file_is_an_error() {
+        let err = load_graph(Path::new("/definitely/not/here.csr")).unwrap_err();
+        assert!(err.to_string().contains("not/here.csr"));
+    }
+}

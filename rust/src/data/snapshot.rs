@@ -1,0 +1,312 @@
+//! `arbocc-csr/v1` — the versioned binary CSR snapshot format.
+//!
+//! A snapshot is the wire twin of [`crate::graph::Graph`]: the exact CSR
+//! arrays, so loading is a validate-and-adopt instead of a re-sort.  The
+//! layout (all integers little-endian):
+//!
+//! ```text
+//! magic     8 B   b"ARBOCSR1"
+//! version   u32   1
+//! width     u32   4 | 8 — bytes per offset entry (u32 / u64 tagged)
+//! n         u64   vertex count
+//! m_dir     u64   directed adjacency length (= 2·|E+|)
+//! offsets   (n+1) × width
+//! neighbors m_dir × 4 (vertex ids are always u32)
+//! checksum  u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! The offset width is chosen automatically (u32 while `m_dir` fits, u64
+//! beyond) and tagged in the header, so the same reader handles both;
+//! [`snapshot_bytes_width`] forces a width for cross-width tests.  Reads
+//! validate everything — magic, version, width, exact length, checksum,
+//! offset monotonicity, sorted-unique loop-free adjacency, and edge
+//! symmetry — so a corrupted file is a line of context, never a panic
+//! deep inside an algorithm.
+
+use std::io::{Read, Write};
+
+use crate::graph::Graph;
+use crate::util::error::Result;
+use crate::util::fnv1a;
+
+/// Leading magic of every `arbocc-csr/v1` snapshot.
+pub const MAGIC: &[u8; 8] = b"ARBOCSR1";
+/// Format version written and accepted.
+pub const VERSION: u32 = 1;
+
+/// Header size in bytes (magic + version + width + n + m_dir).
+const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8;
+
+/// Bytes per offset entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffsetWidth {
+    U32,
+    U64,
+}
+
+impl OffsetWidth {
+    pub fn bytes(self) -> usize {
+        match self {
+            OffsetWidth::U32 => 4,
+            OffsetWidth::U64 => 8,
+        }
+    }
+
+    fn from_tag(tag: u32) -> Option<OffsetWidth> {
+        match tag {
+            4 => Some(OffsetWidth::U32),
+            8 => Some(OffsetWidth::U64),
+            _ => None,
+        }
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize with the automatic offset width (u32 while the directed
+/// adjacency length fits, u64 beyond).
+pub fn snapshot_bytes(g: &Graph) -> Vec<u8> {
+    let m_dir: usize = (0..g.n() as u32).map(|v| g.degree(v)).sum();
+    let width =
+        if m_dir <= u32::MAX as usize { OffsetWidth::U32 } else { OffsetWidth::U64 };
+    snapshot_bytes_width(g, width).expect("auto width always fits")
+}
+
+/// Serialize with a forced offset width (the cross-width round-trip
+/// tests read a u64-offset snapshot of a small graph).
+pub fn snapshot_bytes_width(g: &Graph, width: OffsetWidth) -> Result<Vec<u8>> {
+    let n = g.n();
+    let m_dir: usize = (0..n as u32).map(|v| g.degree(v)).sum();
+    crate::ensure!(
+        width == OffsetWidth::U64 || m_dir <= u32::MAX as usize,
+        "u32 offsets cannot index {m_dir} directed edges"
+    );
+    let payload = HEADER_LEN
+        .saturating_add((n + 1).saturating_mul(width.bytes()))
+        .saturating_add(m_dir.saturating_mul(4))
+        .saturating_add(8);
+    let mut buf = Vec::with_capacity(payload);
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_u32(&mut buf, width.bytes() as u32);
+    push_u64(&mut buf, n as u64);
+    push_u64(&mut buf, m_dir as u64);
+    let mut off = 0usize;
+    match width {
+        OffsetWidth::U32 => push_u32(&mut buf, 0),
+        OffsetWidth::U64 => push_u64(&mut buf, 0),
+    }
+    for v in 0..n as u32 {
+        off += g.degree(v);
+        match width {
+            OffsetWidth::U32 => push_u32(&mut buf, off as u32),
+            OffsetWidth::U64 => push_u64(&mut buf, off as u64),
+        }
+    }
+    for v in 0..n as u32 {
+        for &u in g.neighbors(v) {
+            push_u32(&mut buf, u);
+        }
+    }
+    let ck = fnv1a(&buf);
+    push_u64(&mut buf, ck);
+    Ok(buf)
+}
+
+/// Write a snapshot (automatic width).
+pub fn write_snapshot<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    w.write_all(&snapshot_bytes(g))?;
+    Ok(())
+}
+
+pub fn write_snapshot_file(g: &Graph, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, snapshot_bytes(g))?;
+    Ok(())
+}
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, k: usize) -> Result<&'a [u8]> {
+    crate::ensure!(
+        pos.saturating_add(k) <= bytes.len(),
+        "truncated snapshot: need {k} byte(s) at offset {pos}, file has {}",
+        bytes.len()
+    );
+    let out = &bytes[*pos..*pos + k];
+    *pos += k;
+    Ok(out)
+}
+
+fn take_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().expect("4 bytes")))
+}
+
+fn take_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().expect("8 bytes")))
+}
+
+/// Parse and fully validate a snapshot.
+pub fn read_snapshot_bytes(bytes: &[u8]) -> Result<Graph> {
+    let mut pos = 0usize;
+    let magic = take(bytes, &mut pos, 8)?;
+    crate::ensure!(
+        magic == MAGIC.as_slice(),
+        "bad magic {magic:?}: not an arbocc-csr snapshot (expected {MAGIC:?})"
+    );
+    let version = take_u32(bytes, &mut pos)?;
+    crate::ensure!(
+        version == VERSION,
+        "unsupported snapshot version {version} (reader speaks {VERSION})"
+    );
+    let width_tag = take_u32(bytes, &mut pos)?;
+    let Some(width) = OffsetWidth::from_tag(width_tag) else {
+        crate::bail!("bad offset width tag {width_tag} (expected 4 or 8)");
+    };
+    let n64 = take_u64(bytes, &mut pos)?;
+    let m64 = take_u64(bytes, &mut pos)?;
+    crate::ensure!(n64 <= u32::MAX as u64, "n={n64} exceeds the u32 vertex-id space");
+    crate::ensure!(
+        width == OffsetWidth::U64 || m64 <= u32::MAX as u64,
+        "u32 offsets cannot index m_dir={m64}"
+    );
+    let expected = HEADER_LEN as u128
+        + (n64 as u128 + 1) * width.bytes() as u128
+        + m64 as u128 * 4
+        + 8;
+    crate::ensure!(
+        bytes.len() as u128 == expected,
+        "snapshot length mismatch: header declares n={n64} m_dir={m64} \
+         ({expected} bytes) but the file has {}",
+        bytes.len()
+    );
+    let body = &bytes[..bytes.len() - 8];
+    let mut tail = bytes.len() - 8;
+    let stored = take_u64(bytes, &mut tail)?;
+    let actual = fnv1a(body);
+    crate::ensure!(
+        stored == actual,
+        "snapshot checksum mismatch: stored {stored:#018x}, computed {actual:#018x}"
+    );
+    let (n, m_dir) = (n64 as usize, m64 as usize);
+    let mut offsets = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        let off = match width {
+            OffsetWidth::U32 => take_u32(bytes, &mut pos)? as u64,
+            OffsetWidth::U64 => take_u64(bytes, &mut pos)?,
+        };
+        crate::ensure!(off <= m64, "offset[{i}]={off} exceeds m_dir={m64}");
+        if let Some(&prev) = offsets.last() {
+            crate::ensure!(
+                off >= prev as u64,
+                "offsets not monotone at vertex {i}: {off} < {prev}"
+            );
+        } else {
+            crate::ensure!(off == 0, "offset[0] must be 0, got {off}");
+        }
+        offsets.push(off as usize);
+    }
+    crate::ensure!(
+        offsets[n] == m_dir,
+        "final offset {} != m_dir {m_dir}",
+        offsets[n]
+    );
+    let mut neighbors = Vec::with_capacity(m_dir);
+    for _ in 0..m_dir {
+        neighbors.push(take_u32(bytes, &mut pos)?);
+    }
+    // Structural validation: sorted strictly-increasing loop-free
+    // adjacency (has_edge's binary search depends on it) and symmetry
+    // (the graph is undirected by contract).
+    for v in 0..n as u32 {
+        let list = &neighbors[offsets[v as usize]..offsets[v as usize + 1]];
+        for (i, &u) in list.iter().enumerate() {
+            crate::ensure!((u as usize) < n, "vertex {v}: neighbor {u} out of range n={n}");
+            crate::ensure!(u != v, "vertex {v}: self-loop in adjacency");
+            if i > 0 {
+                crate::ensure!(
+                    list[i - 1] < u,
+                    "vertex {v}: adjacency not sorted-unique at position {i}"
+                );
+            }
+        }
+    }
+    for v in 0..n as u32 {
+        for &u in &neighbors[offsets[v as usize]..offsets[v as usize + 1]] {
+            let peer = &neighbors[offsets[u as usize]..offsets[u as usize + 1]];
+            crate::ensure!(
+                peer.binary_search(&v).is_ok(),
+                "asymmetric edge: {v}→{u} present but {u}→{v} missing"
+            );
+        }
+    }
+    Ok(Graph::from_csr(offsets, neighbors))
+}
+
+/// Read a snapshot from any reader (buffers fully, then validates).
+pub fn read_snapshot<R: Read>(mut r: R) -> Result<Graph> {
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    read_snapshot_bytes(&bytes)
+}
+
+pub fn read_snapshot_file(path: &std::path::Path) -> Result<Graph> {
+    read_snapshot_bytes(&std::fs::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{barbell, lambda_arboric};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_small() {
+        let mut rng = Rng::new(77);
+        let g = lambda_arboric(300, 3, &mut rng);
+        let bytes = snapshot_bytes(&g);
+        let back = read_snapshot_bytes(&bytes).unwrap();
+        assert_eq!(back, g);
+        assert_eq!(snapshot_bytes(&back), bytes, "write-read-write is byte-stable");
+    }
+
+    #[test]
+    fn forced_u64_width_reads_back() {
+        let g = barbell(6);
+        let wide = snapshot_bytes_width(&g, OffsetWidth::U64).unwrap();
+        let auto = snapshot_bytes(&g);
+        assert!(wide.len() > auto.len());
+        assert_eq!(read_snapshot_bytes(&wide).unwrap(), g);
+        assert_eq!(read_snapshot_bytes(&auto).unwrap(), g);
+    }
+
+    #[test]
+    fn empty_and_isolated_graphs() {
+        for g in [Graph::empty(0), Graph::empty(9)] {
+            let bytes = snapshot_bytes(&g);
+            assert_eq!(read_snapshot_bytes(&bytes).unwrap(), g);
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_context() {
+        let g = barbell(5);
+        let bytes = snapshot_bytes(&g);
+        let mut bad = bytes.clone();
+        bad[0] ^= 1;
+        assert!(read_snapshot_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = bytes.clone();
+        bad[8] = 9; // version field
+        assert!(read_snapshot_bytes(&bad).unwrap_err().to_string().contains("version"));
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        let msg = read_snapshot_bytes(&bad).unwrap_err().to_string();
+        assert!(msg.contains("checksum") || msg.contains("offset"), "{msg}");
+        let msg = read_snapshot_bytes(&bytes[..bytes.len() - 3]).unwrap_err().to_string();
+        assert!(msg.contains("length mismatch") || msg.contains("truncated"), "{msg}");
+    }
+}

@@ -5,6 +5,19 @@
 //! adversarial tightness instances (barbell of Remark 33, P4 of Remark 30).
 //! The λ-arboric family is generated *by construction* as a union of λ
 //! random forests, which has arboricity ≤ λ by Nash-Williams.
+//!
+//! **Determinism contract:** every generator is a pure, single-threaded
+//! function of its parameters and the [`Rng`] stream it is handed — the
+//! same seed and parameters produce the bit-identical [`Graph`] on every
+//! platform and at any shard count (generators never consult thread
+//! identity, time, or global state).  `data::corpus` addresses the
+//! families by string spec on this basis, and `tests/data_io.rs` pins
+//! the contract by regenerating the corpus on 1/2/8-shard pools.
+//!
+//! Edge-count arithmetic uses checked/saturating `usize` ops: capacity
+//! hints saturate (a short hint only costs a realloc), while vertex- and
+//! pair-count computations that index memory are `checked_*` with a
+//! named panic instead of a silent release-mode wraparound.
 
 use crate::graph::csr::Graph;
 use crate::util::rng::Rng;
@@ -76,10 +89,10 @@ pub fn lambda_arboric(n: usize, lambda: usize, rng: &mut Rng) -> Graph {
 /// paper targets.
 pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Graph {
     assert!(m_attach >= 1 && n > m_attach);
-    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_attach);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n.saturating_mul(m_attach));
     // Repeated-endpoint urn: sampling a uniform entry of `urn` is
     // degree-proportional sampling.
-    let mut urn: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+    let mut urn: Vec<u32> = Vec::with_capacity(n.saturating_mul(m_attach).saturating_mul(2));
     // Seed: star on m_attach + 1 vertices.
     for v in 0..m_attach as u32 {
         edges.push((v, m_attach as u32));
@@ -87,11 +100,18 @@ pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Graph {
         urn.push(m_attach as u32);
     }
     for v in (m_attach + 1) as u32..n as u32 {
-        let mut targets = std::collections::HashSet::with_capacity(m_attach);
+        // Insertion-ordered distinct targets (a Vec, not a HashSet: the
+        // set's randomized iteration order leaked into the urn layout and
+        // made the generator nondeterministic across identical seeds —
+        // the determinism contract above forbids that, and m_attach is
+        // small enough that linear `contains` wins anyway).
+        let mut targets: Vec<u32> = Vec::with_capacity(m_attach);
         let mut guard = 0;
         while targets.len() < m_attach {
             let t = urn[rng.index(urn.len())];
-            targets.insert(t);
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
             guard += 1;
             if guard > 100 * m_attach {
                 // Degenerate small graphs: fall back to uniform fill.
@@ -99,7 +119,9 @@ pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Graph {
                     if targets.len() >= m_attach {
                         break;
                     }
-                    targets.insert(u);
+                    if !targets.contains(&u) {
+                        targets.push(u);
+                    }
                 }
             }
         }
@@ -130,7 +152,7 @@ pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
         return Graph::from_edges(n, &edges);
     }
     let log1p = (1.0 - p).ln();
-    let total_pairs = n * (n - 1) / 2;
+    let total_pairs = pair_count(n);
     let mut idx: i64 = -1;
     loop {
         let r = rng.f64().max(f64::MIN_POSITIVE);
@@ -143,6 +165,16 @@ pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
         edges.push((u, v));
     }
     Graph::from_edges(n, &edges)
+}
+
+/// `n choose 2`, checked: the geometric-skipping samplers linearize the
+/// pair space into a usize index, so a wraparound here would silently
+/// truncate the sample space in release builds.
+fn pair_count(n: usize) -> usize {
+    if n < 2 {
+        return 0;
+    }
+    n.checked_mul(n - 1).map(|x| x / 2).expect("pair count n*(n-1)/2 overflows usize")
 }
 
 /// Map a linear index to the (u, v) pair with u < v (row-major upper
@@ -160,8 +192,8 @@ fn pair_from_index(n: usize, mut idx: usize) -> (u32, u32) {
 
 /// w×h grid graph — planar, arboricity ≤ 2, unbounded Δ=4 contrast.
 pub fn grid(w: usize, h: usize) -> Graph {
-    let n = w * h;
-    let mut edges = Vec::with_capacity(2 * n);
+    let n = w.checked_mul(h).expect("grid: w*h overflows usize");
+    let mut edges = Vec::with_capacity(n.saturating_mul(2));
     let id = |x: usize, y: usize| (y * w + x) as u32;
     for y in 0..h {
         for x in 0..w {
@@ -176,9 +208,53 @@ pub fn grid(w: usize, h: usize) -> Graph {
     Graph::from_edges(n, &edges)
 }
 
+/// 2×k ladder: two parallel k-paths ("rails") plus the k rungs between
+/// them.  Planar, arboricity ≤ 2, Δ = 3 — the bounded-everything
+/// contrast workload; `with_flip_noise` perturbs it into the adversarial
+/// near-ladder family of the corpus.
+pub fn ladder(k: usize) -> Graph {
+    let n = k.checked_mul(2).expect("ladder: 2k overflows usize");
+    let mut edges = Vec::with_capacity(k.saturating_mul(3));
+    for i in 0..k as u32 {
+        edges.push((2 * i, 2 * i + 1)); // rung
+        if (i as usize) + 1 < k {
+            edges.push((2 * i, 2 * i + 2)); // left rail
+            edges.push((2 * i + 1, 2 * i + 3)); // right rail
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Edge flip noise: each positive edge is dropped with probability `p`,
+/// and for each original edge a uniformly random non-loop pair is added
+/// with probability `p` — the expected edge count is preserved while the
+/// clean structure (forest, ladder, …) is adversarially perturbed.
+/// `p = 0` returns the graph unchanged without consuming any randomness.
+pub fn with_flip_noise(g: &Graph, p: f64, rng: &mut Rng) -> Graph {
+    assert!((0.0..=1.0).contains(&p), "flip probability {p} outside [0,1]");
+    let n = g.n();
+    if p <= 0.0 || n < 2 {
+        return g.clone();
+    }
+    let mut edges: Vec<(u32, u32)> = g.edges().filter(|_| !rng.bernoulli(p)).collect();
+    for _ in 0..g.m() {
+        if rng.bernoulli(p) {
+            loop {
+                let u = rng.index(n) as u32;
+                let v = rng.index(n) as u32;
+                if u != v {
+                    edges.push((u, v));
+                    break;
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
 /// Complete graph K_k.
 pub fn clique(k: usize) -> Graph {
-    let mut edges = Vec::with_capacity(k * (k - 1) / 2);
+    let mut edges = Vec::with_capacity(k.saturating_mul(k.saturating_sub(1)) / 2);
     for u in 0..k as u32 {
         for v in u + 1..k as u32 {
             edges.push((u, v));
@@ -189,7 +265,7 @@ pub fn clique(k: usize) -> Graph {
 
 /// Disjoint union of `count` cliques of size `k` each.
 pub fn disjoint_cliques(count: usize, k: usize) -> Graph {
-    let n = count * k;
+    let n = count.checked_mul(k).expect("disjoint_cliques: count*k overflows usize");
     let mut edges = Vec::new();
     for c in 0..count {
         let base = (c * k) as u32;
@@ -227,12 +303,15 @@ pub fn path(n: usize) -> Graph {
 /// Star K_{1,k}: the minimal unbounded-degree forest (λ=1, Δ=k).
 pub fn star(k: usize) -> Graph {
     let edges: Vec<(u32, u32)> = (1..=k as u32).map(|v| (0, v)).collect();
-    Graph::from_edges(k + 1, &edges)
+    Graph::from_edges(k.checked_add(1).expect("star: k+1 overflows usize"), &edges)
 }
 
 /// Caterpillar: a path spine with `legs` pendant vertices per spine vertex.
 pub fn caterpillar(spine: usize, legs: usize) -> Graph {
-    let n = spine + spine * legs;
+    let n = spine
+        .checked_mul(legs)
+        .and_then(|x| x.checked_add(spine))
+        .expect("caterpillar: spine*(legs+1) overflows usize");
     let mut edges = Vec::new();
     for i in 0..spine.saturating_sub(1) as u32 {
         edges.push((i, i + 1));
@@ -283,7 +362,7 @@ pub fn planted_partition(
         // Sample inter-community pairs by rejection over all pairs; for
         // small p_out this is efficient via geometric skipping on the
         // linearized pair index.
-        let total_pairs = n * (n - 1) / 2;
+        let total_pairs = pair_count(n);
         let log1p = (1.0 - p_out).ln();
         let mut idx: i64 = -1;
         loop {
@@ -307,7 +386,10 @@ pub fn planted_partition(
 /// multi-component workload builder behind the solve engine's
 /// per-component decomposition tests and benchmarks.
 pub fn disjoint_union(parts: &[Graph]) -> Graph {
-    let n: usize = parts.iter().map(|g| g.n()).sum();
+    let n: usize = parts.iter().fold(0usize, |acc, g| {
+        acc.checked_add(g.n()).expect("disjoint_union: total n overflows usize")
+    });
+    assert!(n <= u32::MAX as usize, "disjoint_union: {n} vertices exceed the u32 id space");
     let mut edges = Vec::new();
     let mut base = 0u32;
     for g in parts {
@@ -453,6 +535,65 @@ mod tests {
         assert_eq!(g.n(), 10);
         assert_eq!(g.m(), 2 * 10 + 1);
         assert_eq!(g.degree(0), 5); // clique (4) + bridge (1)
+    }
+
+    #[test]
+    fn ladder_shape() {
+        let g = ladder(5);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.m(), 5 + 2 * 4); // rungs + two rails
+        assert_eq!(g.max_degree(), 3);
+        assert_eq!(components(&g).count, 1);
+        assert_eq!(ladder(0).n(), 0);
+        assert_eq!(ladder(1).m(), 1);
+    }
+
+    #[test]
+    fn flip_noise_perturbs_but_zero_is_identity() {
+        let mut rng = Rng::new(17);
+        let g = ladder(50);
+        // p = 0: bit-identical, no randomness consumed.
+        let mut before = rng.clone();
+        let same = with_flip_noise(&g, 0.0, &mut rng);
+        assert_eq!(same, g);
+        assert_eq!(rng.next_u64(), before.next_u64(), "p=0 must not consume rng");
+        // p = 0.3: expected edge count preserved within slack, structure changed.
+        let noisy = with_flip_noise(&g, 0.3, &mut rng);
+        assert_eq!(noisy.n(), g.n());
+        assert_ne!(noisy, g);
+        let (lo, hi) = (g.m() * 6 / 10, g.m() * 14 / 10);
+        assert!((lo..=hi).contains(&noisy.m()), "m {} vs original {}", noisy.m(), g.m());
+        // Determinism: same seed stream, same perturbation.
+        let a = with_flip_noise(&g, 0.3, &mut Rng::new(99));
+        let b = with_flip_noise(&g, 0.3, &mut Rng::new(99));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        // The determinism contract in the module doc: same seed + params
+        // ⇒ identical graph (CSR equality), for every seeded family.
+        for seed in [1u64, 42, 0xDEAD] {
+            assert_eq!(
+                random_tree(60, &mut Rng::new(seed)),
+                random_tree(60, &mut Rng::new(seed))
+            );
+            assert_eq!(
+                lambda_arboric(60, 3, &mut Rng::new(seed)),
+                lambda_arboric(60, 3, &mut Rng::new(seed))
+            );
+            assert_eq!(
+                barabasi_albert(60, 2, &mut Rng::new(seed)),
+                barabasi_albert(60, 2, &mut Rng::new(seed))
+            );
+            assert_eq!(
+                erdos_renyi(60, 0.05, &mut Rng::new(seed)),
+                erdos_renyi(60, 0.05, &mut Rng::new(seed))
+            );
+            let a = planted_partition(60, 6, 0.9, 0.02, &mut Rng::new(seed));
+            let b = planted_partition(60, 6, 0.9, 0.02, &mut Rng::new(seed));
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

@@ -8,7 +8,6 @@
 
 pub mod arboricity;
 pub mod components;
-pub mod io;
 pub mod csr;
 pub mod generators;
 

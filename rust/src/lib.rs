@@ -13,6 +13,10 @@
 //!   MIS, Algorithms 1–4, matching-based forest algorithms, the O(λ²)
 //!   simple algorithm) and its baselines (ParallelPivot, C4,
 //!   ClusterWild!).
+//! * [`data`] — the dataset subsystem: edge-list / `arbocc-csr/v1`
+//!   snapshot IO and the string-addressable generator corpus
+//!   (`planted:n=50000,k=40,p=0.05,seed=7`) feeding the CLI, the solver
+//!   engine and the perf lab.
 //! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`), with a bit-identical pure-Rust
 //!   fallback.
@@ -32,6 +36,7 @@ pub mod algorithms;
 pub mod bench;
 pub mod cluster;
 pub mod coordinator;
+pub mod data;
 pub mod graph;
 pub mod mpc;
 pub mod runtime;

@@ -6,6 +6,10 @@
 //!             plan trace in the output
 //!   cluster   run one registered solver on a generated workload; report
 //!             cost, lower-bound ratio and MPC rounds
+//!   gen       generate a corpus workload (`arbocc gen planted:n=2000,k=8
+//!             -o g.csr`); `--list` prints the family registry
+//!   convert   re-encode a graph file (edge list ⇄ arbocc-csr snapshot,
+//!             format chosen by the output extension)
 //!   mis       run the MPC greedy-MIS pipeline; report round counts
 //!   best-of-k the Remark 14 driver: K trials of any registered solver
 //!             through the coordinator + PJRT engine
@@ -30,6 +34,7 @@ use arbocc::algorithms::mpc_mis::{
 };
 use arbocc::algorithms::pivot::pivot_random;
 use arbocc::cluster::cost::cost;
+use arbocc::data::corpus::{describe_families, WorkloadSpec};
 use arbocc::cluster::triangles::packing_lower_bound;
 use arbocc::coordinator::best_of_k_solver;
 use arbocc::graph::arboricity::estimate_arboricity;
@@ -76,14 +81,22 @@ fn parse_family(s: &str) -> Result<Family> {
     }
 }
 
-/// Workload source: `--input <edge-list file>` (SNAP format) or a named
-/// generator family (`--family`, `--n`).
+/// Workload source, in precedence order: `--input <file>` (edge list or
+/// `arbocc-csr` snapshot, auto-detected), `--workload <spec>` (any
+/// registered corpus family, e.g. `planted:n=50000,k=40,seed=7`), or the
+/// legacy named generator family (`--family`, `--n`).
 fn make_graph(args: &Args) -> Result<(Graph, String, u64)> {
     let seed = args.get_u64("seed", 1);
     if let Some(path) = args.get("input") {
-        let (g, _orig) = arbocc::graph::io::read_edge_list_file(std::path::Path::new(path))
+        let (g, stats) = arbocc::data::load_graph(std::path::Path::new(path))
             .with_context(|| format!("reading --input {path}"))?;
+        println!("loaded {path}: {}", stats.describe());
         return Ok((g, format!("file:{path}"), seed));
+    }
+    if let Some(spec_s) = args.get("workload") {
+        let spec = WorkloadSpec::parse(spec_s)?;
+        let g = spec.generate()?;
+        return Ok((g, spec.canonical(), seed));
     }
     let family = parse_family(&args.get_str("family", "arboric-3"))?;
     let n = args.get_usize("n", 10_000);
@@ -389,6 +402,63 @@ fn cmd_forest(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Dataset generator:
+///
+///   arbocc gen <family:k=v,...> [-o <file>]   generate + write
+///   arbocc gen --list                          print the family registry
+///
+/// The output format follows the extension: `.csr` writes the
+/// `arbocc-csr/v1` binary snapshot, `.csv` a CSV edge list, anything
+/// else a whitespace edge list. Without `-o` the instance is generated
+/// and summarized (a dry run).
+fn cmd_gen(args: &Args) -> Result<()> {
+    if args.get_bool("list") {
+        let lines = describe_families();
+        println!("{} registered workload famil(ies):", lines.len());
+        for line in lines {
+            println!("  {line}");
+        }
+        return Ok(());
+    }
+    let Some(spec_s) = args.positional().get(1) else {
+        arbocc::bail!(
+            "usage: arbocc gen <family:k=v,...> [-o <file>] — \
+             `arbocc gen --list` prints the registered families"
+        );
+    };
+    let spec = WorkloadSpec::parse(spec_s)?;
+    let g = spec.generate()?;
+    print_graph_line(&spec.canonical(), &g);
+    match args.get("o").or_else(|| args.get("out")) {
+        Some(path) => {
+            let p = std::path::Path::new(path);
+            let format = arbocc::data::save_graph(&g, p)
+                .with_context(|| format!("writing {path}"))?;
+            let bytes = std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+            println!("wrote {path} ({format}, {bytes} bytes)");
+        }
+        None => println!("(dry run — pass -o <file> to write .csr / .edges / .csv)"),
+    }
+    Ok(())
+}
+
+/// Re-encode a graph file; the target format follows the output
+/// extension, the source format is auto-detected.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    let (Some(src), Some(dst)) = (pos.get(1), pos.get(2)) else {
+        arbocc::bail!("usage: arbocc convert <in> <out> (format chosen by <out>'s extension)");
+    };
+    let (g, stats) = arbocc::data::load_graph(std::path::Path::new(src))
+        .with_context(|| format!("reading {src}"))?;
+    println!("read {src}: {}", stats.describe());
+    print_graph_line(&format!("file:{src}"), &g);
+    let format = arbocc::data::save_graph(&g, std::path::Path::new(dst))
+        .with_context(|| format!("writing {dst}"))?;
+    println!("wrote {dst} ({format})");
+    Ok(())
+}
+
 fn cmd_check(_args: &Args) -> Result<()> {
     let engine = CostEngine::auto_default();
     match engine.kind() {
@@ -438,7 +508,11 @@ fn cmd_info() -> Result<()> {
 ///
 ///   arbocc bench [--tier smoke|full] [--label PR3] [--out path.json]
 ///                [--filter substr] [--compare [baseline.json]]
-///                [--replay run.json] [--list]
+///                [--replay run.json] [--workload spec] [--list]
+///
+/// `--workload <spec>` hands a corpus spec to the corpus-driven
+/// scenarios (e.g. `--filter corpus --workload planted:n=8000,k=16`),
+/// pointing the sweep at one addressable instance.
 ///
 /// Runs the registered scenarios, writes `BENCH_<label>.json`, and with
 /// `--compare` diffs against a baseline (explicit path, or the newest
@@ -480,7 +554,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         };
         let label = args.get_str("label", "local");
         let filter = args.get("filter");
-        let result = registry.run(tier, &label, filter);
+        let result = registry.run_with(tier, &label, filter, args.get("workload"));
         arbocc::ensure!(
             !result.scenarios.is_empty(),
             "no scenarios matched filter {:?}",
@@ -584,6 +658,8 @@ fn main() {
     let result = match cmd {
         "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
+        "gen" => cmd_gen(&args),
+        "convert" => cmd_convert(&args),
         "mis" => cmd_mis(&args),
         "best-of-k" => cmd_best_of_k(&args),
         "forest" => cmd_forest(&args),
@@ -594,7 +670,7 @@ fn main() {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "usage: arbocc <solve|cluster|mis|best-of-k|forest|bench|check|report|info> [--flags]"
+                "usage: arbocc <solve|cluster|gen|convert|mis|best-of-k|forest|bench|check|report|info> [--flags]"
             );
             std::process::exit(2);
         }

@@ -1,11 +1,22 @@
 //! Tiny CLI flag parser used by `main.rs`, the examples and bench bins
 //! (clap is unavailable in the offline registry).
 //!
-//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
-//! positional arguments.  Typed getters parse on access and report precise
-//! errors.
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, short
+//! `-o value` flags (single dash + alphabetic name; `-3` stays
+//! positional so negative numbers pass through), and free positional
+//! arguments.  Typed getters parse on access and report precise errors.
 
 use std::collections::BTreeMap;
+
+/// `-o` style short flag: single dash followed by an alphabetic name
+/// (`--long` is handled first; `-`, `-3` stay positional).
+fn short_flag(item: &str) -> Option<&str> {
+    let raw = item.strip_prefix('-')?;
+    if raw.starts_with('-') || !raw.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) {
+        return None;
+    }
+    Some(raw)
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -20,26 +31,36 @@ impl Args {
         let mut it = items.into_iter().peekable();
         while let Some(item) = it.next() {
             if let Some(raw) = item.strip_prefix("--") {
-                if let Some((k, v)) = raw.split_once('=') {
-                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
-                } else if it
-                    .peek()
-                    .map(|next| !next.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().expect("peeked");
-                    args.flags.entry(raw.to_string()).or_default().push(v);
-                } else {
-                    args.flags
-                        .entry(raw.to_string())
-                        .or_default()
-                        .push("true".to_string());
-                }
+                args.push_flag(raw, &mut it);
+            } else if let Some(raw) = short_flag(&item) {
+                args.push_flag(raw, &mut it);
             } else {
                 args.positional.push(item);
             }
         }
         args
+    }
+
+    /// One value-consumption rule for long and short flags alike:
+    /// `name=value` splits inline, otherwise a following non-flag token
+    /// is the value, otherwise the flag is boolean `true`.
+    fn push_flag<I: Iterator<Item = String>>(
+        &mut self,
+        raw: &str,
+        it: &mut std::iter::Peekable<I>,
+    ) {
+        if let Some((k, v)) = raw.split_once('=') {
+            self.flags.entry(k.to_string()).or_default().push(v.to_string());
+        } else if it
+            .peek()
+            .map(|next| !next.starts_with("--") && short_flag(next).is_none())
+            .unwrap_or(false)
+        {
+            let v = it.next().expect("peeked");
+            self.flags.entry(raw.to_string()).or_default().push(v);
+        } else {
+            self.flags.entry(raw.to_string()).or_default().push("true".to_string());
+        }
     }
 
     /// Parse the process arguments, skipping argv[0].
@@ -145,6 +166,17 @@ mod tests {
         assert_eq!(a.get_f64("eps", 0.0), 0.5);
         assert!(a.get_bool("verbose"));
         assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn short_flags_parse_and_negatives_stay_positional() {
+        let a = parse("gen spec -o /tmp/g.csr -v");
+        assert_eq!(a.get("o"), Some("/tmp/g.csr"));
+        assert!(a.get_bool("v"));
+        assert_eq!(a.positional(), &["gen".to_string(), "spec".to_string()]);
+        let b = parse("run -3 -o=x.csr -");
+        assert_eq!(b.get("o"), Some("x.csr"));
+        assert_eq!(b.positional(), &["run".to_string(), "-3".to_string(), "-".to_string()]);
     }
 
     #[test]

@@ -13,3 +13,25 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod timer;
+
+/// FNV-1a over a byte slice — the one non-cryptographic hash the crate
+/// uses (property-test seed derivation, the `arbocc-csr/v1` snapshot
+/// checksum).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(super::fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -117,13 +117,7 @@ where
 }
 
 fn hash_str(s: &str) -> u64 {
-    // FNV-1a.
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
+    crate::util::fnv1a(s.as_bytes())
 }
 
 /// Assert-like macro producing a `CaseResult` error with context.

@@ -1,0 +1,174 @@
+//! Property tests for the dataset subsystem (ISSUE 4 satellite): CSR
+//! snapshot round-trips are bit-identical across widths and sizes, the
+//! edge-list parser is invariant under line permutation/duplication,
+//! malformed input is rejected with the offending line number, and the
+//! generator corpus honors its determinism contract at 1/2/8 shards.
+
+use arbocc::data::corpus::{sweep_corpus, tiny_corpus, WorkloadSpec};
+use arbocc::data::edge_list::{self, EdgeListFormat};
+use arbocc::data::snapshot::{self, OffsetWidth};
+use arbocc::data::{load_graph, save_graph};
+use arbocc::graph::generators::{lambda_arboric, random_tree};
+use arbocc::graph::Graph;
+use arbocc::mpc::pool::ShardPool;
+use arbocc::prop_check;
+use arbocc::util::prop::forall;
+use arbocc::util::rng::Rng;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("arbocc_data_io_{}_{tag}", std::process::id()))
+}
+
+#[test]
+fn prop_snapshot_roundtrip_bit_identical_across_widths() {
+    forall("snapshot write→read→write is lossless and byte-stable", 40, |rng, size| {
+        let lambda = 1 + rng.index(4);
+        let g = lambda_arboric(size.max(2), lambda, rng);
+        let auto = snapshot::snapshot_bytes(&g);
+        let back = snapshot::read_snapshot_bytes(&auto).map_err(|e| e.to_string())?;
+        prop_check!(back == g, "auto-width decode mismatch");
+        let again = snapshot::snapshot_bytes(&back);
+        prop_check!(again == auto, "second encode must be byte-identical");
+        // Forced u64 offsets: different bytes, same graph.
+        let wide =
+            snapshot::snapshot_bytes_width(&g, OffsetWidth::U64).map_err(|e| e.to_string())?;
+        prop_check!(wide.len() > auto.len());
+        let back_wide = snapshot::read_snapshot_bytes(&wide).map_err(|e| e.to_string())?;
+        prop_check!(back_wide == g, "u64-width decode mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_list_parse_is_permutation_and_duplication_invariant() {
+    forall("permuted/duplicated edge lists parse to the same graph", 30, |rng, size| {
+        // Trees: every vertex has degree ≥ 1, so rank compaction is the
+        // identity and full Graph equality is the right check.
+        let g = random_tree(size.max(3), rng);
+        let mut lines: Vec<String> = g.edges().map(|(u, v)| format!("{u} {v}")).collect();
+        let reversed: Vec<String> = g.edges().map(|(u, v)| format!("{v},{u}")).collect();
+        lines.extend(reversed); // every edge twice, once per format/orientation
+        rng.shuffle(&mut lines);
+        let text = lines.join("\n");
+        let (parsed, stats) = edge_list::read_edges(&text).map_err(|e| e.to_string())?;
+        prop_check!(parsed == g, "normalized graph differs");
+        prop_check!(stats.duplicates == g.m(), "dup count {} != m {}", stats.duplicates, g.m());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_writer_reader_roundtrip_both_formats() {
+    forall("edge-list write→read round-trips (isolated vertices kept)", 30, |rng, size| {
+        let g = lambda_arboric(size.max(2), 2, rng);
+        for format in [EdgeListFormat::Whitespace, EdgeListFormat::Csv] {
+            let mut buf = Vec::new();
+            edge_list::write_edges(&g, &mut buf, format).map_err(|e| e.to_string())?;
+            let text = String::from_utf8(buf).map_err(|e| e.to_string())?;
+            let (back, _) = edge_list::read_edges(&text).map_err(|e| e.to_string())?;
+            prop_check!(back == g, "{format:?} round-trip mismatch");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn malformed_lines_are_rejected_with_line_numbers() {
+    for (text, frag) in [
+        ("0 1\n1 2\nx 3\n", "line 3"),
+        ("0 1\n\n# ok\n1 2 bogus\n", "line 4"),
+        ("0,1\n0,1,0\n", "line 2"),
+        ("0 1 2 3\n", "line 1"),
+        ("# arbocc-edges/v1 n=3\n0 1\n2 7\n", "line 3"),
+    ] {
+        let err = edge_list::read_edges(text).unwrap_err().to_string();
+        assert!(err.contains(frag), "{text:?} should mention {frag}: {err}");
+    }
+}
+
+#[test]
+fn snapshot_corruption_is_rejected() {
+    let g = lambda_arboric(60, 2, &mut Rng::new(8));
+    let bytes = snapshot::snapshot_bytes(&g);
+    let mut bad = bytes.clone();
+    bad[3] ^= 0xFF;
+    assert!(snapshot::read_snapshot_bytes(&bad).unwrap_err().to_string().contains("magic"));
+    let mut bad = bytes.clone();
+    let mid = bytes.len() / 2;
+    bad[mid] ^= 0x55;
+    let msg = snapshot::read_snapshot_bytes(&bad).unwrap_err().to_string();
+    assert!(msg.contains("checksum") || msg.contains("mismatch"), "{msg}");
+    let msg = snapshot::read_snapshot_bytes(&bytes[..bytes.len() - 5]).unwrap_err().to_string();
+    assert!(msg.contains("length mismatch") || msg.contains("truncated"), "{msg}");
+}
+
+#[test]
+fn load_graph_autodetects_every_saved_format() {
+    let g = lambda_arboric(90, 3, &mut Rng::new(31));
+    for tag in ["auto.csr", "auto.edges", "auto.csv"] {
+        let path = temp_path(tag);
+        save_graph(&g, &path).unwrap();
+        let (back, stats) = load_graph(&path).unwrap();
+        assert_eq!(back, g, "{tag}");
+        assert!(!stats.describe().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn corpus_specs_are_canonical_and_deterministic() {
+    let mut all: Vec<String> = tiny_corpus().iter().map(|s| s.to_string()).collect();
+    all.extend(sweep_corpus(400, 3));
+    for spec_s in &all {
+        let spec = WorkloadSpec::parse(spec_s).unwrap();
+        // Canonicalization is idempotent.
+        let again = WorkloadSpec::parse(&spec.canonical()).unwrap();
+        assert_eq!(again.canonical(), spec.canonical(), "{spec_s}");
+        // Generation is a pure function of the spec.
+        assert_eq!(spec.generate().unwrap(), spec.generate().unwrap(), "{spec_s}");
+    }
+}
+
+#[test]
+fn corpus_generation_is_shard_invariant() {
+    // The generators' determinism contract: the same specs generated on
+    // 1/2/8-shard pools (arbitrary thread assignment) are bit-identical.
+    let specs = sweep_corpus(400, 9);
+    let baseline: Vec<Graph> = specs
+        .iter()
+        .map(|s| WorkloadSpec::parse(s).unwrap().generate().unwrap())
+        .collect();
+    for shards in [2usize, 8] {
+        let pool = ShardPool::new(shards);
+        let got: Vec<Graph> = pool
+            .run(specs.len(), |_, range| {
+                range
+                    .map(|i| WorkloadSpec::parse(&specs[i]).unwrap().generate().unwrap())
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(got.len(), baseline.len());
+        for (i, (a, b)) in got.iter().zip(&baseline).enumerate() {
+            assert_eq!(a, b, "{}@{shards} shards", specs[i]);
+        }
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_through_files_and_pipeline() {
+    // gen → convert → reload, as `make gen-demo` does, minus the CLI.
+    let spec = WorkloadSpec::parse("planted:n=300,k=6,seed=7").unwrap();
+    let g = spec.generate().unwrap();
+    let csr = temp_path("pipe.csr");
+    let edges = temp_path("pipe.edges");
+    save_graph(&g, &csr).unwrap();
+    let (from_csr, _) = load_graph(&csr).unwrap();
+    save_graph(&from_csr, &edges).unwrap();
+    let (from_edges, _) = load_graph(&edges).unwrap();
+    assert_eq!(from_csr, g);
+    assert_eq!(from_edges, g);
+    let _ = std::fs::remove_file(&csr);
+    let _ = std::fs::remove_file(&edges);
+}

@@ -186,24 +186,18 @@ fn prop_metrics_identities() {
 
 #[test]
 fn prop_edge_list_roundtrip() {
-    forall("edge-list IO preserves the edge multiset", 30, |rng, size| {
+    forall("edge-list IO preserves the graph exactly", 30, |rng, size| {
         let (g, _) = random_lambda_graph(rng, size.max(4));
         let mut buf = Vec::new();
-        arbocc::graph::io::write_edge_list(&g, &mut buf).map_err(|e| e.to_string())?;
-        let (g2, orig) =
-            arbocc::graph::io::read_edge_list(std::io::Cursor::new(buf)).map_err(|e| e.to_string())?;
-        prop_check!(g2.m() == g.m());
-        let mut back: Vec<(u32, u32)> = g2
-            .edges()
-            .map(|(u, v)| {
-                let (a, b) = (orig[u as usize] as u32, orig[v as usize] as u32);
-                if a < b { (a, b) } else { (b, a) }
-            })
-            .collect();
-        back.sort_unstable();
-        let mut fwd: Vec<(u32, u32)> = g.edges().collect();
-        fwd.sort_unstable();
-        prop_check!(back == fwd);
+        arbocc::data::edge_list::write_edges(
+            &g,
+            &mut buf,
+            arbocc::data::edge_list::EdgeListFormat::Whitespace,
+        )
+        .map_err(|e| e.to_string())?;
+        let text = String::from_utf8(buf).map_err(|e| e.to_string())?;
+        let (g2, _) = arbocc::data::edge_list::read_edges(&text).map_err(|e| e.to_string())?;
+        prop_check!(g2 == g, "round-trip must be lossless");
         Ok(())
     });
 }
