@@ -23,7 +23,7 @@
 #   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
-BENCH_LABEL ?= PR3
+BENCH_LABEL ?= PR5
 
 .PHONY: tier1 fmt clippy ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
 

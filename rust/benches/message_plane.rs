@@ -1,0 +1,12 @@
+//! §MPC message plane — the flat-arena wire format vs the retired
+//! per-message plane (round throughput, arena-vs-permsg speedup, codec
+//! frames/s, deterministic tree schedules). Thin wrapper over the
+//! `mpc/plane_*` scenarios registered in
+//! `arbocc::bench::scenarios::message_plane`; run the whole lab with
+//! `arbocc bench` or just this bin's slice via
+//!
+//!     cargo bench --bench message_plane [-- --tier smoke]
+
+fn main() {
+    arbocc::bench::suite::run_bin("message_plane");
+}

@@ -108,12 +108,17 @@ pub fn alg1_greedy_mis(
         pos += t_i;
 
         // Prefix-graph max degree (measured, for the Chernoff claim) — a
-        // shard-parallel scan over the alive prefix vertices.
+        // shard-parallel scan over the alive prefix vertices, with a flat
+        // vertex-indexed membership marker (no hash structures on the
+        // deterministic path).
         let alive: Vec<u32> =
             order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
-        let alive_set: std::collections::HashSet<u32> = alive.iter().copied().collect();
+        let mut in_alive = vec![false; n];
+        for &v in &alive {
+            in_alive[v as usize] = true;
+        }
         let prefix_max_degree = pool.max_by(alive.len(), |i| {
-            g.neighbors(alive[i]).iter().filter(|&&u| alive_set.contains(&u)).count() as u64
+            g.neighbors(alive[i]).iter().filter(|&&u| in_alive[u as usize]).count() as u64
         }) as usize;
 
         let rounds_before = sim.n_rounds();

@@ -82,13 +82,19 @@ pub fn alg2_process(
     let pool = sim.pool();
     let alive_prefix: Vec<u32> =
         order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
-    let in_prefix: std::collections::HashSet<u32> = alive_prefix.iter().copied().collect();
+    let mut in_prefix = vec![false; g.n()];
+    for &v in &alive_prefix {
+        in_prefix[v as usize] = true;
+    }
     let delta_p = (pool.max_by(alive_prefix.len(), |i| {
-        g.neighbors(alive_prefix[i]).iter().filter(|&&u| in_prefix.contains(&u)).count() as u64
+        g.neighbors(alive_prefix[i]).iter().filter(|&&u| in_prefix[u as usize]).count() as u64
     }) as usize)
         .max(1);
     sim.round("alg2/degree-aggregate", 1, 1, nprefix as Words, 2);
 
+    // Chunk-local index scratch, reused across chunks: `u32::MAX` marks
+    // "not in the current chunk" (only touched slots are reset).
+    let mut chunk_index: Vec<u32> = vec![u32::MAX; g.n()];
     let mut pos = 0usize;
     let mut phase = 0u32;
     while pos < nprefix {
@@ -104,7 +110,7 @@ pub fn alg2_process(
             let end = (pos + c_i).min(nprefix);
             let chunk = &order[pos..end];
             pos = end;
-            process_chunk(g, chunk, blocked, in_mis, sim, &mut stats);
+            process_chunk(g, chunk, blocked, in_mis, sim, &mut stats, &mut chunk_index);
         }
         stats.phases += 1;
         phase += 1;
@@ -115,6 +121,10 @@ pub fn alg2_process(
 /// Resolve one chunk: gather each connected component of the chunk graph
 /// on one machine (graph exponentiation — O(log(max component)) rounds),
 /// run greedy locally, then one round to publish the statuses.
+///
+/// `chunk_index` is the caller's vertex-indexed scratch (`u32::MAX` =
+/// not in chunk); all component tallies are Vec-indexed by chunk-local
+/// UnionFind roots, so nothing here depends on hash iteration order.
 fn process_chunk(
     g: &Graph,
     chunk: &[u32],
@@ -122,6 +132,7 @@ fn process_chunk(
     in_mis: &mut [bool],
     sim: &mut MpcSimulator,
     stats: &mut Alg2Stats,
+    chunk_index: &mut [u32],
 ) {
     // Alive = not yet knocked out by earlier chunks/prefixes.
     let alive: Vec<u32> = chunk.iter().copied().filter(|&v| !blocked[v as usize]).collect();
@@ -131,36 +142,46 @@ fn process_chunk(
         return;
     }
     // Chunk-local components (edges of g among alive chunk vertices).
-    let index: std::collections::HashMap<u32, u32> =
-        alive.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+    for (i, &v) in alive.iter().enumerate() {
+        chunk_index[v as usize] = i as u32;
+    }
     let mut uf = UnionFind::new(alive.len());
     for (i, &v) in alive.iter().enumerate() {
         for &u in g.neighbors(v) {
-            if let Some(&j) = index.get(&u) {
-                uf.union(i as u32, j as u32);
+            let j = chunk_index[u as usize];
+            if j != u32::MAX {
+                uf.union(i as u32, j);
             }
         }
     }
     // Component sizes and memory footprint (topology words of the largest
-    // component: members + their chunk-internal adjacency).
-    let mut comp_size: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
-    let mut comp_words: std::collections::HashMap<u32, Words> = std::collections::HashMap::new();
+    // component: members + their chunk-internal adjacency), tallied into
+    // root-indexed vectors (non-roots stay zero).
+    let mut comp_size = vec![0usize; alive.len()];
+    let mut comp_words: Vec<Words> = vec![0; alive.len()];
     for (i, &v) in alive.iter().enumerate() {
-        let root = uf.find(i as u32);
-        *comp_size.entry(root).or_insert(0) += 1;
-        let internal_deg =
-            g.neighbors(v).iter().filter(|&&u| index.contains_key(&u)).count() as Words;
-        *comp_words.entry(root).or_insert(0) += 1 + internal_deg;
+        let root = uf.find(i as u32) as usize;
+        comp_size[root] += 1;
+        let internal_deg = g
+            .neighbors(v)
+            .iter()
+            .filter(|&&u| chunk_index[u as usize] != u32::MAX)
+            .count() as Words;
+        comp_words[root] += 1 + internal_deg;
     }
-    let max_comp = comp_size.values().copied().max().unwrap_or(1);
-    let max_words = comp_words.values().copied().max().unwrap_or(1);
+    let max_comp = comp_size.iter().copied().max().unwrap_or(1);
+    let max_words = comp_words.iter().copied().max().unwrap_or(1);
     stats.chunk_max_components.push(max_comp);
     stats.chunks += 1;
+    // Reset only the touched scratch slots for the next chunk.
+    for &v in &alive {
+        chunk_index[v as usize] = u32::MAX;
+    }
 
     // Graph exponentiation inside the chunk graph: radius doubles per
     // round until it covers the largest component (diameter ≤ size).
     let gather_rounds = ((max_comp.max(2) as f64).log2().ceil() as usize).max(1);
-    let total_words: Words = comp_words.values().sum();
+    let total_words: Words = comp_words.iter().sum();
     for r in 0..gather_rounds {
         sim.round(
             &format!("alg2/gather[{r}]"),

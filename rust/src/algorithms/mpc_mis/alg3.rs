@@ -79,9 +79,11 @@ pub fn alg3_process(
         r
     };
     let sub_perm: Vec<u32> = {
-        // permutation of sub vertices sorted by global rank.
+        // Permutation of sub vertices sorted by global rank. Ranks are
+        // distinct (one per prefix position), so the unstable sort is
+        // deterministic.
         let mut idx: Vec<u32> = (0..sub.n() as u32).collect();
-        idx.sort_by_key(|&i| global_rank[old_id[i as usize] as usize]);
+        idx.sort_unstable_by_key(|&i| global_rank[old_id[i as usize] as usize]);
         idx
     };
 

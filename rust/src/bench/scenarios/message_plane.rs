@@ -1,0 +1,224 @@
+//! §MPC message-plane scenarios (bin `message_plane`): the flat-arena
+//! wire format measured against the retired per-message plane.
+//!
+//! The plane refactor exists so rounds cost what the *algorithms* cost,
+//! not what the allocator costs — the same motive as P8's shard speedup
+//! and E4c's executor pipeline, which both ride every routed round. The
+//! family records:
+//!
+//! * `mpc/plane_round_throughput` — words/s and µs/message through
+//!   [`Router::round`] on a fan-out schedule with multi-word payloads;
+//! * `mpc/plane_vs_permsg`       — the same schedule through the arena
+//!   plane vs a faithful reproduction of the retired one-`Vec<u64>`-per-
+//!   message plane (identical ledger accounting), with the speedup gated;
+//! * `mpc/plane_codecs`          — typed [`Encode`]/[`Decode`] frame
+//!   round-trips per second (the codec layer must stay free);
+//! * `mpc/plane_tree_schedule`   — the broadcast/convergecast trees on
+//!   the plane: deterministic round counts and peak words (noise 0), the
+//!   smoke-sized twin of the `tests/round_counts.rs` goldens.
+
+use crate::bench::harness::bench_with;
+use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::mpc::broadcast::{Aggregate, BroadcastTree};
+use crate::mpc::router::Router;
+use crate::mpc::wire::{Decode, Encode, LabelUpdate, VertexStatus, WireOutbox, per_message_round};
+use crate::mpc::{MpcConfig, MpcSimulator};
+use crate::util::table::fnum;
+
+const BIN: &str = "message_plane";
+
+pub fn register(r: &mut Registry) {
+    r.register(Scenario {
+        name: "mpc/plane_round_throughput",
+        bin: BIN,
+        about: "flat-arena router round (words/s, µs/message)",
+        run: plane_round_throughput,
+    });
+    r.register(Scenario {
+        name: "mpc/plane_vs_permsg",
+        bin: BIN,
+        about: "arena plane vs retired per-message plane (speedup)",
+        run: plane_vs_permsg,
+    });
+    r.register(Scenario {
+        name: "mpc/plane_codecs",
+        bin: BIN,
+        about: "typed payload codecs (frames/s encode+decode)",
+        run: plane_codecs,
+    });
+    r.register(Scenario {
+        name: "mpc/plane_tree_schedule",
+        bin: BIN,
+        about: "broadcast/convergecast on the plane (deterministic words)",
+        run: plane_tree_schedule,
+    });
+}
+
+fn plane_sim() -> MpcSimulator {
+    MpcSimulator::new(MpcConfig::model1(1_000_000, 10_000_000, 0.6))
+}
+
+/// The benchmark schedule: machine `m` sends [`FAN`] messages of
+/// [`PAYLOAD_WORDS`] words each, destinations striding the fleet (7 and
+/// 13 are coprime to every power-of-two fleet, so receives stay uniform).
+const FAN: usize = 16;
+const PAYLOAD_WORDS: usize = 4;
+
+fn fan_dst(machines: usize, m: usize, k: usize) -> usize {
+    (m * 7 + k * 13 + 1) % machines
+}
+
+/// Arena-side builder: payloads are stack arrays appended straight into
+/// the shard slab — zero heap allocations per message, the point of the
+/// plane.
+fn arena_build(machines: usize) -> impl Fn(usize, &mut WireOutbox) + Sync {
+    move |m: usize, out: &mut WireOutbox| {
+        for k in 0..FAN {
+            out.send_words(fan_dst(machines, m, k), &[(m + k) as u64; PAYLOAD_WORDS]);
+        }
+    }
+}
+
+/// The identical schedule in the retired format: one `Vec<u64>` per
+/// message (this allocation churn is what the baseline measures).
+fn permsg_outboxes(machines: usize) -> Vec<Vec<(usize, Vec<u64>)>> {
+    (0..machines)
+        .map(|m| {
+            (0..FAN)
+                .map(|k| (fan_dst(machines, m, k), vec![(m + k) as u64; PAYLOAD_WORDS]))
+                .collect()
+        })
+        .collect()
+}
+
+fn plane_round_throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let machines = ctx.size(128, 512);
+    let build = arena_build(machines);
+    let router = Router::new(machines);
+    let m = bench_with(
+        &format!("plane round ({machines} machines × {FAN} msgs × {PAYLOAD_WORDS} words)"),
+        &cfg,
+        || {
+            let mut sim = plane_sim();
+            std::hint::black_box(router.round(&mut sim, "bench", &build));
+        },
+    );
+    let msgs = (machines * FAN) as f64;
+    let words = msgs * PAYLOAD_WORDS as f64;
+    println!("{m}\n    ⇒ {:.3} µs/message", m.median_s * 1e6 / msgs);
+    let mut rec = ScenarioRecord::new();
+    rec.rate_metric("words_per_s", &m, words);
+    let value = m.median_s * 1e6 / msgs;
+    let noise = (m.mad_s * 1e6 / msgs).max(ScenarioRecord::TIMING_REL_NOISE_FLOOR * value);
+    rec.metric_with_noise("us_per_message", value, noise, Direction::Lower);
+    rec
+}
+
+fn plane_vs_permsg(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let machines = ctx.size(128, 512);
+    let build = arena_build(machines);
+    let router = Router::new(machines);
+
+    // Parity check before timing: same trace, same delivered stream.
+    {
+        let mut arena_sim = plane_sim();
+        let arena = router.round(&mut arena_sim, "round", &build);
+        let mut legacy_sim = plane_sim();
+        let legacy =
+            per_message_round(machines, &mut legacy_sim, "round", permsg_outboxes(machines));
+        assert_eq!(arena_sim.trace(), legacy_sim.trace(), "plane traces diverged");
+        for (m, want) in legacy.iter().enumerate() {
+            let got: Vec<(usize, Vec<u64>)> =
+                arena.inbox(m).iter().map(|w| (w.from, w.payload.to_vec())).collect();
+            assert_eq!(&got, want, "machine {m}: delivery diverged");
+        }
+    }
+
+    let ma = bench_with(&format!("arena plane ({machines} machines × {FAN} msgs)"), &cfg, || {
+        let mut sim = plane_sim();
+        std::hint::black_box(router.round(&mut sim, "bench", &build));
+    });
+    println!("{ma}");
+    let ml = bench_with(&format!("per-msg plane ({machines} machines × {FAN} msgs)"), &cfg, || {
+        let mut sim = plane_sim();
+        std::hint::black_box(per_message_round(
+            machines,
+            &mut sim,
+            "bench",
+            permsg_outboxes(machines),
+        ));
+    });
+    println!("{ml}");
+    println!("    ⇒ arena speedup ×{}", fnum(ml.median_s / ma.median_s.max(1e-12)));
+    let mut rec = ScenarioRecord::new();
+    rec.speedup_metric("arena_speedup", &ml, &ma);
+    rec.time_metric("arena_round", &ma);
+    rec.time_metric("permsg_round", &ml);
+    rec
+}
+
+fn plane_codecs(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let frames = ctx.size(50_000, 500_000);
+    let statuses: Vec<VertexStatus> = (0..frames)
+        .map(|i| VertexStatus { vertex: i as u32, in_mis: i % 3 == 0 })
+        .collect();
+    let labels: Vec<LabelUpdate> = (0..frames)
+        .map(|i| LabelUpdate { vertex: i as u32, label: (i / 7) as u32 })
+        .collect();
+    let mut slab: Vec<u64> = Vec::with_capacity(2 * frames);
+    let m = bench_with(&format!("codec round-trip ({} frames)", 2 * frames), &cfg, || {
+        slab.clear();
+        for s in &statuses {
+            s.encode(&mut slab);
+        }
+        for l in &labels {
+            l.encode(&mut slab);
+        }
+        let mut acc = 0u64;
+        for w in slab.chunks_exact(1).take(frames) {
+            let s: VertexStatus = VertexStatus::decode(w).expect("status frame");
+            acc = acc.wrapping_add(u64::from(s.vertex));
+        }
+        for w in slab[frames..].chunks_exact(1) {
+            let l: LabelUpdate = LabelUpdate::decode(w).expect("label frame");
+            acc = acc.wrapping_add(u64::from(l.label));
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{m}");
+    let mut rec = ScenarioRecord::new();
+    rec.rate_metric("frames_per_s", &m, 2.0 * frames as f64);
+    rec
+}
+
+fn plane_tree_schedule(ctx: &ScenarioCtx) -> ScenarioRecord {
+    // Deterministic twin of the round_counts goldens at bench scale: the
+    // tree primitives on the plane, metrics with zero noise so the gate
+    // catches any schedule drift.
+    let machines = ctx.size(256, 1024);
+    let mut cfg = MpcConfig::model1(1_000_000, 10_000_000, 0.6);
+    cfg.machines = machines;
+    let mut sim = MpcSimulator::new(cfg);
+    let router = Router::new(machines);
+    let tree = BroadcastTree::new(machines, 4);
+    let values: Vec<u64> = (0..machines as u64).map(|v| v * 3 + 1).collect();
+    let agg = tree.aggregate(&mut sim, &router, &values, Aggregate::Max);
+    let conv_rounds = sim.n_rounds();
+    tree.broadcast(&mut sim, &router, agg);
+    let bcast_rounds = sim.n_rounds() - conv_rounds;
+    let peak = sim.peak_machine_words();
+    let total = sim.total_communication();
+    println!(
+        "tree schedule on {machines} machines: {conv_rounds} convergecast + {bcast_rounds} \
+         broadcast rounds, peak {peak} words, total {total} words"
+    );
+    let mut rec = ScenarioRecord::new();
+    rec.metric("convergecast_rounds", conv_rounds as f64, Direction::Lower);
+    rec.metric("broadcast_rounds", bcast_rounds as f64, Direction::Lower);
+    rec.metric("peak_machine_words", peak as f64, Direction::Lower);
+    rec.metric("total_words", total as f64, Direction::Lower);
+    rec
+}

@@ -18,12 +18,16 @@
 //!   per-component shard speedup, mixed-family auto routing
 //!   (`solve_engine`);
 //! * [`data`] — the dataset subsystem: ingest/snapshot throughput and
-//!   the corpus sweep (`data_lab`).
+//!   the corpus sweep (`data_lab`);
+//! * [`message_plane`] — the flat-arena wire format vs the retired
+//!   per-message plane, codec throughput, tree schedules
+//!   (`message_plane`).
 
 use crate::bench::suite::Registry;
 
 pub mod clustering;
 pub mod data;
+pub mod message_plane;
 pub mod mis;
 pub mod perf;
 pub mod pipelines;
@@ -37,4 +41,5 @@ pub fn register_all(r: &mut Registry) {
     pipelines::register(r);
     solve::register(r);
     data::register(r);
+    message_plane::register(r);
 }

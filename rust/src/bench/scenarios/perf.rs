@@ -195,10 +195,11 @@ fn p6_router(ctx: &ScenarioCtx) -> ScenarioRecord {
     let router = Router::new(machines);
     let m = bench_with("P6 router round (64 machines × 64 msgs)", &cfg, || {
         let mut sim = MpcSimulator::new(MpcConfig::model1(100_000, 1_000_000, 0.6));
-        let out: Vec<Vec<(usize, Vec<u64>)>> = (0..machines)
-            .map(|i| (0..machines).map(|j| (j, vec![i as u64])).collect())
-            .collect();
-        std::hint::black_box(router.step(&mut sim, "bench", out));
+        std::hint::black_box(router.round(&mut sim, "bench", |i, out| {
+            for j in 0..machines {
+                out.send(j, &(i as u64));
+            }
+        }));
     });
     let msgs = (machines * machines) as f64;
     println!("{m}\n    ⇒ {:.2} µs/message", m.median_s * 1e6 / msgs);

@@ -6,6 +6,11 @@
 //! rounds, and a broadcast pushes the result back down in the same number
 //! of rounds.  For constant δ this is O(1/δ) = O(1) rounds, which is what
 //! lets Corollary 32's "simple algorithm" run in O(1) MPC rounds.
+//!
+//! Tree values ride the flat-arena plane as typed single-word frames
+//! (`u64` via [`crate::mpc::wire::Encode`]): outboxes append into the
+//! owning shard's slab and inbox reads decode borrowed slices — no
+//! per-message allocation on either side.
 
 use crate::mpc::router::Router;
 use crate::mpc::simulator::MpcSimulator;
@@ -110,11 +115,9 @@ impl BroadcastTree {
             if !firing.iter().any(|&fires| fires) {
                 break;
             }
-            let inboxes = router.step_sharded(sim, &format!("convergecast[{level}]"), |m| {
+            let inboxes = router.round(sim, &format!("convergecast[{level}]"), |m, out| {
                 if firing[m] {
-                    vec![(self.parent(m), vec![acc[m]])]
-                } else {
-                    Vec::new()
+                    out.send(self.parent(m), &acc[m]);
                 }
             });
             for (m, &fires) in firing.iter().enumerate() {
@@ -122,9 +125,9 @@ impl BroadcastTree {
                     sent[m] = true;
                 }
             }
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                for msg in inbox {
-                    acc[m] = f.combine(acc[m], msg.payload[0]);
+            for m in 0..self.machines {
+                for msg in inboxes.inbox(m).iter() {
+                    acc[m] = f.combine(acc[m], msg.decode::<u64>());
                     pending[m] -= 1;
                 }
             }
@@ -147,17 +150,18 @@ impl BroadcastTree {
         while have.iter().any(Option::is_none) {
             // Each holder sends to children that don't have the value yet;
             // outboxes are built on the shard owning the sender.
-            let inboxes = router.step_sharded(sim, &format!("broadcast[{level}]"), |m| {
-                let Some(v) = have[m] else { return Vec::new() };
-                (1..=self.arity)
+            let inboxes = router.round(sim, &format!("broadcast[{level}]"), |m, out| {
+                let Some(v) = have[m] else { return };
+                for child in (1..=self.arity)
                     .map(|c| m * self.arity + c)
                     .filter(|&child| child < self.machines && have[child].is_none())
-                    .map(|child| (child, vec![v]))
-                    .collect()
+                {
+                    out.send(child, &v);
+                }
             });
-            for (m, inbox) in inboxes.into_iter().enumerate() {
-                if let Some(msg) = inbox.first() {
-                    have[m] = Some(msg.payload[0]);
+            for (m, slot) in have.iter_mut().enumerate() {
+                if let Some(msg) = inboxes.inbox(m).first() {
+                    *slot = Some(msg.decode::<u64>());
                 }
             }
             level += 1;

@@ -8,6 +8,13 @@
 //! squares the propagation distance.  Terminates in O(log D) rounds on
 //! diameter-D graphs; every round is charged to the simulator with its
 //! measured traffic.
+//!
+//! The exchange half (a pure function of the previous round's labels) is
+//! the round's local compute and fans out across the simulator's shard
+//! pool, merged in shard order at the barrier — results and traces are
+//! identical at every shard count.  The jump half stays sequential: its
+//! in-pass chain compression (`next[v] ← next[next[v]]` reading earlier
+//! writes) is part of the charged schedule.
 
 use crate::graph::Graph;
 use crate::mpc::memory::Words;
@@ -27,17 +34,28 @@ pub fn mpc_components(g: &Graph, sim: &mut MpcSimulator) -> MpcComponents {
     let mut label: Vec<u32> = (0..n as u32).collect();
     let rounds_before = sim.n_rounds();
     let max_deg = g.max_degree() as Words;
+    let pool = sim.pool();
     loop {
-        let mut changed = false;
-        // (a) neighbor min-exchange.
-        let mut next = label.clone();
-        for v in 0..n as u32 {
-            for &u in g.neighbors(v) {
-                if label[u as usize] < next[v as usize] {
-                    next[v as usize] = label[u as usize];
-                    changed = true;
+        // (a) neighbor min-exchange — per-vertex local compute over the
+        // previous labels, sharded on the pool and merged in shard order.
+        let parts: Vec<(Vec<u32>, bool)> = pool.run_fine(n, |_, range| {
+            let mut out = Vec::with_capacity(range.len());
+            let mut shard_changed = false;
+            for v in range {
+                let mut best = label[v];
+                for &u in g.neighbors(v as u32) {
+                    best = best.min(label[u as usize]);
                 }
+                shard_changed |= best < label[v];
+                out.push(best);
             }
+            (out, shard_changed)
+        });
+        let mut changed = false;
+        let mut next: Vec<u32> = Vec::with_capacity(n);
+        for (part, shard_changed) in parts {
+            next.extend_from_slice(&part);
+            changed |= shard_changed;
         }
         sim.round("components/exchange", max_deg, max_deg, 2 * g.m() as Words, max_deg + 1);
         // (b) pointer jumping: label <- label[label].

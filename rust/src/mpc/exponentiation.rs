@@ -38,8 +38,13 @@ fn ball_words(g: &Graph, ball: &[u32]) -> Words {
     ball.iter().map(|&u| 1 + g.degree(u) as Words).sum()
 }
 
-fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
-    let mut out = Vec::with_capacity(a.len() + b.len());
+/// Merge two sorted id lists into `out` (cleared first). Callers ping-pong
+/// two scratch buffers across a ball's members, so a doubling allocates
+/// O(1) buffers per ball instead of one fresh `Vec` per union — the same
+/// flat-buffer discipline as the router's message plane.
+fn union_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    out.reserve(a.len() + b.len());
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
         match a[i].cmp(&b[j]) {
@@ -60,7 +65,6 @@ fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
     }
     out.extend_from_slice(&a[i..]);
     out.extend_from_slice(&b[j..]);
-    out
 }
 
 /// Gather balls of radius `target_radius` around `targets` by repeated
@@ -126,6 +130,7 @@ pub fn gather_balls(
         let shard_doubled: Vec<Result<Vec<Vec<u32>>, ()>> =
             pool.run(balls.len(), |_, range| {
                 let mut out: Vec<Vec<u32>> = Vec::with_capacity(range.len());
+                let mut scratch: Vec<u32> = Vec::new();
                 for ball in &balls[range] {
                     let mut acc: Vec<u32> = Vec::new();
                     for &u in ball {
@@ -134,7 +139,8 @@ pub fn gather_balls(
                         } else {
                             &global_balls[u as usize]
                         };
-                        acc = union_sorted(&acc, src);
+                        union_into(&acc, src, &mut scratch);
+                        std::mem::swap(&mut acc, &mut scratch);
                         if ball_words(g, &acc) > mem_cap {
                             return Err(());
                         }
@@ -171,16 +177,17 @@ pub fn gather_balls(
         if !growing_all {
             global_balls = pool
                 .run(global_balls.len(), |_, range| {
-                    global_balls[range]
-                        .iter()
-                        .map(|ball| {
-                            let mut acc: Vec<u32> = Vec::new();
-                            for &u in ball {
-                                acc = union_sorted(&acc, &global_balls[u as usize]);
-                            }
-                            acc
-                        })
-                        .collect::<Vec<Vec<u32>>>()
+                    let mut out: Vec<Vec<u32>> = Vec::with_capacity(range.len());
+                    let mut scratch: Vec<u32> = Vec::new();
+                    for ball in &global_balls[range] {
+                        let mut acc: Vec<u32> = Vec::new();
+                        for &u in ball {
+                            union_into(&acc, &global_balls[u as usize], &mut scratch);
+                            std::mem::swap(&mut acc, &mut scratch);
+                        }
+                        out.push(acc);
+                    }
+                    out
                 })
                 .into_iter()
                 .flatten()
@@ -196,25 +203,32 @@ pub fn gather_balls(
     Balls { balls, radius: radius.min(target_radius.max(1)), rounds, memory_capped }
 }
 
-/// Exact BFS ball (oracle for tests).
+/// Exact BFS ball (test oracle, also the sampling probe behind
+/// `approx_matching`'s ball-words bound). Frontier-by-frontier BFS with
+/// no per-vertex distance array: work and memory are O(|ball|), not
+/// O(n), and the membership set is only ever *probed*, never iterated —
+/// the sorted output comes from an explicit sort, so no hash iteration
+/// order leaks into any deterministic path.
 pub fn bfs_ball(g: &Graph, v: u32, radius: usize) -> Vec<u32> {
-    let mut dist = std::collections::HashMap::new();
-    dist.insert(v, 0usize);
-    let mut queue = std::collections::VecDeque::new();
-    queue.push_back(v);
-    while let Some(u) = queue.pop_front() {
-        let d = dist[&u];
-        if d == radius {
-            continue;
-        }
-        for &w in g.neighbors(u) {
-            if let std::collections::hash_map::Entry::Vacant(e) = dist.entry(w) {
-                e.insert(d + 1);
-                queue.push_back(w);
+    let mut visited = std::collections::HashSet::new();
+    visited.insert(v);
+    let mut ball = vec![v];
+    let mut frontier = vec![v];
+    for _ in 0..radius {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &w in g.neighbors(u) {
+                if visited.insert(w) {
+                    next.push(w);
+                    ball.push(w);
+                }
             }
         }
+        if next.is_empty() {
+            break;
+        }
+        frontier = next;
     }
-    let mut ball: Vec<u32> = dist.into_keys().collect();
     ball.sort_unstable();
     ball
 }

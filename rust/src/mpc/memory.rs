@@ -129,10 +129,12 @@ impl MemoryLedger {
 /// Unchecked per-shard word tally over a contiguous machine range.
 ///
 /// The sharded executor gives each worker thread one of these; workers
-/// charge freely during the round's local-compute half, and the round
-/// barrier merges every shard into the fleet [`MemoryLedger`] via
-/// [`MemoryLedger::absorb`], where budget violations surface with the
-/// same semantics as sequential execution.
+/// charge freely during the round's local-compute half (the wire plane's
+/// [`WireOutbox`](crate::mpc::wire::WireOutbox) charges one as messages
+/// are appended to its slab), and the round barrier merges every shard
+/// into the fleet [`MemoryLedger`] via [`MemoryLedger::absorb`], where
+/// budget violations surface with the same semantics as sequential
+/// execution.
 #[derive(Debug, Clone)]
 pub struct ShardLedger {
     base: usize,

@@ -6,8 +6,11 @@
 //! * [`memory`] — word-granular budget ledger; violations fail runs.
 //! * [`simulator`] — synchronous round accounting and traces; the round
 //!   counts reported by every experiment come from here.
-//! * [`router`] — executable all-to-all message delivery with O(S)
-//!   per-machine send/receive enforcement.
+//! * [`wire`] — the flat-arena message plane: per-shard payload slabs
+//!   with `(from, dst, offset, len)` indexes, zero-copy inbox views, and
+//!   the typed [`wire::Encode`]/[`wire::Decode`] payload codecs.
+//! * [`router`] — executable all-to-all message delivery on the wire
+//!   plane with O(S) per-machine send/receive enforcement.
 //! * [`broadcast`] — S-ary broadcast/convergecast trees (§2.1.5) running
 //!   on the router.
 //! * [`exponentiation`] — graph exponentiation (§2.1.3): 2^k-hop ball
@@ -24,7 +27,10 @@ pub mod model;
 pub mod pool;
 pub mod router;
 pub mod simulator;
+pub mod wire;
 
 pub use model::{ModelKind, MpcConfig};
 pub use pool::ShardPool;
+pub use router::Router;
 pub use simulator::MpcSimulator;
+pub use wire::{Decode, Encode, RoundInboxes, WireMsg, WireOutbox};

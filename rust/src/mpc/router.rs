@@ -1,40 +1,31 @@
-//! Synchronous message router: the executable all-to-all layer.
+//! Synchronous message router: the executable all-to-all layer, running
+//! on the flat-arena message plane ([`crate::mpc::wire`]).
 //!
-//! One call to [`Router::step`] (or [`Router::step_sharded`]) is one MPC
-//! communication round: every machine's outbox is tallied on a
-//! word-granular [`ShardLedger`], ledgers are merged into fleet
-//! [`MemoryLedger`]s at the round barrier — where O(S) send/receive and
-//! global budget violations surface exactly as in sequential execution —
-//! messages are delivered in deterministic (sender-ordered) order, and the
-//! round is recorded on the [`MpcSimulator`].  The broadcast/convergecast
-//! trees (§2.1.5) run on top of this for real, so their round counts are
-//! measured rather than asserted.
+//! One call to [`Router::round`] is one MPC communication round: each
+//! shard of the simulator's [`ShardPool`] builds its machines' outboxes
+//! into one contiguous payload slab plus a `(from, dst, offset, len)`
+//! index (the round's local-compute half), send words are tallied on
+//! per-shard [`ShardLedger`]s as messages are appended, and the
+//! synchronous barrier exchanges *slabs*, not per-message allocations:
+//! index entries are walked in shard order — which is sender order — so
+//! inbox delivery order is identical to the retired per-message plane,
+//! and payloads are copied once into receiver-side slabs that inboxes
+//! borrow zero-copy. Ledgers are merged into fleet [`MemoryLedger`]s at
+//! the barrier, where O(S) send/receive and global budget violations
+//! surface exactly as in sequential execution, and the round is recorded
+//! on the [`MpcSimulator`]. The broadcast/convergecast trees (§2.1.5)
+//! run on top of this for real, so their round counts are measured
+//! rather than asserted.
 //!
-//! [`Router::step_sharded`] is the multi-threaded path: outbox
-//! construction (the round's local-compute half) fans out across the
-//! simulator's [`ShardPool`], one contiguous machine range per shard, and
-//! the per-shard outbox batches are exchanged at the synchronous round
-//! boundary.  Inboxes, statistics and violations are bit-identical to
-//! [`Router::step`] at every shard count.
+//! With a one-shard pool the build closure runs inline on the caller's
+//! thread: the sequential executor is the same code path. Inboxes,
+//! statistics and violations are bit-identical at every shard count.
 //!
 //! [`ShardPool`]: crate::mpc::pool::ShardPool
 
 use crate::mpc::memory::{BudgetError, MemoryLedger, ShardLedger, Words};
 use crate::mpc::simulator::MpcSimulator;
-
-/// A message between machines: opaque words plus the sender id.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Message {
-    pub from: usize,
-    pub payload: Vec<u64>,
-}
-
-impl Message {
-    pub fn words(&self) -> Words {
-        // +1 word of envelope (sender id).
-        self.payload.len() as Words + 1
-    }
-}
+use crate::mpc::wire::{RoundInboxes, WireOutbox};
 
 /// Stateless router over `machines` mailboxes.
 #[derive(Debug)]
@@ -51,80 +42,35 @@ impl Router {
         self.machines
     }
 
-    /// Execute one synchronous round.
+    /// Execute one synchronous round on the flat-arena plane.
     ///
-    /// `outboxes[m]` is the list of `(dst, payload)` machine `m` sends.
-    /// Returns `inboxes[m]`: messages delivered to machine `m`, in
+    /// `build(m, outbox)` produces machine `m`'s messages — the round's
+    /// local compute — and is invoked on the shard that owns `m`, with
+    /// the outbox positioned on sender `m`. Returns the round's
+    /// [`RoundInboxes`]: zero-copy per-machine views, delivered in
     /// deterministic (sender-ordered) order.
-    pub fn step(
-        &self,
-        sim: &mut MpcSimulator,
-        label: &str,
-        outboxes: Vec<Vec<(usize, Vec<u64>)>>,
-    ) -> Vec<Vec<Message>> {
-        assert_eq!(outboxes.len(), self.machines, "outbox per machine required");
-        let mut send = ShardLedger::new(0..self.machines);
-        let mut recv = ShardLedger::new(0..self.machines);
-        let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); self.machines];
-        for (from, outbox) in outboxes.into_iter().enumerate() {
-            for (dst, payload) in outbox {
-                assert!(dst < self.machines, "message to unknown machine {dst}");
-                let msg = Message { from, payload };
-                send.charge(from, msg.words());
-                recv.charge(dst, msg.words());
-                inboxes[dst].push(msg);
-            }
-        }
-        self.barrier(sim, label, &[send], recv);
-        inboxes
-    }
-
-    /// Execute one synchronous round with shard-parallel outbox building.
-    ///
-    /// `outbox_of(m)` produces machine `m`'s outbox — the round's local
-    /// compute — and is invoked on the shard that owns `m`.  Each shard
-    /// batches its machines' messages and tallies their send words on a
-    /// private [`ShardLedger`]; batches and ledgers are exchanged at the
-    /// round boundary, where delivery happens in sender order and budgets
-    /// are enforced on the merged fleet ledgers.
-    pub fn step_sharded<F>(
-        &self,
-        sim: &mut MpcSimulator,
-        label: &str,
-        outbox_of: F,
-    ) -> Vec<Vec<Message>>
+    pub fn round<F>(&self, sim: &mut MpcSimulator, label: &str, build: F) -> RoundInboxes
     where
-        F: Fn(usize) -> Vec<(usize, Vec<u64>)> + Sync,
+        F: Fn(usize, &mut WireOutbox) + Sync,
     {
         let pool = sim.pool();
         // Local-compute half, fanned out per machine shard (fine-grained:
-        // small fleets build their outboxes inline).
-        let shard_out: Vec<(Vec<(usize, Message)>, ShardLedger)> =
-            pool.run_fine(self.machines, |_, range| {
-                let mut ledger = ShardLedger::new(range.clone());
-                let mut msgs: Vec<(usize, Message)> = Vec::new();
-                for m in range {
-                    for (dst, payload) in outbox_of(m) {
-                        let msg = Message { from: m, payload };
-                        ledger.charge(m, msg.words());
-                        msgs.push((dst, msg));
-                    }
-                }
-                (msgs, ledger)
-            });
-        // Exchange at the synchronous round boundary: shards are drained
-        // in order, so inbox contents match the sequential sender order.
-        let mut send_ledgers = Vec::with_capacity(shard_out.len());
-        let mut recv = ShardLedger::new(0..self.machines);
-        let mut inboxes: Vec<Vec<Message>> = vec![Vec::new(); self.machines];
-        for (msgs, ledger) in shard_out {
-            for (dst, msg) in msgs {
-                assert!(dst < self.machines, "message to unknown machine {dst}");
-                recv.charge(dst, msg.words());
-                inboxes[dst].push(msg);
+        // small fleets build their outboxes inline). Each shard appends
+        // into its own slab and tallies send words on its private ledger.
+        let shard_out: Vec<WireOutbox> = pool.run_fine(self.machines, |_, range| {
+            let mut out = WireOutbox::new(range.clone(), self.machines);
+            for m in range {
+                out.begin(m);
+                build(m, &mut out);
             }
-            send_ledgers.push(ledger);
-        }
+            out
+        });
+        // Exchange at the synchronous round boundary: shards are walked
+        // in order, so inbox contents match the sequential sender order.
+        let mut recv = ShardLedger::new(0..self.machines);
+        let inboxes = RoundInboxes::deliver(self.machines, &shard_out, &mut recv);
+        let send_ledgers: Vec<ShardLedger> =
+            shard_out.into_iter().map(WireOutbox::into_ledger).collect();
         self.barrier(sim, label, &send_ledgers, recv);
         inboxes
     }
@@ -187,17 +133,19 @@ mod tests {
     fn delivers_messages() {
         let router = Router::new(3);
         let mut sim = sim_for(3);
-        let out = vec![
-            vec![(1, vec![42]), (2, vec![7, 8])],
-            vec![(0, vec![1])],
-            vec![],
-        ];
-        let inboxes = router.step(&mut sim, "test", out);
-        assert_eq!(inboxes[1].len(), 1);
-        assert_eq!(inboxes[1][0].payload, vec![42]);
-        assert_eq!(inboxes[1][0].from, 0);
-        assert_eq!(inboxes[2][0].payload, vec![7, 8]);
-        assert_eq!(inboxes[0][0].from, 1);
+        let inboxes = router.round(&mut sim, "test", |m, out| match m {
+            0 => {
+                out.send(1, &42u64);
+                out.send_words(2, &[7, 8]);
+            }
+            1 => out.send(0, &1u64),
+            _ => {}
+        });
+        assert_eq!(inboxes.inbox(1).len(), 1);
+        assert_eq!(inboxes.inbox(1).get(0).payload, &[42]);
+        assert_eq!(inboxes.inbox(1).get(0).from, 0);
+        assert_eq!(inboxes.inbox(2).get(0).payload, &[7, 8]);
+        assert_eq!(inboxes.inbox(0).get(0).from, 1);
         assert_eq!(sim.n_rounds(), 1);
     }
 
@@ -207,56 +155,70 @@ mod tests {
         let router = Router::new(2);
         let mut sim = sim_for(2);
         let huge = vec![0u64; sim.config.s_words as usize + 10];
-        router.step(&mut sim, "big", vec![vec![(1, huge)], vec![]]);
+        router.round(&mut sim, "big", |m, out| {
+            if m == 0 {
+                out.send_words(1, &huge);
+            }
+        });
     }
 
     #[test]
     fn empty_round_counts() {
         let router = Router::new(2);
         let mut sim = sim_for(2);
-        let inboxes = router.step(&mut sim, "idle", vec![vec![], vec![]]);
-        assert!(inboxes.iter().all(|i| i.is_empty()));
+        let inboxes = router.round(&mut sim, "idle", |_, _| {});
+        assert_eq!(inboxes.total_messages(), 0);
+        assert!((0..2).all(|m| inboxes.inbox(m).is_empty()));
         assert_eq!(sim.n_rounds(), 1);
     }
 
+    /// An all-to-some schedule with payload sizes varying by sender,
+    /// written once so the arena plane and the legacy oracle send the
+    /// byte-identical message stream.
+    fn varied_schedule(machines: usize, m: usize) -> Vec<(usize, Vec<u64>)> {
+        (0..machines)
+            .filter(|&d| (m + d) % 3 == 0)
+            .map(|d| (d, vec![m as u64; 1 + (m % 4)]))
+            .collect()
+    }
+
+    fn varied_build(machines: usize) -> impl Fn(usize, &mut WireOutbox) + Sync {
+        move |m: usize, out: &mut WireOutbox| {
+            for (d, payload) in varied_schedule(machines, m) {
+                out.send_words(d, &payload);
+            }
+        }
+    }
+
     #[test]
-    fn sharded_step_matches_sequential_step() {
+    fn sharded_round_matches_serial_round() {
         let machines = 13;
-        // All-to-some schedule with payload sizes varying by sender.
-        let outbox_of = |m: usize| -> Vec<(usize, Vec<u64>)> {
-            (0..machines)
-                .filter(|&d| (m + d) % 3 == 0)
-                .map(|d| (d, vec![m as u64; 1 + (m % 4)]))
-                .collect()
-        };
         let router = Router::new(machines);
         let mut seq = sim_for(machines);
-        let expected =
-            router.step(&mut seq, "x", (0..machines).map(|m| outbox_of(m)).collect());
+        let expected = router.round(&mut seq, "x", varied_build(machines));
         for shards in [1usize, 2, 8] {
             let mut sim = MpcSimulator::sharded(MpcConfig::model1(10_000, 100_000, 0.6), shards)
                 .into_with(machines);
-            let got = router.step_sharded(&mut sim, "x", outbox_of);
+            let got = router.round(&mut sim, "x", varied_build(machines));
             assert_eq!(got, expected, "{shards} shards");
             assert_eq!(sim.trace(), seq.trace(), "{shards} shards");
         }
     }
 
     #[test]
-    fn sharded_step_threads_on_large_fleets() {
+    fn sharded_round_threads_on_large_fleets() {
         // A fleet above the pool's SERIAL_CUTOFF drives the scoped-thread
-        // outbox path and the cross-shard ledger merge for real.
+        // outbox path and the cross-shard slab exchange for real.
         let machines = 600;
-        let outbox_of = |m: usize| -> Vec<(usize, Vec<u64>)> {
-            vec![((m * 7 + 1) % machines, vec![m as u64, (m / 3) as u64])]
+        let build = |m: usize, out: &mut WireOutbox| {
+            out.send((m * 7 + 1) % machines, &(m as u64, (m / 3) as u64));
         };
         let router = Router::new(machines);
         let mut seq = sim_for(machines);
-        let expected =
-            router.step(&mut seq, "big", (0..machines).map(|m| outbox_of(m)).collect());
+        let expected = router.round(&mut seq, "big", build);
         let mut sim = MpcSimulator::sharded(MpcConfig::model1(10_000, 100_000, 0.6), 8)
             .into_with(machines);
-        let got = router.step_sharded(&mut sim, "big", outbox_of);
+        let got = router.round(&mut sim, "big", build);
         assert_eq!(got, expected);
         assert_eq!(sim.trace(), seq.trace());
     }
@@ -265,16 +227,55 @@ mod tests {
     fn sharded_violation_reports_offending_machine() {
         let machines = 8;
         let cfg = MpcConfig::model1(10_000, 100_000, 0.6);
-        let huge = cfg.s_words as usize + 10;
+        let huge = vec![9u64; cfg.s_words as usize + 10];
         let mut sim = MpcSimulator::lenient_sharded(cfg, 4).into_with(machines);
         let router = Router::new(machines);
-        let inboxes = router.step_sharded(&mut sim, "overflow", |m| {
-            if m == 5 { vec![(0, vec![9u64; huge])] } else { Vec::new() }
+        let inboxes = router.round(&mut sim, "overflow", |m, out| {
+            if m == 5 {
+                out.send_words(0, &huge);
+            }
         });
-        assert_eq!(inboxes[0].len(), 1, "messages still delivered for diagnosis");
+        assert_eq!(inboxes.inbox(0).len(), 1, "messages still delivered for diagnosis");
         assert!(!sim.ok());
         assert_eq!(sim.violations().len(), 1);
         let err = format!("{}", sim.violations()[0]);
         assert!(err.contains("machine 5"), "{err}");
+    }
+
+    #[test]
+    fn arena_plane_matches_legacy_per_message_plane() {
+        // Old-vs-new parity: identical RoundStat sequences and identical
+        // delivered (from, payload) streams on a representative workload,
+        // at 1/2/8 shards on the arena side. The oracle is the single
+        // retired-plane reproduction in `wire::per_message_round` —
+        // shared with the `mpc/plane_vs_permsg` benchmark baseline.
+        let machines = 23;
+        let mut legacy_sim = sim_for(machines);
+        let mut legacy_rounds = Vec::new();
+        for r in 0..3 {
+            let outboxes: Vec<Vec<(usize, Vec<u64>)>> =
+                (0..machines).map(|m| varied_schedule(machines, m)).collect();
+            legacy_rounds.push(crate::mpc::wire::per_message_round(
+                machines,
+                &mut legacy_sim,
+                &format!("round[{r}]"),
+                outboxes,
+            ));
+        }
+        let router = Router::new(machines);
+        for shards in [1usize, 2, 8] {
+            let mut sim = MpcSimulator::sharded(MpcConfig::model1(10_000, 100_000, 0.6), shards)
+                .into_with(machines);
+            for (r, legacy) in legacy_rounds.iter().enumerate() {
+                let got =
+                    router.round(&mut sim, &format!("round[{r}]"), varied_build(machines));
+                for (m, want) in legacy.iter().enumerate() {
+                    let arena: Vec<(usize, Vec<u64>)> =
+                        got.inbox(m).iter().map(|w| (w.from, w.payload.to_vec())).collect();
+                    assert_eq!(&arena, want, "{shards} shards, round {r}, machine {m}");
+                }
+            }
+            assert_eq!(sim.trace(), legacy_sim.trace(), "{shards} shards");
+        }
     }
 }

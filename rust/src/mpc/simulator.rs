@@ -15,6 +15,11 @@
 //! properties of the communication schedule, which is executed faithfully;
 //! wall-clock of an actual deployment is out of scope (the paper never
 //! reports one).
+//!
+//! Rounds that move real messages do so on the flat-arena wire plane
+//! ([`crate::mpc::wire`]) via [`crate::mpc::router::Router::round`];
+//! `tests/round_counts.rs` pins the golden communication schedule so
+//! plane refactors cannot silently change it.
 
 use crate::mpc::memory::{BudgetError, Words};
 use crate::mpc::model::MpcConfig;

@@ -1,0 +1,589 @@
+//! The flat-arena message plane: slab wire format + typed payload codecs.
+//!
+//! The retired wire format allocated one `Vec<u64>` per message
+//! (`outboxes: Vec<Vec<(usize, Vec<u64>)>>`), so a round moving millions
+//! of words also made millions of tiny heap allocations — allocator churn
+//! the perf lab measured instead of the algorithms. This module replaces
+//! that plane:
+//!
+//! * **Send side** — each shard appends every payload it produces into
+//!   one contiguous `Vec<u64>` slab ([`WireOutbox`]), recording a
+//!   `(from, dst, offset, len)` index entry per message. Building a
+//!   round's outbox is one growing buffer per shard, not one allocation
+//!   per message.
+//! * **Barrier** — the router exchanges slabs, not messages: index
+//!   entries are walked in shard order (= sender order, matching the
+//!   retired plane's delivery order bit for bit) and payload ranges are
+//!   copied once into per-destination receiver slabs
+//!   ([`RoundInboxes::deliver`]).
+//! * **Receive side** — an [`Inbox`] is a zero-copy view over the
+//!   receiver slab: every [`WireMsg`] borrows its payload words instead
+//!   of owning a fresh `Vec<u64>`.
+//! * **Codecs** — [`Encode`]/[`Decode`] give the payload shapes the
+//!   algorithms actually send (single-word aggregates, packed
+//!   [`VertexStatus`]/[`LabelUpdate`] words, small tuples) a typed
+//!   round-trip, replacing ad-hoc `payload[0]` indexing at call sites.
+//!
+//! Word accounting is unchanged from the per-message plane: a message of
+//! `len` payload words still charges `len + `[`ENVELOPE_WORDS`] on both
+//! the send and receive ledgers (the sender id travels in the index
+//! entry, and the ledger keeps pricing it as one word), so O(S) budget
+//! violations fire at exactly the same rounds as before the refactor.
+
+use crate::mpc::memory::{ShardLedger, Words};
+
+/// Envelope cost of every message in ledger words: the sender id. In the
+/// flat format the sender lives in the index entry, but the model still
+/// pays for shipping it.
+pub const ENVELOPE_WORDS: Words = 1;
+
+// ---------------------------------------------------------------- codecs
+
+/// A payload that can be appended to a slab.
+///
+/// Contract: `encode` appends exactly [`Encode::words`] words — the
+/// outbox asserts it, so codec bugs surface at the send site, not as
+/// garbled frames at the receiver.
+pub trait Encode {
+    /// Payload length in words (excluding the envelope).
+    fn words(&self) -> usize;
+    /// Append the payload's words to `slab`.
+    fn encode(&self, slab: &mut Vec<u64>);
+}
+
+/// A payload that can be read back from a borrowed slab range.
+pub trait Decode: Sized {
+    /// Parse a payload; `None` if the frame has the wrong shape.
+    fn decode(payload: &[u64]) -> Option<Self>;
+}
+
+impl Encode for u64 {
+    fn words(&self) -> usize {
+        1
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(*self);
+    }
+}
+
+impl Decode for u64 {
+    fn decode(payload: &[u64]) -> Option<u64> {
+        match payload {
+            [w] => Some(*w),
+            _ => None,
+        }
+    }
+}
+
+impl Encode for (u64, u64) {
+    fn words(&self) -> usize {
+        2
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(self.0);
+        slab.push(self.1);
+    }
+}
+
+impl Decode for (u64, u64) {
+    fn decode(payload: &[u64]) -> Option<(u64, u64)> {
+        match payload {
+            [a, b] => Some((*a, *b)),
+            _ => None,
+        }
+    }
+}
+
+impl Encode for (u64, u64, u64) {
+    fn words(&self) -> usize {
+        3
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(self.0);
+        slab.push(self.1);
+        slab.push(self.2);
+    }
+}
+
+impl Decode for (u64, u64, u64) {
+    fn decode(payload: &[u64]) -> Option<(u64, u64, u64)> {
+        match payload {
+            [a, b, c] => Some((*a, *b, *c)),
+            _ => None,
+        }
+    }
+}
+
+/// Status publication frame: a vertex id and its MIS bit packed into one
+/// word — the shape of what Alg 1/2/3's publish rounds ship per edge.
+/// Those rounds currently account their traffic via `sim.round` without
+/// routing real payloads; this frame is the wire format they adopt as
+/// they move onto the routed plane (today it is exercised by the wire
+/// tests and the `mpc/plane_codecs` benchmark).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VertexStatus {
+    pub vertex: u32,
+    pub in_mis: bool,
+}
+
+impl Encode for VertexStatus {
+    fn words(&self) -> usize {
+        1
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(((self.vertex as u64) << 1) | u64::from(self.in_mis));
+    }
+}
+
+impl Decode for VertexStatus {
+    fn decode(payload: &[u64]) -> Option<VertexStatus> {
+        match payload {
+            [w] if *w >> 33 == 0 => Some(VertexStatus {
+                vertex: (*w >> 1) as u32,
+                in_mis: *w & 1 == 1,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Label-propagation frame: `(vertex, label)` packed into one word —
+/// the shape of a connectivity/clustering update. Like
+/// [`VertexStatus`], this is the declared wire format for rounds whose
+/// traffic is still charged via `sim.round`; its current users are the
+/// wire tests and the `mpc/plane_codecs` benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LabelUpdate {
+    pub vertex: u32,
+    pub label: u32,
+}
+
+impl Encode for LabelUpdate {
+    fn words(&self) -> usize {
+        1
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(((self.vertex as u64) << 32) | self.label as u64);
+    }
+}
+
+impl Decode for LabelUpdate {
+    fn decode(payload: &[u64]) -> Option<LabelUpdate> {
+        match payload {
+            [w] => Some(LabelUpdate { vertex: (*w >> 32) as u32, label: *w as u32 }),
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------- send side
+
+/// One message's index entry in a sender-side slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct WireEntry {
+    from: u32,
+    dst: u32,
+    offset: u32,
+    len: u32,
+}
+
+/// A shard's outbox for one round: one contiguous payload slab plus the
+/// `(from, dst, offset, len)` index, with send words tallied on the
+/// shard's private [`ShardLedger`] as messages are appended.
+///
+/// The router hands one of these (positioned on the current sender via
+/// `begin`) to the round's build closure; callers only see the typed
+/// [`WireOutbox::send`] / raw [`WireOutbox::send_words`] API.
+#[derive(Debug)]
+pub struct WireOutbox {
+    machines: usize,
+    from: u32,
+    slab: Vec<u64>,
+    entries: Vec<WireEntry>,
+    ledger: ShardLedger,
+}
+
+impl WireOutbox {
+    /// Outbox for the shard owning machines `range` of a `machines`-wide
+    /// fleet.
+    pub(crate) fn new(range: std::ops::Range<usize>, machines: usize) -> WireOutbox {
+        WireOutbox {
+            machines,
+            from: range.start as u32,
+            slab: Vec::new(),
+            entries: Vec::new(),
+            ledger: ShardLedger::new(range),
+        }
+    }
+
+    /// Position the outbox on sender `m` (the router calls this once per
+    /// machine, in range order, before invoking the build closure).
+    pub(crate) fn begin(&mut self, m: usize) {
+        self.from = m as u32;
+    }
+
+    /// Send a typed payload to `dst`.
+    pub fn send<T: Encode>(&mut self, dst: usize, msg: &T) {
+        let offset = self.slab.len();
+        msg.encode(&mut self.slab);
+        let len = self.slab.len() - offset;
+        assert_eq!(len, msg.words(), "Encode wrote {len} words, declared {}", msg.words());
+        self.push_entry(dst, offset, len);
+    }
+
+    /// Send raw payload words to `dst` (the untyped escape hatch; empty
+    /// payloads are legal and cost the envelope word alone).
+    pub fn send_words(&mut self, dst: usize, payload: &[u64]) {
+        let offset = self.slab.len();
+        self.slab.extend_from_slice(payload);
+        self.push_entry(dst, offset, payload.len());
+    }
+
+    /// Messages appended so far (across all senders of the shard).
+    pub fn messages(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Payload words appended so far.
+    pub fn slab_words(&self) -> usize {
+        self.slab.len()
+    }
+
+    fn push_entry(&mut self, dst: usize, offset: usize, len: usize) {
+        assert!(dst < self.machines, "message to unknown machine {dst}");
+        let offset = u32::try_from(offset).expect("round slab exceeds u32 offsets");
+        let len = u32::try_from(len).expect("payload exceeds u32 length");
+        self.entries.push(WireEntry { from: self.from, dst: dst as u32, offset, len });
+        self.ledger.charge(self.from as usize, len as Words + ENVELOPE_WORDS);
+    }
+
+    /// Tear down into the send ledger (the barrier absorbs it).
+    pub(crate) fn into_ledger(self) -> ShardLedger {
+        self.ledger
+    }
+}
+
+// ---------------------------------------------------------- receive side
+
+/// One delivered message's index entry in a receiver-side slab.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct InboxEntry {
+    from: u32,
+    offset: u32,
+    len: u32,
+}
+
+/// Receiver-side arena for one round: one contiguous slab per destination
+/// machine plus per-destination entry lists. Built once at the round
+/// barrier; all access is zero-copy via [`RoundInboxes::inbox`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundInboxes {
+    slabs: Vec<Vec<u64>>,
+    entries: Vec<Vec<InboxEntry>>,
+}
+
+impl RoundInboxes {
+    /// The barrier's exchange half: walk the shard outboxes in shard
+    /// order (= sender order), copy each payload range once into its
+    /// destination slab, and charge receive words on `recv`.
+    pub(crate) fn deliver(
+        machines: usize,
+        shards: &[WireOutbox],
+        recv: &mut ShardLedger,
+    ) -> RoundInboxes {
+        // Sizing pass so the receiver slabs allocate exactly once.
+        let mut words = vec![0usize; machines];
+        let mut counts = vec![0usize; machines];
+        for ob in shards {
+            for e in &ob.entries {
+                words[e.dst as usize] += e.len as usize;
+                counts[e.dst as usize] += 1;
+            }
+        }
+        let mut slabs: Vec<Vec<u64>> = words.iter().map(|&w| Vec::with_capacity(w)).collect();
+        let mut entries: Vec<Vec<InboxEntry>> =
+            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for ob in shards {
+            for e in &ob.entries {
+                let d = e.dst as usize;
+                let offset = slabs[d].len() as u32;
+                slabs[d].extend_from_slice(
+                    &ob.slab[e.offset as usize..e.offset as usize + e.len as usize],
+                );
+                entries[d].push(InboxEntry { from: e.from, offset, len: e.len });
+                recv.charge(d, e.len as Words + ENVELOPE_WORDS);
+            }
+        }
+        RoundInboxes { slabs, entries }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Zero-copy view of machine `m`'s inbox.
+    pub fn inbox(&self, m: usize) -> Inbox<'_> {
+        Inbox { slab: &self.slabs[m], entries: &self.entries[m] }
+    }
+
+    /// Messages delivered this round, across all machines.
+    pub fn total_messages(&self) -> usize {
+        self.entries.iter().map(Vec::len).sum()
+    }
+
+    /// Payload words delivered this round, across all machines.
+    pub fn total_words(&self) -> usize {
+        self.slabs.iter().map(Vec::len).sum()
+    }
+}
+
+/// One machine's inbox: borrowed slices over the receiver slab, in the
+/// deterministic sender order the barrier delivered.
+#[derive(Debug, Clone, Copy)]
+pub struct Inbox<'a> {
+    slab: &'a [u64],
+    entries: &'a [InboxEntry],
+}
+
+impl<'a> Inbox<'a> {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> WireMsg<'a> {
+        let e = self.entries[i];
+        WireMsg {
+            from: e.from as usize,
+            payload: &self.slab[e.offset as usize..e.offset as usize + e.len as usize],
+        }
+    }
+
+    pub fn first(&self) -> Option<WireMsg<'a>> {
+        if self.is_empty() {
+            None
+        } else {
+            Some(self.get(0))
+        }
+    }
+
+    pub fn iter(self) -> InboxIter<'a> {
+        InboxIter { slab: self.slab, entries: self.entries.iter() }
+    }
+}
+
+impl<'a> IntoIterator for Inbox<'a> {
+    type Item = WireMsg<'a>;
+    type IntoIter = InboxIter<'a>;
+
+    fn into_iter(self) -> InboxIter<'a> {
+        self.iter()
+    }
+}
+
+/// Iterator over an [`Inbox`] in delivery order.
+#[derive(Debug, Clone)]
+pub struct InboxIter<'a> {
+    slab: &'a [u64],
+    entries: std::slice::Iter<'a, InboxEntry>,
+}
+
+impl<'a> Iterator for InboxIter<'a> {
+    type Item = WireMsg<'a>;
+
+    fn next(&mut self) -> Option<WireMsg<'a>> {
+        let e = self.entries.next()?;
+        Some(WireMsg {
+            from: e.from as usize,
+            payload: &self.slab[e.offset as usize..e.offset as usize + e.len as usize],
+        })
+    }
+}
+
+/// A delivered message: sender id plus a borrowed payload slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireMsg<'a> {
+    pub from: usize,
+    pub payload: &'a [u64],
+}
+
+impl WireMsg<'_> {
+    /// Ledger words of this message (payload + envelope), matching the
+    /// retired per-message accounting exactly.
+    pub fn words(&self) -> Words {
+        self.payload.len() as Words + ENVELOPE_WORDS
+    }
+
+    /// Decode the payload, panicking on a malformed frame (senders and
+    /// receivers share the codec, so a mismatch is a bug, not data).
+    pub fn decode<T: Decode>(&self) -> T {
+        self.try_decode().unwrap_or_else(|| {
+            panic!(
+                "payload of {} words does not decode as {}",
+                self.payload.len(),
+                std::any::type_name::<T>()
+            )
+        })
+    }
+
+    pub fn try_decode<T: Decode>(&self) -> Option<T> {
+        T::decode(self.payload)
+    }
+}
+
+// ------------------------------------------------------- legacy oracle
+
+/// The retired per-message wire format, reproduced as a single
+/// executable oracle: one heap-allocated `Vec<u64>` per message on both
+/// sides, sender-ordered delivery, the same `+1` envelope word on the
+/// ledgers, and the router barrier's exact check ordering (send shards
+/// absorbed before the receive ledger).
+///
+/// This is deliberately the **only** place the old format survives —
+/// the router's old-vs-new parity test and the `mpc/plane_vs_permsg`
+/// benchmark baseline both call it, so they can never drift apart. It
+/// is not a Router path; production code sends through [`WireOutbox`].
+pub fn per_message_round(
+    machines: usize,
+    sim: &mut crate::mpc::simulator::MpcSimulator,
+    label: &str,
+    outboxes: Vec<Vec<(usize, Vec<u64>)>>,
+) -> Vec<Vec<(usize, Vec<u64>)>> {
+    use crate::mpc::memory::MemoryLedger;
+    let mut send = ShardLedger::new(0..machines);
+    let mut recv = ShardLedger::new(0..machines);
+    let mut inboxes: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); machines];
+    for (from, outbox) in outboxes.into_iter().enumerate() {
+        for (dst, payload) in outbox {
+            let words = payload.len() as Words + ENVELOPE_WORDS;
+            send.charge(from, words);
+            recv.charge(dst, words);
+            inboxes[dst].push((from, payload));
+        }
+    }
+    let max_out = send.max_local();
+    let max_in = recv.max_local();
+    let total = send.total();
+    let s = sim.config.s_words;
+    let mut sent_fleet = MemoryLedger::new(machines, s, sim.config.global_words);
+    let mut recv_fleet = MemoryLedger::new(machines, s, Words::MAX);
+    let mut violation = sent_fleet.absorb(&send).err();
+    if violation.is_none() {
+        violation = recv_fleet.absorb(&recv).err();
+    }
+    sim.round_checked(label, max_out, max_in, total, max_out.max(max_in), violation);
+    inboxes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let mut slab = Vec::new();
+        v.encode(&mut slab);
+        assert_eq!(slab.len(), v.words(), "declared vs written words");
+        assert_eq!(T::decode(&slab), Some(v), "encode∘decode must be id");
+    }
+
+    #[test]
+    fn codec_roundtrips() {
+        roundtrip(0u64);
+        roundtrip(u64::MAX);
+        roundtrip((3u64, 9u64));
+        roundtrip((1u64, u64::MAX, 7u64));
+        roundtrip(VertexStatus { vertex: 0, in_mis: false });
+        roundtrip(VertexStatus { vertex: u32::MAX, in_mis: true });
+        roundtrip(LabelUpdate { vertex: 17, label: 0 });
+        roundtrip(LabelUpdate { vertex: u32::MAX, label: u32::MAX });
+    }
+
+    #[test]
+    fn codec_rejects_wrong_shapes() {
+        assert_eq!(u64::decode(&[]), None);
+        assert_eq!(u64::decode(&[1, 2]), None);
+        assert_eq!(<(u64, u64)>::decode(&[1]), None);
+        assert_eq!(<(u64, u64, u64)>::decode(&[1, 2]), None);
+        assert_eq!(VertexStatus::decode(&[u64::MAX]), None, "high bits must be clear");
+        assert_eq!(LabelUpdate::decode(&[1, 2]), None);
+    }
+
+    #[test]
+    fn word_counts_match_ledger_accounting() {
+        // Every codec's words() + the envelope equals what the retired
+        // per-message plane charged for the same payload.
+        let mut slab = Vec::new();
+        let v = VertexStatus { vertex: 4, in_mis: true };
+        v.encode(&mut slab);
+        let legacy_words = slab.len() as Words + 1; // Vec payload + sender word
+        assert_eq!(v.words() as Words + ENVELOPE_WORDS, legacy_words);
+    }
+
+    #[test]
+    fn outbox_builds_one_slab_with_index() {
+        let mut out = WireOutbox::new(0..2, 4);
+        out.begin(0);
+        out.send(1, &7u64);
+        out.send_words(3, &[1, 2, 3]);
+        out.begin(1);
+        out.send_words(2, &[]);
+        assert_eq!(out.messages(), 3);
+        assert_eq!(out.slab_words(), 4);
+        assert_eq!(out.slab, vec![7, 1, 2, 3]);
+        assert_eq!(
+            out.entries,
+            vec![
+                WireEntry { from: 0, dst: 1, offset: 0, len: 1 },
+                WireEntry { from: 0, dst: 3, offset: 1, len: 3 },
+                WireEntry { from: 1, dst: 2, offset: 4, len: 0 },
+            ]
+        );
+        // Ledger: machine 0 sent (1+1) + (3+1) = 6, machine 1 sent 0+1.
+        let ledger = out.into_ledger();
+        assert_eq!(ledger.used(0), 6);
+        assert_eq!(ledger.used(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown machine")]
+    fn outbox_rejects_unknown_destination() {
+        let mut out = WireOutbox::new(0..1, 2);
+        out.begin(0);
+        out.send(5, &1u64);
+    }
+
+    #[test]
+    fn deliver_copies_in_sender_order_and_charges_receive() {
+        // Two shards; delivery must interleave by shard order then
+        // sender order, exactly like the retired plane.
+        let mut a = WireOutbox::new(0..2, 3);
+        a.begin(0);
+        a.send(2, &10u64);
+        a.begin(1);
+        a.send_words(2, &[20, 21]);
+        let mut b = WireOutbox::new(2..3, 3);
+        b.begin(2);
+        b.send(2, &30u64);
+        b.send(0, &(1u64, 2u64));
+        let mut recv = ShardLedger::new(0..3);
+        let inboxes = RoundInboxes::deliver(3, &[a, b], &mut recv);
+        let got: Vec<(usize, Vec<u64>)> =
+            inboxes.inbox(2).iter().map(|m| (m.from, m.payload.to_vec())).collect();
+        assert_eq!(got, vec![(0, vec![10]), (1, vec![20, 21]), (2, vec![30])]);
+        assert_eq!(inboxes.inbox(0).first().map(|m| m.decode::<(u64, u64)>()), Some((1, 2)));
+        assert!(inboxes.inbox(1).is_empty());
+        // Receive ledger: machine 2 got 2 + 3 + 2 = 7 words, machine 0 got 3.
+        assert_eq!(recv.used(2), 7);
+        assert_eq!(recv.used(0), 3);
+        assert_eq!(inboxes.total_messages(), 4);
+        assert_eq!(inboxes.total_words(), 6);
+    }
+}

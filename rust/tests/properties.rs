@@ -283,18 +283,16 @@ fn sharded_ledger_still_enforces_memory_budgets() {
     for shards in [1usize, 2, 8] {
         let mut cfg = MpcConfig::model1(10_000, 100_000, 0.6);
         cfg.machines = machines;
-        let huge = cfg.s_words as usize + 10;
+        let huge = vec![0u64; cfg.s_words as usize + 10];
         let mut sim = MpcSimulator::lenient_sharded(cfg, shards);
         let router = Router::new(machines);
         // A normal round first: no violation.
-        router.step_sharded(&mut sim, "ok", |m| vec![((m + 1) % machines, vec![m as u64])]);
+        router.round(&mut sim, "ok", |m, out| out.send((m + 1) % machines, &(m as u64)));
         assert!(sim.ok(), "{shards} shards: clean round must not violate");
         // Machine 7 exceeds its send budget.
-        router.step_sharded(&mut sim, "overflow", |m| {
+        router.round(&mut sim, "overflow", |m, out| {
             if m == 7 {
-                vec![(0, vec![0u64; huge])]
-            } else {
-                Vec::new()
+                out.send_words(0, &huge);
             }
         });
         assert!(!sim.ok(), "{shards} shards: violation must be recorded");

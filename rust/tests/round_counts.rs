@@ -1,0 +1,210 @@
+//! Golden round-complexity schedules (regression pins for the message
+//! plane and the round executor).
+//!
+//! Every entry pins the *measured* communication schedule — round
+//! labels, counts, and max per-machine in/out words — of a primitive or
+//! algorithm on a fixed corpus spec with a fixed (identity) permutation,
+//! so a wire-plane or executor refactor cannot silently change what a
+//! round costs or how many rounds an algorithm takes. The expected
+//! values are derived by hand from the paper's schedules on structured
+//! instances (paths, S-ary trees), where every number is checkable:
+//! payload words + 1 envelope word per message, sender-ordered delivery.
+//!
+//! If an *intentional* schedule change lands, re-derive the constants
+//! here and say why in the commit; these tests exist to make that step
+//! deliberate.
+
+use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
+use arbocc::algorithms::mpc_mis::alg3::{alg3_process, Alg3Params};
+use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params};
+use arbocc::data::corpus::WorkloadSpec;
+use arbocc::graph::Graph;
+use arbocc::mpc::broadcast::{Aggregate, BroadcastTree};
+use arbocc::mpc::exponentiation::gather_balls;
+use arbocc::mpc::memory::Words;
+use arbocc::mpc::router::Router;
+use arbocc::mpc::{MpcConfig, MpcSimulator};
+
+fn corpus_graph(spec: &str) -> Graph {
+    WorkloadSpec::parse(spec)
+        .expect("golden spec parses")
+        .generate()
+        .expect("golden spec generates")
+}
+
+/// The pinned view of a trace: (label, max_out, max_in) per round.
+fn schedule(sim: &MpcSimulator) -> Vec<(String, Words, Words)> {
+    sim.trace().iter().map(|r| (r.label.clone(), r.max_out, r.max_in)).collect()
+}
+
+fn golden(rounds: &[(&str, Words, Words)]) -> Vec<(String, Words, Words)> {
+    rounds.iter().map(|&(l, o, i)| (l.to_string(), o, i)).collect()
+}
+
+#[test]
+fn golden_convergecast_schedule() {
+    // 13 machines in a 3-ary tree: machines 4..12 are leaves, 1..3 the
+    // internal layer, 0 the root. Leaves fire in round 0 (2 words out:
+    // 1 payload + 1 envelope; parents take 3 messages = 6 words in),
+    // the internal layer fires in round 1.
+    let machines = 13;
+    let mut cfg = MpcConfig::model1(100_000, 1_000_000, 0.5);
+    cfg.machines = machines;
+    let mut sim = MpcSimulator::new(cfg);
+    let router = Router::new(machines);
+    let tree = BroadcastTree::new(machines, 3);
+    let values = vec![1u64; machines];
+    let sum = tree.aggregate(&mut sim, &router, &values, Aggregate::Sum);
+    assert_eq!(sum, machines as u64);
+    assert_eq!(
+        schedule(&sim),
+        golden(&[("convergecast[0]", 2, 6), ("convergecast[1]", 2, 6)])
+    );
+}
+
+#[test]
+fn golden_broadcast_schedule() {
+    // The mirror image: the root pushes to its 3 children (3 messages =
+    // 6 words out, 2 words in per child), then the internal layer fans
+    // out to the 9 leaves.
+    let machines = 13;
+    let mut cfg = MpcConfig::model1(100_000, 1_000_000, 0.5);
+    cfg.machines = machines;
+    let mut sim = MpcSimulator::new(cfg);
+    let router = Router::new(machines);
+    let tree = BroadcastTree::new(machines, 3);
+    let got = tree.broadcast(&mut sim, &router, 99);
+    assert_eq!(got, vec![99; machines]);
+    assert_eq!(
+        schedule(&sim),
+        golden(&[("broadcast[0]", 6, 2), ("broadcast[1]", 6, 2)])
+    );
+}
+
+#[test]
+fn golden_exponentiation_schedule() {
+    // path:n=600, radius 16: ⌈log2 16⌉ = 4 doublings. After the k-th
+    // doubling an interior vertex's ball holds 2^k·2+1 members at 3
+    // topology words each (member + two adjacency entries), so the max
+    // per-machine footprint is 15 / 27 / 51 / 99 words.
+    let g = corpus_graph("path:n=600");
+    let targets: Vec<u32> = (0..g.n() as u32).collect();
+    let mut sim = MpcSimulator::new(MpcConfig::model2(g.n(), (g.n() + 2 * g.m()) as Words, 0.9));
+    let res = gather_balls(&g, &targets, 16, u64::MAX, &mut sim, "exp");
+    assert_eq!(res.radius, 16);
+    assert_eq!(res.rounds, 4);
+    assert!(!res.memory_capped);
+    assert_eq!(
+        schedule(&sim),
+        golden(&[
+            ("exp/double[1]", 15, 15),
+            ("exp/double[2]", 27, 27),
+            ("exp/double[3]", 51, 51),
+            ("exp/double[4]", 99, 99),
+        ])
+    );
+}
+
+/// path:n=8 with the identity permutation: the greedy MIS is
+/// {0, 2, 4, 6} and every Alg2 chunk is a single vertex, giving a fully
+/// hand-checkable schedule.
+fn path8() -> (Graph, Vec<u32>) {
+    let g = corpus_graph("path:n=8");
+    let perm: Vec<u32> = (0..g.n() as u32).collect();
+    (g, perm)
+}
+
+const PATH8_MIS: [bool; 8] = [true, false, true, false, true, false, true, false];
+
+/// Alg2's golden schedule on path8/identity (default params, Δ' = 2):
+/// one degree aggregate, then per surviving chunk — vertices 0, 2, 4, 6;
+/// odd vertices are blocked before their chunk runs — one gather round
+/// (component of size 1) and one publish round at the vertex's degree
+/// (1 word for the endpoint 0, 2 for interior vertices).
+const ALG2_PATH8: [(&str, Words, Words); 9] = [
+    ("alg2/degree-aggregate", 1, 1),
+    ("alg2/gather[0]", 1, 1),
+    ("alg2/publish", 1, 1),
+    ("alg2/gather[0]", 1, 1),
+    ("alg2/publish", 2, 2),
+    ("alg2/gather[0]", 1, 1),
+    ("alg2/publish", 2, 2),
+    ("alg2/gather[0]", 1, 1),
+    ("alg2/publish", 2, 2),
+];
+
+#[test]
+fn golden_alg2_schedule() {
+    let (g, perm) = path8();
+    let mut sim =
+        MpcSimulator::new(MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5));
+    let mut blocked = vec![false; g.n()];
+    let mut in_mis = vec![false; g.n()];
+    alg2_process(&g, &perm, &mut blocked, &mut in_mis, &mut sim, &Alg2Params::default());
+    assert_eq!(in_mis, PATH8_MIS);
+    assert_eq!(schedule(&sim), golden(&ALG2_PATH8));
+}
+
+#[test]
+fn golden_alg3_schedule() {
+    // Alg3 on path8/identity: R = ⌈0.5·log2(8)/log2(2)⌉ = 2, so one
+    // doubling (interior radius-2 ball = 5 members, 14–15 topology
+    // words), then the 8-iteration fixpoint compresses into two
+    // simulate+publish pairs (2 iterations decided per pass × R = 2).
+    let (g, perm) = path8();
+    let mut sim =
+        MpcSimulator::new(MpcConfig::model2(g.n(), (g.n() + 2 * g.m()) as Words, 0.5));
+    let mut blocked = vec![false; g.n()];
+    let mut in_mis = vec![false; g.n()];
+    let stats =
+        alg3_process(&g, &perm, &mut blocked, &mut in_mis, &mut sim, &Alg3Params::default());
+    assert_eq!(in_mis, PATH8_MIS);
+    assert_eq!(stats.radius, 2);
+    assert_eq!(stats.fixpoint_iters, 4);
+    assert_eq!(
+        schedule(&sim),
+        golden(&[
+            ("alg3/gather/double[1]", 15, 15),
+            ("alg3/simulate", 5, 5),
+            ("alg3/publish", 2, 2),
+            ("alg3/simulate", 5, 5),
+            ("alg3/publish", 2, 2),
+        ])
+    );
+}
+
+#[test]
+fn golden_alg1_pivot_schedule() {
+    // Alg1 (default c_prefix = 1.0) consumes all of path8 in one phase
+    // (t_0 = ⌈8·3/2⌉ clamps to n), so its schedule is Alg2's plus the
+    // PIVOT cluster-join round at the graph's max degree.
+    let (g, perm) = path8();
+    let mut sim =
+        MpcSimulator::new(MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5));
+    let run = mpc_pivot(&g, &perm, &Alg1Params::default(), &mut sim);
+    assert_eq!(run.mis_run.in_mis, PATH8_MIS);
+    assert_eq!(run.mis_run.phases.len(), 1);
+    let mut want = golden(&ALG2_PATH8);
+    want.push(("pivot/join".to_string(), 2, 2));
+    assert_eq!(schedule(&sim), want);
+    assert_eq!(run.rounds, want.len());
+}
+
+#[test]
+fn golden_schedules_are_shard_invariant() {
+    // The same goldens must hold verbatim on the multi-threaded
+    // executor: the plane's barrier merges shards in sender order, so
+    // the pinned schedule is a function of the algorithm alone.
+    let (g, perm) = path8();
+    for shards in [2usize, 8] {
+        let mut sim = MpcSimulator::sharded(
+            MpcConfig::model1(g.n(), (g.n() + 2 * g.m()) as Words, 0.5),
+            shards,
+        );
+        let run = mpc_pivot(&g, &perm, &Alg1Params::default(), &mut sim);
+        assert_eq!(run.mis_run.in_mis, PATH8_MIS, "{shards} shards");
+        let mut want = golden(&ALG2_PATH8);
+        want.push(("pivot/join".to_string(), 2, 2));
+        assert_eq!(schedule(&sim), want, "{shards} shards");
+    }
+}
