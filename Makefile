@@ -3,7 +3,10 @@
 #   tier1        release build + full test suite (the gate)
 #   fmt          rustfmt check (kept separate from tier1)
 #   clippy       cargo clippy --all-targets -D warnings
-#   ci           tier1 + fmt + clippy
+#   audit        `arbocc audit`: the determinism / MPC-invariant static
+#                analysis pass over rust/src, driven by rust/audit.toml
+#                (exit 1 on any unsuppressed finding)
+#   ci           tier1 + fmt + clippy + audit
 #   examples     build + run the repo-root examples (quickstart, the
 #                solver-engine tour and the dataset pipeline), as CI does
 #   solve-demo   the unified solver engine on a mixed multi-component
@@ -23,9 +26,9 @@
 #   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
-BENCH_LABEL ?= PR5
+BENCH_LABEL ?= PR6
 
-.PHONY: tier1 fmt clippy ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
+.PHONY: tier1 fmt clippy audit ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
 
 # The gate every change must pass: release build + full test suite.
 tier1:
@@ -38,7 +41,12 @@ fmt:
 clippy:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
 
-ci: tier1 fmt clippy
+# Determinism / MPC-invariant lint pass (rules in rust/src/audit/rules.rs,
+# module classes in rust/audit.toml). The shipped tree must audit clean.
+audit:
+	cd rust && $(CARGO) run --release -- audit
+
+ci: tier1 fmt clippy audit
 
 examples:
 	cd rust && $(CARGO) run --release --example quickstart

@@ -26,9 +26,9 @@ use arbocc::util::table::{fnum, Table};
 
 fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
-    let n = args.get_usize("n", 4_000);
-    let k = args.get_usize("k", 400); // communities of size 10
-    let seed = args.get_u64("seed", 17);
+    let n = args.get_usize("n", 4_000)?;
+    let k = args.get_usize("k", 400)?; // communities of size 10
+    let seed = args.get_u64("seed", 17)?;
     let engine = CostEngine::native();
 
     let mut table = Table::new(

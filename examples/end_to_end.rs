@@ -36,10 +36,10 @@ use arbocc::util::timer::Timer;
 
 fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
-    let n = args.get_usize("n", 1 << 16);
-    let k = args.get_usize("k", 8);
-    let workers = args.get_usize("workers", 4);
-    let seed = args.get_u64("seed", 2021);
+    let n = args.get_usize("n", 1 << 16)?;
+    let k = args.get_usize("k", 8)?;
+    let workers = args.get_usize("workers", 4)?;
+    let seed = args.get_u64("seed", 2021)?;
 
     println!("=== arbocc end-to-end driver ===\n");
 

@@ -20,10 +20,10 @@ use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
 use arbocc::util::table::{fnum, Table};
 
-fn main() {
+fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
-    let n = args.get_usize("n", 100_000);
-    let seed = args.get_u64("seed", 3);
+    let n = args.get_usize("n", 100_000)?;
+    let seed = args.get_u64("seed", 3)?;
     let mut rng = Rng::new(seed);
 
     // --- Corollary 27 on exactly-solvable instances -------------------
@@ -105,4 +105,5 @@ fn main() {
         )
     );
     println!("forest_matching OK");
+    Ok(())
 }

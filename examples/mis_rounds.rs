@@ -19,11 +19,11 @@ use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
 use arbocc::util::table::Table;
 
-fn main() {
+fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
-    let sizes = args.get_list("sizes", &[1024usize, 4096, 16384]);
-    let lambda = args.get_usize("lambda", 3);
-    let seed = args.get_u64("seed", 11);
+    let sizes = args.get_list("sizes", &[1024usize, 4096, 16384])?;
+    let lambda = args.get_usize("lambda", 3)?;
+    let seed = args.get_u64("seed", 11)?;
 
     let mut table = Table::new(
         &format!("greedy MIS rounds on arboric-{lambda} graphs (same π per row)"),
@@ -69,4 +69,5 @@ fn main() {
     }
     table.print();
     println!("\ndirect grows with log n; Alg3's count reflects gather (loglog n) + logΔ sweeps.");
+    Ok(())
 }

@@ -25,11 +25,11 @@ use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
 use arbocc::util::table::{fnum, Table};
 
-fn main() {
+fn main() -> arbocc::util::error::Result<()> {
     let args = Args::from_env();
-    let n = args.get_usize("n", 50_000);
-    let m_attach = args.get_usize("attach", 3);
-    let seed = args.get_u64("seed", 7);
+    let n = args.get_usize("n", 50_000)?;
+    let m_attach = args.get_usize("attach", 3)?;
+    let seed = args.get_u64("seed", 7)?;
 
     let mut rng = Rng::new(seed);
     let g = barabasi_albert(n, m_attach, &mut rng);
@@ -106,4 +106,5 @@ fn main() {
 
     table.print();
     println!("\n'ratio≤' is cost / bad-triangle-packing LB — an upper bound on the true ratio.");
+    Ok(())
 }

@@ -38,6 +38,12 @@ pub fn c4(g: &Graph, perm: &[u32], eps: f64, sim: &mut MpcSimulator) -> C4Run {
 
     // Active vertices in rank order (π order filtered to unclustered).
     let mut remaining: Vec<u32> = perm.to_vec();
+    // Vertex-indexed scratch reused across epochs (reset per epoch over
+    // the candidate set only), so no hash containers touch the
+    // deterministic path.
+    let mut in_cand = vec![false; n];
+    let mut blocked = vec![false; n];
+    let mut depth = vec![0usize; n]; // 0 = not (yet) a selected pivot
     while !remaining.is_empty() {
         epochs += 1;
         let active_deg = remaining
@@ -51,38 +57,37 @@ pub fn c4(g: &Graph, perm: &[u32], eps: f64, sim: &mut MpcSimulator) -> C4Run {
         let take = ((eps * remaining.len() as f64 / active_deg as f64).ceil() as usize)
             .clamp(1, remaining.len());
         let candidates: Vec<u32> = remaining[..take].to_vec();
-        let cand_set: std::collections::HashSet<u32> = candidates.iter().copied().collect();
+        for &v in &candidates {
+            in_cand[v as usize] = true;
+        }
 
         // Greedy MIS among candidates (waiting chains = parallel fixpoint
         // iterations on the candidate subgraph — C4's per-epoch cost).
         let mut in_mis: Vec<u32> = Vec::new();
-        let mut blocked: std::collections::HashSet<u32> = std::collections::HashSet::new();
         let mut wait_iters = 1usize;
         {
             // Sequential resolution in rank order gives the MIS; the
             // waiting depth is the longest rank-decreasing candidate
-            // chain, measured via per-vertex depth.
-            let mut depth: std::collections::HashMap<u32, usize> =
-                std::collections::HashMap::new();
+            // chain, measured via per-vertex depth (blocked candidates
+            // keep depth 0, so they never extend a chain).
             for &v in &candidates {
-                if blocked.contains(&v) {
+                if blocked[v as usize] {
                     continue;
                 }
                 let d = g
                     .neighbors(v)
                     .iter()
-                    .filter(|&&u| cand_set.contains(&u) && rank[u as usize] < rank[v as usize])
-                    .filter_map(|u| depth.get(u))
+                    .filter(|&&u| in_cand[u as usize] && rank[u as usize] < rank[v as usize])
+                    .map(|&u| depth[u as usize])
                     .max()
-                    .copied()
                     .unwrap_or(0)
                     + 1;
-                depth.insert(v, d);
+                depth[v as usize] = d;
                 wait_iters = wait_iters.max(d);
                 in_mis.push(v);
                 for &u in g.neighbors(v) {
-                    if cand_set.contains(&u) {
-                        blocked.insert(u);
+                    if in_cand[u as usize] {
+                        blocked[u as usize] = true;
                     }
                 }
             }
@@ -122,6 +127,14 @@ pub fn c4(g: &Graph, perm: &[u32], eps: f64, sim: &mut MpcSimulator) -> C4Run {
             2 * g.m() as Words,
             max_deg + 2,
         );
+
+        // Reset the scratch over exactly the vertices this epoch touched
+        // (blocked is only ever set on candidates).
+        for &v in &candidates {
+            in_cand[v as usize] = false;
+            blocked[v as usize] = false;
+            depth[v as usize] = 0;
+        }
 
         remaining.retain(|&v| label[v as usize] == u32::MAX);
     }

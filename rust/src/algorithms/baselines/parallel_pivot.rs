@@ -40,6 +40,9 @@ pub fn parallel_pivot(
     let mut label = vec![u32::MAX; n];
     let mut epochs = 0usize;
     let mut active: Vec<u32> = (0..n as u32).collect();
+    // Vertex-indexed sample marker, reused across epochs (reset over the
+    // sampled vertices only) — keeps the loop free of hash containers.
+    let mut is_sampled = vec![false; n];
 
     while !active.is_empty() {
         epochs += 1;
@@ -63,7 +66,9 @@ pub fn parallel_pivot(
         let p = (eps / active_deg as f64).min(1.0);
         // Independent sampling.
         let sampled: Vec<u32> = active.iter().copied().filter(|_| rng.bernoulli(p)).collect();
-        let sampled_set: std::collections::HashSet<u32> = sampled.iter().copied().collect();
+        for &v in &sampled {
+            is_sampled[v as usize] = true;
+        }
         // Thin to an independent set: drop sampled vertices with a
         // smaller-rank sampled neighbor.
         let mut pivots: Vec<u32> = sampled
@@ -72,9 +77,12 @@ pub fn parallel_pivot(
             .filter(|&v| {
                 !g.neighbors(v)
                     .iter()
-                    .any(|&u| sampled_set.contains(&u) && rank[u as usize] < rank[v as usize])
+                    .any(|&u| is_sampled[u as usize] && rank[u as usize] < rank[v as usize])
             })
             .collect();
+        for &v in &sampled {
+            is_sampled[v as usize] = false;
+        }
         pivots.sort_by_key(|&v| rank[v as usize]);
 
         for &p in &pivots {

@@ -152,7 +152,6 @@ fn find_augmenting(
         mate: &[Option<u32>],
         used: &[bool],
         path: &mut Vec<u32>,
-        on_path: &mut std::collections::HashSet<u32>,
         expect_matched: bool,
         max_len: usize,
     ) -> bool {
@@ -170,7 +169,9 @@ fn find_augmenting(
             return false;
         }
         for &u in g.neighbors(v) {
-            if used[u as usize] || on_path.contains(&u) {
+            // `path` is at most max_len+1 vertices, so a linear membership
+            // scan beats a set here — and keeps the hot path allocation-free.
+            if used[u as usize] || path.contains(&u) {
                 continue;
             }
             let edge_is_matched = mate[v as usize] == Some(u);
@@ -178,21 +179,18 @@ fn find_augmenting(
                 continue;
             }
             path.push(u);
-            on_path.insert(u);
             // After an unmatched edge we reached u; if u is free we're
             // done (checked at loop head), else continue via its mate.
-            if dfs(g, mate, used, path, on_path, !expect_matched, max_len) {
+            if dfs(g, mate, used, path, !expect_matched, max_len) {
                 return true;
             }
-            on_path.remove(&u);
             path.pop();
         }
         false
     }
 
     let mut path = vec![start];
-    let mut on_path: std::collections::HashSet<u32> = [start].into_iter().collect();
-    if dfs(g, mate, used, &mut path, &mut on_path, false, max_len) {
+    if dfs(g, mate, used, &mut path, false, max_len) {
         Some(path)
     } else {
         None

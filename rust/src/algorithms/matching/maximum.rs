@@ -17,14 +17,16 @@ pub type Matching = Vec<(u32, u32)>;
 
 /// Check the matching property against a graph.
 pub fn is_matching(g: &Graph, m: &Matching) -> bool {
-    let mut used = std::collections::HashSet::new();
+    let mut used = vec![false; g.n()];
     for &(u, v) in m {
         if !g.has_edge(u, v) {
             return false;
         }
-        if !used.insert(u) || !used.insert(v) {
+        if used[u as usize] || used[v as usize] {
             return false;
         }
+        used[u as usize] = true;
+        used[v as usize] = true;
     }
     true
 }

@@ -1,0 +1,253 @@
+//! The checked-in module-classification manifest (`audit.toml`).
+//!
+//! A tiny TOML-subset parser (the offline registry has no `toml` crate;
+//! see DESIGN.md §2): sections, `key = "string"` and
+//! `key = ["a", "b", …]` entries (arrays may span lines), `#` comments.
+//! The manifest declares which path prefixes belong to which *module
+//! class* — `deterministic`, `wire`, `overflow`, `cli` — plus per-rule
+//! path exemptions (the sanctioned homes of an otherwise-banned
+//! construct) and the edge-count identifier set the `unchecked-arith`
+//! rule watches. Strict by construction: unknown sections, unknown keys
+//! and unknown rule ids are parse errors, so a typo can never silently
+//! disable a rule.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::audit::rules;
+use crate::util::error::{Error, Result, ResultExt};
+
+/// Parsed `audit.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Scan root, relative to the manifest's directory (usually `src`).
+    pub root: String,
+    /// Module class -> path prefixes (dirs end in `/`, files are exact).
+    pub classes: BTreeMap<String, Vec<String>>,
+    /// Rule id -> path prefixes where the rule does not apply.
+    pub exempt: BTreeMap<String, Vec<String>>,
+    /// Identifiers the `unchecked-arith` rule treats as edge counts.
+    pub edge_count_idents: Vec<String>,
+}
+
+impl Manifest {
+    /// Read and parse a manifest file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Parse manifest text (strict: unknown names are errors).
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest { root: "src".to_string(), ..Manifest::default() };
+        let mut section = String::new();
+        // A `key = [` entry accumulating lines until brackets balance.
+        let mut pending: Option<(usize, String, String)> = None;
+
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if let Some((start, key, mut value)) = pending.take() {
+                value.push(' ');
+                value.push_str(&line);
+                if brackets_balance(&value) {
+                    m.entry(&section, &key, &value, start)?;
+                } else {
+                    pending = Some((start, key, value));
+                }
+                continue;
+            }
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                crate::ensure!(
+                    matches!(section.as_str(), "audit" | "classes" | "exempt" | "idents"),
+                    "line {lineno}: unknown section [{section}] (audit|classes|exempt|idents)"
+                );
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                crate::bail!("line {lineno}: expected `key = value`, got '{line}'");
+            };
+            let (key, value) = (key.trim().to_string(), value.trim().to_string());
+            if brackets_balance(&value) {
+                m.entry(&section, &key, &value, lineno)?;
+            } else {
+                pending = Some((lineno, key, value));
+            }
+        }
+        if let Some((lineno, key, _)) = pending {
+            crate::bail!("line {lineno}: unclosed array for key '{key}'");
+        }
+        for rule in rules::RULES {
+            crate::ensure!(
+                m.classes.contains_key(rule.class),
+                "rule '{}' needs a [classes] entry for '{}' — without it the rule \
+                 would silently never run",
+                rule.id,
+                rule.class
+            );
+        }
+        Ok(m)
+    }
+
+    fn entry(&mut self, section: &str, key: &str, value: &str, lineno: usize) -> Result<()> {
+        match section {
+            "audit" => {
+                crate::ensure!(key == "root", "line {lineno}: unknown [audit] key '{key}'");
+                self.root = parse_string(value)
+                    .ok_or_else(|| Error::new(format!("line {lineno}: root must be a string")))?;
+            }
+            "classes" => {
+                self.classes.insert(key.to_string(), parse_string_array(value, lineno)?);
+            }
+            "exempt" => {
+                crate::ensure!(
+                    rules::known(key),
+                    "line {lineno}: [exempt] names unknown rule '{key}' (known: {})",
+                    rules::rule_ids().join("|")
+                );
+                self.exempt.insert(key.to_string(), parse_string_array(value, lineno)?);
+            }
+            "idents" => {
+                crate::ensure!(
+                    key == "edge_count",
+                    "line {lineno}: unknown [idents] key '{key}'"
+                );
+                self.edge_count_idents = parse_string_array(value, lineno)?;
+            }
+            _ => crate::bail!("line {lineno}: entry '{key}' outside any section"),
+        }
+        Ok(())
+    }
+
+    /// All classes whose prefix list matches this path (deterministic
+    /// order — `classes` is a BTreeMap).
+    pub fn classes_of(&self, rel: &str) -> Vec<&str> {
+        self.classes
+            .iter()
+            .filter(|(_, prefixes)| prefixes.iter().any(|p| rel.starts_with(p.as_str())))
+            .map(|(name, _)| name.as_str())
+            .collect()
+    }
+
+    /// Whether `rule` is manifest-exempted for this path.
+    pub fn is_exempt(&self, rule: &str, rel: &str) -> bool {
+        self.exempt
+            .get(rule)
+            .map(|prefixes| prefixes.iter().any(|p| rel.starts_with(p.as_str())))
+            .unwrap_or(false)
+    }
+}
+
+/// Cut the line at the first `#` outside quotes.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// `[` / `]` balance outside quotes (array values may span lines).
+fn brackets_balance(value: &str) -> bool {
+    let mut in_str = false;
+    let mut depth = 0i64;
+    for c in value.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth == 0
+}
+
+fn parse_string(value: &str) -> Option<String> {
+    value.strip_prefix('"')?.strip_suffix('"').map(|s| s.to_string())
+}
+
+fn parse_string_array(value: &str, lineno: usize) -> Result<Vec<String>> {
+    let inner = value
+        .trim()
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| Error::new(format!("line {lineno}: expected a [\"…\"] array")))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let s = parse_string(part).ok_or_else(|| {
+            Error::new(format!("line {lineno}: array item '{part}' is not a quoted string"))
+        })?;
+        out.push(s);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[audit]
+root = "src"
+
+[classes]
+deterministic = [
+    "src/algorithms/",  # trailing comment
+    "src/mpc/",
+]
+wire = ["src/mpc/wire.rs"]
+overflow = ["src/data/"]
+cli = ["src/main.rs"]
+
+[exempt]
+rng-stream = ["src/mpc/pool.rs"]
+
+[idents]
+edge_count = ["n", "m"]
+"#;
+
+    #[test]
+    fn parses_sections_and_multiline_arrays() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.root, "src");
+        assert_eq!(
+            m.classes["deterministic"],
+            vec!["src/algorithms/".to_string(), "src/mpc/".to_string()]
+        );
+        assert_eq!(m.edge_count_idents, vec!["n".to_string(), "m".to_string()]);
+    }
+
+    #[test]
+    fn classifies_paths_by_prefix() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.classes_of("src/mpc/wire.rs"), vec!["deterministic", "wire"]);
+        assert_eq!(m.classes_of("src/util/rng.rs"), Vec::<&str>::new());
+        assert!(m.is_exempt("rng-stream", "src/mpc/pool.rs"));
+        assert!(!m.is_exempt("rng-stream", "src/mpc/wire.rs"));
+    }
+
+    #[test]
+    fn unknown_names_are_errors() {
+        assert!(Manifest::parse("[nope]\n").is_err());
+        let bad_rule = SAMPLE.replace("rng-stream", "rngg");
+        assert!(Manifest::parse(&bad_rule).unwrap_err().to_string().contains("unknown rule"));
+        // A rule class with no [classes] entry would silently disable the
+        // rule — that's a parse error.
+        let no_cli = SAMPLE.replace("cli = [\"src/main.rs\"]", "");
+        assert!(Manifest::parse(&no_cli).unwrap_err().to_string().contains("needs a [classes]"));
+    }
+}

@@ -1,0 +1,347 @@
+//! `arbocc audit` — the determinism & MPC-invariant static analysis
+//! pass (DESIGN.md §8).
+//!
+//! The repo's load-bearing guarantee — bit-identical clusterings and
+//! O(S) ledger traces at every shard count — is a *global* property no
+//! unit test can pin down locally, and both historical determinism bugs
+//! (the PR 4 `barabasi_albert` seed leak, the alg1/alg2 HashMap-tally
+//! hazards hand-audited in PR 5) were unordered-iteration defects. This
+//! module mechanizes that audit:
+//!
+//! * [`scan`] — a light line scanner: comments dropped, literals
+//!   blanked, `#[cfg(test)]` items skipped, `audit:allow` markers
+//!   parsed;
+//! * [`manifest`] — the checked-in `audit.toml` classifying modules
+//!   into `deterministic` / `wire` / `overflow` / `cli` classes;
+//! * [`rules`] — the eight class-scoped token rules;
+//! * this file — the walking engine, suppression accounting, and the
+//!   human (`file:line`) / JSON (`arbocc-audit/v1`) reports.
+//!
+//! Suppressions must carry a justification (`// audit:allow(rule):
+//! why`); a bare, stale, or unknown-rule marker is itself a finding, so
+//! the allow-list can only shrink under review, never rot silently.
+
+pub mod manifest;
+pub mod rules;
+pub mod scan;
+
+pub use manifest::Manifest;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Result, ResultExt};
+use crate::util::json::Json;
+
+/// One rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub class: String,
+    pub message: String,
+    pub snippet: String,
+}
+
+/// One justified `audit:allow` that absorbed a violation.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub justification: String,
+}
+
+/// The full audit result.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppression>,
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// `file:line: [rule] message` lines plus a one-line tally.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            if !f.snippet.is_empty() {
+                out.push_str(&format!("    {}\n", f.snippet));
+            }
+        }
+        out.push_str(&format!(
+            "audit: {} finding(s), {} suppression(s), {} file(s) scanned\n",
+            self.findings.len(),
+            self.suppressed.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// The `arbocc-audit/v1` report.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("schema", Json::str("arbocc-audit/v1"))
+            .set("files_scanned", Json::num(self.files_scanned as f64))
+            .set("clean", Json::Bool(self.is_clean()));
+        let mut findings = Json::Arr(Vec::new());
+        for f in &self.findings {
+            let mut o = Json::obj();
+            o.set("rule", Json::str(f.rule.clone()))
+                .set("file", Json::str(f.file.clone()))
+                .set("line", Json::num(f.line as f64))
+                .set("class", Json::str(f.class.clone()))
+                .set("message", Json::str(f.message.clone()))
+                .set("snippet", Json::str(f.snippet.clone()));
+            findings.push(o);
+        }
+        root.set("findings", findings);
+        let mut suppressed = Json::Arr(Vec::new());
+        for s in &self.suppressed {
+            let mut o = Json::obj();
+            o.set("rule", Json::str(s.rule.clone()))
+                .set("file", Json::str(s.file.clone()))
+                .set("line", Json::num(s.line as f64))
+                .set("justification", Json::str(s.justification.clone()));
+            suppressed.push(o);
+        }
+        root.set("suppressed", suppressed);
+        let mut counts = std::collections::BTreeMap::new();
+        for f in &self.findings {
+            *counts.entry(f.rule.clone()).or_insert(0usize) += 1;
+        }
+        let mut counts_json = Json::obj();
+        for (rule, n) in counts {
+            counts_json.set(&rule, Json::num(n as f64));
+        }
+        root.set("counts", counts_json);
+        root
+    }
+}
+
+/// Audit one file's source under its manifest classification. `rel` is
+/// the manifest-relative path (e.g. `src/mpc/wire.rs`) — it decides
+/// which classes, and therefore which rules, apply.
+pub fn audit_source(rel: &str, source: &str, m: &Manifest) -> AuditReport {
+    let scanned = scan::scan(source);
+    let classes = m.classes_of(rel);
+    let mut report = AuditReport { files_scanned: 1, ..AuditReport::default() };
+    let mut consumed = vec![false; scanned.allows.len()];
+
+    for line in &scanned.lines {
+        if line.in_test {
+            continue;
+        }
+        for rule in rules::RULES {
+            if !classes.contains(&rule.class) || m.is_exempt(rule.id, rel) {
+                continue;
+            }
+            let Some(message) = rules::check(rule.id, &line.code, m) else {
+                continue;
+            };
+            let allow = scanned.allows.iter().position(|a| {
+                a.rule == rule.id
+                    && (a.line == line.number || (a.own_line && a.line + 1 == line.number))
+            });
+            match allow {
+                Some(idx) if !scanned.allows[idx].justification.is_empty() => {
+                    consumed[idx] = true;
+                    report.suppressed.push(Suppression {
+                        rule: rule.id.to_string(),
+                        file: rel.to_string(),
+                        line: line.number,
+                        justification: scanned.allows[idx].justification.clone(),
+                    });
+                }
+                Some(idx) => {
+                    // A bare allow never suppresses: the justification is
+                    // the reviewable artifact the mechanism exists for.
+                    consumed[idx] = true;
+                    report.findings.push(Finding {
+                        rule: rule.id.to_string(),
+                        file: rel.to_string(),
+                        line: line.number,
+                        class: rule.class.to_string(),
+                        message: format!(
+                            "{message} — audit:allow({}) found but it needs a \
+                             `: <justification>` tail to suppress",
+                            rule.id
+                        ),
+                        snippet: line.raw.trim().to_string(),
+                    });
+                }
+                None => report.findings.push(Finding {
+                    rule: rule.id.to_string(),
+                    file: rel.to_string(),
+                    line: line.number,
+                    class: rule.class.to_string(),
+                    message,
+                    snippet: line.raw.trim().to_string(),
+                }),
+            }
+        }
+    }
+
+    // The suppression channel polices itself: unknown rule names and
+    // markers that matched nothing are findings too.
+    for (idx, allow) in scanned.allows.iter().enumerate() {
+        if allow.in_test {
+            continue;
+        }
+        if !rules::known(&allow.rule) {
+            report.findings.push(Finding {
+                rule: rules::META_RULE.to_string(),
+                file: rel.to_string(),
+                line: allow.line,
+                class: "meta".to_string(),
+                message: format!(
+                    "audit:allow names unknown rule '{}' (known: {})",
+                    allow.rule,
+                    rules::rule_ids().join("|")
+                ),
+                snippet: String::new(),
+            });
+        } else if !consumed[idx] {
+            report.findings.push(Finding {
+                rule: rules::META_RULE.to_string(),
+                file: rel.to_string(),
+                line: allow.line,
+                class: "meta".to_string(),
+                message: format!(
+                    "stale audit:allow({}): no finding here for it to suppress — \
+                     remove it so the allow-list only shrinks",
+                    allow.rule
+                ),
+                snippet: String::new(),
+            });
+        }
+    }
+    report
+}
+
+/// Walk `dir/<manifest.root>` and audit every `.rs` file, in sorted
+/// path order (the report itself must be deterministic).
+pub fn audit_tree(dir: &Path, m: &Manifest) -> Result<AuditReport> {
+    let root = dir.join(&m.root);
+    crate::ensure!(root.is_dir(), "audit root {} is not a directory", root.display());
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut report = AuditReport::default();
+    for path in &files {
+        let sub = path
+            .strip_prefix(&root)
+            .map_err(|e| crate::util::error::Error::new(e.to_string()))?;
+        let rel_tail: Vec<String> =
+            sub.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+        let rel = format!("{}/{}", m.root, rel_tail.join("/"));
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let file_report = audit_source(&rel, &text, m);
+        report.findings.extend(file_report.findings);
+        report.suppressed.extend(file_report.suppressed);
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(path.clone());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"
+[classes]
+deterministic = ["src/algorithms/"]
+wire = ["src/wire.rs"]
+overflow = ["src/gen.rs"]
+cli = ["src/main.rs"]
+[idents]
+edge_count = ["n", "m"]
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn findings_only_in_matching_classes() {
+        let m = manifest();
+        let src = "let s: std::collections::HashSet<u32> = x;\n";
+        assert_eq!(audit_source("src/algorithms/a.rs", src, &m).findings.len(), 1);
+        assert!(audit_source("src/util/a.rs", src, &m).is_clean());
+    }
+
+    #[test]
+    fn justified_allow_suppresses_bare_allow_does_not() {
+        let m = manifest();
+        let ok = "let s = HashSet::new(); // audit:allow(hash-iter): probe-only, never iterated\n";
+        let rep = audit_source("src/algorithms/a.rs", ok, &m);
+        assert!(rep.is_clean(), "{:?}", rep.findings);
+        assert_eq!(rep.suppressed.len(), 1);
+
+        let bare = "let s = HashSet::new(); // audit:allow(hash-iter)\n";
+        let rep = audit_source("src/algorithms/a.rs", bare, &m);
+        assert_eq!(rep.findings.len(), 1);
+        assert!(rep.findings[0].message.contains("justification"));
+    }
+
+    #[test]
+    fn own_line_allow_covers_next_line() {
+        let m = manifest();
+        let src = "// audit:allow(hash-iter): membership probe, output re-sorted\nlet s = HashSet::new();\n";
+        let rep = audit_source("src/algorithms/a.rs", src, &m);
+        assert!(rep.is_clean(), "{:?}", rep.findings);
+    }
+
+    #[test]
+    fn stale_and_unknown_allows_are_findings() {
+        let m = manifest();
+        let src = "let v = 1; // audit:allow(hash-iter): nothing here\nlet w = 2; // audit:allow(bogus-rule): hm\n";
+        let rep = audit_source("src/algorithms/a.rs", src, &m);
+        assert_eq!(rep.findings.len(), 2);
+        assert!(rep.findings.iter().all(|f| f.rule == rules::META_RULE));
+    }
+
+    #[test]
+    fn test_code_is_skipped() {
+        let m = manifest();
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        assert!(audit_source("src/algorithms/a.rs", src, &m).is_clean());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let m = manifest();
+        let rep = audit_source("src/algorithms/a.rs", "let s = HashSet::new();\n", &m);
+        let j = rep.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("arbocc-audit/v1"));
+        assert_eq!(j.get("clean"), Some(&Json::Bool(false)));
+        let findings = j.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].get("rule").and_then(Json::as_str), Some("hash-iter"));
+        assert!(findings[0].get("line").and_then(Json::as_f64).is_some());
+    }
+}

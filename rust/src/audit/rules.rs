@@ -1,0 +1,319 @@
+//! The eight audit rules (DESIGN.md §8).
+//!
+//! Each rule is a token-level check over comment-stripped code, scoped
+//! to one module class from the manifest. The checks deliberately
+//! over-approximate — a membership-only `HashSet` probe is flagged the
+//! same as an order-leaking iteration — because the suppression channel
+//! (`// audit:allow(<rule>): <justification>`) is where a human records
+//! *why* a site is safe, turning every exception into a reviewed,
+//! greppable artifact instead of tribal knowledge.
+
+use crate::audit::manifest::Manifest;
+
+/// One rule: id, the module class it applies to, and a summary line.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub class: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule registry. Classes refer to `[classes]` entries in
+/// `audit.toml`; a manifest missing one of them fails to parse.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "hash-iter",
+        class: "deterministic",
+        summary: "HashMap/HashSet in a deterministic-path module (iteration order leaks \
+                  into output — the PR 4 barabasi_albert bug class)",
+    },
+    Rule {
+        id: "wall-clock",
+        class: "deterministic",
+        summary: "Instant/SystemTime/thread::current in algorithm code (results must be \
+                  a function of inputs and seeds only)",
+    },
+    Rule {
+        id: "raw-payload",
+        class: "deterministic",
+        summary: "raw payload[..] indexing that bypasses the wire.rs codec layer",
+    },
+    Rule {
+        id: "unchecked-arith",
+        class: "overflow",
+        summary: "unchecked + or * on an edge-count expression (data/corpus.rs mandates \
+                  checked_*/saturating_*)",
+    },
+    Rule {
+        id: "cast-truncate",
+        class: "wire",
+        summary: "truncating `as` cast in a wire/codec/snapshot path (use u32::try_from \
+                  or justify the guard)",
+    },
+    Rule {
+        id: "panic-path",
+        class: "cli",
+        summary: "unwrap/expect/panic! on a CLI-reachable path (return a bail!-style \
+                  error; PR 3 convention)",
+    },
+    Rule {
+        id: "sort-ambiguous",
+        class: "deterministic",
+        summary: "comparator sort whose ties make output order ambiguous (use \
+                  sort_unstable_by_key with a total key, as alg3 does)",
+    },
+    Rule {
+        id: "rng-stream",
+        class: "deterministic",
+        summary: "RNG constructed outside the sanctioned seed-stream homes \
+                  (pool::machine_rng, coordinator::trial_seed derivations)",
+    },
+];
+
+/// Rule id for engine-synthesized findings about the suppression
+/// mechanism itself (bare/stale/unknown `audit:allow` markers).
+pub const META_RULE: &str = "audit-allow";
+
+pub fn known(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).collect()
+}
+
+/// Run one rule over a comment-stripped code line. Returns the finding
+/// message when the rule fires.
+pub fn check(rule: &str, code: &str, manifest: &Manifest) -> Option<String> {
+    match rule {
+        "hash-iter" => first_token(code, &["HashMap", "HashSet"]).map(|t| {
+            format!(
+                "`{t}` in a deterministic-path module: iteration order leaks into \
+                 output; use a vertex-indexed Vec or BTreeMap, or justify a \
+                 probe-only use with audit:allow"
+            )
+        }),
+        "wall-clock" => {
+            first_token(code, &["Instant", "SystemTime", "thread::current"]).map(|t| {
+                format!("`{t}` in algorithm code: wall-clock and thread identity must never influence results")
+            })
+        }
+        "raw-payload" => code.contains("payload[").then(|| {
+            "raw `payload[..]` indexing bypasses the wire.rs codec layer; use the typed \
+             Encode/Decode frames"
+                .to_string()
+        }),
+        "unchecked-arith" => unchecked_arith(code, &manifest.edge_count_idents),
+        "cast-truncate" => first_token(code, &[" as u8", " as u16", " as u32"]).map(|t| {
+            format!(
+                "truncating cast `{}` in a wire/codec path: use u32::try_from, or \
+                 document the range guard with audit:allow",
+                t.trim()
+            )
+        }),
+        "panic-path" => first_token(
+            code,
+            &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"],
+        )
+        .map(|t| {
+            format!(
+                "`{t}` on a CLI-reachable path: return a bail!-style error so dispatch \
+                 prints one line, never a backtrace"
+            )
+        }),
+        "sort-ambiguous" => first_token(code, &[".sort_by(", ".sort_unstable_by("]).map(|t| {
+            format!(
+                "`{t}…)` comparator can hide a partial key: use sort_unstable_by_key \
+                 with a total key so ties cannot reorder output"
+            )
+        }),
+        "rng-stream" => code.contains("Rng::new(").then(|| {
+            "`Rng::new` outside the sanctioned stream homes: derive streams via \
+             pool::machine_rng / coordinator::trial_seed instead of constructing \
+             ad-hoc generators"
+                .to_string()
+        }),
+        _ => None,
+    }
+}
+
+fn first_token<'a>(code: &str, tokens: &[&'a str]) -> Option<&'a str> {
+    tokens.iter().copied().find(|t| code.contains(t))
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// The `unchecked-arith` core: flag a bare binary `*` with an edge-count
+/// operand on either side, or a bare binary `+` with edge-count operands
+/// on *both* sides (`n + 1` loop arithmetic stays quiet). Lines that
+/// already use `checked_*`/`saturating_*`/`wrapping_*` or float math are
+/// exempt.
+fn unchecked_arith(code: &str, idents: &[String]) -> Option<String> {
+    if ["checked_", "saturating_", "wrapping_", "f64", "f32"].iter().any(|t| code.contains(t)) {
+        return None;
+    }
+    let b = code.as_bytes();
+    for i in 0..b.len() {
+        let op = b[i];
+        if op != b'*' && op != b'+' {
+            continue;
+        }
+        // `*=`, `+=`, `+ =`? no — just the compound-assign forms.
+        if b.get(i + 1) == Some(&b'=') {
+            continue;
+        }
+        let Some(left) = left_operand(b, i) else { continue };
+        let right = right_operand(b, i);
+        let lhit = left.as_deref().map(|t| idents.iter().any(|x| x == t)).unwrap_or(false);
+        let rhit = right.as_deref().map(|t| idents.iter().any(|x| x == t)).unwrap_or(false);
+        let fires = if op == b'*' { lhit || rhit } else { lhit && rhit };
+        if fires {
+            let tok = if lhit { left.unwrap_or_default() } else { right.unwrap_or_default() };
+            return Some(format!(
+                "unchecked `{}` on edge-count operand `{tok}`: use checked_*/saturating_* \
+                 (the data/corpus.rs mandate)",
+                op as char
+            ));
+        }
+    }
+    None
+}
+
+/// Identifier ending at the operator's left (through a closing bracket:
+/// `g.m() * 2` resolves to `m`). `None` when the operator is unary or
+/// the operand is a numeric literal.
+fn left_operand(b: &[u8], op: usize) -> Option<Option<String>> {
+    let mut i = op;
+    loop {
+        if i == 0 {
+            return None; // line starts with the operator: unary / continuation
+        }
+        i -= 1;
+        if b[i] != b' ' {
+            break;
+        }
+    }
+    if b[i] == b')' || b[i] == b']' {
+        let close = b[i];
+        let open = if close == b')' { b'(' } else { b'[' };
+        let mut bal = 1i64;
+        while i > 0 && bal > 0 {
+            i -= 1;
+            if b[i] == close {
+                bal += 1;
+            } else if b[i] == open {
+                bal -= 1;
+            }
+        }
+        if bal != 0 || i == 0 {
+            return Some(None);
+        }
+        i -= 1; // char before the opening bracket
+        if !is_ident_byte(b[i]) {
+            return Some(None); // `(a + b) * n`: binary, opaque left operand
+        }
+        return Some(token_ending_at(b, i));
+    }
+    if !is_ident_byte(b[i]) {
+        return None; // `(x * y`, `= *ptr`, `, *v` … unary or opaque
+    }
+    Some(token_ending_at(b, i))
+}
+
+/// Identifier starting at the operator's right, skipping unary `&`/`*`
+/// and opening parens (`n * (m - 1)` resolves to `m`).
+fn right_operand(b: &[u8], op: usize) -> Option<String> {
+    let mut i = op + 1;
+    while i < b.len() && matches!(b[i], b' ' | b'(' | b'&') {
+        i += 1;
+    }
+    if i >= b.len() || !is_ident_byte(b[i]) {
+        return None;
+    }
+    let start = i;
+    while i < b.len() && is_ident_byte(b[i]) {
+        i += 1;
+    }
+    non_numeric_token(&b[start..i])
+}
+
+fn token_ending_at(b: &[u8], last: usize) -> Option<String> {
+    let end = last + 1;
+    let mut start = last;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    non_numeric_token(&b[start..end])
+}
+
+fn non_numeric_token(bytes: &[u8]) -> Option<String> {
+    let tok = std::str::from_utf8(bytes).ok()?;
+    if tok.is_empty() || tok.bytes().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None; // numeric literal (incl. typed forms like 100usize)
+    }
+    Some(tok.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"
+[classes]
+deterministic = ["src/"]
+wire = ["src/"]
+overflow = ["src/"]
+cli = ["src/"]
+[idents]
+edge_count = ["n", "m", "k", "w"]
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn registry_ids_are_unique_and_known() {
+        let ids = rule_ids();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len());
+        assert!(known("hash-iter"));
+        assert!(!known(META_RULE), "the meta rule is synthesized, not registered");
+    }
+
+    #[test]
+    fn arith_rule_distinguishes_ops() {
+        let m = manifest();
+        // `*` fires on one edge-count side; `+` needs both.
+        assert!(check("unchecked-arith", "let t = 100 * m_total;", &m).is_none());
+        assert!(check("unchecked-arith", "let t = 100 * m;", &m).is_some());
+        assert!(check("unchecked-arith", "let t = n * (m - 1) / 2;", &m).is_some());
+        assert!(check("unchecked-arith", "let t = g.m() * 2;", &m).is_some());
+        assert!(check("unchecked-arith", "let next = i + 1;", &m).is_none());
+        assert!(check("unchecked-arith", "let t = n + m;", &m).is_some());
+        assert!(check("unchecked-arith", "let t = n.checked_mul(m);", &m).is_none());
+        assert!(check("unchecked-arith", "let avg = 2.0 * g.m() as f64;", &m).is_none());
+        assert!(check("unchecked-arith", "let p = *ptr;", &m).is_none());
+    }
+
+    #[test]
+    fn token_rules_fire_on_their_tokens() {
+        let m = manifest();
+        assert!(check("hash-iter", "let s: HashSet<u32> = x;", &m).is_some());
+        assert!(check("hash-iter", "let v: Vec<u32> = x;", &m).is_none());
+        assert!(check("wall-clock", "let t = Instant::now();", &m).is_some());
+        assert!(check("raw-payload", "let x = payload[0];", &m).is_some());
+        assert!(check("cast-truncate", "let x = len as u32;", &m).is_some());
+        assert!(check("cast-truncate", "let x = len as u64;", &m).is_none());
+        assert!(check("panic-path", "let x = v.last().unwrap();", &m).is_some());
+        assert!(check("panic-path", "let x = v.last().unwrap_or(&0);", &m).is_none());
+        assert!(check("sort-ambiguous", "v.sort_by(|a, b| a.cmp(b));", &m).is_some());
+        assert!(check("sort-ambiguous", "v.sort_unstable_by_key(|x| x.0);", &m).is_none());
+        assert!(check("rng-stream", "let mut rng = Rng::new(7);", &m).is_some());
+    }
+}

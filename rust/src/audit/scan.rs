@@ -1,0 +1,331 @@
+//! The light line/token scanner under the audit engine.
+//!
+//! Rules match on *code text only*: this pass blanks string/char literal
+//! contents and drops comments (line, block, nested block), so a rule
+//! token inside a message string or a doc comment never fires. It also
+//! tracks `#[cfg(test)]` items by brace depth — test code is allowed to
+//! `unwrap` and build `HashSet`s freely, the production invariants live
+//! outside it — and parses `// audit:allow(<rule>): <justification>`
+//! suppression markers from the comments it strips.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The raw source line (what findings quote back).
+    pub raw: String,
+    /// Code text with comments removed and literal contents blanked.
+    pub code: String,
+    /// Trailing `//` comment text (without the slashes), if any.
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` item (attribute line through closing brace).
+    pub in_test: bool,
+}
+
+/// One `audit:allow(<rule>)` suppression marker.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the marker sits on.
+    pub line: usize,
+    /// Rule id named inside the parentheses.
+    pub rule: String,
+    /// Text after the closing `):` — empty means no justification given.
+    pub justification: String,
+    /// The line carries no code, so the marker covers the *next* line.
+    pub own_line: bool,
+    /// Marker lives inside test code (never stale, never consumed).
+    pub in_test: bool,
+}
+
+/// A fully scanned file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub lines: Vec<Line>,
+    pub allows: Vec<Allow>,
+}
+
+/// Scanner mode carried across lines (strings and block comments span
+/// line boundaries; everything else resolves within one line).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    /// Nested block comment, with depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string; the payload is the `#` count of the opener.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+/// Scan one file into comment-stripped lines plus suppression markers.
+pub fn scan(source: &str) -> Scan {
+    let mut out = Scan::default();
+    let mut mode = Mode::Code;
+    let mut depth: i64 = 0;
+    // `#[cfg(test)]` seen; waiting for the item's opening brace.
+    let mut pending_test = false;
+    // Brace depth at which the active test item opened.
+    let mut test_depth: Option<i64> = None;
+
+    for (idx, raw) in source.lines().enumerate() {
+        let number = idx + 1;
+        let mut code = String::new();
+        let mut comment = String::new();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Block(d) => {
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(d + 1);
+                        i += 2;
+                    } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if d == 1 { Mode::Code } else { Mode::Block(d - 1) };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i, hashes) {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment = chars[i + 2..].iter().collect();
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if c == 'r' && !prev_is_ident(&chars, i) {
+                        match raw_string_hashes(&chars, i) {
+                            Some(h) => {
+                                code.push('"');
+                                mode = Mode::RawStr(h);
+                                // skip `r`, the hashes and the quote
+                                i += 2 + h as usize;
+                            }
+                            None => {
+                                code.push(c);
+                                i += 1;
+                            }
+                        }
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: a literal closes with
+                        // a quote within a couple of chars.
+                        if let Some(adv) = char_literal_len(&chars, i) {
+                            code.push('\'');
+                            code.push('\'');
+                            i += adv;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+
+        // Test-block tracking over the stripped code text.
+        let mut in_test = test_depth.is_some() || pending_test;
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    if pending_test && test_depth.is_none() {
+                        test_depth = Some(depth);
+                        pending_test = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                        in_test = true; // the closing brace line is still test code
+                    }
+                }
+                _ => {}
+            }
+        }
+        if code.contains("#[cfg(test)]") {
+            pending_test = true;
+            in_test = true;
+        }
+
+        if let Some((rule, justification)) = parse_allow(&comment) {
+            out.allows.push(Allow {
+                line: number,
+                rule,
+                justification,
+                own_line: code.trim().is_empty(),
+                in_test,
+            });
+        }
+        out.lines.push(Line { number, raw: raw.to_string(), code, comment, in_test });
+    }
+    out
+}
+
+/// `r`, `r#`, `r##`… opener check at position `i` (pointing at the `r`).
+/// Returns the hash count when this really starts a raw string.
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident(chars[i - 1])
+}
+
+/// `"` at `i` closes a raw string only when followed by its hash count.
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Length of a char literal starting at the `'` at `i`, or `None` for a
+/// lifetime (`'a`, `'static`) which has no closing quote nearby.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escaped char: scan to the closing quote (bounded — `\u{…}`
+            // is the longest form).
+            let mut j = i + 2;
+            while j < chars.len() && j < i + 12 {
+                if chars[j] == '\'' {
+                    return Some(j - i + 1);
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(_) if chars.get(i + 2) == Some(&'\'') => Some(3),
+        _ => None,
+    }
+}
+
+/// Parse `audit:allow(<rule>)` plus the optional `: justification` tail
+/// out of a comment. The marker must BE the comment (first thing after
+/// the slashes) — prose that merely mentions the syntax, like this doc
+/// comment or the module headers, is not a marker. Doc comments can
+/// never be markers either: their text starts with the extra `/` or `!`.
+fn parse_allow(comment: &str) -> Option<(String, String)> {
+    let rest = comment.trim_start().strip_prefix("audit:allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() || !rule.chars().all(|c| c == '-' || c.is_ascii_alphanumeric()) {
+        return None; // `audit:allow(<rule>)` in prose is not a marker
+    }
+    let after = &rest[close + 1..];
+    let justification =
+        after.strip_prefix(':').map(|s| s.trim().to_string()).unwrap_or_default();
+    Some((rule, justification))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scan(src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let c = code_of("let x = 1; // HashMap here\nlet y = 2; /* HashSet */ let z;\n");
+        assert_eq!(c[0], "let x = 1; ");
+        assert_eq!(c[1], "let y = 2;  let z;");
+    }
+
+    #[test]
+    fn blanks_string_and_char_literals() {
+        let c = code_of("let s = \"HashMap::new()\"; let c = 'x'; let l: &'static str;");
+        assert!(!c[0].contains("HashMap"));
+        assert!(!c[0].contains('x'));
+        assert!(c[0].contains("&'static str"));
+    }
+
+    #[test]
+    fn multiline_strings_and_nested_blocks_carry_over() {
+        let c = code_of("let s = \"one \\\n  HashMap two\";\n/* outer /* HashSet */ still */ done");
+        assert!(!c.concat().contains("HashMap"));
+        assert!(!c.concat().contains("HashSet"));
+        assert!(c[2].contains("done"));
+    }
+
+    #[test]
+    fn raw_strings_blank() {
+        let c = code_of("let s = r#\"HashMap \"quoted\" inside\"#; tail()");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("tail()"));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x(); }\n}\nfn after() {}\n";
+        let s = scan(src);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn parses_allow_markers() {
+        let src = "x(); // audit:allow(hash-iter): probe-only set\n// audit:allow(cast-truncate)\ny();\n";
+        let s = scan(src);
+        assert_eq!(s.allows.len(), 2);
+        assert_eq!(s.allows[0].rule, "hash-iter");
+        assert_eq!(s.allows[0].justification, "probe-only set");
+        assert!(!s.allows[0].own_line);
+        assert_eq!(s.allows[1].rule, "cast-truncate");
+        assert_eq!(s.allows[1].justification, "");
+        assert!(s.allows[1].own_line);
+    }
+
+    #[test]
+    fn prose_mentions_are_not_markers() {
+        // Mid-comment mentions, doc-comment syntax examples and
+        // placeholder rule names must not register as suppressions —
+        // the audit module's own docs would otherwise flag themselves.
+        let src = "\
+// see the audit:allow(hash-iter) marker above\n\
+/// write `// audit:allow(<rule>): <justification>` on the line\n\
+//! docs show audit:allow(rule): why\n\
+// audit:allow(<rule>): placeholder name\n\
+x();\n";
+        assert!(scan(src).allows.is_empty());
+    }
+}

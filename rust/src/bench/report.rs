@@ -31,7 +31,10 @@ pub fn load_reports(dir: &Path) -> std::io::Result<Vec<Report>> {
         let text = std::fs::read_to_string(&path)?;
         match parse(&text) {
             Ok(data) => out.push(Report {
-                name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| path.display().to_string()),
                 data,
             }),
             Err(err) => eprintln!("warning: skipping {}: {err}", path.display()),

@@ -54,7 +54,7 @@ impl Clustering {
     ///
     /// Perf note (§Perf L3-1): label ids produced by the algorithms are
     /// vertex ids (< n), so the dense `Vec` remap fast path applies on
-    /// every hot call; the `HashMap` path only serves adversarial label
+    /// every hot call; the `BTreeMap` path only serves adversarial label
     /// spaces.
     pub fn normalize(&self) -> Clustering {
         let n = self.labels.len();
@@ -76,7 +76,10 @@ impl Clustering {
                 .collect();
             Clustering { labels }
         } else {
-            let mut map = std::collections::HashMap::new();
+            // Ordered map on the cold path: first-appearance order comes
+            // from the label scan, not map iteration, so a BTreeMap is
+            // behaviour-identical — and keeps the type deterministic.
+            let mut map = std::collections::BTreeMap::new();
             let mut next = 0u32;
             let labels = self
                 .labels
@@ -95,8 +98,10 @@ impl Clustering {
 
     /// Number of distinct clusters.
     pub fn n_clusters(&self) -> usize {
-        let set: std::collections::HashSet<u32> = self.labels.iter().copied().collect();
-        set.len()
+        let mut labels = self.labels.clone();
+        labels.sort_unstable();
+        labels.dedup();
+        labels.len()
     }
 
     /// Sizes keyed by normalized cluster id.

@@ -27,13 +27,15 @@ pub fn pair_confusion(pred: &Clustering, truth: &Clustering) -> PairConfusion {
     let n = pred.n() as u64;
     let p = pred.normalize();
     let t = truth.normalize();
-    // Contingency counts.
-    let mut cont: std::collections::HashMap<(u32, u32), u64> = std::collections::HashMap::new();
+    // Contingency counts. BTreeMaps, not hash maps: the sums below are
+    // order-independent, but keeping ordered containers here means the
+    // whole module is trivially deterministic (and audit-clean).
+    let mut cont: std::collections::BTreeMap<(u32, u32), u64> = std::collections::BTreeMap::new();
     for v in 0..pred.n() as u32 {
         *cont.entry((p.label(v), t.label(v))).or_insert(0) += 1;
     }
-    let mut p_sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
-    let mut t_sizes: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    let mut p_sizes: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
+    let mut t_sizes: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
     for v in 0..pred.n() as u32 {
         *p_sizes.entry(p.label(v)).or_insert(0) += 1;
         *t_sizes.entry(t.label(v)).or_insert(0) += 1;

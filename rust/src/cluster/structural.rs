@@ -45,6 +45,9 @@ pub fn bound_cluster_sizes(g: &Graph, input: &Clustering, lambda: usize) -> Stru
     }
 
     let mut moves = 0usize;
+    // Vertex-indexed membership marker, reused across steps (set and
+    // reset over the current cluster only) — no hash sets on this path.
+    let mut in_cluster = vec![false; g.n()];
     let mut queue: std::collections::VecDeque<u32> =
         (0..members.len() as u32).filter(|&c| members[c as usize].len() > limit).collect();
 
@@ -55,15 +58,20 @@ pub fn bound_cluster_sizes(g: &Graph, input: &Clustering, lambda: usize) -> Stru
                 break;
             }
             // Find v* minimizing internal positive degree.
-            let in_cluster: std::collections::HashSet<u32> = cluster.iter().copied().collect();
+            for &v in cluster {
+                in_cluster[v as usize] = true;
+            }
             let (v_star, d_int) = cluster
                 .iter()
                 .map(|&v| {
-                    let d = g.neighbors(v).iter().filter(|&&u| in_cluster.contains(&u)).count();
+                    let d = g.neighbors(v).iter().filter(|&&u| in_cluster[u as usize]).count();
                     (v, d)
                 })
                 .min_by_key(|&(_, d)| d)
                 .expect("oversized cluster is nonempty");
+            for &v in cluster {
+                in_cluster[v as usize] = false;
+            }
             // Lemma 25's existence guarantee (contradiction argument via
             // arboricity): the min internal degree is ≤ 2λ−1. Moving v*
             // out removes (|C|−1−d_int) negative disagreements and adds

@@ -41,8 +41,10 @@ pub type BadTriangle = (u32, u32, u32);
 /// one packed triangle.  Any maximal packing is a valid lower bound on
 /// OPT; greedy over a deterministic sweep keeps experiments reproducible.
 pub fn greedy_packing(g: &Graph) -> Vec<BadTriangle> {
-    let mut used_pos: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
-    let mut used_neg: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
+    // Ordered sets: the sweep itself is deterministic, and keeping hash
+    // containers out of the lower-bound certifier makes that auditable.
+    let mut used_pos: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+    let mut used_neg: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
     let key = |a: u32, b: u32| if a < b { (a, b) } else { (b, a) };
     let mut packing = Vec::new();
     for v in 0..g.n() as u32 {

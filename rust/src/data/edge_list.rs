@@ -163,6 +163,7 @@ pub fn read_edges(text: &str) -> Result<(Graph, IngestStats)> {
                     u.max(v)
                 );
             }
+            // audit:allow(cast-truncate): u,v < n ≤ u32::MAX, re-validated just above
             (n, raw.iter().map(|&(u, v)| (u as u32, v as u32)).collect())
         }
         None => {
@@ -176,6 +177,7 @@ pub fn read_edges(text: &str) -> Result<(Graph, IngestStats)> {
                 "{} distinct vertex ids exceed the u32 id space",
                 ids.len()
             );
+            // audit:allow(cast-truncate): rank < ids.len() ≤ u32::MAX, ensured just above
             let rank = |x: u64| ids.binary_search(&x).expect("id interned") as u32;
             (ids.len(), raw.iter().map(|&(u, v)| (rank(u), rank(v))).collect())
         }

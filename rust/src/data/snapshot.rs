@@ -72,7 +72,8 @@ fn push_u64(buf: &mut Vec<u8>, v: u64) {
 /// Serialize with the automatic offset width (u32 while the directed
 /// adjacency length fits, u64 beyond).
 pub fn snapshot_bytes(g: &Graph) -> Vec<u8> {
-    let m_dir: usize = (0..g.n() as u32).map(|v| g.degree(v)).sum();
+    let n32 = u32::try_from(g.n()).expect("vertex count fits u32 (Graph invariant)");
+    let m_dir: usize = (0..n32).map(|v| g.degree(v)).sum();
     let width =
         if m_dir <= u32::MAX as usize { OffsetWidth::U32 } else { OffsetWidth::U64 };
     snapshot_bytes_width(g, width).expect("auto width always fits")
@@ -82,7 +83,8 @@ pub fn snapshot_bytes(g: &Graph) -> Vec<u8> {
 /// tests read a u64-offset snapshot of a small graph).
 pub fn snapshot_bytes_width(g: &Graph, width: OffsetWidth) -> Result<Vec<u8>> {
     let n = g.n();
-    let m_dir: usize = (0..n as u32).map(|v| g.degree(v)).sum();
+    let n32 = u32::try_from(n).expect("vertex count fits u32 (Graph invariant)");
+    let m_dir: usize = (0..n32).map(|v| g.degree(v)).sum();
     crate::ensure!(
         width == OffsetWidth::U64 || m_dir <= u32::MAX as usize,
         "u32 offsets cannot index {m_dir} directed edges"
@@ -94,6 +96,7 @@ pub fn snapshot_bytes_width(g: &Graph, width: OffsetWidth) -> Result<Vec<u8>> {
     let mut buf = Vec::with_capacity(payload);
     buf.extend_from_slice(MAGIC);
     push_u32(&mut buf, VERSION);
+    // audit:allow(cast-truncate): width.bytes() is the constant 4 or 8
     push_u32(&mut buf, width.bytes() as u32);
     push_u64(&mut buf, n as u64);
     push_u64(&mut buf, m_dir as u64);
@@ -102,14 +105,15 @@ pub fn snapshot_bytes_width(g: &Graph, width: OffsetWidth) -> Result<Vec<u8>> {
         OffsetWidth::U32 => push_u32(&mut buf, 0),
         OffsetWidth::U64 => push_u64(&mut buf, 0),
     }
-    for v in 0..n as u32 {
+    for v in 0..n32 {
         off += g.degree(v);
         match width {
+            // audit:allow(cast-truncate): off ≤ m_dir ≤ u32::MAX on this arm (ensured at entry)
             OffsetWidth::U32 => push_u32(&mut buf, off as u32),
             OffsetWidth::U64 => push_u64(&mut buf, off as u64),
         }
     }
-    for v in 0..n as u32 {
+    for v in 0..n32 {
         for &u in g.neighbors(v) {
             push_u32(&mut buf, u);
         }
@@ -192,6 +196,7 @@ pub fn read_snapshot_bytes(bytes: &[u8]) -> Result<Graph> {
         "snapshot checksum mismatch: stored {stored:#018x}, computed {actual:#018x}"
     );
     let (n, m_dir) = (n64 as usize, m64 as usize);
+    let n32 = u32::try_from(n64).expect("ensured n64 <= u32::MAX above");
     let mut offsets = Vec::with_capacity(n + 1);
     for i in 0..=n {
         let off = match width {
@@ -221,7 +226,7 @@ pub fn read_snapshot_bytes(bytes: &[u8]) -> Result<Graph> {
     // Structural validation: sorted strictly-increasing loop-free
     // adjacency (has_edge's binary search depends on it) and symmetry
     // (the graph is undirected by contract).
-    for v in 0..n as u32 {
+    for v in 0..n32 {
         let list = &neighbors[offsets[v as usize]..offsets[v as usize + 1]];
         for (i, &u) in list.iter().enumerate() {
             crate::ensure!((u as usize) < n, "vertex {v}: neighbor {u} out of range n={n}");
@@ -234,7 +239,7 @@ pub fn read_snapshot_bytes(bytes: &[u8]) -> Result<Graph> {
             }
         }
     }
-    for v in 0..n as u32 {
+    for v in 0..n32 {
         for &u in &neighbors[offsets[v as usize]..offsets[v as usize + 1]] {
             let peer = &neighbors[offsets[u as usize]..offsets[u as usize + 1]];
             crate::ensure!(

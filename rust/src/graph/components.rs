@@ -108,9 +108,11 @@ pub fn is_clique(g: &Graph, vs: &[u32]) -> bool {
     if vs.iter().any(|&v| g.degree(v) < k - 1) {
         return false;
     }
-    let set: std::collections::HashSet<u32> = vs.iter().copied().collect();
+    let mut sorted: Vec<u32> = vs.to_vec();
+    sorted.sort_unstable();
     for &v in vs {
-        let internal = g.neighbors(v).iter().filter(|&&u| set.contains(&u)).count();
+        let internal =
+            g.neighbors(v).iter().filter(|&&u| sorted.binary_search(&u).is_ok()).count();
         if internal < k - 1 {
             return false;
         }

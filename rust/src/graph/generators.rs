@@ -113,7 +113,7 @@ pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Rng) -> Graph {
                 targets.push(t);
             }
             guard += 1;
-            if guard > 100 * m_attach {
+            if guard > m_attach.saturating_mul(100) {
                 // Degenerate small graphs: fall back to uniform fill.
                 for u in 0..v {
                     if targets.len() >= m_attach {
@@ -194,7 +194,9 @@ fn pair_from_index(n: usize, mut idx: usize) -> (u32, u32) {
 pub fn grid(w: usize, h: usize) -> Graph {
     let n = w.checked_mul(h).expect("grid: w*h overflows usize");
     let mut edges = Vec::with_capacity(n.saturating_mul(2));
-    let id = |x: usize, y: usize| (y * w + x) as u32;
+    let id = |x: usize, y: usize| {
+        y.checked_mul(w).and_then(|yw| yw.checked_add(x)).expect("id < n = w*h, checked") as u32
+    };
     for y in 0..h {
         for x in 0..w {
             if x + 1 < w {
@@ -268,7 +270,7 @@ pub fn disjoint_cliques(count: usize, k: usize) -> Graph {
     let n = count.checked_mul(k).expect("disjoint_cliques: count*k overflows usize");
     let mut edges = Vec::new();
     for c in 0..count {
-        let base = (c * k) as u32;
+        let base = c.checked_mul(k).expect("base < n = count*k, checked") as u32;
         for u in 0..k as u32 {
             for v in u + 1..k as u32 {
                 edges.push((base + u, base + v));
@@ -318,7 +320,13 @@ pub fn caterpillar(spine: usize, legs: usize) -> Graph {
     }
     for s in 0..spine as u32 {
         for l in 0..legs as u32 {
-            edges.push((s, (spine as u32) + s * legs as u32 + l));
+            // Leg ids start after the spine block: spine + s·legs + l < n.
+            let leg = s
+                .checked_mul(legs as u32)
+                .and_then(|x| x.checked_add(spine as u32))
+                .and_then(|x| x.checked_add(l))
+                .expect("caterpillar: vertex id overflows u32");
+            edges.push((s, leg));
         }
     }
     Graph::from_edges(n, &edges)
@@ -341,7 +349,9 @@ pub fn planted_partition(
     rng: &mut Rng,
 ) -> (Graph, Vec<u32>) {
     assert!(k >= 1 && k <= n.max(1));
-    let labels: Vec<u32> = (0..n).map(|v| (v * k / n.max(1)) as u32).collect();
+    let labels: Vec<u32> = (0..n)
+        .map(|v| (v.checked_mul(k).expect("planted_partition: v*k overflows usize") / n.max(1)) as u32)
+        .collect();
     let mut edges = Vec::new();
     // Dense sampling within communities (they are small), geometric
     // skipping across communities (p_out is tiny).

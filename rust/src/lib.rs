@@ -27,12 +27,16 @@
 //!   Corollary 27–32 decision tree), and the per-component sharded
 //!   decomposition driver.
 //! * [`bench`] — micro-benchmark harness and experiment workloads.
+//! * [`audit`] — the determinism & MPC-invariant static analysis pass
+//!   (`arbocc audit`): class-scoped token rules over `rust/src`,
+//!   driven by the checked-in `audit.toml` manifest.
 //! * [`util`] — PRNG, statistics, JSON reports, property testing, CLI.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
 //! measured results.
 
 pub mod algorithms;
+pub mod audit;
 pub mod bench;
 pub mod cluster;
 pub mod coordinator;

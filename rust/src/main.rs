@@ -18,6 +18,9 @@
 //!             tier, write BENCH_<label>.json, optionally gate against a
 //!             baseline (--compare [path]; exits 1 on regression)
 //!   check     verify PJRT artifacts against the native fallback
+//!   audit     the determinism / MPC-invariant static analysis pass
+//!             (DESIGN.md §8): walks rust/src under audit.toml, exits
+//!             non-zero on findings
 //!   info      environment / artifact status
 //!
 //! Dispatch errors (unknown `--algo`, `--family`, `--method`, `--model`)
@@ -86,7 +89,7 @@ fn parse_family(s: &str) -> Result<Family> {
 /// registered corpus family, e.g. `planted:n=50000,k=40,seed=7`), or the
 /// legacy named generator family (`--family`, `--n`).
 fn make_graph(args: &Args) -> Result<(Graph, String, u64)> {
-    let seed = args.get_u64("seed", 1);
+    let seed = args.get_u64("seed", 1)?;
     if let Some(path) = args.get("input") {
         let (g, stats) = arbocc::data::load_graph(std::path::Path::new(path))
             .with_context(|| format!("reading --input {path}"))?;
@@ -99,7 +102,7 @@ fn make_graph(args: &Args) -> Result<(Graph, String, u64)> {
         return Ok((g, spec.canonical(), seed));
     }
     let family = parse_family(&args.get_str("family", "arboric-3"))?;
-    let n = args.get_usize("n", 10_000);
+    let n = args.get_usize("n", 10_000)?;
     let mut rng = Rng::new(seed);
     let g = family.generate(n, &mut rng);
     Ok((g, family.name(), seed))
@@ -115,11 +118,11 @@ fn request_from_args(args: &Args, g: Graph, seed: u64) -> Result<SolveRequest> {
     let mut req = SolveRequest::new(Arc::new(g));
     req.seed = seed;
     req.lambda =
-        if args.has("lambda") { Some(args.get_usize("lambda", 1).max(1)) } else { None };
-    req.eps = args.get_f64("eps", 2.0);
+        if args.has("lambda") { Some(args.get_usize("lambda", 1)?.max(1)) } else { None };
+    req.eps = args.get_f64("eps", 2.0)?;
     req.model = model;
-    req.delta = args.get_f64("delta", 0.5);
-    req.trials = args.get_usize("trials", 1).max(1);
+    req.delta = args.get_f64("delta", 0.5)?;
+    req.trials = args.get_usize("trials", 1)?.max(1);
     Ok(req)
 }
 
@@ -204,16 +207,16 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     let (g, family, seed) = make_graph(args)?;
     let algo = args.get_str("algo", "auto");
-    if registry.get(&algo).is_none() {
+    let Some(solver) = registry.get(&algo) else {
         arbocc::bail!(
             "unknown --algo '{algo}'; registered solvers:\n  {}",
             registry.describe().join("\n  ")
         );
-    }
+    };
     let shards = args.get_usize(
         "shards",
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-    );
+    )?;
     let req = request_from_args(args, g, seed)?;
     print_graph_line(&family, &req.graph);
 
@@ -225,10 +228,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
         } else {
             CostEngine::auto_default()
         };
-        let solver = registry.get(&algo).expect("checked above");
         let timer = Timer::start();
         let run = best_of_k_solver(&req, solver, shards, &engine)?;
-        let worst = *run.costs.iter().max().unwrap();
+        let worst = run.costs.iter().max().copied().unwrap_or(run.best_cost.total());
         println!(
             "best-of-{} ({algo}): best={} worst={} (spread {}) in {:.3}s",
             req.trials,
@@ -249,7 +251,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
     let cfg = DriverConfig {
         shards,
-        exact_cutoff: args.get_usize("exact-cutoff", 8),
+        exact_cutoff: args.get_usize("exact-cutoff", 8)?,
         algo: if algo == "auto" { None } else { Some(algo.clone()) },
     };
     let report = solve_decomposed(&req, &cfg, &registry)?;
@@ -275,7 +277,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
 fn cmd_mis(args: &Args) -> Result<()> {
     let (g, family, seed) = make_graph(args)?;
-    let delta = args.get_f64("delta", 0.5);
+    let delta = args.get_f64("delta", 0.5)?;
     let method = args.get_str("method", "alg2");
     if !["alg2", "alg3", "direct", "all"].contains(&method.as_str()) {
         arbocc::bail!("unknown --method '{method}' (alg2|alg3|direct|all)");
@@ -288,11 +290,11 @@ fn cmd_mis(args: &Args) -> Result<()> {
         &["method", "model", "rounds", "|MIS|"],
     );
     let run_one = |method: &str, table: &mut Table| {
+        // Total over the validated method set: `direct` and `alg2` share
+        // a subroutine, `alg3` is the M2 variant.
         let (model, sub) = match method {
-            "alg2" => (ModelKind::M1, Subroutine::Alg2(Alg2Params::default())),
             "alg3" => (ModelKind::M2, Subroutine::Alg3(Alg3Params::default())),
-            "direct" => (ModelKind::M1, Subroutine::Alg2(Alg2Params::default())),
-            other => unreachable!("--method '{other}' validated above"),
+            _ => (ModelKind::M1, Subroutine::Alg2(Alg2Params::default())),
         };
         let mut sim = simulator_for(&g, model, delta, seed);
         let mis = if method == "direct" {
@@ -322,8 +324,8 @@ fn cmd_mis(args: &Args) -> Result<()> {
 
 fn cmd_best_of_k(args: &Args) -> Result<()> {
     let (g, family, seed) = make_graph(args)?;
-    let k = args.get_usize("k", 16);
-    let workers = args.get_usize("workers", 4);
+    let k = args.get_usize("k", 16)?;
+    let workers = args.get_usize("workers", 4)?;
     let algo = args.get_str("algo", "alg4-pivot");
     let registry = SolverRegistry::standard();
     let Some(solver) = registry.get(&algo) else {
@@ -345,7 +347,7 @@ fn cmd_best_of_k(args: &Args) -> Result<()> {
     let run = best_of_k_solver(&req, solver, workers, &engine)?;
     let elapsed = timer.elapsed_s();
     let lb = packing_lower_bound(&req.graph);
-    let worst = *run.costs.iter().max().unwrap();
+    let worst = run.costs.iter().max().copied().unwrap_or(run.best_cost.total());
     println!(
         "best={} worst={} (spread {}); LB={} ⇒ best ratio ≤ {}",
         run.best_cost.total(),
@@ -359,9 +361,9 @@ fn cmd_best_of_k(args: &Args) -> Result<()> {
 }
 
 fn cmd_forest(args: &Args) -> Result<()> {
-    let n = args.get_usize("n", 10_000);
-    let seed = args.get_u64("seed", 1);
-    let eps = args.get_f64("eps", 0.5);
+    let n = args.get_usize("n", 10_000)?;
+    let seed = args.get_u64("seed", 1)?;
+    let eps = args.get_f64("eps", 0.5)?;
     let mut rng = Rng::new(seed);
     let g = arbocc::graph::generators::random_forest(n, 0.9, &mut rng);
 
@@ -487,6 +489,46 @@ fn cmd_check(_args: &Args) -> Result<()> {
         checked += 3;
     }
     println!("self-check OK: {checked} PJRT-vs-native comparisons identical");
+    Ok(())
+}
+
+/// The determinism / MPC-invariant static analysis pass (DESIGN.md §8):
+///
+///   arbocc audit [--manifest audit.toml] [--json] [--list-rules]
+///
+/// Walks `<manifest dir>/<root>` (default `src/` next to `audit.toml`),
+/// applies the class-scoped rule set, and exits non-zero when any
+/// finding survives the justified-`audit:allow` suppressions. `--json`
+/// prints the `arbocc-audit/v1` report instead of `file:line` lines.
+fn cmd_audit(args: &Args) -> Result<()> {
+    use arbocc::audit::{self, rules};
+
+    if args.get_bool("list-rules") {
+        println!("{} audit rule(s):", rules::RULES.len());
+        for r in rules::RULES {
+            println!("  {:<16} [{:<13}] {}", r.id, r.class, r.summary);
+        }
+        return Ok(());
+    }
+    let manifest_s = args.get_str("manifest", "audit.toml");
+    let manifest_path = std::path::Path::new(&manifest_s);
+    let manifest = audit::Manifest::load(manifest_path)?;
+    let dir = match manifest_path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let report = audit::audit_tree(&dir, &manifest)?;
+    if args.get_bool("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render_human());
+    }
+    arbocc::ensure!(
+        report.is_clean(),
+        "audit: {} finding(s) — see the report above (suppress only with a \
+         justified `// audit:allow(<rule>): <why>`)",
+        report.findings.len()
+    );
     Ok(())
 }
 
@@ -665,12 +707,13 @@ fn main() {
         "forest" => cmd_forest(&args),
         "bench" => cmd_bench(&args),
         "check" => cmd_check(&args),
+        "audit" => cmd_audit(&args),
         "report" => cmd_report(),
         "info" => cmd_info(),
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "usage: arbocc <solve|cluster|gen|convert|mis|best-of-k|forest|bench|check|report|info> [--flags]"
+                "usage: arbocc <solve|cluster|gen|convert|mis|best-of-k|forest|bench|check|audit|report|info> [--flags]"
             );
             std::process::exit(2);
         }

@@ -210,6 +210,7 @@ pub fn gather_balls(
 /// the sorted output comes from an explicit sort, so no hash iteration
 /// order leaks into any deterministic path.
 pub fn bfs_ball(g: &Graph, v: u32, radius: usize) -> Vec<u32> {
+    // audit:allow(hash-iter): probe-only set — never iterated; the ball is sorted before return
     let mut visited = std::collections::HashSet::new();
     visited.insert(v);
     let mut ball = vec![v];

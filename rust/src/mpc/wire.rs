@@ -143,6 +143,7 @@ impl Decode for VertexStatus {
     fn decode(payload: &[u64]) -> Option<VertexStatus> {
         match payload {
             [w] if *w >> 33 == 0 => Some(VertexStatus {
+                // audit:allow(cast-truncate): bit extraction — the guard proves the high bits are zero
                 vertex: (*w >> 1) as u32,
                 in_mis: *w & 1 == 1,
             }),
@@ -175,6 +176,7 @@ impl Encode for LabelUpdate {
 impl Decode for LabelUpdate {
     fn decode(payload: &[u64]) -> Option<LabelUpdate> {
         match payload {
+            // audit:allow(cast-truncate): bit extraction — each half of the packed word is taken on purpose
             [w] => Some(LabelUpdate { vertex: (*w >> 32) as u32, label: *w as u32 }),
             _ => None,
         }
@@ -214,7 +216,7 @@ impl WireOutbox {
     pub(crate) fn new(range: std::ops::Range<usize>, machines: usize) -> WireOutbox {
         WireOutbox {
             machines,
-            from: range.start as u32,
+            from: u32::try_from(range.start).expect("machine index fits u32"),
             slab: Vec::new(),
             entries: Vec::new(),
             ledger: ShardLedger::new(range),
@@ -224,7 +226,7 @@ impl WireOutbox {
     /// Position the outbox on sender `m` (the router calls this once per
     /// machine, in range order, before invoking the build closure).
     pub(crate) fn begin(&mut self, m: usize) {
-        self.from = m as u32;
+        self.from = u32::try_from(m).expect("machine index fits u32");
     }
 
     /// Send a typed payload to `dst`.
@@ -258,7 +260,8 @@ impl WireOutbox {
         assert!(dst < self.machines, "message to unknown machine {dst}");
         let offset = u32::try_from(offset).expect("round slab exceeds u32 offsets");
         let len = u32::try_from(len).expect("payload exceeds u32 length");
-        self.entries.push(WireEntry { from: self.from, dst: dst as u32, offset, len });
+        let dst = u32::try_from(dst).expect("machine index fits u32");
+        self.entries.push(WireEntry { from: self.from, dst, offset, len });
         self.ledger.charge(self.from as usize, len as Words + ENVELOPE_WORDS);
     }
 
@@ -311,7 +314,8 @@ impl RoundInboxes {
         for ob in shards {
             for e in &ob.entries {
                 let d = e.dst as usize;
-                let offset = slabs[d].len() as u32;
+                let offset =
+                    u32::try_from(slabs[d].len()).expect("receiver slab exceeds u32 offsets");
                 slabs[d].extend_from_slice(
                     &ob.slab[e.offset as usize..e.offset as usize + e.len as usize],
                 );

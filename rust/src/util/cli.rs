@@ -4,9 +4,14 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, short
 //! `-o value` flags (single dash + alphabetic name; `-3` stays
 //! positional so negative numbers pass through), and free positional
-//! arguments.  Typed getters parse on access and report precise errors.
+//! arguments.  Typed getters parse on access and return precise
+//! [`Error`]s — a bad `--n abc` must exit with a one-line message
+//! through `main`'s dispatch, never a panic backtrace (the PR 3
+//! convention, enforced by the `panic-path` audit rule).
 
 use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
 
 /// `-o` style short flag: single dash followed by an alphabetic name
 /// (`--long` is handled first; `-`, `-3` stay positional).
@@ -51,12 +56,9 @@ impl Args {
     ) {
         if let Some((k, v)) = raw.split_once('=') {
             self.flags.entry(k.to_string()).or_default().push(v.to_string());
-        } else if it
-            .peek()
-            .map(|next| !next.starts_with("--") && short_flag(next).is_none())
-            .unwrap_or(false)
+        } else if let Some(v) =
+            it.next_if(|next| !next.starts_with("--") && short_flag(next).is_none())
         {
-            let v = it.next().expect("peeked");
             self.flags.entry(raw.to_string()).or_default().push(v);
         } else {
             self.flags.entry(raw.to_string()).or_default().push("true".to_string());
@@ -100,48 +102,45 @@ impl Args {
         }
     }
 
-    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
     {
         match self.get(key) {
-            None => default,
-            Some(s) => match s.parse() {
-                Ok(v) => v,
-                Err(e) => {
-                    panic!("invalid value for --{key}: '{s}' ({e})")
-                }
-            },
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| Error::new(format!("invalid value for --{key}: '{s}' ({e})"))),
         }
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         self.get_parsed(key, default)
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         self.get_parsed(key, default)
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         self.get_parsed(key, default)
     }
 
     /// Comma-separated list flag: `--ns 100,1000,10000`.
-    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
     where
         T: Clone,
         T::Err: std::fmt::Display,
     {
         match self.get(key) {
-            None => default.to_vec(),
+            None => Ok(default.to_vec()),
             Some(s) => s
                 .split(',')
                 .filter(|part| !part.is_empty())
                 .map(|part| {
-                    part.trim()
-                        .parse()
-                        .unwrap_or_else(|e| panic!("invalid item in --{key}: '{part}' ({e})"))
+                    part.trim().parse().map_err(|e| {
+                        Error::new(format!("invalid item in --{key}: '{part}' ({e})"))
+                    })
                 })
                 .collect(),
         }
@@ -162,8 +161,8 @@ mod tests {
         // `run` as the flag value. Convention: positionals (subcommands)
         // come first, or use `--flag=true`.
         let a = parse("run --n 100 --eps=0.5 --verbose");
-        assert_eq!(a.get_usize("n", 0), 100);
-        assert_eq!(a.get_f64("eps", 0.0), 0.5);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("eps", 0.0).unwrap(), 0.5);
         assert!(a.get_bool("verbose"));
         assert_eq!(a.positional(), &["run".to_string()]);
     }
@@ -182,7 +181,7 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.get_usize("n", 42), 42);
+        assert_eq!(a.get_usize("n", 42).unwrap(), 42);
         assert!(!a.get_bool("verbose"));
         assert_eq!(a.get_str("mode", "m1"), "m1");
     }
@@ -190,9 +189,12 @@ mod tests {
     #[test]
     fn list_flag() {
         let a = parse("--ns 1,2,3");
-        assert_eq!(a.get_list("ns", &[9usize]), vec![1, 2, 3]);
+        assert_eq!(a.get_list("ns", &[9usize]).unwrap(), vec![1, 2, 3]);
         let b = parse("");
-        assert_eq!(b.get_list("ns", &[9usize]), vec![9]);
+        assert_eq!(b.get_list("ns", &[9usize]).unwrap(), vec![9]);
+        let c = parse("--ns 1,x,3");
+        let err = c.get_list("ns", &[9usize]).unwrap_err();
+        assert!(err.to_string().contains("invalid item in --ns"), "{err}");
     }
 
     #[test]
@@ -203,9 +205,9 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "invalid value for --n")]
-    fn bad_parse_panics() {
+    fn bad_parse_is_a_one_line_error() {
         let a = parse("--n abc");
-        let _ = a.get_usize("n", 0);
+        let err = a.get_usize("n", 0).unwrap_err();
+        assert!(err.to_string().contains("invalid value for --n"), "{err}");
     }
 }

@@ -1,0 +1,173 @@
+//! Integration tests for `arbocc audit` (DESIGN.md §8): every rule has
+//! a failing fixture asserted through the `arbocc-audit/v1` JSON report,
+//! the suppression channel demands justifications, and — the point of
+//! the whole pass — the shipped tree audits clean under the checked-in
+//! `audit.toml`.
+
+use arbocc::audit::{audit_source, audit_tree, rules, Manifest};
+use arbocc::util::json::Json;
+
+/// The real manifest the repo ships (fixtures classify against the same
+/// prefixes production files do).
+fn manifest() -> Manifest {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("audit.toml");
+    Manifest::load(&path).expect("checked-in audit.toml parses")
+}
+
+/// Audit a one-file fixture and return the rule ids of its findings,
+/// read back through the JSON report (so the fixture also exercises the
+/// machine-readable path end to end).
+fn finding_rules(rel: &str, source: &str) -> Vec<String> {
+    let report = audit_source(rel, source, &manifest());
+    let json = report.to_json();
+    assert_eq!(
+        json.get("schema").and_then(Json::as_str),
+        Some("arbocc-audit/v1"),
+        "report schema tag"
+    );
+    assert_eq!(
+        json.get("clean"),
+        Some(&Json::Bool(report.findings.is_empty())),
+        "clean flag mirrors the finding list"
+    );
+    json.get("findings")
+        .and_then(Json::as_arr)
+        .expect("findings array")
+        .iter()
+        .map(|f| f.get("rule").and_then(Json::as_str).expect("rule id").to_string())
+        .collect()
+}
+
+#[test]
+fn fixture_hash_iter() {
+    let got = finding_rules(
+        "src/algorithms/fixture.rs",
+        "let order: std::collections::HashMap<u32, u64> = build();\n",
+    );
+    assert_eq!(got, vec!["hash-iter"]);
+}
+
+#[test]
+fn fixture_wall_clock() {
+    let got = finding_rules("src/mpc/fixture.rs", "let t0 = std::time::Instant::now();\n");
+    assert_eq!(got, vec!["wall-clock"]);
+}
+
+#[test]
+fn fixture_raw_payload() {
+    let got = finding_rules("src/mpc/fixture.rs", "let vertex = payload[0] as u32;\n");
+    assert_eq!(got, vec!["raw-payload"]);
+    // wire.rs itself is the codec layer: the same line is exempt there.
+    let report = audit_source("src/mpc/wire.rs", "let vertex = payload[0];\n", &manifest());
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn fixture_unchecked_arith() {
+    let got = finding_rules("src/data/fixture.rs", "let slots = n * 2;\n");
+    assert_eq!(got, vec!["unchecked-arith"]);
+    // The sanctioned spellings pass.
+    let report = audit_source(
+        "src/data/fixture.rs",
+        "let slots = n.checked_mul(2).expect(\"n*2 overflows\");\n",
+        &manifest(),
+    );
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn fixture_cast_truncate() {
+    let got = finding_rules("src/data/snapshot.rs", "let word = total as u32;\n");
+    assert_eq!(got, vec!["cast-truncate"]);
+    // Outside the wire class the same cast is not this rule's business.
+    let report = audit_source("src/util/fixture.rs", "let word = total as u32;\n", &manifest());
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn fixture_panic_path() {
+    let got = finding_rules("src/main.rs", "let cfg = read_config().unwrap();\n");
+    assert_eq!(got, vec!["panic-path"]);
+}
+
+#[test]
+fn fixture_sort_ambiguous() {
+    let got = finding_rules(
+        "src/cluster/fixture.rs",
+        "candidates.sort_by(|a, b| a.score.cmp(&b.score));\n",
+    );
+    assert_eq!(got, vec!["sort-ambiguous"]);
+    // Total-key sorts are the sanctioned spelling.
+    let report = audit_source(
+        "src/cluster/fixture.rs",
+        "candidates.sort_by_key(|c| (c.score, c.id));\n",
+        &manifest(),
+    );
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn fixture_rng_stream() {
+    let got = finding_rules("src/solve/fixture.rs", "let mut rng = Rng::new(42);\n");
+    assert_eq!(got, vec!["rng-stream"]);
+    // The manifest exempts the sanctioned stream roots.
+    let report =
+        audit_source("src/solve/solvers.rs", "let mut rng = Rng::new(req.seed);\n", &manifest());
+    assert!(report.is_clean(), "{}", report.render_human());
+}
+
+#[test]
+fn suppression_requires_justification() {
+    let m = manifest();
+    // Justified allow: suppressed, recorded in the JSON report.
+    let ok = "let s = std::collections::HashSet::new(); \
+              // audit:allow(hash-iter): probe-only, output re-sorted\n";
+    let report = audit_source("src/algorithms/fixture.rs", ok, &m);
+    assert!(report.is_clean(), "{}", report.render_human());
+    let json = report.to_json();
+    let suppressed = json.get("suppressed").and_then(Json::as_arr).expect("suppressed array");
+    assert_eq!(suppressed.len(), 1);
+    assert_eq!(
+        suppressed[0].get("justification").and_then(Json::as_str),
+        Some("probe-only, output re-sorted")
+    );
+
+    // Bare allow: the violation still reports, and says why.
+    let bare = "let s = std::collections::HashSet::new(); // audit:allow(hash-iter)\n";
+    let report = audit_source("src/algorithms/fixture.rs", bare, &m);
+    assert_eq!(report.findings.len(), 1);
+    assert!(
+        report.findings[0].message.contains("justification"),
+        "finding should demand a justification tail: {}",
+        report.findings[0].message
+    );
+
+    // Stale allow: a finding of its own, so the allow-list cannot rot.
+    let stale = "let v = 1; // audit:allow(hash-iter): nothing to suppress here\n";
+    let report = audit_source("src/algorithms/fixture.rs", stale, &m);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, rules::META_RULE);
+}
+
+#[test]
+fn shipped_tree_audits_clean() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let m = Manifest::load(&dir.join("audit.toml")).expect("audit.toml parses");
+    let report = audit_tree(dir, &m).expect("walk rust/src");
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    assert!(
+        report.is_clean(),
+        "the shipped tree must self-audit clean; findings:\n{}",
+        report.render_human()
+    );
+    // The deliberate allows (bfs_ball's probe set, the wire bit
+    // extractions, ...) are all consumed — none stale, none bare.
+    assert!(
+        !report.suppressed.is_empty(),
+        "expected the documented audit:allow sites to register as suppressions"
+    );
+}
