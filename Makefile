@@ -6,7 +6,9 @@
 #   audit        `arbocc audit`: the determinism / MPC-invariant static
 #                analysis pass over rust/src, driven by rust/audit.toml
 #                (exit 1 on any unsuppressed finding)
-#   ci           tier1 + fmt + clippy + audit
+#   docs         rustdoc with warnings denied (broken intra-doc links
+#                fail), mirroring CI's `docs` job
+#   ci           tier1 + fmt + clippy + audit + docs
 #   examples     build + run the repo-root examples (quickstart, the
 #                solver-engine tour and the dataset pipeline), as CI does
 #   solve-demo   the unified solver engine on a mixed multi-component
@@ -26,9 +28,9 @@
 #   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
-BENCH_LABEL ?= PR6
+BENCH_LABEL ?= PR7
 
-.PHONY: tier1 fmt clippy audit ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
+.PHONY: tier1 fmt clippy audit docs ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
 
 # The gate every change must pass: release build + full test suite.
 tier1:
@@ -46,7 +48,11 @@ clippy:
 audit:
 	cd rust && $(CARGO) run --release -- audit
 
-ci: tier1 fmt clippy audit
+# API docs must build warning-free (same flags as CI's `docs` job).
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+ci: tier1 fmt clippy audit docs
 
 examples:
 	cd rust && $(CARGO) run --release --example quickstart

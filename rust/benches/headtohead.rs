@@ -1,0 +1,9 @@
+//! Head-to-head scenarios: source paper vs constant-round rival solvers
+//! (ratio-vs-OPT, round/word growth, wall-clock). Thin wrapper over
+//! `headtohead/*` (`arbocc::bench::scenarios::headtohead`).
+//!
+//!     cargo bench --bench headtohead [-- --tier smoke]
+
+fn main() {
+    arbocc::bench::suite::run_bin("headtohead");
+}

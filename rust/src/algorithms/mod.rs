@@ -1,4 +1,5 @@
-//! Every algorithm in the paper, plus its baselines.
+//! Every algorithm in the paper, plus its baselines and constant-round
+//! rivals.
 //!
 //! | Paper reference | Module |
 //! |---|---|
@@ -9,6 +10,7 @@
 //! | Corollaries 27/29/31 (forest ⇒ matchings) | [`matching`], [`forest`] |
 //! | Corollary 32 (O(λ²) in O(1) rounds) | [`simple`] |
 //! | §1.4 baselines (ParallelPivot, C4, ClusterWild!) | [`baselines`] |
+//! | Rival constant-round solvers (arxiv 2106.08448 / 2205.03710) | [`rivals`] |
 
 pub mod alg4;
 pub mod baselines;
@@ -18,4 +20,5 @@ pub mod local_search;
 pub mod matching;
 pub mod mpc_mis;
 pub mod pivot;
+pub mod rivals;
 pub mod simple;

@@ -1,0 +1,133 @@
+//! Behnezhad–Charikar–Ma–Tan constant-round almost-3-approximation
+//! (arxiv 2205.03710), as a threshold schedule for the shared
+//! [`pivot_phase_engine`].
+//!
+//! BCMT's insight (their Theorem 1) is that *truncated* parallel
+//! pivoting — run the local-minimum peeling for only R = ⌈4/ε⌉ phases
+//! over the **whole** vertex set and declare every survivor a singleton
+//! — is already a (3+ε)-approximation. The coupling argument (their
+//! Lemma 3.1 / randomized greedy MIS round-compression) shows the
+//! vertices still unclustered after R whole-graph peeling phases
+//! account for at most an ε fraction of the sequential PIVOT cost in
+//! expectation, so truncation is charged to the ε slack rather than to
+//! correctness.
+//!
+//! Against [`super::cal`] the trade is phases-for-eligibility: BCMT
+//! runs a *fixed* ⌈4/ε⌉ phases with every unclustered vertex eligible
+//! (thresholds all `n`), where CAL runs a prefix schedule that admits
+//! few vertices early. Same engine, same two routed rounds per phase,
+//! same Θ(m)-word announce ceiling — which is exactly what the
+//! head-to-head bench family measures against the source paper's
+//! O(log λ · poly(log log n)) schedule.
+
+use crate::graph::Graph;
+use crate::mpc::simulator::MpcSimulator;
+
+use super::{pivot_phase_engine, rival_eps, RivalRun};
+
+/// Tuning for [`bcmt_pivot`]. ε sets the truncation depth R = ⌈4/ε⌉
+/// (their Theorem 1); smaller ε runs more peeling phases and leaves
+/// fewer forced singletons.
+#[derive(Debug, Clone, Copy)]
+pub struct BcmtParams {
+    pub eps: f64,
+}
+
+impl Default for BcmtParams {
+    fn default() -> BcmtParams {
+        BcmtParams { eps: super::RIVAL_DEFAULT_EPS }
+    }
+}
+
+/// The truncated whole-graph peeling schedule: R = ⌈4/ε⌉ phases, every
+/// unclustered vertex eligible in each (threshold `n` throughout).
+pub fn bcmt_thresholds(n: usize, eps: f64) -> Vec<u32> {
+    let eps = rival_eps(eps);
+    if n == 0 {
+        return Vec::new();
+    }
+    let r = (4.0 / eps).ceil() as usize;
+    vec![u32::try_from(n).expect("vertex counts fit u32"); r.max(1)]
+}
+
+/// Run BCMT truncated parallel pivoting over a pre-sampled rank order
+/// (`rank` must be a permutation of `0..n`). Charges 2 routed rounds
+/// per executed phase to `sim`; early-exits when the graph clusters
+/// before the truncation depth.
+pub fn bcmt_pivot(
+    g: &Graph,
+    rank: &[u32],
+    params: &BcmtParams,
+    sim: &mut MpcSimulator,
+) -> RivalRun {
+    let thresholds = bcmt_thresholds(g.n(), params.eps);
+    pivot_phase_engine(g, rank, &thresholds, "bcmt", sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy_mis::ranks_from_permutation;
+    use crate::algorithms::rivals::rival_input_words;
+    use crate::graph::generators::{path, star};
+    use crate::mpc::MpcConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn truncation_depth_is_ceil_4_over_eps() {
+        assert_eq!(bcmt_thresholds(10, 0.25), vec![10u32; 16]);
+        assert_eq!(bcmt_thresholds(10, 0.5).len(), 8);
+        assert_eq!(bcmt_thresholds(10, 0.9).len(), 5);
+        // Engine-default ε = 2.0 falls back to the rival default 0.25.
+        assert_eq!(bcmt_thresholds(10, 2.0).len(), 16);
+        assert!(bcmt_thresholds(0, 0.25).is_empty());
+    }
+
+    #[test]
+    fn path8_identity_rank_peels_in_four_phases() {
+        // Hand-derived companion to the tests/round_counts.rs pin: with
+        // identity ranks the path's only local minimum each phase is its
+        // smallest unclustered vertex, so phases peel {0},{2},{4},{6}
+        // and the early exit fires before phase 5.
+        let g = path(8);
+        let rank: Vec<u32> = (0..8).collect();
+        let mut sim =
+            MpcSimulator::new(MpcConfig::model1(g.n(), rival_input_words(&g), 0.5));
+        let run = bcmt_pivot(&g, &rank, &BcmtParams::default(), &mut sim);
+        assert_eq!(run.phases, 4);
+        assert_eq!(sim.n_rounds(), 8);
+        assert_eq!(run.clustering.labels(), &[0, 0, 2, 2, 4, 4, 6, 6]);
+    }
+
+    #[test]
+    fn star_clusters_whole_in_one_or_two_phases() {
+        // On star:k=9 a single phase suffices when the center has the
+        // minimum rank; with identity ranks vertex 0 is the center and
+        // everything joins it in phase 1.
+        let g = star(9);
+        let rank: Vec<u32> = (0..g.n() as u32).collect();
+        let mut sim =
+            MpcSimulator::new(MpcConfig::model1(g.n(), rival_input_words(&g), 0.5));
+        let run = bcmt_pivot(&g, &rank, &BcmtParams::default(), &mut sim);
+        assert_eq!(run.phases, 1);
+        assert_eq!(run.clustering.n_clusters(), 1);
+    }
+
+    #[test]
+    fn shard_invariant_on_random_orders() {
+        let g = crate::graph::generators::lambda_arboric(90, 3, &mut Rng::new(6));
+        let rank = ranks_from_permutation(&Rng::new(23).permutation(g.n()));
+        let mut run = |shards: usize| {
+            let cfg = MpcConfig::model1(g.n(), rival_input_words(&g), 0.5);
+            let mut sim = if shards == 1 {
+                MpcSimulator::new(cfg)
+            } else {
+                MpcSimulator::sharded(cfg, shards)
+            };
+            bcmt_pivot(&g, &rank, &BcmtParams::default(), &mut sim).clustering
+        };
+        let base = run(1);
+        assert_eq!(base.labels(), run(2).labels());
+        assert_eq!(base.labels(), run(8).labels());
+    }
+}

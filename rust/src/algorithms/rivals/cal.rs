@@ -1,0 +1,159 @@
+//! Cohen-Addad–Lattanzi et al. constant-round parallel PIVOT
+//! (arxiv 2106.08448), as a threshold schedule for the shared
+//! [`pivot_phase_engine`].
+//!
+//! The paper's Algorithm 1 samples a uniform random order π up front and
+//! then, instead of peeling one pivot at a time (sequential PIVOT),
+//! processes *geometrically growing prefixes* of π: phase i admits the
+//! first T_i vertices of the order, T₁ = ⌈εn⌉ and
+//! T_{i+1} = ⌈T_i · (1+ε)⌉, capped at n. Within a phase every admitted
+//! unclustered vertex that is a rank minimum among its admitted
+//! unclustered neighbors becomes a pivot and claims its unclustered
+//! neighborhood — exactly the two routed rounds of the engine. Because
+//! the prefix grows by a (1+ε) factor each phase, ⌈log_{1+ε}(1/ε)⌉ + 1
+//! phases reach the full order: O(1/ε · log 1/ε) rounds total,
+//! *independent of n and λ* (their Theorem 1.1; the (3+ε)-approximation
+//! comes from coupling each phase with the sequential PIVOT prefix it
+//! simulates, their Lemma 3.2).
+//!
+//! What this module pins down for the head-to-head lab: the round count
+//! is flat in n (see `tests/round_counts.rs`), but the announce rounds
+//! ship Θ(m) words *per phase* — the per-round word ceiling the source
+//! paper's degree-reduction machinery exists to avoid.
+
+use crate::graph::Graph;
+use crate::mpc::simulator::MpcSimulator;
+
+use super::{pivot_phase_engine, rival_eps, RivalRun};
+
+/// Tuning for [`cal_pivot`]. ε controls both the first prefix (⌈εn⌉)
+/// and the growth factor (1+ε); smaller ε means more phases and a
+/// tighter coupling to sequential PIVOT (approximation 3+O(ε)).
+#[derive(Debug, Clone, Copy)]
+pub struct CalParams {
+    pub eps: f64,
+}
+
+impl Default for CalParams {
+    fn default() -> CalParams {
+        CalParams { eps: super::RIVAL_DEFAULT_EPS }
+    }
+}
+
+/// The geometric prefix schedule: T₁ = ⌈εn⌉ (at least 1),
+/// T_{i+1} = ⌈T_i · (1+ε)⌉, capped at n; the final entry is always n so
+/// the whole order is eventually admitted. The ceil in the recurrence
+/// guarantees strict growth, so the schedule has
+/// O(log_{1+ε}(n/⌈εn⌉)) = O(1/ε · log 1/ε) entries independent of n
+/// (for n large enough that ⌈εn⌉ ≥ 1/ε; tiny n just converges faster).
+pub fn cal_thresholds(n: usize, eps: f64) -> Vec<u32> {
+    let eps = rival_eps(eps);
+    if n == 0 {
+        return Vec::new();
+    }
+    let n32 = u32::try_from(n).expect("vertex counts fit u32");
+    let mut t = (((n as f64) * eps).ceil() as u64).clamp(1, u64::from(n32));
+    let mut out = Vec::new();
+    loop {
+        let t32 = u32::try_from(t).expect("clamped to n");
+        out.push(t32);
+        if t32 == n32 {
+            return out;
+        }
+        let grown = ((t as f64) * (1.0 + eps)).ceil() as u64;
+        t = grown.max(t + 1).min(u64::from(n32));
+    }
+}
+
+/// Run constant-round parallel PIVOT over a pre-sampled rank order
+/// (`rank` must be a permutation of `0..n`, the MPC stand-in for the
+/// paper's uniform random π). Charges 2 routed rounds per executed
+/// phase to `sim`; see the module docs for the schedule.
+pub fn cal_pivot(
+    g: &Graph,
+    rank: &[u32],
+    params: &CalParams,
+    sim: &mut MpcSimulator,
+) -> RivalRun {
+    let thresholds = cal_thresholds(g.n(), params.eps);
+    pivot_phase_engine(g, rank, &thresholds, "cal", sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::greedy_mis::ranks_from_permutation;
+    use crate::algorithms::rivals::rival_input_words;
+    use crate::graph::generators::path;
+    use crate::mpc::MpcConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn threshold_schedule_for_n8_quarter_eps() {
+        // ⌈0.25·8⌉ = 2, then ⌈2·1.25⌉ = 3 (ceil > +1), ⌈3·1.25⌉ = 4,
+        // ⌈4·1.25⌉ = 5, ⌈5·1.25⌉ = 7, ⌈7·1.25⌉ = 9 → capped at 8.
+        assert_eq!(cal_thresholds(8, 0.25), vec![2, 3, 4, 5, 7, 8]);
+    }
+
+    #[test]
+    fn threshold_schedule_always_ends_at_n_and_strictly_grows() {
+        for n in [1usize, 2, 7, 100, 4097] {
+            for eps in [0.1, 0.25, 0.5, 0.9] {
+                let ts = cal_thresholds(n, eps);
+                assert_eq!(*ts.last().unwrap() as usize, n, "n={n} eps={eps}");
+                assert!(ts.windows(2).all(|w| w[0] < w[1]), "n={n} eps={eps}: {ts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_length_is_flat_in_n() {
+        // The constant-round claim: phases depend on ε, not n.
+        let small = cal_thresholds(100, 0.25).len();
+        let large = cal_thresholds(100_000, 0.25).len();
+        assert!(large <= small + 1, "schedule grew with n: {small} -> {large}");
+    }
+
+    #[test]
+    fn degenerate_eps_falls_back() {
+        // eps = 2.0 (the engine-wide default) must not yield a one-phase
+        // whole-graph schedule pretending to be CAL.
+        assert_eq!(cal_thresholds(8, 2.0), cal_thresholds(8, 0.25));
+        assert!(cal_thresholds(0, 0.25).is_empty());
+    }
+
+    #[test]
+    fn path8_identity_rank_run() {
+        // Hand-derived companion to the tests/round_counts.rs pin: with
+        // identity ranks on path:n=8 the prefix schedule [2,3,4,5,7,8]
+        // peels pivots {0}, {2}, {}, {4}, {6} and phase 6 never runs.
+        let g = path(8);
+        let rank: Vec<u32> = (0..8).collect();
+        let mut sim =
+            MpcSimulator::new(MpcConfig::model1(g.n(), rival_input_words(&g), 0.5));
+        let run = cal_pivot(&g, &rank, &CalParams::default(), &mut sim);
+        assert_eq!(run.phases, 5);
+        assert_eq!(run.rounds, 10);
+        assert_eq!(sim.n_rounds(), 10);
+        assert_eq!(run.clustering.labels(), &[0, 0, 2, 2, 4, 4, 6, 6]);
+    }
+
+    #[test]
+    fn seed_determinism_through_sampled_order() {
+        let g = crate::graph::generators::lambda_arboric(90, 3, &mut Rng::new(4));
+        let rank = ranks_from_permutation(&Rng::new(11).permutation(g.n()));
+        let mut run = |shards: usize| {
+            let cfg = MpcConfig::model1(g.n(), rival_input_words(&g), 0.5);
+            let mut sim = if shards == 1 {
+                MpcSimulator::new(cfg)
+            } else {
+                MpcSimulator::sharded(cfg, shards)
+            };
+            cal_pivot(&g, &rank, &CalParams::default(), &mut sim).clustering
+        };
+        let base = run(1);
+        assert_eq!(base.labels(), run(1).labels());
+        assert_eq!(base.labels(), run(2).labels());
+        assert_eq!(base.labels(), run(8).labels());
+    }
+}

@@ -1,0 +1,165 @@
+//! Head-to-head scenarios (owned by the `headtohead` bin): the source
+//! paper's MPC PIVOT (Corollary 28) vs the constant-round rivals
+//! (`cal-pivot`, arxiv 2106.08448; `bcmt-pivot`, arxiv 2205.03710) on
+//! identical inputs, identical simulator, identical ledger.
+//!
+//! * `headtohead/tiny_ratio`   — approximation quality on `tiny_corpus`
+//!   against exact optima: `source_ratio` / `cal_ratio` / `bcmt_ratio`
+//!   (aggregate cost over aggregate OPT, gated Lower);
+//! * `headtohead/round_growth` — rounds and total words as n grows:
+//!   `{source,cal,bcmt}_rounds` and `{source,cal,bcmt}_words` at the
+//!   large size plus `{source,cal,bcmt}_round_growth` (large-over-small
+//!   round ratio — the rivals' is 1.0, that is the whole point);
+//! * `headtohead/throughput`   — wall-clock per solver on one mid-size
+//!   λ-arboric instance: `{source,cal,bcmt}_solve_s` time metrics.
+//!
+//! All three scenarios drive the solvers through the registry (the same
+//! adapters `arbocc solve --algo <name>` dispatches), so what the bench
+//! records is what users get.
+
+use std::sync::Arc;
+
+use crate::bench::harness::bench_with;
+use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::cluster::exact::exact_cost;
+use crate::data::corpus::{tiny_corpus, WorkloadSpec};
+use crate::graph::generators::lambda_arboric;
+use crate::solve::{SolveCtx, SolveReport, SolveRequest, SolverRegistry};
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+
+const BIN: &str = "headtohead";
+
+/// The competitors: short metric prefix → registry solver name. The
+/// source paper is represented by `mpc-pivot` (Corollary 28), the one
+/// source-route solver that charges rounds and words to the simulator.
+const RIVALS: &[(&str, &str)] = &[
+    ("source", "mpc-pivot"),
+    ("cal", "cal-pivot"),
+    ("bcmt", "bcmt-pivot"),
+];
+
+pub fn register(r: &mut Registry) {
+    r.register(Scenario {
+        name: "headtohead/tiny_ratio",
+        bin: BIN,
+        about: "source vs rival approximation ratios on tiny_corpus vs OPT",
+        run: tiny_ratio,
+    });
+    r.register(Scenario {
+        name: "headtohead/round_growth",
+        bin: BIN,
+        about: "rounds & words as n grows: source log-shape vs rival flat",
+        run: round_growth,
+    });
+    r.register(Scenario {
+        name: "headtohead/throughput",
+        bin: BIN,
+        about: "wall-clock per solver on one λ-arboric instance",
+        run: throughput,
+    });
+}
+
+fn solve_named(registry: &SolverRegistry, name: &str, req: &SolveRequest) -> SolveReport {
+    registry
+        .get(name)
+        .unwrap_or_else(|| panic!("{name} must be registered"))
+        .solve(req, &mut SolveCtx::serial())
+}
+
+fn tiny_ratio(_ctx: &ScenarioCtx) -> ScenarioRecord {
+    let registry = SolverRegistry::standard();
+    let mut table = Table::new(
+        "head-to-head on tiny_corpus (aggregate cost vs exact OPT)",
+        &["solver", "Σcost", "ΣOPT", "ratio"],
+    );
+    let mut rec = ScenarioRecord::new();
+    for (prefix, name) in RIVALS {
+        let mut total_cost = 0u64;
+        let mut total_opt = 0u64;
+        for spec in tiny_corpus() {
+            let g = WorkloadSpec::parse(spec)
+                .and_then(|s| s.generate())
+                .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            total_opt += exact_cost(&g);
+            let req = SolveRequest { seed: 71, ..SolveRequest::new(Arc::new(g)) };
+            total_cost += solve_named(&registry, name, &req).cost.total();
+        }
+        let ratio = total_cost as f64 / total_opt.max(1) as f64;
+        table.row(&[
+            name.to_string(),
+            total_cost.to_string(),
+            total_opt.to_string(),
+            fnum(ratio),
+        ]);
+        // Deterministic in the pinned seed, so noise 0: any drift is a
+        // real quality change and should gate.
+        rec.metric(&format!("{prefix}_ratio"), ratio, Direction::Lower);
+    }
+    table.print();
+    rec
+}
+
+fn round_growth(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let registry = SolverRegistry::standard();
+    let n_small = ctx.size(300, 2_000);
+    let n_large = ctx.size(3_000, 40_000);
+    let mut rng = Rng::new(15_100);
+    let small = Arc::new(lambda_arboric(n_small, 3, &mut rng));
+    let large = Arc::new(lambda_arboric(n_large, 3, &mut rng));
+
+    let mut table = Table::new(
+        &format!("round/word growth, λ-arboric n={n_small} → n={n_large}"),
+        &["solver", "rounds@small", "rounds@large", "growth", "words@large"],
+    );
+    let mut rec = ScenarioRecord::new();
+    for (prefix, name) in RIVALS {
+        let rep_small = solve_named(
+            &registry,
+            name,
+            &SolveRequest { seed: 71, ..SolveRequest::new(small.clone()) },
+        );
+        let rep_large = solve_named(
+            &registry,
+            name,
+            &SolveRequest { seed: 71, ..SolveRequest::new(large.clone()) },
+        );
+        let (rs, rl) = (
+            rep_small.mpc_rounds.unwrap_or(0),
+            rep_large.mpc_rounds.unwrap_or(0),
+        );
+        let words = rep_large.mpc_words.unwrap_or(0);
+        let growth = rl as f64 / rs.max(1) as f64;
+        table.row(&[
+            name.to_string(),
+            rs.to_string(),
+            rl.to_string(),
+            fnum(growth),
+            words.to_string(),
+        ]);
+        rec.metric(&format!("{prefix}_rounds"), rl as f64, Direction::Lower);
+        rec.metric(&format!("{prefix}_words"), words as f64, Direction::Lower);
+        rec.metric(&format!("{prefix}_round_growth"), growth, Direction::Info);
+    }
+    table.print();
+    rec
+}
+
+fn throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let registry = SolverRegistry::standard();
+    let n = ctx.size(2_000, 30_000);
+    let mut rng = Rng::new(15_200);
+    let g = Arc::new(lambda_arboric(n, 3, &mut rng));
+    let req = SolveRequest { seed: 71, ..SolveRequest::new(g) };
+
+    let mut rec = ScenarioRecord::new();
+    for (prefix, name) in RIVALS {
+        let m = bench_with(&format!("{name} (n={n})"), &cfg, || {
+            std::hint::black_box(solve_named(&registry, name, &req));
+        });
+        println!("{m}");
+        rec.time_metric(&format!("{prefix}_solve"), &m);
+    }
+    rec
+}

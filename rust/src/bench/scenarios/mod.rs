@@ -21,12 +21,15 @@
 //!   the corpus sweep (`data_lab`);
 //! * [`message_plane`] — the flat-arena wire format vs the retired
 //!   per-message plane, codec throughput, tree schedules
-//!   (`message_plane`).
+//!   (`message_plane`);
+//! * [`headtohead`] — source paper vs constant-round rival solvers:
+//!   ratio-vs-OPT, round/word growth, wall-clock (`headtohead`).
 
 use crate::bench::suite::Registry;
 
 pub mod clustering;
 pub mod data;
+pub mod headtohead;
 pub mod message_plane;
 pub mod mis;
 pub mod perf;
@@ -42,4 +45,5 @@ pub fn register_all(r: &mut Registry) {
     solve::register(r);
     data::register(r);
     message_plane::register(r);
+    headtohead::register(r);
 }

@@ -109,7 +109,9 @@ fn make_graph(args: &Args) -> Result<(Graph, String, u64)> {
 }
 
 /// The shared request shape every solver-engine command builds from the
-/// CLI flags (`--lambda`, `--eps`, `--model`, `--delta`, `--trials`).
+/// CLI flags (`--lambda`, `--eps`, `--model`, `--delta`, `--rounds`,
+/// `--trials`). `--rounds R` sets the round budget the planner's
+/// rival-routing rule compares against (DESIGN.md §9).
 fn request_from_args(args: &Args, g: Graph, seed: u64) -> Result<SolveRequest> {
     let model_s = args.get_str("model", "m1");
     let Some(model) = ModelKind::parse(&model_s) else {
@@ -122,6 +124,7 @@ fn request_from_args(args: &Args, g: Graph, seed: u64) -> Result<SolveRequest> {
     req.eps = args.get_f64("eps", 2.0)?;
     req.model = model;
     req.delta = args.get_f64("delta", 0.5)?;
+    req.round_budget = if args.has("rounds") { Some(args.get_usize("rounds", 0)?) } else { None };
     req.trials = args.get_usize("trials", 1)?.max(1);
     Ok(req)
 }
@@ -180,7 +183,11 @@ fn print_report(req: &SolveRequest, report: &SolveReport) {
         );
     }
     if let Some(r) = report.mpc_rounds {
-        println!("MPC rounds={r} (model={}, δ={})", req.model.name(), req.delta);
+        let words = report
+            .mpc_words
+            .map(|w| format!(", {w} words"))
+            .unwrap_or_default();
+        println!("MPC rounds={r}{words} (model={}, δ={})", req.model.name(), req.delta);
     }
     println!("wall time: {:.3}s", report.wall_s);
 }
@@ -189,13 +196,16 @@ fn print_report(req: &SolveRequest, report: &SolveReport) {
 ///
 ///   arbocc solve [--algo auto|<name>] [--family F --n N | --input path]
 ///                [--shards S] [--exact-cutoff C] [--lambda λ] [--eps ε]
-///                [--model m1|m2] [--delta δ] [--trials K] [--list]
+///                [--model m1|m2] [--delta δ] [--rounds R] [--trials K]
+///                [--list]
 ///
 /// `--algo auto` routes each connected component through the planner's
-/// Theorem 26 / Corollary 27–32 decision tree; any registered solver
-/// name forces that algorithm. Components are solved concurrently on an
-/// S-shard pool (bit-identical results at every S). `--trials K > 1`
-/// runs the Remark 14 best-of-K driver over the whole graph instead.
+/// Theorem 26 / Corollary 27–32 decision tree, extended by the §9 rival
+/// rules (`--rounds R` budget → bcmt-pivot, λ > 8 → cal-pivot); any
+/// registered solver name forces that algorithm. Components are solved
+/// concurrently on an S-shard pool (bit-identical results at every S).
+/// `--trials K > 1` runs the Remark 14 best-of-K driver over the whole
+/// graph instead.
 fn cmd_solve(args: &Args) -> Result<()> {
     let registry = SolverRegistry::standard();
     if args.get_bool("list") {

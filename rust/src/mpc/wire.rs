@@ -21,8 +21,11 @@
 //!   of owning a fresh `Vec<u64>`.
 //! * **Codecs** — [`Encode`]/[`Decode`] give the payload shapes the
 //!   algorithms actually send (single-word aggregates, packed
-//!   [`VertexStatus`]/[`LabelUpdate`] words, small tuples) a typed
-//!   round-trip, replacing ad-hoc `payload[0]` indexing at call sites.
+//!   [`VertexStatus`]/[`LabelUpdate`] words, small tuples, and the
+//!   [`RankAnnounce`]/[`PivotClaim`] frames the constant-round rival
+//!   solvers route through [`crate::mpc::router::Router::round`]) a
+//!   typed round-trip, replacing ad-hoc `payload[0]` indexing at call
+//!   sites.
 //!
 //! Word accounting is unchanged from the per-message plane: a message of
 //! `len` payload words still charges `len + `[`ENVELOPE_WORDS`] on both
@@ -178,6 +181,79 @@ impl Decode for LabelUpdate {
         match payload {
             // audit:allow(cast-truncate): bit extraction — each half of the packed word is taken on purpose
             [w] => Some(LabelUpdate { vertex: (*w >> 32) as u32, label: *w as u32 }),
+            _ => None,
+        }
+    }
+}
+
+/// Rival announce frame: `(vertex, rank)` packed into one word — what a
+/// constant-round pivot phase ([`crate::algorithms::rivals`]) ships per
+/// directed edge in its announce round: "your neighbor with this rank is
+/// eligible this phase". The receiver folds the minimum rank per vertex,
+/// which is all the local-minimum pivot rule needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankAnnounce {
+    /// Destination vertex (the announcing vertex's neighbor).
+    pub vertex: u32,
+    /// The announcing vertex's position in the pre-sampled random order.
+    pub rank: u32,
+}
+
+impl Encode for RankAnnounce {
+    fn words(&self) -> usize {
+        1
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(((self.vertex as u64) << 32) | self.rank as u64);
+    }
+}
+
+impl Decode for RankAnnounce {
+    fn decode(payload: &[u64]) -> Option<RankAnnounce> {
+        match payload {
+            [w] => Some(RankAnnounce {
+                vertex: u32::try_from(*w >> 32).expect("shifted half fits"),
+                rank: u32::try_from(*w & u64::from(u32::MAX)).expect("masked half fits"),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Rival claim frame: a freshly-elected pivot claiming `vertex` into its
+/// cluster. Two words — `(vertex, pivot)` packed plus the pivot's rank —
+/// because the receiver adopts the **minimum-rank** claimer and, on a
+/// real MPC fleet, does not hold remote vertices' ranks locally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PivotClaim {
+    /// The claimed vertex.
+    pub vertex: u32,
+    /// The claiming pivot (its id becomes the cluster label).
+    pub pivot: u32,
+    /// The pivot's rank, shipped so the receiver can break ties locally.
+    pub rank: u32,
+}
+
+impl Encode for PivotClaim {
+    fn words(&self) -> usize {
+        2
+    }
+
+    fn encode(&self, slab: &mut Vec<u64>) {
+        slab.push(((self.vertex as u64) << 32) | self.pivot as u64);
+        slab.push(self.rank as u64);
+    }
+}
+
+impl Decode for PivotClaim {
+    fn decode(payload: &[u64]) -> Option<PivotClaim> {
+        match payload {
+            [a, b] if *b >> 32 == 0 => Some(PivotClaim {
+                vertex: u32::try_from(*a >> 32).expect("shifted half fits"),
+                pivot: u32::try_from(*a & u64::from(u32::MAX)).expect("masked half fits"),
+                rank: u32::try_from(*b).expect("high bits guarded above"),
+            }),
             _ => None,
         }
     }
@@ -508,6 +584,10 @@ mod tests {
         roundtrip(VertexStatus { vertex: u32::MAX, in_mis: true });
         roundtrip(LabelUpdate { vertex: 17, label: 0 });
         roundtrip(LabelUpdate { vertex: u32::MAX, label: u32::MAX });
+        roundtrip(RankAnnounce { vertex: 0, rank: 0 });
+        roundtrip(RankAnnounce { vertex: u32::MAX, rank: u32::MAX });
+        roundtrip(PivotClaim { vertex: 3, pivot: 9, rank: 1 });
+        roundtrip(PivotClaim { vertex: u32::MAX, pivot: u32::MAX, rank: u32::MAX });
     }
 
     #[test]
@@ -518,6 +598,9 @@ mod tests {
         assert_eq!(<(u64, u64, u64)>::decode(&[1, 2]), None);
         assert_eq!(VertexStatus::decode(&[u64::MAX]), None, "high bits must be clear");
         assert_eq!(LabelUpdate::decode(&[1, 2]), None);
+        assert_eq!(RankAnnounce::decode(&[1, 2]), None);
+        assert_eq!(PivotClaim::decode(&[1]), None);
+        assert_eq!(PivotClaim::decode(&[1, u64::MAX]), None, "rank high bits must be clear");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::cluster::cost::Cost;
 use crate::cluster::exact::MAX_EXACT_N;
 use crate::cluster::Clustering;
 use crate::graph::components::{components, split_components};
+use crate::mpc::memory::Words;
 use crate::mpc::pool::ShardPool;
 use crate::solve::{planner, SolveCtx, SolveReport, SolveRequest, SolverRegistry};
 use crate::util::error::Result;
@@ -128,7 +129,7 @@ pub fn solve_decomposed(
     // share of small solves), and partials are collected in shard order,
     // so both the trace and the clustering are shard-count independent.
     let pool = ShardPool::new(cfg.shards);
-    let solved: Vec<(&'static str, Clustering, Option<usize>, Cost)> = pool
+    let solved: Vec<(&'static str, Clustering, Option<usize>, Option<Words>, Cost)> = pool
         .run(parts.len(), |_, range| {
             range
                 .map(|i| {
@@ -138,7 +139,10 @@ pub fn solve_decomposed(
                     } else {
                         match forced {
                             Some(name) => name,
-                            None => planner::plan_component(part, req.lambda).solver,
+                            None => {
+                                planner::plan_component_with(part, req.lambda, req.round_budget)
+                                    .solver
+                            }
                         }
                     };
                     let sub_req = SolveRequest {
@@ -148,12 +152,13 @@ pub fn solve_decomposed(
                         eps: req.eps,
                         model: req.model,
                         delta: req.delta,
+                        round_budget: req.round_budget,
                         trials: 1,
                     };
                     let solver = registry.get(route).expect("routes are registered");
                     let mut sub_ctx = SolveCtx::serial();
                     let rep = solver.solve(&sub_req, &mut sub_ctx);
-                    (route, rep.clustering, rep.mpc_rounds, rep.cost)
+                    (route, rep.clustering, rep.mpc_rounds, rep.mpc_words, rep.cost)
                 })
                 .collect::<Vec<_>>()
         })
@@ -176,14 +181,19 @@ pub fn solve_decomposed(
     let mut offset = n as u32;
     let mut cost = Cost { positive: 0, negative: 0 };
     let mut mpc_rounds: Option<usize> = None;
-    for ((_, clustering, rounds, part_cost), (_, old_ids)) in solved.iter().zip(&parts) {
+    let mut mpc_words: Option<Words> = None;
+    for ((_, clustering, rounds, words, part_cost), (_, old_ids)) in solved.iter().zip(&parts) {
         offset = merged.merge_subclustering_with_offset(clustering, old_ids, offset);
         cost.positive += part_cost.positive;
         cost.negative += part_cost.negative;
         // Components run on disjoint machine groups, so the fleet-wide
-        // round count is the slowest component, not the sum.
+        // round count is the slowest component, not the sum…
         if let Some(r) = *rounds {
             mpc_rounds = Some(mpc_rounds.unwrap_or(0).max(r));
+        }
+        // …but every word still crosses the network, so words add up.
+        if let Some(w) = *words {
+            mpc_words = Some(mpc_words.unwrap_or(0) + w);
         }
     }
 
@@ -193,6 +203,7 @@ pub fn solve_decomposed(
         clustering: merged,
         cost,
         mpc_rounds,
+        mpc_words,
         wall_s: timer.elapsed_s(),
         plan: ctx.trace().to_vec(),
     })
@@ -245,6 +256,7 @@ mod tests {
             );
             assert_eq!(run.cost, base.cost);
             assert_eq!(run.mpc_rounds, base.mpc_rounds);
+            assert_eq!(run.mpc_words, base.mpc_words);
         }
     }
 

@@ -7,7 +7,8 @@
 //! λ-arboric graphs (Theorem 26, Corollary 28) — and this module gives
 //! them a single shape:
 //!
-//! * [`SolveRequest`] — graph, seed, λ hint, ε, MPC model/budget, trials;
+//! * [`SolveRequest`] — graph, seed, λ hint, ε, MPC model/budget, round
+//!   budget, trials;
 //! * [`Solver`] — `fn solve(&self, req, ctx) -> SolveReport`, implemented
 //!   by an adapter per algorithm ([`solvers`]) and addressed by name
 //!   through [`registry::SolverRegistry`];
@@ -84,6 +85,11 @@ pub struct SolveRequest {
     pub model: ModelKind,
     /// Memory sublinearity parameter δ of the MPC budget.
     pub delta: f64,
+    /// Round budget the planner should respect when auto-routing:
+    /// `Some(r)` steers `auto` toward a constant-round rival solver when
+    /// the source-paper schedule would not fit in `r` rounds (§9 of
+    /// DESIGN.md). `None` means "no budget, prefer the source paper".
+    pub round_budget: Option<usize>,
     /// Best-of-K trials (Remark 14); 1 means a single run.
     pub trials: usize,
 }
@@ -99,6 +105,7 @@ impl SolveRequest {
             eps: 2.0,
             model: ModelKind::M1,
             delta: 0.5,
+            round_budget: None,
             trials: 1,
         }
     }
@@ -123,7 +130,20 @@ impl SolveRequest {
 /// uses: input words `(n + 2m).max(4)`, Model 1/2 config, seeded
 /// per-machine RNG streams.
 pub fn simulator_for(g: &Graph, model: ModelKind, delta: f64, seed: u64) -> MpcSimulator {
-    let words = (g.n() + 2 * g.m()).max(4) as Words;
+    simulator_for_words(g, (g.n() + 2 * g.m()).max(4) as Words, model, delta, seed)
+}
+
+/// [`simulator_for`] with an explicit input-word provisioning, for
+/// algorithms whose peak round traffic exceeds the `(n + 2m)` default —
+/// the rival solvers provision `(n + 4m)` for their whole-graph
+/// announce rounds ([`crate::algorithms::rivals::rival_input_words`]).
+pub fn simulator_for_words(
+    g: &Graph,
+    words: Words,
+    model: ModelKind,
+    delta: f64,
+    seed: u64,
+) -> MpcSimulator {
     let cfg = match model {
         ModelKind::M2 => MpcConfig::model2(g.n().max(2), words, delta),
         ModelKind::M1 => MpcConfig::model1(g.n().max(2), words, delta),
@@ -174,6 +194,9 @@ pub struct SolveReport {
     pub cost: Cost,
     /// Simulated MPC rounds, when the solver charges them.
     pub mpc_rounds: Option<usize>,
+    /// Total message words moved across all simulated rounds (the
+    /// ledger's `total_communication`), when the solver charges them.
+    pub mpc_words: Option<Words>,
     pub wall_s: f64,
     /// The plan trace: planner decisions and per-component routing.
     pub plan: Vec<String>,
@@ -194,14 +217,15 @@ pub trait Solver: Send + Sync {
     fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport;
 }
 
-/// Shared tail of every adapter: score the clustering, snapshot the plan
-/// trace, stamp the wall time.
+/// Shared tail of every adapter: score the clustering, read the round
+/// count and word total off the simulator's ledger (when the solver ran
+/// one), snapshot the plan trace, stamp the wall time.
 pub(crate) fn finish(
     req: &SolveRequest,
     ctx: &SolveCtx,
     solver: &str,
     clustering: Clustering,
-    mpc_rounds: Option<usize>,
+    sim: Option<&MpcSimulator>,
     timer: Timer,
 ) -> SolveReport {
     let cost = crate::cluster::cost::cost(&req.graph, &clustering);
@@ -209,7 +233,8 @@ pub(crate) fn finish(
         solver: solver.to_string(),
         clustering,
         cost,
-        mpc_rounds,
+        mpc_rounds: sim.map(MpcSimulator::n_rounds),
+        mpc_words: sim.map(MpcSimulator::total_communication),
         wall_s: timer.elapsed_s(),
         plan: ctx.trace().to_vec(),
     }

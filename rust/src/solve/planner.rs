@@ -1,15 +1,30 @@
 //! The structure-aware planner: inspect the input, pick the
-//! paper-correct solver.
+//! paper-correct solver — or a constant-round rival when the structure
+//! or a round budget says the source-paper schedule is the wrong tool.
 //!
-//! Decision tree (Theorem 26 / Corollaries 27–32):
+//! Decision tree (Theorem 26 / Corollaries 27–32, plus the DESIGN.md §9
+//! rival rules):
 //!
 //! ```text
 //! n ≤ 14                 → exact-small   (subset DP is free at this size)
 //! degeneracy ≤ 1 (forest)→ forest        (maximum matching = OPT, Cor. 27)
+//! budget < source rounds → bcmt-pivot    (constant rounds beat the budget;
+//!                                         arxiv 2205.03710)
+//! λ > 8                  → cal-pivot     (source rounds grow with log λ,
+//!                                         CAL's never do; arxiv 2106.08448)
 //! λ ≤ 2                  → simple        (O(λ²)-approx in O(1) rounds, Cor. 32)
 //! otherwise              → alg4-pivot    (Theorem 26: filter high degrees,
 //!                                         PIVOT inside, max{1+ε,3}-approx)
 //! ```
+//!
+//! The two rival rules trigger only when their premise holds: the budget
+//! rule compares the caller's round budget against
+//! [`source_round_estimate`] (the concrete O(log λ · (log log n)²) shape
+//! of Theorem 26), and the λ rule fires past [`RIVAL_LAMBDA_MAX`], where
+//! the source schedule's log λ factor has clearly left the
+//! constant-round regime. Forests and tiny inputs always keep their
+//! exact routes — the rivals trade approximation for rounds, which is a
+//! bad trade when OPT is free.
 //!
 //! λ is the hint when the caller supplies one, otherwise the degeneracy
 //! end of the arboricity sandwich (`graph::arboricity`). The plan also
@@ -25,6 +40,24 @@ use crate::graph::Graph;
 /// pick: at λ ≤ 2 its approximation factor matches the constant-factor
 /// alternatives while running in O(1) deterministic rounds.
 pub const SIMPLE_LAMBDA_MAX: usize = 2;
+
+/// Largest λ the planner still hands to the source paper's route. Past
+/// this, Theorem 26's O(log λ · poly(log log n)) round bill keeps
+/// growing while CAL's stays flat in both n and λ, so `auto` routes to
+/// the constant-round rival (DESIGN.md §9).
+pub const RIVAL_LAMBDA_MAX: usize = 8;
+
+/// A concrete round count for the source paper's Theorem 26 schedule,
+/// `(1 + ⌈log₂ λ⌉) · (1 + ⌈log₂ log₂ n⌉)²` — the O(log λ · (log log n)²)
+/// shape with its constants pinned so a budget comparison has a number
+/// to compare against. Deliberately an *estimate*: it orders routes, it
+/// does not promise a schedule.
+pub fn source_round_estimate(n: usize, lambda: usize) -> usize {
+    let log_n = n.max(2).ilog2() as usize + 1;
+    let loglog_n = log_n.max(2).ilog2() as usize + 1;
+    let log_lambda = lambda.max(2).ilog2() as usize + 1;
+    log_lambda * (1 + loglog_n).pow(2)
+}
 
 /// A routing decision with its evidence.
 #[derive(Debug, Clone)]
@@ -42,11 +75,18 @@ pub struct Plan {
     pub reasons: Vec<String>,
 }
 
-/// Route a graph per the decision tree above.
+/// Route a graph per the decision tree above, with no round budget.
 pub fn plan(g: &Graph, lambda_hint: Option<usize>) -> Plan {
+    plan_with(g, lambda_hint, None)
+}
+
+/// [`plan`] with an optional round budget: `Some(r)` activates the
+/// budget rule (route to a constant-round rival when the source
+/// schedule's [`source_round_estimate`] exceeds `r`).
+pub fn plan_with(g: &Graph, lambda_hint: Option<usize>, round_budget: Option<usize>) -> Plan {
     let comps = components(g);
     let largest = comps.sizes().into_iter().max().unwrap_or(0);
-    plan_inner(g, lambda_hint, comps.count, largest)
+    plan_inner(g, lambda_hint, round_budget, comps.count, largest)
 }
 
 /// [`plan`] for a single connected component — the decomposition
@@ -54,12 +94,22 @@ pub fn plan(g: &Graph, lambda_hint: Option<usize>) -> Plan {
 /// part is connected by construction), saving an O(n + m) pass per
 /// component on the hot decomposition path.
 pub fn plan_component(g: &Graph, lambda_hint: Option<usize>) -> Plan {
-    plan_inner(g, lambda_hint, 1.min(g.n()), g.n())
+    plan_component_with(g, lambda_hint, None)
+}
+
+/// [`plan_component`] with the optional round budget.
+pub fn plan_component_with(
+    g: &Graph,
+    lambda_hint: Option<usize>,
+    round_budget: Option<usize>,
+) -> Plan {
+    plan_inner(g, lambda_hint, round_budget, 1.min(g.n()), g.n())
 }
 
 fn plan_inner(
     g: &Graph,
     lambda_hint: Option<usize>,
+    round_budget: Option<usize>,
     n_components: usize,
     largest: usize,
 ) -> Plan {
@@ -79,12 +129,28 @@ fn plan_inner(
         if lambda_hint.is_some() { " (hint)" } else { "" }
     )];
 
+    let source_rounds = source_round_estimate(g.n(), lambda_used);
+    let tight_budget = round_budget.is_some_and(|r| r < source_rounds);
+
     let solver = if g.n() <= MAX_EXACT_N {
         reasons.push(format!("n ≤ {MAX_EXACT_N}: subset DP is exact and cheap"));
         "exact-small"
     } else if is_forest {
         reasons.push("degeneracy ≤ 1: forest — maximum matching is optimal (Cor. 27)".into());
         "forest"
+    } else if tight_budget {
+        reasons.push(format!(
+            "round budget {} < source estimate {source_rounds}: constant-round BCMT \
+             (arxiv 2205.03710)",
+            round_budget.unwrap_or(0)
+        ));
+        "bcmt-pivot"
+    } else if lambda_used > RIVAL_LAMBDA_MAX {
+        reasons.push(format!(
+            "λ > {RIVAL_LAMBDA_MAX}: source rounds grow with log λ, CAL's stay flat \
+             (arxiv 2106.08448)"
+        ));
+        "cal-pivot"
     } else if lambda_used <= SIMPLE_LAMBDA_MAX {
         reasons.push(format!(
             "λ ≤ {SIMPLE_LAMBDA_MAX}: O(λ²) simple algorithm in O(1) rounds (Cor. 32)"
@@ -164,6 +230,55 @@ mod tests {
         assert_eq!(a.solver, b.solver);
         assert_eq!(a.n_components, b.n_components);
         assert_eq!(a.largest_component, b.largest_component);
+        assert_eq!(a.reasons, b.reasons);
+    }
+
+    #[test]
+    fn tight_budget_routes_to_bcmt() {
+        let mut rng = Rng::new(503);
+        let g = lambda_arboric(200, 2, &mut rng);
+        let est = source_round_estimate(g.n(), 2);
+        assert!(est > 4, "estimate must exceed toy budgets, got {est}");
+        let p = plan_with(&g, None, Some(4));
+        assert_eq!(p.solver, "bcmt-pivot", "{:?}", p.reasons);
+        assert!(p.reasons.iter().any(|r| r.contains("round budget")));
+        // A generous budget changes nothing.
+        assert_eq!(plan_with(&g, None, Some(10_000)).solver, plan(&g, None).solver);
+    }
+
+    #[test]
+    fn budget_never_overrides_exact_or_forest() {
+        let tiny = Graph::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        assert_eq!(plan_with(&tiny, None, Some(1)).solver, "exact-small");
+        let mut rng = Rng::new(504);
+        let f = random_forest(300, 0.9, &mut rng);
+        assert_eq!(plan_with(&f, None, Some(1)).solver, "forest");
+    }
+
+    #[test]
+    fn huge_lambda_routes_to_cal() {
+        let g = grid(20, 20);
+        // The λ hint is the caller's claim; past RIVAL_LAMBDA_MAX the
+        // planner prefers the λ-independent constant-round rival.
+        let p = plan(&g, Some(RIVAL_LAMBDA_MAX + 1));
+        assert_eq!(p.solver, "cal-pivot", "{:?}", p.reasons);
+        assert_eq!(plan(&g, Some(RIVAL_LAMBDA_MAX)).solver, "alg4-pivot");
+    }
+
+    #[test]
+    fn source_round_estimate_is_monotone_in_lambda_and_modest() {
+        assert!(source_round_estimate(1 << 20, 64) >= source_round_estimate(1 << 20, 4));
+        assert!(source_round_estimate(1 << 20, 4) >= source_round_estimate(256, 4));
+        // Sanity: the estimate is a round count, not an astronomical one.
+        assert!(source_round_estimate(1 << 30, 1 << 10) < 1000);
+    }
+
+    #[test]
+    fn plan_component_with_matches_plan_with_on_connected_inputs() {
+        let g = grid(12, 12);
+        let a = plan_with(&g, None, Some(3));
+        let b = plan_component_with(&g, None, Some(3));
+        assert_eq!(a.solver, b.solver);
         assert_eq!(a.reasons, b.reasons);
     }
 

@@ -57,9 +57,9 @@ mod tests {
     #[test]
     fn standard_registry_has_all_families() {
         let r = SolverRegistry::standard();
-        assert!(r.len() >= 12, "expected the full family, got {}", r.len());
+        assert!(r.len() >= 14, "expected the full family, got {}", r.len());
         for name in ["pivot", "alg4-pivot", "mpc-pivot", "simple", "forest", "exact-small",
-            "parallel-pivot", "c4", "clusterwild", "auto"]
+            "parallel-pivot", "c4", "clusterwild", "cal-pivot", "bcmt-pivot", "auto"]
         {
             assert!(r.get(name).is_some(), "{name} missing from registry");
         }

@@ -9,13 +9,19 @@
 use crate::algorithms::alg4::alg4;
 use crate::algorithms::baselines::{c4, clusterwild, parallel_pivot};
 use crate::algorithms::forest::clustering_from_matching;
+use crate::algorithms::greedy_mis::ranks_from_permutation;
 use crate::algorithms::matching::{approx_matching, maximal_matching, maximum_matching_forest};
 use crate::algorithms::mpc_mis::{mpc_pivot, Alg1Params, Alg2Params, Alg3Params, Subroutine};
 use crate::algorithms::pivot::pivot_random;
+use crate::algorithms::rivals::{
+    bcmt_pivot, cal_pivot, rival_eps, rival_input_words, BcmtParams, CalParams,
+};
 use crate::algorithms::simple::simple_clustering;
 use crate::cluster::exact::{solve_exact, MAX_EXACT_N};
 use crate::graph::arboricity::estimate_arboricity;
-use crate::solve::{finish, planner, ModelKind, SolveCtx, SolveReport, SolveRequest, Solver};
+use crate::solve::{
+    finish, planner, simulator_for_words, ModelKind, SolveCtx, SolveReport, SolveRequest, Solver,
+};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -34,6 +40,8 @@ pub fn dispatch(name: &str) -> Option<Box<dyn Solver>> {
         "parallel-pivot" => Some(Box::new(ParallelPivotSolver)),
         "c4" => Some(Box::new(C4Solver)),
         "clusterwild" => Some(Box::new(ClusterWildSolver)),
+        "cal-pivot" => Some(Box::new(CalPivotSolver)),
+        "bcmt-pivot" => Some(Box::new(BcmtPivotSolver)),
         "auto" => Some(Box::new(AutoSolver)),
         _ => None,
     }
@@ -52,6 +60,8 @@ pub const SOLVER_NAMES: &[&str] = &[
     "parallel-pivot",
     "c4",
     "clusterwild",
+    "cal-pivot",
+    "bcmt-pivot",
     "auto",
 ];
 
@@ -125,8 +135,7 @@ impl Solver for MpcPivotSolver {
             &Alg1Params { c_prefix: 1.0, subroutine: sub },
             &mut sim,
         );
-        let rounds = sim.n_rounds();
-        finish(req, ctx, self.name(), run.clustering, Some(rounds), timer)
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
     }
 }
 
@@ -148,7 +157,7 @@ impl Solver for SimpleSolver {
         let lambda = req.lambda_or_estimate();
         let mut sim = req.simulator();
         let run = simple_clustering(&req.graph, lambda, &mut sim);
-        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
     }
 }
 
@@ -182,7 +191,7 @@ impl Solver for ForestSolver {
         let mut sim = req.simulator();
         let run = maximal_matching(g, &mut rng, &mut sim, 64);
         let c = clustering_from_matching(g.n(), &run.matching);
-        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+        finish(req, ctx, self.name(), c, Some(&sim), timer)
     }
 }
 
@@ -204,7 +213,7 @@ impl Solver for ForestMaximalSolver {
         let mut sim = req.simulator();
         let run = maximal_matching(&req.graph, &mut rng, &mut sim, 64);
         let c = clustering_from_matching(req.graph.n(), &run.matching);
-        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+        finish(req, ctx, self.name(), c, Some(&sim), timer)
     }
 }
 
@@ -228,7 +237,7 @@ impl Solver for ForestApproxSolver {
         let maximal = maximal_matching(&req.graph, &mut rng, &mut sim, 64);
         let run = approx_matching(&req.graph, maximal.matching, req.eps, &mut sim);
         let c = clustering_from_matching(req.graph.n(), &run.matching);
-        finish(req, ctx, self.name(), c, Some(sim.n_rounds()), timer)
+        finish(req, ctx, self.name(), c, Some(&sim), timer)
     }
 }
 
@@ -274,7 +283,7 @@ impl Solver for ParallelPivotSolver {
         let perm = rng.permutation(req.graph.n());
         let mut sim = req.simulator();
         let run = parallel_pivot(&req.graph, &perm, req.eps, &mut rng, &mut sim);
-        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
     }
 }
 
@@ -296,7 +305,7 @@ impl Solver for C4Solver {
         let perm = rng.permutation(req.graph.n());
         let mut sim = req.simulator();
         let run = c4(&req.graph, &perm, req.eps, &mut sim);
-        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
     }
 }
 
@@ -318,7 +327,68 @@ impl Solver for ClusterWildSolver {
         let perm = rng.permutation(req.graph.n());
         let mut sim = req.simulator();
         let run = clusterwild(&req.graph, &perm, req.eps, &mut sim);
-        finish(req, ctx, self.name(), run.clustering, Some(run.rounds), timer)
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
+    }
+}
+
+/// Cohen-Addad–Lattanzi et al. constant-round parallel PIVOT
+/// (arxiv 2106.08448) — the head-to-head rival with a geometric
+/// prefix schedule. Rounds depend on ε only, never on n or λ.
+pub struct CalPivotSolver;
+
+impl Solver for CalPivotSolver {
+    fn name(&self) -> &'static str {
+        "cal-pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "CAL constant-round PIVOT rival (arxiv 2106.08448, 3+eps-approx)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let rank = ranks_from_permutation(&rng.permutation(req.graph.n()));
+        let mut sim = simulator_for_words(
+            &req.graph,
+            rival_input_words(&req.graph),
+            req.model,
+            req.delta,
+            req.seed,
+        );
+        let params = CalParams { eps: rival_eps(req.eps) };
+        let run = cal_pivot(&req.graph, &rank, &params, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
+    }
+}
+
+/// Behnezhad–Charikar–Ma–Tan constant-round almost-3-approximation
+/// (arxiv 2205.03710) — truncated whole-graph peeling, ⌈4/ε⌉ phases.
+pub struct BcmtPivotSolver;
+
+impl Solver for BcmtPivotSolver {
+    fn name(&self) -> &'static str {
+        "bcmt-pivot"
+    }
+
+    fn about(&self) -> &'static str {
+        "BCMT constant-round almost-3-approx rival (arxiv 2205.03710)"
+    }
+
+    fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
+        let timer = Timer::start();
+        let mut rng = Rng::new(req.seed);
+        let rank = ranks_from_permutation(&rng.permutation(req.graph.n()));
+        let mut sim = simulator_for_words(
+            &req.graph,
+            rival_input_words(&req.graph),
+            req.model,
+            req.delta,
+            req.seed,
+        );
+        let params = BcmtParams { eps: rival_eps(req.eps) };
+        let run = bcmt_pivot(&req.graph, &rank, &params, &mut sim);
+        finish(req, ctx, self.name(), run.clustering, Some(&sim), timer)
     }
 }
 
@@ -336,7 +406,7 @@ impl Solver for AutoSolver {
     }
 
     fn solve(&self, req: &SolveRequest, ctx: &mut SolveCtx) -> SolveReport {
-        let plan = planner::plan(&req.graph, req.lambda);
+        let plan = planner::plan_with(&req.graph, req.lambda, req.round_budget);
         for line in &plan.reasons {
             ctx.note(format!("planner: {line}"));
         }
@@ -396,7 +466,8 @@ mod tests {
         let mut rng = Rng::new(402);
         let g = lambda_arboric(80, 3, &mut rng);
         let req = req_for(g);
-        for &name in ["pivot", "alg4-pivot", "mpc-pivot", "auto"].iter() {
+        for &name in ["pivot", "alg4-pivot", "mpc-pivot", "cal-pivot", "bcmt-pivot", "auto"].iter()
+        {
             let solver = dispatch(name).unwrap();
             let a = solver.solve(&req, &mut SolveCtx::serial());
             let b = solver.solve(&req, &mut SolveCtx::serial());
@@ -432,6 +503,31 @@ mod tests {
         let report2 = dispatch("forest").unwrap().solve(&req2, &mut ctx);
         assert_eq!(report2.clustering.n(), req2.graph.n());
         assert!(report2.plan.iter().any(|l| l.contains("fallback")));
+    }
+
+    #[test]
+    fn rivals_report_rounds_and_words() {
+        let mut rng = Rng::new(406);
+        let g = lambda_arboric(60, 2, &mut rng);
+        let req = req_for(g);
+        for &name in ["cal-pivot", "bcmt-pivot"].iter() {
+            let report = dispatch(name).unwrap().solve(&req, &mut SolveCtx::serial());
+            let rounds = report.mpc_rounds.expect("rivals charge rounds");
+            assert!(rounds > 0 && rounds % 2 == 0, "{name}: 2 rounds/phase, got {rounds}");
+            assert!(report.mpc_words.expect("rivals charge words") > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn tight_round_budget_reroutes_auto_to_bcmt() {
+        // grid(8,8): degeneracy 2, not a forest, n > 14 — without a
+        // budget this routes to `simple`, with a 2-round budget the
+        // planner prefers constant-round BCMT.
+        let g = crate::graph::generators::grid(8, 8);
+        let req = SolveRequest { round_budget: Some(2), ..req_for(g) };
+        let report = dispatch("auto").unwrap().solve(&req, &mut SolveCtx::serial());
+        assert_eq!(report.solver, "auto:bcmt-pivot", "{:?}", report.plan);
+        assert!(report.plan.iter().any(|l| l.contains("round budget")), "{:?}", report.plan);
     }
 
     #[test]

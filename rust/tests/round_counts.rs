@@ -17,6 +17,7 @@
 use arbocc::algorithms::mpc_mis::alg2::{alg2_process, Alg2Params};
 use arbocc::algorithms::mpc_mis::alg3::{alg3_process, Alg3Params};
 use arbocc::algorithms::mpc_mis::{mpc_pivot, Alg1Params};
+use arbocc::algorithms::rivals::{bcmt_pivot, cal_pivot, rival_input_words, BcmtParams, CalParams};
 use arbocc::data::corpus::WorkloadSpec;
 use arbocc::graph::Graph;
 use arbocc::mpc::broadcast::{Aggregate, BroadcastTree};
@@ -188,6 +189,102 @@ fn golden_alg1_pivot_schedule() {
     want.push(("pivot/join".to_string(), 2, 2));
     assert_eq!(schedule(&sim), want);
     assert_eq!(run.rounds, want.len());
+}
+
+/// CAL's golden schedule on path8/identity ranks (ε = 0.25, geometric
+/// prefix thresholds [2, 3, 4, 5, 7, 8]; one machine — the rival fleet
+/// sizing `(n + 4m).max(4)` = 36 words stays under S(8, 0.5) ≈ 102).
+/// Per phase: announce = 2 words (1 packed rank + 1 envelope) per
+/// (eligible unclustered vertex → unclustered neighbor) edge, claim =
+/// 3 words (2 payload + 1 envelope) per (new pivot → unclustered
+/// neighbor) edge.
+///
+///   phase 1, t=2: eligible {0,1} — 0→1, 1→0, 1→2 = 6 words; local
+///     minimum 0 pivots, claims 1 (3 words); {0,1} clustered
+///   phase 2, t=3: eligible {2} — 2→3 = 2 words (neighbor 1 clustered);
+///     2 pivots unopposed, claims 3 (3 words)
+///   phase 3, t=4: nobody eligible (rank 4 ≥ 4) — both rounds run
+///     empty (the fixed schedule is what makes CAL constant-round; the
+///     fleet can't skip a phase without communicating)
+///   phase 4, t=5: eligible {4} — 4→5 (2 words), pivot, claim (3)
+///   phase 5, t=7: eligible {6} — 6→7 (2 words), pivot, claim (3);
+///     everything clustered, the t=8 phase is skipped by the early exit
+const CAL_PATH8: [(&str, Words, Words); 10] = [
+    ("cal/announce[1]", 6, 6),
+    ("cal/claim[1]", 3, 3),
+    ("cal/announce[2]", 2, 2),
+    ("cal/claim[2]", 3, 3),
+    ("cal/announce[3]", 0, 0),
+    ("cal/claim[3]", 0, 0),
+    ("cal/announce[4]", 2, 2),
+    ("cal/claim[4]", 3, 3),
+    ("cal/announce[5]", 2, 2),
+    ("cal/claim[5]", 3, 3),
+];
+
+/// BCMT's golden schedule on path8/identity ranks (ε = 0.25 ⇒ R = 16
+/// whole-graph peeling phases, early exit after 4). Every unclustered
+/// vertex is always eligible, so each announce ships 2 words per
+/// directed edge of the unclustered subgraph: 7 edges → 28 words, then
+/// 5 → 20, 3 → 12, 1 → 4. With identity ranks the path's only local
+/// minimum each phase is its smallest unclustered vertex, so each claim
+/// round is one pivot claiming one neighbor (3 words): pivots 0, 2, 4,
+/// 6 — the peeling the mpc_mis goldens above pin as PATH8_MIS.
+const BCMT_PATH8: [(&str, Words, Words); 8] = [
+    ("bcmt/announce[1]", 28, 28),
+    ("bcmt/claim[1]", 3, 3),
+    ("bcmt/announce[2]", 20, 20),
+    ("bcmt/claim[2]", 3, 3),
+    ("bcmt/announce[3]", 12, 12),
+    ("bcmt/claim[3]", 3, 3),
+    ("bcmt/announce[4]", 4, 4),
+    ("bcmt/claim[4]", 3, 3),
+];
+
+const RIVAL_PATH8_LABELS: [u32; 8] = [0, 0, 2, 2, 4, 4, 6, 6];
+
+#[test]
+fn golden_cal_schedule() {
+    let (g, rank) = path8();
+    let mut sim = MpcSimulator::new(MpcConfig::model1(g.n(), rival_input_words(&g), 0.5));
+    let run = cal_pivot(&g, &rank, &CalParams { eps: 0.25 }, &mut sim);
+    assert_eq!(run.clustering.labels(), &RIVAL_PATH8_LABELS);
+    assert_eq!(run.phases, 5);
+    assert_eq!(run.rounds, 10);
+    assert_eq!(schedule(&sim), golden(&CAL_PATH8));
+}
+
+#[test]
+fn golden_bcmt_schedule() {
+    let (g, rank) = path8();
+    let mut sim = MpcSimulator::new(MpcConfig::model1(g.n(), rival_input_words(&g), 0.5));
+    let run = bcmt_pivot(&g, &rank, &BcmtParams { eps: 0.25 }, &mut sim);
+    assert_eq!(run.clustering.labels(), &RIVAL_PATH8_LABELS);
+    assert_eq!(run.phases, 4);
+    assert_eq!(run.rounds, 8);
+    assert_eq!(schedule(&sim), golden(&BCMT_PATH8));
+}
+
+#[test]
+fn golden_rival_schedules_are_shard_invariant() {
+    let (g, rank) = path8();
+    for shards in [2usize, 8] {
+        let mut cal_sim = MpcSimulator::sharded(
+            MpcConfig::model1(g.n(), rival_input_words(&g), 0.5),
+            shards,
+        );
+        let cal = cal_pivot(&g, &rank, &CalParams { eps: 0.25 }, &mut cal_sim);
+        assert_eq!(cal.clustering.labels(), &RIVAL_PATH8_LABELS, "{shards} shards");
+        assert_eq!(schedule(&cal_sim), golden(&CAL_PATH8), "{shards} shards");
+
+        let mut bcmt_sim = MpcSimulator::sharded(
+            MpcConfig::model1(g.n(), rival_input_words(&g), 0.5),
+            shards,
+        );
+        let bcmt = bcmt_pivot(&g, &rank, &BcmtParams { eps: 0.25 }, &mut bcmt_sim);
+        assert_eq!(bcmt.clustering.labels(), &RIVAL_PATH8_LABELS, "{shards} shards");
+        assert_eq!(schedule(&bcmt_sim), golden(&BCMT_PATH8), "{shards} shards");
+    }
 }
 
 #[test]
