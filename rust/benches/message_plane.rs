@@ -1,11 +1,16 @@
-//! §MPC message plane — the flat-arena wire format vs the retired
-//! per-message plane (round throughput, arena-vs-permsg speedup, codec
-//! frames/s, deterministic tree schedules). Thin wrapper over the
-//! `mpc/plane_*` scenarios registered in
+//! §MPC message plane — the pooled flat-arena wire format vs the retired
+//! per-message plane (round throughput, arena-vs-permsg and u64-vs-u32
+//! width speedups, codec frames/s, deterministic tree schedules). Thin
+//! wrapper over the `mpc/plane_*` scenarios registered in
 //! `arbocc::bench::scenarios::message_plane`; run the whole lab with
 //! `arbocc bench` or just this bin's slice via
 //!
 //!     cargo bench --bench message_plane [-- --tier smoke]
+
+// The counting allocator enables the `allocs_per_round` metric of
+// `mpc/plane_round_throughput`; scenarios probe for it at run time.
+#[global_allocator]
+static ALLOC: arbocc::util::alloc::CountingAlloc = arbocc::util::alloc::CountingAlloc;
 
 fn main() {
     arbocc::bench::suite::run_bin("message_plane");

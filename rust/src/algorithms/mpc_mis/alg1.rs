@@ -99,6 +99,12 @@ pub fn alg1_greedy_mis(
     let pool = sim.pool();
     let mut pos = 0usize;
     let mut phase = 0usize;
+    // Phase-recycled scratch: the alive list and both vertex-indexed
+    // markers are reused across phases (cleared in place, capacity warm)
+    // instead of reallocated O(n) per phase.
+    let mut alive: Vec<u32> = Vec::new();
+    let mut in_alive = vec![false; n];
+    let mut unprocessed = vec![false; n];
     while pos < n {
         // Δ/2^i target for this phase (≥ 1).
         let target_delta = ((delta0 as f64) / (1u64 << phase.min(62)) as f64).max(1.0);
@@ -111,15 +117,19 @@ pub fn alg1_greedy_mis(
         // shard-parallel scan over the alive prefix vertices, with a flat
         // vertex-indexed membership marker (no hash structures on the
         // deterministic path).
-        let alive: Vec<u32> =
-            order.iter().copied().filter(|&v| !blocked[v as usize]).collect();
-        let mut in_alive = vec![false; n];
+        alive.clear();
+        alive.extend(order.iter().copied().filter(|&v| !blocked[v as usize]));
         for &v in &alive {
             in_alive[v as usize] = true;
         }
         let prefix_max_degree = pool.max_by(alive.len(), |i| {
             g.neighbors(alive[i]).iter().filter(|&&u| in_alive[u as usize]).count() as u64
         }) as usize;
+        // Un-mark only the set entries, leaving the marker clean for the
+        // next phase.
+        for &v in &alive {
+            in_alive[v as usize] = false;
+        }
 
         let rounds_before = sim.n_rounds();
         match &params.subroutine {
@@ -136,7 +146,7 @@ pub fn alg1_greedy_mis(
 
         // Residual degree among unprocessed alive vertices (Lemma 22) —
         // the heaviest per-phase scan, sharded across the pool.
-        let mut unprocessed = vec![false; n];
+        unprocessed.fill(false);
         for &v in &perm[pos..] {
             if !blocked[v as usize] {
                 unprocessed[v as usize] = true;

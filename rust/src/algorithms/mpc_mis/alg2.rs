@@ -93,8 +93,10 @@ pub fn alg2_process(
     sim.round("alg2/degree-aggregate", 1, 1, nprefix as Words, 2);
 
     // Chunk-local index scratch, reused across chunks: `u32::MAX` marks
-    // "not in the current chunk" (only touched slots are reset).
+    // "not in the current chunk" (only touched slots are reset). The
+    // alive list and component tallies are likewise chunk-recycled.
     let mut chunk_index: Vec<u32> = vec![u32::MAX; g.n()];
+    let mut scratch = ChunkScratch::default();
     let mut pos = 0usize;
     let mut phase = 0u32;
     while pos < nprefix {
@@ -110,12 +112,22 @@ pub fn alg2_process(
             let end = (pos + c_i).min(nprefix);
             let chunk = &order[pos..end];
             pos = end;
-            process_chunk(g, chunk, blocked, in_mis, sim, &mut stats, &mut chunk_index);
+            process_chunk(g, chunk, blocked, in_mis, sim, &mut stats, &mut chunk_index, &mut scratch);
         }
         stats.phases += 1;
         phase += 1;
     }
     stats
+}
+
+/// Chunk-recycled scratch for [`process_chunk`]: cleared (capacity kept)
+/// per chunk instead of reallocated, the same `clear()`-not-drop policy
+/// as the message plane's round arena.
+#[derive(Debug, Default)]
+struct ChunkScratch {
+    alive: Vec<u32>,
+    comp_size: Vec<usize>,
+    comp_words: Vec<Words>,
 }
 
 /// Resolve one chunk: gather each connected component of the chunk graph
@@ -125,6 +137,7 @@ pub fn alg2_process(
 /// `chunk_index` is the caller's vertex-indexed scratch (`u32::MAX` =
 /// not in chunk); all component tallies are Vec-indexed by chunk-local
 /// UnionFind roots, so nothing here depends on hash iteration order.
+#[allow(clippy::too_many_arguments)]
 fn process_chunk(
     g: &Graph,
     chunk: &[u32],
@@ -133,9 +146,12 @@ fn process_chunk(
     sim: &mut MpcSimulator,
     stats: &mut Alg2Stats,
     chunk_index: &mut [u32],
+    scratch: &mut ChunkScratch,
 ) {
+    let ChunkScratch { alive, comp_size, comp_words } = scratch;
     // Alive = not yet knocked out by earlier chunks/prefixes.
-    let alive: Vec<u32> = chunk.iter().copied().filter(|&v| !blocked[v as usize]).collect();
+    alive.clear();
+    alive.extend(chunk.iter().copied().filter(|&v| !blocked[v as usize]));
     if alive.is_empty() {
         // A chunk with no surviving vertices is known empty from π and the
         // already-published statuses; no synchronous round is needed.
@@ -157,8 +173,10 @@ fn process_chunk(
     // Component sizes and memory footprint (topology words of the largest
     // component: members + their chunk-internal adjacency), tallied into
     // root-indexed vectors (non-roots stay zero).
-    let mut comp_size = vec![0usize; alive.len()];
-    let mut comp_words: Vec<Words> = vec![0; alive.len()];
+    comp_size.clear();
+    comp_size.resize(alive.len(), 0);
+    comp_words.clear();
+    comp_words.resize(alive.len(), 0);
     for (i, &v) in alive.iter().enumerate() {
         let root = uf.find(i as u32) as usize;
         comp_size[root] += 1;

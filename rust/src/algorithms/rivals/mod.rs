@@ -38,7 +38,11 @@
 //! the engine sits in the audit's deterministic class), and every
 //! message moves through the flat-arena plane, so schedules are
 //! shard-invariant and pinned by `tests/round_counts.rs` exactly like
-//! Algorithms 1–3.
+//! Algorithms 1–3. The engine picks the narrow `u32` wire plane whenever
+//! ids fit (ledger charges are width-invariant, so the pinned schedules
+//! don't move) and ships each vertex's fan-out through the outbox's bulk
+//! `append_runs` path — one ledger charge per announcing vertex instead
+//! of one per edge, with a byte-identical frame stream.
 //!
 //! [`Router::round`]: crate::mpc::router::Router::round
 //! [`RankAnnounce`]: crate::mpc::wire::RankAnnounce
@@ -55,7 +59,7 @@ use crate::graph::Graph;
 use crate::mpc::memory::Words;
 use crate::mpc::router::Router;
 use crate::mpc::simulator::MpcSimulator;
-use crate::mpc::wire::{PivotClaim, RankAnnounce};
+use crate::mpc::wire::{PivotClaim, RankAnnounce, WordWidth};
 
 /// Label value for a vertex no phase has clustered yet.
 const UNCLUSTERED: u32 = u32::MAX;
@@ -125,10 +129,26 @@ pub fn pivot_phase_engine(
     label: &str,
     sim: &mut MpcSimulator,
 ) -> RivalRun {
+    let machines = sim.config.machines.max(1);
+    pivot_phase_engine_on(g, rank, thresholds, label, sim, WordWidth::for_ids(g.n(), machines))
+}
+
+/// [`pivot_phase_engine`] at a forced wire width. The default entry point
+/// selects the narrow `u32` plane whenever ids fit (always, for `u32`
+/// vertex ids on realistic fleets); parity tests force both widths and
+/// pin that traces, ledgers and clusterings are bit-identical.
+pub fn pivot_phase_engine_on(
+    g: &Graph,
+    rank: &[u32],
+    thresholds: &[u32],
+    label: &str,
+    sim: &mut MpcSimulator,
+    width: WordWidth,
+) -> RivalRun {
     let n = g.n();
     assert_eq!(rank.len(), n, "rank must cover every vertex");
     let machines = sim.config.machines.max(1);
-    let router = Router::new(machines);
+    let router = Router::with_width(machines, width);
 
     let mut labels = vec![UNCLUSTERED; n];
     // Vertex-indexed per-phase scratch (reset per phase, no hash maps).
@@ -147,20 +167,23 @@ pub fn pivot_phase_engine(
         let p = i + 1;
 
         // Round 1: eligible unclustered vertices announce their rank to
-        // every unclustered neighbor (the prefix subgraph's edges).
+        // every unclustered neighbor (the prefix subgraph's edges). Each
+        // vertex's fan-out goes through the bulk `append_runs` path: one
+        // ledger charge and one destination check per run instead of per
+        // edge, with a frame stream identical to per-message sends.
         let announces = router.round(sim, &format!("{label}/announce[{p}]"), |m, out| {
             for v in (m..n).step_by(machines) {
                 if labels[v] != UNCLUSTERED || rank[v] >= t {
                     continue;
                 }
-                for &u in g.neighbors(v as u32) {
-                    if labels[u as usize] == UNCLUSTERED {
-                        out.send(
-                            u as usize % machines,
-                            &RankAnnounce { vertex: u, rank: rank[v] },
-                        );
-                    }
-                }
+                out.append_runs(
+                    g.neighbors(v as u32)
+                        .iter()
+                        .filter(|&&u| labels[u as usize] == UNCLUSTERED)
+                        .map(|&u| {
+                            (u as usize % machines, RankAnnounce { vertex: u, rank: rank[v] })
+                        }),
+                );
             }
         });
         for m in 0..machines {
@@ -184,14 +207,17 @@ pub fn pivot_phase_engine(
                 if !is_pivot[v] {
                     continue;
                 }
-                for &u in g.neighbors(v as u32) {
-                    if labels[u as usize] == UNCLUSTERED {
-                        out.send(
-                            u as usize % machines,
-                            &PivotClaim { vertex: u, pivot: v as u32, rank: rank[v] },
-                        );
-                    }
-                }
+                out.append_runs(
+                    g.neighbors(v as u32)
+                        .iter()
+                        .filter(|&&u| labels[u as usize] == UNCLUSTERED)
+                        .map(|&u| {
+                            (
+                                u as usize % machines,
+                                PivotClaim { vertex: u, pivot: v as u32, rank: rank[v] },
+                            )
+                        }),
+                );
             }
         });
         for v in 0..n {

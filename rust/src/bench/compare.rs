@@ -99,6 +99,16 @@ impl Comparison {
     pub fn has_regressions(&self) -> bool {
         self.deltas.iter().any(|d| d.verdict == Verdict::Regression)
     }
+
+    /// Regressions restricted to scenarios whose name contains one of
+    /// `filters` — the `--gate` scope. An empty filter list keeps every
+    /// regression (the default gate covers the whole suite).
+    pub fn gated_regressions(&self, filters: &[String]) -> Vec<&MetricDelta> {
+        self.regressions()
+            .into_iter()
+            .filter(|d| filters.is_empty() || filters.iter().any(|f| d.scenario.contains(f.as_str())))
+            .collect()
+    }
 }
 
 fn judge(
@@ -404,6 +414,21 @@ mod tests {
         assert!(verdicts.contains(&Verdict::New));
         assert!(verdicts.contains(&Verdict::Missing));
         assert!(!cmp.has_regressions());
+    }
+
+    #[test]
+    fn gate_filters_scope_regressions_by_scenario() {
+        let old = suite("old", &[("latency", 10.0, 0.0, Direction::Lower)]);
+        let new = suite("new", &[("latency", 20.0, 0.0, Direction::Lower)]);
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        assert_eq!(cmp.gated_regressions(&[]).len(), 1);
+        assert_eq!(cmp.gated_regressions(&["demo/".to_string()]).len(), 1);
+        // Two filters, one matching.
+        let filters = vec!["mpc/plane_".to_string(), "demo/scen".to_string()];
+        assert_eq!(cmp.gated_regressions(&filters).len(), 1);
+        // No filter matches: the regression is reported but not gated.
+        assert!(cmp.gated_regressions(&["perf/p8".to_string()]).is_empty());
+        assert!(cmp.has_regressions());
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! §MPC message-plane scenarios (bin `message_plane`): the flat-arena
-//! wire format measured against the retired per-message plane.
+//! §MPC message-plane scenarios (bin `message_plane`): the pooled
+//! flat-arena wire format measured against the retired per-message
+//! plane, and the narrow (u32) storage width against the wide one.
 //!
 //! The plane refactor exists so rounds cost what the *algorithms* cost,
 //! not what the allocator costs — the same motive as P8's shard speedup
@@ -7,10 +8,16 @@
 //! family records:
 //!
 //! * `mpc/plane_round_throughput` — words/s and µs/message through
-//!   [`Router::round`] on a fan-out schedule with multi-word payloads;
+//!   [`Router::round`] on a fan-out schedule with multi-word payloads,
+//!   plus the steady-state heap-allocation count of a warm pooled round
+//!   (when the host binary installs the counting allocator);
 //! * `mpc/plane_vs_permsg`       — the same schedule through the arena
 //!   plane vs a faithful reproduction of the retired one-`Vec<u64>`-per-
 //!   message plane (identical ledger accounting), with the speedup gated;
+//! * `mpc/plane_width_speedup`   — the identical id schedule on the u64
+//!   vs the u32 storage plane: traces must match word-for-word (ledger
+//!   charges model words, not storage units) while the narrow plane
+//!   moves half the bytes at the barrier — the speedup is gated;
 //! * `mpc/plane_codecs`          — typed [`Encode`]/[`Decode`] frame
 //!   round-trips per second (the codec layer must stay free);
 //! * `mpc/plane_tree_schedule`   — the broadcast/convergecast trees on
@@ -21,8 +28,12 @@ use crate::bench::harness::bench_with;
 use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
 use crate::mpc::broadcast::{Aggregate, BroadcastTree};
 use crate::mpc::router::Router;
-use crate::mpc::wire::{Decode, Encode, LabelUpdate, VertexStatus, WireOutbox, per_message_round};
+use crate::mpc::wire::{
+    per_message_round, Decode, Encode, LabelUpdate, SlabBuf, SlabReader, SlabWriter, VertexStatus,
+    WireOutbox, WordWidth,
+};
 use crate::mpc::{MpcConfig, MpcSimulator};
+use crate::util::alloc;
 use crate::util::table::fnum;
 
 const BIN: &str = "message_plane";
@@ -31,7 +42,7 @@ pub fn register(r: &mut Registry) {
     r.register(Scenario {
         name: "mpc/plane_round_throughput",
         bin: BIN,
-        about: "flat-arena router round (words/s, µs/message)",
+        about: "pooled router round (words/s, µs/message, allocs/round)",
         run: plane_round_throughput,
     });
     r.register(Scenario {
@@ -39,6 +50,12 @@ pub fn register(r: &mut Registry) {
         bin: BIN,
         about: "arena plane vs retired per-message plane (speedup)",
         run: plane_vs_permsg,
+    });
+    r.register(Scenario {
+        name: "mpc/plane_width_speedup",
+        bin: BIN,
+        about: "u64 vs u32 storage plane, identical schedule (speedup)",
+        run: plane_width_speedup,
     });
     r.register(Scenario {
         name: "mpc/plane_codecs",
@@ -68,13 +85,15 @@ fn fan_dst(machines: usize, m: usize, k: usize) -> usize {
     (m * 7 + k * 13 + 1) % machines
 }
 
-/// Arena-side builder: payloads are stack arrays appended straight into
-/// the shard slab — zero heap allocations per message, the point of the
-/// plane.
+/// Arena-side builder: payloads are stack arrays of vertex ids appended
+/// straight into the shard slab — zero heap allocations per message, the
+/// point of the plane. Ids (not raw u64s) so the same builder exercises
+/// both storage widths: on the u32 plane each id frame occupies half the
+/// bytes while the ledger words are unchanged.
 fn arena_build(machines: usize) -> impl Fn(usize, &mut WireOutbox) + Sync {
     move |m: usize, out: &mut WireOutbox| {
         for k in 0..FAN {
-            out.send_words(fan_dst(machines, m, k), &[(m + k) as u64; PAYLOAD_WORDS]);
+            out.send_ids(fan_dst(machines, m, k), &[(m + k) as u32; PAYLOAD_WORDS]);
         }
     }
 }
@@ -112,6 +131,24 @@ fn plane_round_throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
     let value = m.median_s * 1e6 / msgs;
     let noise = (m.mad_s * 1e6 / msgs).max(ScenarioRecord::TIMING_REL_NOISE_FLOOR * value);
     rec.metric_with_noise("us_per_message", value, noise, Direction::Lower);
+
+    // Steady-state allocation count of one warm pooled round: after the
+    // arena has seen a few rounds, slabs/ledgers/inboxes are recycled and
+    // a round should cost only the executor's own bookkeeping (trace
+    // label, round stats). Counted only when the host binary installed
+    // the counting allocator (the bench bins and the CLI do; the
+    // unit-test harness does not).
+    if alloc::installed() {
+        let mut sim = plane_sim();
+        for _ in 0..4 {
+            std::hint::black_box(router.round(&mut sim, "warm", &build));
+        }
+        let before = alloc::allocations();
+        std::hint::black_box(router.round(&mut sim, "warm", &build));
+        let per_round = (alloc::allocations() - before) as f64;
+        println!("    ⇒ {per_round} heap allocations in a warm round");
+        rec.metric_with_noise("allocs_per_round", per_round, 2.0, Direction::Lower);
+    }
     rec
 }
 
@@ -121,7 +158,8 @@ fn plane_vs_permsg(ctx: &ScenarioCtx) -> ScenarioRecord {
     let build = arena_build(machines);
     let router = Router::new(machines);
 
-    // Parity check before timing: same trace, same delivered stream.
+    // Parity check before timing: same trace, same delivered stream
+    // (ids widen back to the exact u64 words the retired plane carried).
     {
         let mut arena_sim = plane_sim();
         let arena = router.round(&mut arena_sim, "round", &build);
@@ -131,7 +169,7 @@ fn plane_vs_permsg(ctx: &ScenarioCtx) -> ScenarioRecord {
         assert_eq!(arena_sim.trace(), legacy_sim.trace(), "plane traces diverged");
         for (m, want) in legacy.iter().enumerate() {
             let got: Vec<(usize, Vec<u64>)> =
-                arena.inbox(m).iter().map(|w| (w.from, w.payload.to_vec())).collect();
+                arena.inbox(m).iter().map(|w| (w.from, w.to_words())).collect();
             assert_eq!(&got, want, "machine {m}: delivery diverged");
         }
     }
@@ -159,6 +197,48 @@ fn plane_vs_permsg(ctx: &ScenarioCtx) -> ScenarioRecord {
     rec
 }
 
+fn plane_width_speedup(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let machines = ctx.size(128, 512);
+    let build = arena_build(machines);
+    let wide = Router::with_width(machines, WordWidth::W64);
+    let narrow = Router::with_width(machines, WordWidth::W32);
+
+    // Parity check before timing: the storage width is invisible to the
+    // model — charged schedule and decoded streams must be bit-identical.
+    {
+        let mut sim64 = plane_sim();
+        let a = wide.round(&mut sim64, "round", &build);
+        let mut sim32 = plane_sim();
+        let b = narrow.round(&mut sim32, "round", &build);
+        assert_eq!(sim64.trace(), sim32.trace(), "storage width changed the charged schedule");
+        for m in 0..machines {
+            let x: Vec<(usize, Vec<u64>)> =
+                a.inbox(m).iter().map(|w| (w.from, w.to_words())).collect();
+            let y: Vec<(usize, Vec<u64>)> =
+                b.inbox(m).iter().map(|w| (w.from, w.to_words())).collect();
+            assert_eq!(x, y, "machine {m}: storage width changed delivery");
+        }
+    }
+
+    let m64 = bench_with(&format!("u64 plane ({machines} machines × {FAN} id msgs)"), &cfg, || {
+        let mut sim = plane_sim();
+        std::hint::black_box(wide.round(&mut sim, "bench", &build));
+    });
+    println!("{m64}");
+    let m32 = bench_with(&format!("u32 plane ({machines} machines × {FAN} id msgs)"), &cfg, || {
+        let mut sim = plane_sim();
+        std::hint::black_box(narrow.round(&mut sim, "bench", &build));
+    });
+    println!("{m32}");
+    println!("    ⇒ narrow-width speedup ×{}", fnum(m64.median_s / m32.median_s.max(1e-12)));
+    let mut rec = ScenarioRecord::new();
+    rec.speedup_metric("width_speedup", &m64, &m32);
+    rec.time_metric("u64_round", &m64);
+    rec.time_metric("u32_round", &m32);
+    rec
+}
+
 fn plane_codecs(ctx: &ScenarioCtx) -> ScenarioRecord {
     let cfg = ctx.bench_cfg();
     let frames = ctx.size(50_000, 500_000);
@@ -168,22 +248,30 @@ fn plane_codecs(ctx: &ScenarioCtx) -> ScenarioRecord {
     let labels: Vec<LabelUpdate> = (0..frames)
         .map(|i| LabelUpdate { vertex: i as u32, label: (i / 7) as u32 })
         .collect();
-    let mut slab: Vec<u64> = Vec::with_capacity(2 * frames);
+    // Both frame types are one pair-packed word = one u64 unit, so frame
+    // `i` lives in slab units `i..i+1`.
+    let mut slab = SlabBuf::new(WordWidth::W64);
+    slab.reserve(2 * frames);
     let m = bench_with(&format!("codec round-trip ({} frames)", 2 * frames), &cfg, || {
         slab.clear();
-        for s in &statuses {
-            s.encode(&mut slab);
-        }
-        for l in &labels {
-            l.encode(&mut slab);
+        {
+            let mut w = SlabWriter::new(&mut slab);
+            for s in &statuses {
+                s.encode_into(&mut w);
+            }
+            for l in &labels {
+                l.encode_into(&mut w);
+            }
         }
         let mut acc = 0u64;
-        for w in slab.chunks_exact(1).take(frames) {
-            let s: VertexStatus = VertexStatus::decode(w).expect("status frame");
+        for i in 0..frames {
+            let s: VertexStatus =
+                VertexStatus::decode(SlabReader::new(slab.view(i..i + 1))).expect("status frame");
             acc = acc.wrapping_add(u64::from(s.vertex));
         }
-        for w in slab[frames..].chunks_exact(1) {
-            let l: LabelUpdate = LabelUpdate::decode(w).expect("label frame");
+        for i in frames..2 * frames {
+            let l: LabelUpdate =
+                LabelUpdate::decode(SlabReader::new(slab.view(i..i + 1))).expect("label frame");
             acc = acc.wrapping_add(u64::from(l.label));
         }
         std::hint::black_box(acc);

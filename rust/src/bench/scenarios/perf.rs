@@ -190,6 +190,12 @@ fn p5_triangles(ctx: &ScenarioCtx) -> ScenarioRecord {
 }
 
 fn p6_router(ctx: &ScenarioCtx) -> ScenarioRecord {
+    // This µs/message figure rides two executor-layer fixes recorded in
+    // BENCH_PR8: the router's pooled round arena (outboxes, inboxes and
+    // ledgers recycled across rounds instead of reallocated) and the
+    // shard pool's arithmetic `range_of` (no per-round `Vec<Range>` on
+    // the `run`/seeded paths) — compare against the PR 7 baseline to see
+    // the delta.
     let cfg = ctx.bench_cfg();
     let machines = 64;
     let router = Router::new(machines);

@@ -1,0 +1,168 @@
+//! Pooled per-round scratch for the router: the allocation-recycling
+//! half of the flat-arena message plane.
+//!
+//! PR 5 made a round *one slab per shard* instead of one `Vec` per
+//! message; this module makes steady-state rounds reuse those slabs
+//! instead of reallocating them. A [`RoundArena`] owns every reusable
+//! body the round barrier needs — shard outboxes, the receiver-side
+//! sizing scratch, the receive shard ledger, the two fleet ledgers the
+//! barrier absorbs into, and the inbox reclaim bin — and
+//! [`Router::round`](crate::mpc::router::Router::round) borrows the lot
+//! for the duration of one round.
+//!
+//! The recycling policy is uniformly **`clear()`, not drop**: every
+//! buffer is rewound to length zero but keeps its high-water-mark
+//! capacity, so after the first round (or the first round at a new
+//! fleet/width shape) the plane's steady state performs no heap
+//! allocation — outbox slabs, index Vecs, receiver slabs, ledgers and
+//! sizing scratch are all reused. Inbox bodies complete the cycle
+//! through the reclaim bin: a [`RoundInboxes`](crate::mpc::wire::RoundInboxes)
+//! built by a pooling router returns its slabs there when dropped, and
+//! the next barrier pops them back out.
+//!
+//! The arena never influences *what* a round computes: it holds no
+//! message data across rounds (everything is cleared before reuse), and
+//! ledger charges are taken on freshly-zeroed tallies. It is invisible
+//! to the model — only to the allocator.
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::mpc::memory::{MemoryLedger, ShardLedger, Words};
+use crate::mpc::wire::{DeliverScratch, InboxReclaim, WireOutbox, WordWidth};
+
+/// Reusable round-barrier state, shared behind the router's `Arc`.
+///
+/// Interior mutability (a `Mutex`, never contended in the common case of
+/// one round at a time per router) keeps `Router::round`'s signature
+/// `&self`, exactly as before pooling. If two threads do race rounds on
+/// one router, they serialize on the arena — correct, just not pooled
+/// across the two streams.
+#[derive(Debug, Default)]
+pub struct RoundArena {
+    core: Mutex<ArenaCore>,
+}
+
+/// The arena's contents; field-level access is crate-internal (the
+/// router is the only consumer).
+#[derive(Debug, Default)]
+pub(crate) struct ArenaCore {
+    /// Idle outboxes awaiting the next round's shards (capacity warm).
+    pub(crate) seeds: Vec<WireOutbox>,
+    /// Shard-order outboxes of the round in flight (drained back into
+    /// `seeds` at the barrier).
+    pub(crate) built: Vec<WireOutbox>,
+    /// Receiver-side sizing scratch for `RoundInboxes::deliver`.
+    pub(crate) deliver: DeliverScratch,
+    /// The receive-side shard ledger (re-targeted every round).
+    pub(crate) recv: Option<ShardLedger>,
+    /// Fleet ledger the send shards are absorbed into.
+    pub(crate) sent_fleet: MemoryLedger,
+    /// Fleet ledger the receive tallies are absorbed into.
+    pub(crate) recv_fleet: MemoryLedger,
+    /// Pool of cleared inbox bodies (shared with outstanding inboxes).
+    pub(crate) reclaim: InboxReclaim,
+}
+
+impl RoundArena {
+    pub fn new() -> RoundArena {
+        RoundArena::default()
+    }
+
+    /// Borrow the arena for one round. A poisoned lock is recovered, not
+    /// propagated: poisoning here only means a previous round panicked
+    /// mid-barrier (e.g. a strict-mode model violation unwound through
+    /// `round_checked`), and every `reset`/`reconfigure` call at the top
+    /// of the next round re-normalizes the state before use.
+    pub(crate) fn lock(&self) -> MutexGuard<'_, ArenaCore> {
+        self.core.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+impl ArenaCore {
+    /// Top up the seed pool so the next round can hand one outbox to
+    /// each of `shards` shard workers.
+    pub(crate) fn ensure_seeds(&mut self, shards: usize, width: WordWidth) {
+        while self.seeds.len() < shards {
+            self.seeds.push(WireOutbox::empty(width));
+        }
+    }
+
+    /// Re-target the pooled receive ledger at `0..machines`, zeroed.
+    pub(crate) fn recv_ledger(&mut self, machines: usize) -> &mut ShardLedger {
+        match &mut self.recv {
+            Some(ledger) => {
+                ledger.reset(0..machines);
+            }
+            None => self.recv = Some(ShardLedger::new(0..machines)),
+        }
+        self.recv.as_mut().expect("just installed")
+    }
+
+    /// Re-target both pooled fleet ledgers for a barrier over `machines`
+    /// machines with local budget `s_words` and global budget
+    /// `global_words` (receive side is globally unbounded, matching the
+    /// pre-pooling barrier exactly).
+    pub(crate) fn fleet_ledgers(
+        &mut self,
+        machines: usize,
+        s_words: Words,
+        global_words: Words,
+    ) -> (&mut MemoryLedger, &mut MemoryLedger) {
+        self.sent_fleet.reconfigure(machines, s_words, global_words);
+        self.recv_fleet.reconfigure(machines, s_words, Words::MAX);
+        (&mut self.sent_fleet, &mut self.recv_fleet)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_top_up_and_recycle() {
+        let arena = RoundArena::new();
+        let mut core = arena.lock();
+        core.ensure_seeds(3, WordWidth::W32);
+        assert_eq!(core.seeds.len(), 3);
+        assert_eq!(core.seeds[0].width(), WordWidth::W32);
+        // A smaller round keeps the surplus seeds warm.
+        core.ensure_seeds(1, WordWidth::W32);
+        assert_eq!(core.seeds.len(), 3);
+    }
+
+    #[test]
+    fn recv_ledger_is_retargeted_not_reallocated() {
+        let arena = RoundArena::new();
+        let mut core = arena.lock();
+        core.recv_ledger(4).charge(2, 7);
+        let l = core.recv_ledger(2);
+        assert_eq!(l.machines(), 2);
+        assert_eq!(l.total(), 0, "retarget zeroes old tallies");
+    }
+
+    #[test]
+    fn fleet_ledgers_reconfigure_budgets() {
+        let arena = RoundArena::new();
+        let mut core = arena.lock();
+        let (sent, recv) = core.fleet_ledgers(3, 10, 100);
+        assert!(sent.charge(0, 11).is_err(), "local budget enforced");
+        assert!(recv.charge(0, 11).is_err(), "receive local budget enforced");
+        let (sent, _) = core.fleet_ledgers(3, 1000, 100);
+        assert_eq!(sent.total(), 0, "reconfigure zeroes previous charges");
+        assert!(sent.charge(0, 11).is_ok());
+    }
+
+    #[test]
+    fn poisoned_arena_recovers() {
+        let arena = std::sync::Arc::new(RoundArena::new());
+        let a2 = arena.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = a2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        let mut core = arena.lock();
+        core.ensure_seeds(1, WordWidth::W64);
+        assert_eq!(core.seeds.len(), 1);
+    }
+}

@@ -104,14 +104,18 @@ impl BroadcastTree {
             .collect();
         let mut sent = vec![false; self.machines];
         let mut level = 0usize;
+        // One reusable firing buffer for the whole cascade: refilled in
+        // place each round, so the per-level loop allocates nothing of
+        // its own (the routed rounds underneath run on the pooled arena).
+        let mut firing = vec![false; self.machines];
         loop {
             // Which machines fire this round (all children reported, not
             // yet sent). A plain scan: the predicate is a few loads per
             // machine, far below the cost of fanning out to the pool —
             // the sharded work is the outbox construction below.
-            let firing: Vec<bool> = (0..self.machines)
-                .map(|m| m > 0 && !sent[m] && pending[m] == 0)
-                .collect();
+            for (m, fires) in firing.iter_mut().enumerate() {
+                *fires = m > 0 && !sent[m] && pending[m] == 0;
+            }
             if !firing.iter().any(|&fires| fires) {
                 break;
             }

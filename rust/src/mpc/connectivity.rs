@@ -35,28 +35,44 @@ pub fn mpc_components(g: &Graph, sim: &mut MpcSimulator) -> MpcComponents {
     let rounds_before = sim.n_rounds();
     let max_deg = g.max_degree() as Words;
     let pool = sim.pool();
+    // Round-recycled scratch: per-shard output buffers ride the seeded
+    // pool API (drained in, recycled out each round with capacity warm),
+    // and `label`/`next` ping-pong via swap — after the first round the
+    // O(log D) loop allocates nothing.
+    let mut seeds: Vec<Vec<u32>> = Vec::new();
+    let mut parts: Vec<(Vec<u32>, bool)> = Vec::new();
+    let mut next: Vec<u32> = Vec::with_capacity(n);
     loop {
         // (a) neighbor min-exchange — per-vertex local compute over the
         // previous labels, sharded on the pool and merged in shard order.
-        let parts: Vec<(Vec<u32>, bool)> = pool.run_fine(n, |_, range| {
-            let mut out = Vec::with_capacity(range.len());
+        while seeds.len() < pool.shard_count(n) {
+            seeds.push(Vec::new());
+        }
+        let label_now = &label;
+        pool.run_fine_seeded(n, &mut seeds, &mut parts, |_, range, mut out: Vec<u32>| {
+            out.clear();
+            out.reserve(range.len());
             let mut shard_changed = false;
             for v in range {
-                let mut best = label[v];
+                let mut best = label_now[v];
                 for &u in g.neighbors(v as u32) {
-                    best = best.min(label[u as usize]);
+                    best = best.min(label_now[u as usize]);
                 }
-                shard_changed |= best < label[v];
+                shard_changed |= best < label_now[v];
                 out.push(best);
             }
             (out, shard_changed)
         });
         let mut changed = false;
-        let mut next: Vec<u32> = Vec::with_capacity(n);
-        for (part, shard_changed) in parts {
-            next.extend_from_slice(&part);
-            changed |= shard_changed;
+        next.clear();
+        for (part, shard_changed) in &parts {
+            next.extend_from_slice(part);
+            changed |= *shard_changed;
         }
+        seeds.extend(parts.drain(..).map(|(mut part, _)| {
+            part.clear();
+            part
+        }));
         sim.round("components/exchange", max_deg, max_deg, 2 * g.m() as Words, max_deg + 1);
         // (b) pointer jumping: label <- label[label].
         for v in 0..n {
@@ -67,7 +83,7 @@ pub fn mpc_components(g: &Graph, sim: &mut MpcSimulator) -> MpcComponents {
             }
         }
         sim.round("components/jump", 2, 2, n as Words, 2);
-        label = next;
+        std::mem::swap(&mut label, &mut next);
         if !changed {
             break;
         }

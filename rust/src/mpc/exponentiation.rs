@@ -121,42 +121,56 @@ pub fn gather_balls(
     };
 
     let pool = sim.pool();
+    // Per-shard free-lists of retired ball buffers: each doubling's
+    // accumulators are drawn from (and the previous generation's Vecs
+    // recycled into) these, so successive doublings reuse ball capacity
+    // instead of reallocating one Vec per ball per round.
+    let mut shard_free: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut shard_doubled: Vec<Result<(Vec<Vec<u32>>, Vec<Vec<u32>>), ()>> = Vec::new();
     while radius < target_radius {
         // Tentatively double, one shard per contiguous slice of target
         // balls (the round's per-machine local compute). A shard aborts as
         // soon as any of its balls would exceed the memory cap — the
         // sequential early-abort, applied shard-locally — and the barrier
         // discards the whole tentative doubling if any shard aborted.
-        let shard_doubled: Vec<Result<Vec<Vec<u32>>, ()>> =
-            pool.run(balls.len(), |_, range| {
-                let mut out: Vec<Vec<u32>> = Vec::with_capacity(range.len());
-                let mut scratch: Vec<u32> = Vec::new();
-                for ball in &balls[range] {
-                    let mut acc: Vec<u32> = Vec::new();
-                    for &u in ball {
-                        let src: &[u32] = if growing_all {
-                            &balls[u as usize]
-                        } else {
-                            &global_balls[u as usize]
-                        };
-                        union_into(&acc, src, &mut scratch);
-                        std::mem::swap(&mut acc, &mut scratch);
-                        if ball_words(g, &acc) > mem_cap {
-                            return Err(());
-                        }
+        while shard_free.len() < pool.shard_count(balls.len()) {
+            shard_free.push(Vec::new());
+        }
+        let balls_now = &balls;
+        let global_now = &global_balls;
+        pool.run_seeded(balls.len(), &mut shard_free, &mut shard_doubled, |_, range, mut free| {
+            let mut out: Vec<Vec<u32>> = Vec::with_capacity(range.len());
+            let mut scratch: Vec<u32> = free.pop().unwrap_or_default();
+            for ball in &balls_now[range] {
+                let mut acc: Vec<u32> = free.pop().unwrap_or_default();
+                acc.clear();
+                for &u in ball {
+                    let src: &[u32] = if growing_all {
+                        &balls_now[u as usize]
+                    } else {
+                        &global_now[u as usize]
+                    };
+                    union_into(&acc, src, &mut scratch);
+                    std::mem::swap(&mut acc, &mut scratch);
+                    if ball_words(g, &acc) > mem_cap {
+                        return Err(());
                     }
-                    out.push(acc);
                 }
-                Ok(out)
-            });
+                out.push(acc);
+            }
+            free.push(scratch);
+            Ok((out, free))
+        });
         if shard_doubled.iter().any(Result::is_err) {
             memory_capped = true;
             break;
         }
-        let doubled: Vec<Vec<u32>> = shard_doubled
-            .into_iter()
-            .flat_map(|shard| shard.expect("over-cap shards handled above"))
-            .collect();
+        let mut doubled: Vec<Vec<u32>> = Vec::with_capacity(balls.len());
+        for shard in shard_doubled.drain(..) {
+            let (out, free) = shard.expect("over-cap shards handled above");
+            doubled.extend(out);
+            shard_free.push(free);
+        }
         // Measure the committed footprint per shard; the partials are
         // merged (max/max/sum/max) at the round barrier.
         let partials: Vec<ShardRoundStat> = pool.run_fine(doubled.len(), |_, range| {
@@ -170,10 +184,18 @@ pub fn gather_balls(
             stat.max_state = stat.max_out;
             stat
         });
-        // Commit: charge one exchange round with the measured footprint.
+        // Commit: charge one exchange round with the measured footprint,
+        // and recycle the retired generation's buffers into the
+        // free-lists (round-robin keeps the shards' pools balanced).
         rounds += 1;
         sim.round_from_shards(&format!("{label}/double[{rounds}]"), &partials);
-        balls = doubled;
+        let retired = std::mem::replace(&mut balls, doubled);
+        if !shard_free.is_empty() {
+            for (i, mut b) in retired.into_iter().enumerate() {
+                b.clear();
+                shard_free[i % shard_free.len()].push(b);
+            }
+        }
         if !growing_all {
             global_balls = pool
                 .run(global_balls.len(), |_, range| {

@@ -109,6 +109,25 @@ impl MemoryLedger {
         self.total
     }
 
+    /// Re-target a pooled ledger at a new fleet shape, zeroing all
+    /// tallies and peaks while keeping the `used` vector's capacity.
+    /// Equivalent to `*self = MemoryLedger::new(..)` without the
+    /// allocation — the round arena calls this once per round.
+    pub(crate) fn reconfigure(
+        &mut self,
+        machines: usize,
+        local_budget: Words,
+        global_budget: Words,
+    ) {
+        self.local_budget = local_budget;
+        self.global_budget = global_budget;
+        self.used.clear();
+        self.used.resize(machines, 0);
+        self.total = 0;
+        self.peak_local = 0;
+        self.peak_total = 0;
+    }
+
     /// Merge one shard's word tallies at the round barrier.
     ///
     /// Budget enforcement happens *here*, not in the shard: shards charge
@@ -145,6 +164,15 @@ impl ShardLedger {
     /// Ledger covering machines `range.start..range.end` (global ids).
     pub fn new(range: std::ops::Range<usize>) -> ShardLedger {
         ShardLedger { base: range.start, used: vec![0; range.len()] }
+    }
+
+    /// Re-target a pooled ledger at a new machine range, zeroing all
+    /// tallies while keeping the `used` vector's capacity. Equivalent to
+    /// `*self = ShardLedger::new(range)` without the allocation.
+    pub(crate) fn reset(&mut self, range: std::ops::Range<usize>) {
+        self.base = range.start;
+        self.used.clear();
+        self.used.resize(range.len(), 0);
     }
 
     /// Charge `words` to a machine (global id) owned by this shard.

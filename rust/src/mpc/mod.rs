@@ -7,8 +7,12 @@
 //! * [`simulator`] — synchronous round accounting and traces; the round
 //!   counts reported by every experiment come from here.
 //! * [`wire`] — the flat-arena message plane: per-shard payload slabs
-//!   with `(from, dst, offset, len)` indexes, zero-copy inbox views, and
-//!   the typed [`wire::Encode`]/[`wire::Decode`] payload codecs.
+//!   (at `u64` or packed `u32` width) with `(from, dst, offset, len)`
+//!   indexes, zero-copy inbox views, and the typed
+//!   [`wire::Encode`]/[`wire::Decode`] payload codecs.
+//! * [`arena`] — the pooled per-round scratch behind the router:
+//!   outbox/inbox slabs, index Vecs and ledgers recycled `clear()`-style
+//!   so steady-state rounds allocate nothing.
 //! * [`router`] — executable all-to-all message delivery on the wire
 //!   plane with O(S) per-machine send/receive enforcement.
 //! * [`broadcast`] — S-ary broadcast/convergecast trees (§2.1.5) running
@@ -19,6 +23,7 @@
 //!   compute fans out across shards and is merged deterministically at
 //!   every synchronous round barrier.
 
+pub mod arena;
 pub mod broadcast;
 pub mod connectivity;
 pub mod exponentiation;
@@ -33,4 +38,4 @@ pub use model::{ModelKind, MpcConfig};
 pub use pool::ShardPool;
 pub use router::Router;
 pub use simulator::MpcSimulator;
-pub use wire::{Decode, Encode, RoundInboxes, WireMsg, WireOutbox};
+pub use wire::{Decode, Encode, PayloadView, RoundInboxes, WireMsg, WireOutbox, WordWidth};

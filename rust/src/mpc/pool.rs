@@ -50,23 +50,36 @@ impl ShardPool {
         self.shards
     }
 
-    /// Contiguous partition of `0..n` into at most `shards()` ranges, the
-    /// first `n % shards` ranges one element longer. Deterministic in `n`.
-    pub fn ranges(&self, n: usize) -> Vec<Range<usize>> {
+    /// How many shards a partition of `0..n` actually uses (0 for an
+    /// empty index space, never more than `n` or `shards()`).
+    pub fn shard_count(&self, n: usize) -> usize {
         if n == 0 {
-            return Vec::new();
+            0
+        } else {
+            self.shards.min(n)
         }
-        let shards = self.shards.min(n);
+    }
+
+    /// Shard `s`'s contiguous range in the partition of `0..n`, computed
+    /// arithmetically (no `Vec<Range>` materialization — the per-round
+    /// hot paths call this instead of [`Self::ranges`]). The first
+    /// `n % shard_count` ranges are one element longer, matching
+    /// [`Self::ranges`] exactly.
+    pub fn range_of(&self, n: usize, s: usize) -> Range<usize> {
+        let shards = self.shard_count(n);
+        debug_assert!(s < shards, "shard {s} of {shards}");
         let base = n / shards;
         let extra = n % shards;
-        let mut out = Vec::with_capacity(shards);
-        let mut start = 0usize;
-        for s in 0..shards {
-            let len = base + usize::from(s < extra);
-            out.push(start..start + len);
-            start += len;
-        }
-        out
+        let start = s * base + s.min(extra);
+        let len = base + usize::from(s < extra);
+        start..start + len
+    }
+
+    /// Contiguous partition of `0..n` into at most `shards()` ranges, the
+    /// first `n % shards` ranges one element longer. Deterministic in `n`.
+    /// Allocates; round-rate callers use [`Self::range_of`] directly.
+    pub fn ranges(&self, n: usize) -> Vec<Range<usize>> {
+        (0..self.shard_count(n)).map(|s| self.range_of(n, s)).collect()
     }
 
     /// Run `f(shard_index, index_range)` once per shard over `0..n`,
@@ -83,41 +96,17 @@ impl ShardPool {
         R: Send,
         F: Fn(usize, Range<usize>) -> R + Sync,
     {
-        self.run_ranges(self.ranges(n), f)
-    }
-
-    /// Like [`Self::run`], but executes inline when `n ≤` [`SERIAL_CUTOFF`]:
-    /// for fine-grained per-item work (outbox building, degree scans on a
-    /// small fleet) the scoped-thread spawn/join cost — tens of
-    /// microseconds — dwarfs the sharded work. The cutoff changes
-    /// scheduling only, never results: partials are merged identically
-    /// either way.
-    pub fn run_fine<R, F>(&self, n: usize, f: F) -> Vec<R>
-    where
-        R: Send,
-        F: Fn(usize, Range<usize>) -> R + Sync,
-    {
-        let ranges = self.ranges(n);
-        if n <= SERIAL_CUTOFF {
-            return ranges.into_iter().enumerate().map(|(s, r)| f(s, r)).collect();
-        }
-        self.run_ranges(ranges, f)
-    }
-
-    fn run_ranges<R, F>(&self, ranges: Vec<Range<usize>>, f: F) -> Vec<R>
-    where
-        R: Send,
-        F: Fn(usize, Range<usize>) -> R + Sync,
-    {
-        if ranges.len() <= 1 {
-            return ranges.into_iter().enumerate().map(|(s, r)| f(s, r)).collect();
+        let k = self.shard_count(n);
+        if k <= 1 {
+            return (0..k).map(|s| f(s, self.range_of(n, s))).collect();
         }
         let f = &f;
         std::thread::scope(|scope| {
-            let handles: Vec<_> = ranges
-                .into_iter()
-                .enumerate()
-                .map(|(s, r)| scope.spawn(move || f(s, r)))
+            let handles: Vec<_> = (0..k)
+                .map(|s| {
+                    let r = self.range_of(n, s);
+                    scope.spawn(move || f(s, r))
+                })
                 .collect();
             handles
                 .into_iter()
@@ -127,6 +116,85 @@ impl ShardPool {
                 })
                 .collect()
         })
+    }
+
+    /// Like [`Self::run`], but executes inline when `n ≤` [`SERIAL_CUTOFF`]:
+    /// for fine-grained per-item work (outbox building, degree scans on a
+    /// small fleet) the scoped-thread spawn/join cost — tens of
+    /// microseconds — dwarfs the sharded work. The cutoff changes
+    /// scheduling only, never results: partials are merged identically
+    /// either way. The serial path computes shard ranges arithmetically —
+    /// no `Vec<Range>` per call, so small-fleet rounds stay allocation-free
+    /// apart from the result Vec (which [`Self::run_fine_seeded`] also
+    /// eliminates).
+    pub fn run_fine<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, Range<usize>) -> R + Sync,
+    {
+        if n <= SERIAL_CUTOFF {
+            let k = self.shard_count(n);
+            return (0..k).map(|s| f(s, self.range_of(n, s))).collect();
+        }
+        self.run(n, f)
+    }
+
+    /// Fully pooled variant of [`Self::run`]: shard `s` consumes
+    /// `seeds[s]` (scratch state recycled from a previous round — the
+    /// first `shard_count(n)` seeds are drained) and partial results are
+    /// written into `out` (cleared, then filled in shard order). Neither
+    /// the seeds nor the results vector is allocated per call, so a
+    /// caller that keeps both across rounds runs the barrier loop
+    /// allocation-free. Panics if fewer than `shard_count(n)` seeds are
+    /// supplied.
+    pub fn run_seeded<T, R, F>(&self, n: usize, seeds: &mut Vec<T>, out: &mut Vec<R>, f: F)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, Range<usize>, T) -> R + Sync,
+    {
+        let k = self.shard_count(n);
+        assert!(seeds.len() >= k, "{} seeds for {k} shards", seeds.len());
+        out.clear();
+        if k <= 1 {
+            out.extend(seeds.drain(..k).enumerate().map(|(s, seed)| f(s, self.range_of(n, s), seed)));
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = seeds
+                .drain(..k)
+                .enumerate()
+                .map(|(s, seed)| {
+                    let r = self.range_of(n, s);
+                    scope.spawn(move || f(s, r, seed))
+                })
+                .collect();
+            out.extend(handles.into_iter().map(|h| match h.join() {
+                Ok(v) => v,
+                Err(panic) => std::panic::resume_unwind(panic),
+            }));
+        })
+    }
+
+    /// [`Self::run_seeded`] with the [`SERIAL_CUTOFF`] inline path — the
+    /// seeded twin of [`Self::run_fine`], used by the round executor so
+    /// steady-state rounds on small fleets neither spawn threads nor
+    /// allocate.
+    pub fn run_fine_seeded<T, R, F>(&self, n: usize, seeds: &mut Vec<T>, out: &mut Vec<R>, f: F)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, Range<usize>, T) -> R + Sync,
+    {
+        if n <= SERIAL_CUTOFF {
+            let k = self.shard_count(n);
+            assert!(seeds.len() >= k, "{} seeds for {k} shards", seeds.len());
+            out.clear();
+            out.extend(seeds.drain(..k).enumerate().map(|(s, seed)| f(s, self.range_of(n, s), seed)));
+            return;
+        }
+        self.run_seeded(n, seeds, out, f)
     }
 
     /// Shard-parallel max-reduce of `f` over `0..n` (0 when `n == 0`).
@@ -194,6 +262,41 @@ mod tests {
         let mut sorted = starts.clone();
         sorted.sort_unstable();
         assert_eq!(starts, sorted, "partials must be in index order");
+    }
+
+    #[test]
+    fn range_of_matches_ranges() {
+        for shards in 1..6 {
+            let pool = ShardPool::new(shards);
+            for n in [0usize, 1, 2, 7, 16, 100, 257] {
+                let expect = pool.ranges(n);
+                assert_eq!(pool.shard_count(n), expect.len(), "n={n} shards={shards}");
+                for (s, r) in expect.iter().enumerate() {
+                    assert_eq!(pool.range_of(n, s), *r, "n={n} shards={shards} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_runs_match_run_and_recycle_seeds() {
+        for shards in [1usize, 4] {
+            let pool = ShardPool::new(shards);
+            for n in [5usize, SERIAL_CUTOFF + 100] {
+                let expect = pool.run(n, |s, range| (s, range.sum::<usize>()));
+                let mut out = Vec::new();
+                let mut seeds: Vec<u64> = (0..pool.shards() as u64).collect();
+                pool.run_fine_seeded(n, &mut seeds, &mut out, |s, range, seed| {
+                    assert_eq!(seed, s as u64, "seeds drained in shard order");
+                    (s, range.sum::<usize>())
+                });
+                assert_eq!(out, expect, "n={n} shards={shards}");
+                assert_eq!(seeds.len(), pool.shards() - pool.shard_count(n), "seeds drained");
+                let mut seeds: Vec<u64> = (0..pool.shards() as u64).collect();
+                pool.run_seeded(n, &mut seeds, &mut out, |s, range, _| (s, range.sum::<usize>()));
+                assert_eq!(out, expect, "threaded seeded, n={n} shards={shards}");
+            }
+        }
     }
 
     #[test]

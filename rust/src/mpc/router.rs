@@ -1,5 +1,6 @@
 //! Synchronous message router: the executable all-to-all layer, running
-//! on the flat-arena message plane ([`crate::mpc::wire`]).
+//! on the pooled flat-arena message plane ([`crate::mpc::wire`],
+//! [`crate::mpc::arena`]).
 //!
 //! One call to [`Router::round`] is one MPC communication round: each
 //! shard of the simulator's [`ShardPool`] builds its machines' outboxes
@@ -17,29 +18,67 @@
 //! run on top of this for real, so their round counts are measured
 //! rather than asserted.
 //!
+//! Two raw-speed properties live here, both invisible to the model:
+//!
+//! * **Pooling** — every reusable body of the round barrier (outbox
+//!   slabs, index Vecs, ledgers, sizing scratch, receiver slabs) lives
+//!   in the router's [`RoundArena`] and is recycled `clear()`-style
+//!   across rounds, so a steady-state round performs no heap allocation
+//!   on the plane.
+//! * **Width** — a router built via [`Router::for_fleet`] selects a
+//!   [`WordWidth`] from the id range: when every vertex id and machine
+//!   id fits `u32`, slabs store packed 4-byte units and the barrier
+//!   copies half the bytes. The ledger charges *model words*, which are
+//!   width-invariant, so budgets, traces and golden round schedules are
+//!   bit-identical at both widths ([`Router::new`] keeps the `u64`
+//!   plane, which the old-vs-new parity tests pin).
+//!
 //! With a one-shard pool the build closure runs inline on the caller's
 //! thread: the sequential executor is the same code path. Inboxes,
 //! statistics and violations are bit-identical at every shard count.
 //!
 //! [`ShardPool`]: crate::mpc::pool::ShardPool
+//! [`RoundArena`]: crate::mpc::arena::RoundArena
 
+use crate::mpc::arena::RoundArena;
 use crate::mpc::memory::{BudgetError, MemoryLedger, ShardLedger, Words};
 use crate::mpc::simulator::MpcSimulator;
-use crate::mpc::wire::{RoundInboxes, WireOutbox};
+use crate::mpc::wire::{RoundInboxes, WireOutbox, WordWidth};
 
-/// Stateless router over `machines` mailboxes.
+/// Router over `machines` mailboxes, owning the pooled round arena.
 #[derive(Debug)]
 pub struct Router {
     machines: usize,
+    width: WordWidth,
+    arena: RoundArena,
 }
 
 impl Router {
+    /// Router on the `u64` plane (the PR 5 wire format) — the width
+    /// parity baseline, and the right default when id ranges are
+    /// unknown.
     pub fn new(machines: usize) -> Router {
-        Router { machines }
+        Router::with_width(machines, WordWidth::W64)
+    }
+
+    /// Router at an explicit storage width (parity tests force both).
+    pub fn with_width(machines: usize, width: WordWidth) -> Router {
+        Router { machines, width, arena: RoundArena::new() }
+    }
+
+    /// Router for a fleet routing vertex ids in `0..n`: selects the
+    /// narrow `u32` plane whenever ids and machine indices fit.
+    pub fn for_fleet(machines: usize, n: usize) -> Router {
+        Router::with_width(machines, WordWidth::for_ids(n, machines))
     }
 
     pub fn machines(&self) -> usize {
         self.machines
+    }
+
+    /// Storage width of this router's slabs.
+    pub fn width(&self) -> WordWidth {
+        self.width
     }
 
     /// Execute one synchronous round on the flat-arena plane.
@@ -48,63 +87,83 @@ impl Router {
     /// local compute — and is invoked on the shard that owns `m`, with
     /// the outbox positioned on sender `m`. Returns the round's
     /// [`RoundInboxes`]: zero-copy per-machine views, delivered in
-    /// deterministic (sender-ordered) order.
+    /// deterministic (sender-ordered) order. Dropping them returns their
+    /// buffers to this router's arena.
     pub fn round<F>(&self, sim: &mut MpcSimulator, label: &str, build: F) -> RoundInboxes
     where
         F: Fn(usize, &mut WireOutbox) + Sync,
     {
+        let machines = self.machines;
+        let width = self.width;
+        let mut guard = self.arena.lock();
+        let core = &mut *guard;
         let pool = sim.pool();
         // Local-compute half, fanned out per machine shard (fine-grained:
-        // small fleets build their outboxes inline). Each shard appends
-        // into its own slab and tallies send words on its private ledger.
-        let shard_out: Vec<WireOutbox> = pool.run_fine(self.machines, |_, range| {
-            let mut out = WireOutbox::new(range.clone(), self.machines);
-            for m in range {
-                out.begin(m);
-                build(m, &mut out);
-            }
-            out
-        });
+        // small fleets build their outboxes inline). Each shard rewinds a
+        // pooled outbox — slab and index keep their high-water capacity —
+        // appends into it, and tallies send words on its private ledger.
+        core.ensure_seeds(pool.shard_count(machines), width);
+        pool.run_fine_seeded(
+            machines,
+            &mut core.seeds,
+            &mut core.built,
+            |_, range, mut out: WireOutbox| {
+                out.reset(range.clone(), machines, width);
+                for m in range {
+                    out.begin(m);
+                    build(m, &mut out);
+                }
+                out
+            },
+        );
         // Exchange at the synchronous round boundary: shards are walked
         // in order, so inbox contents match the sequential sender order.
-        let mut recv = ShardLedger::new(0..self.machines);
-        let inboxes = RoundInboxes::deliver(self.machines, &shard_out, &mut recv);
-        let send_ledgers: Vec<ShardLedger> =
-            shard_out.into_iter().map(WireOutbox::into_ledger).collect();
-        self.barrier(sim, label, &send_ledgers, recv);
-        inboxes
-    }
-
-    /// The round barrier: merge shard ledgers into fleet ledgers, surface
-    /// the first budget violation, record the round's merged statistics.
-    fn barrier(
-        &self,
-        sim: &mut MpcSimulator,
-        label: &str,
-        send: &[ShardLedger],
-        recv: ShardLedger,
-    ) {
-        // Statistics come from the raw shard tallies (complete even when a
-        // budget is blown, so traces are identical in strict and lenient
-        // mode and at every shard count).
-        let max_out: Words = send.iter().map(ShardLedger::max_local).max().unwrap_or(0);
+        // Receiver bodies come from (and on drop return to) the arena's
+        // reclaim bin.
+        match &mut core.recv {
+            Some(ledger) => ledger.reset(0..machines),
+            None => core.recv = Some(ShardLedger::new(0..machines)),
+        }
+        let recv = core.recv.as_mut().expect("just installed");
+        let inboxes = RoundInboxes::deliver(
+            machines,
+            width,
+            &core.built,
+            recv,
+            &mut core.deliver,
+            Some(&core.reclaim),
+        );
+        // The round barrier: statistics come from the raw shard tallies
+        // (complete even when a budget is blown, so traces are identical
+        // in strict and lenient mode and at every shard count).
+        let max_out: Words =
+            core.built.iter().map(|ob| ob.ledger().max_local()).max().unwrap_or(0);
         let max_in: Words = recv.max_local();
-        let total: Words = send.iter().map(ShardLedger::total).sum();
-        // Budget enforcement on the merged ledgers. The global budget is
-        // charged once, on the send side (receive totals mirror it).
+        let total: Words = core.built.iter().map(|ob| ob.ledger().total()).sum();
+        // Budget enforcement on the merged (pooled, freshly re-targeted)
+        // fleet ledgers. The global budget is charged once, on the send
+        // side (receive totals mirror it).
         let s = sim.config.s_words;
-        let mut sent_fleet = MemoryLedger::new(self.machines, s, sim.config.global_words);
-        let mut recv_fleet = MemoryLedger::new(self.machines, s, Words::MAX);
+        core.sent_fleet.reconfigure(machines, s, sim.config.global_words);
+        core.recv_fleet.reconfigure(machines, s, Words::MAX);
         let mut violation: Option<BudgetError> = None;
-        for shard in send {
+        for ob in &core.built {
             if violation.is_none() {
-                violation = sent_fleet.absorb(shard).err();
+                violation = core.sent_fleet.absorb(ob.ledger()).err();
             }
         }
         if violation.is_none() {
-            violation = recv_fleet.absorb(&recv).err();
+            let recv = core.recv.as_ref().expect("installed above");
+            violation = core.recv_fleet.absorb(recv).err();
         }
+        // Outboxes go back to the seed pool for the next round.
+        core.seeds.append(&mut core.built);
+        // Release the arena before recording: strict-mode violations
+        // panic out of `round_checked`, and the arena must not be held
+        // (poisoned) across that unwind more than necessary.
+        drop(guard);
         sim.round_checked(label, max_out, max_in, total, max_out.max(max_in), violation);
+        inboxes
     }
 }
 
@@ -142,9 +201,9 @@ mod tests {
             _ => {}
         });
         assert_eq!(inboxes.inbox(1).len(), 1);
-        assert_eq!(inboxes.inbox(1).get(0).payload, &[42]);
+        assert_eq!(inboxes.inbox(1).get(0).decode::<u64>(), 42);
         assert_eq!(inboxes.inbox(1).get(0).from, 0);
-        assert_eq!(inboxes.inbox(2).get(0).payload, &[7, 8]);
+        assert_eq!(inboxes.inbox(2).get(0).to_words(), vec![7, 8]);
         assert_eq!(inboxes.inbox(0).get(0).from, 1);
         assert_eq!(sim.n_rounds(), 1);
     }
@@ -271,11 +330,72 @@ mod tests {
                     router.round(&mut sim, &format!("round[{r}]"), varied_build(machines));
                 for (m, want) in legacy.iter().enumerate() {
                     let arena: Vec<(usize, Vec<u64>)> =
-                        got.inbox(m).iter().map(|w| (w.from, w.payload.to_vec())).collect();
+                        got.inbox(m).iter().map(|w| (w.from, w.to_words())).collect();
                     assert_eq!(&arena, want, "{shards} shards, round {r}, machine {m}");
                 }
             }
             assert_eq!(sim.trace(), legacy_sim.trace(), "{shards} shards");
         }
+    }
+
+    #[test]
+    fn for_fleet_selects_width_and_matches_u64_plane() {
+        // The narrow plane must be a pure storage change: same inbox
+        // streams (modulo unit packing), same traces, same ledgers.
+        let machines = 13;
+        assert_eq!(Router::for_fleet(machines, 1000).width(), WordWidth::W32);
+        assert_eq!(
+            Router::for_fleet(machines, u32::MAX as usize + 1).width(),
+            WordWidth::W64
+        );
+        let build = |m: usize, out: &mut WireOutbox| {
+            for d in 0..machines {
+                if (m + d) % 4 == 0 {
+                    out.send(d, &crate::mpc::wire::RankAnnounce {
+                        vertex: m as u32,
+                        rank: (d * 3) as u32,
+                    });
+                }
+            }
+        };
+        let wide = Router::new(machines);
+        let mut wide_sim = sim_for(machines);
+        let expected = wide.round(&mut wide_sim, "w", build);
+        let narrow = Router::for_fleet(machines, 1000);
+        let mut narrow_sim = sim_for(machines);
+        let got = narrow.round(&mut narrow_sim, "w", build);
+        assert_eq!(narrow_sim.trace(), wide_sim.trace(), "model stats are width-invariant");
+        for m in 0..machines {
+            let w: Vec<(usize, crate::mpc::wire::RankAnnounce)> =
+                expected.inbox(m).iter().map(|x| (x.from, x.decode())).collect();
+            let n: Vec<(usize, crate::mpc::wire::RankAnnounce)> =
+                got.inbox(m).iter().map(|x| (x.from, x.decode())).collect();
+            assert_eq!(w, n, "machine {m}");
+        }
+    }
+
+    #[test]
+    fn pooled_rounds_recycle_inboxes() {
+        // Dropping a round's inboxes hands their buffers back to the
+        // router's arena; the next round pops them instead of allocating.
+        let machines = 5;
+        let router = Router::new(machines);
+        let mut sim = sim_for(machines);
+        let first = router.round(&mut sim, "r", varied_build(machines));
+        let bin = {
+            let core = router.arena.lock();
+            core.reclaim.clone()
+        };
+        assert!(bin.lock().unwrap().is_empty(), "buffers out on loan");
+        drop(first);
+        assert!(!bin.lock().unwrap().is_empty(), "drop returns buffers to the bin");
+        let expected = {
+            let fresh = Router::new(machines);
+            let mut s = sim_for(machines);
+            fresh.round(&mut s, "r", varied_build(machines))
+        };
+        let second = router.round(&mut sim, "r", varied_build(machines));
+        assert!(bin.lock().unwrap().is_empty(), "second round reuses the returned set");
+        assert_eq!(second, expected, "recycling never changes delivered data");
     }
 }

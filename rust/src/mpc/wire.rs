@@ -1,4 +1,5 @@
-//! The flat-arena message plane: slab wire format + typed payload codecs.
+//! The flat-arena message plane: slab wire format + typed payload codecs,
+//! at two storage widths.
 //!
 //! The retired wire format allocated one `Vec<u64>` per message
 //! (`outboxes: Vec<Vec<(usize, Vec<u64>)>>`), so a round moving millions
@@ -7,31 +8,45 @@
 //! that plane:
 //!
 //! * **Send side** — each shard appends every payload it produces into
-//!   one contiguous `Vec<u64>` slab ([`WireOutbox`]), recording a
-//!   `(from, dst, offset, len)` index entry per message. Building a
-//!   round's outbox is one growing buffer per shard, not one allocation
-//!   per message.
+//!   one contiguous slab ([`WireOutbox`]), recording a
+//!   `(from, dst, offset, units, words)` index entry per message.
+//!   Building a round's outbox is one growing buffer per shard, not one
+//!   allocation per message — and outboxes are pooled by the router's
+//!   [`RoundArena`](crate::mpc::arena::RoundArena), so steady-state
+//!   rounds reuse the previous round's capacity instead of allocating.
 //! * **Barrier** — the router exchanges slabs, not messages: index
 //!   entries are walked in shard order (= sender order, matching the
 //!   retired plane's delivery order bit for bit) and payload ranges are
 //!   copied once into per-destination receiver slabs
 //!   ([`RoundInboxes::deliver`]).
 //! * **Receive side** — an [`Inbox`] is a zero-copy view over the
-//!   receiver slab: every [`WireMsg`] borrows its payload words instead
-//!   of owning a fresh `Vec<u64>`.
+//!   receiver slab: every [`WireMsg`] borrows its payload
+//!   ([`PayloadView`]) instead of owning a fresh `Vec<u64>`.
+//! * **Widths** — the slab stores either `u64` or packed `u32` units
+//!   ([`WordWidth`], selected per simulation from `n` and the fleet
+//!   size). One *model word* — what the ledger charges — maps to one
+//!   unit when it carries a single vertex-sized id, and to two `u32`
+//!   units when it carries a wide value or a packed id pair. Ledger
+//!   charges are computed from model words and are therefore
+//!   **bit-identical at both widths**; only the bytes the barrier
+//!   memcpys shrink.
 //! * **Codecs** — [`Encode`]/[`Decode`] give the payload shapes the
 //!   algorithms actually send (single-word aggregates, packed
 //!   [`VertexStatus`]/[`LabelUpdate`] words, small tuples, and the
 //!   [`RankAnnounce`]/[`PivotClaim`] frames the constant-round rival
 //!   solvers route through [`crate::mpc::router::Router::round`]) a
-//!   typed round-trip, replacing ad-hoc `payload[0]` indexing at call
-//!   sites.
+//!   typed round-trip against a [`SlabWriter`]/[`SlabReader`] pair, so
+//!   call sites are width-agnostic.
 //!
 //! Word accounting is unchanged from the per-message plane: a message of
-//! `len` payload words still charges `len + `[`ENVELOPE_WORDS`] on both
-//! the send and receive ledgers (the sender id travels in the index
+//! `words` model words still charges `words + `[`ENVELOPE_WORDS`] on
+//! both the send and receive ledgers (the sender id travels in the index
 //! entry, and the ledger keeps pricing it as one word), so O(S) budget
-//! violations fire at exactly the same rounds as before the refactor.
+//! violations fire at exactly the same rounds as before the refactor —
+//! at either width.
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
 
 use crate::mpc::memory::{ShardLedger, Words};
 
@@ -40,24 +55,304 @@ use crate::mpc::memory::{ShardLedger, Words};
 /// pays for shipping it.
 pub const ENVELOPE_WORDS: Words = 1;
 
+// ---------------------------------------------------------------- widths
+
+/// Storage width of a slab: how many bytes one *unit* occupies. The
+/// ledger always counts **model words** (width-independent); the width
+/// only decides how those words are packed into memory and therefore how
+/// many bytes the barrier copies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordWidth {
+    /// One unit per model word, 8 bytes each (the PR 5 format).
+    W64,
+    /// Id-sized model words take one 4-byte unit; wide values and packed
+    /// id pairs take two. Halves barrier copy bytes for id traffic.
+    W32,
+}
+
+impl WordWidth {
+    /// Width for a fleet routing vertex ids in `0..n` across `machines`
+    /// machines: packed `u32` units whenever both fit, else `u64`.
+    pub fn for_ids(n: usize, machines: usize) -> WordWidth {
+        if n <= u32::MAX as usize && machines <= u32::MAX as usize {
+            WordWidth::W32
+        } else {
+            WordWidth::W64
+        }
+    }
+
+    /// Bytes per storage unit.
+    pub fn unit_bytes(self) -> usize {
+        match self {
+            WordWidth::W64 => 8,
+            WordWidth::W32 => 4,
+        }
+    }
+}
+
+/// A payload slab at one of the two storage widths. All slab mutation
+/// goes through [`SlabWriter`]; the enum itself only exposes the
+/// capacity-preserving maintenance the arena pool needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SlabBuf {
+    W64(Vec<u64>),
+    W32(Vec<u32>),
+}
+
+impl SlabBuf {
+    pub fn new(width: WordWidth) -> SlabBuf {
+        match width {
+            WordWidth::W64 => SlabBuf::W64(Vec::new()),
+            WordWidth::W32 => SlabBuf::W32(Vec::new()),
+        }
+    }
+
+    pub fn width(&self) -> WordWidth {
+        match self {
+            SlabBuf::W64(_) => WordWidth::W64,
+            SlabBuf::W32(_) => WordWidth::W32,
+        }
+    }
+
+    /// Length in storage units (not model words).
+    pub fn len_units(&self) -> usize {
+        match self {
+            SlabBuf::W64(v) => v.len(),
+            SlabBuf::W32(v) => v.len(),
+        }
+    }
+
+    /// Clear contents, keeping the high-water-mark capacity (the arena
+    /// pool's recycling contract).
+    pub fn clear(&mut self) {
+        match self {
+            SlabBuf::W64(v) => v.clear(),
+            SlabBuf::W32(v) => v.clear(),
+        }
+    }
+
+    pub fn reserve(&mut self, additional_units: usize) {
+        match self {
+            SlabBuf::W64(v) => v.reserve(additional_units),
+            SlabBuf::W32(v) => v.reserve(additional_units),
+        }
+    }
+
+    /// Borrow a unit range as a typed payload view.
+    pub fn view(&self, range: Range<usize>) -> PayloadView<'_> {
+        match self {
+            SlabBuf::W64(v) => PayloadView::W64(&v[range]),
+            SlabBuf::W32(v) => PayloadView::W32(&v[range]),
+        }
+    }
+
+    /// Append a unit range of `src` — the barrier's single memcpy per
+    /// message. Widths must match: the router fixes one width per
+    /// simulation, so a mismatch is a wiring bug, not data.
+    pub fn copy_range_from(&mut self, src: &SlabBuf, range: Range<usize>) {
+        match (self, src) {
+            (SlabBuf::W64(dst), SlabBuf::W64(s)) => dst.extend_from_slice(&s[range]),
+            (SlabBuf::W32(dst), SlabBuf::W32(s)) => dst.extend_from_slice(&s[range]),
+            _ => panic!("slab width mismatch at the barrier"),
+        }
+    }
+}
+
+/// Append-only writer over a [`SlabBuf`]: the codec layer's only way to
+/// emit payload data, counting **model words** as it goes so the outbox
+/// can assert the [`Encode::words`] contract and charge the ledger
+/// width-independently.
+#[derive(Debug)]
+pub struct SlabWriter<'a> {
+    buf: &'a mut SlabBuf,
+    words: usize,
+}
+
+impl<'a> SlabWriter<'a> {
+    pub fn new(buf: &'a mut SlabBuf) -> SlabWriter<'a> {
+        SlabWriter { buf, words: 0 }
+    }
+
+    /// Model words written through this writer.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// One model word carrying a full-width value (aggregates, sums):
+    /// one `u64` unit, or two `u32` units (lo then hi).
+    pub fn push_wide(&mut self, w: u64) {
+        match self.buf {
+            SlabBuf::W64(v) => v.push(w),
+            // audit:allow(cast-truncate): deliberate split — the lo half is the truncation, the hi half follows
+            SlabBuf::W32(v) => {
+                v.push(w as u32);
+                v.push((w >> 32) as u32)
+            }
+        }
+        self.words += 1;
+    }
+
+    /// One model word carrying a single vertex-sized id: one unit at
+    /// either width — the case the narrow plane halves.
+    pub fn push_id(&mut self, id: u32) {
+        match self.buf {
+            SlabBuf::W64(v) => v.push(id as u64),
+            SlabBuf::W32(v) => v.push(id),
+        }
+        self.words += 1;
+    }
+
+    /// One model word carrying a packed `(hi, lo)` id pair: one
+    /// `(hi << 32) | lo` unit, or two `u32` units (hi then lo). Already
+    /// bit-dense at W64, so W32 splits it without byte savings — the
+    /// model word count (and thus the ledger) is identical either way.
+    pub fn push_pair(&mut self, hi: u32, lo: u32) {
+        match self.buf {
+            SlabBuf::W64(v) => v.push(((hi as u64) << 32) | lo as u64),
+            SlabBuf::W32(v) => {
+                v.push(hi);
+                v.push(lo)
+            }
+        }
+        self.words += 1;
+    }
+}
+
+/// A borrowed payload at its storage width — what a [`WireMsg`] hands to
+/// the codec layer (or, via [`PayloadView::to_words`], to width-agnostic
+/// diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadView<'a> {
+    W64(&'a [u64]),
+    W32(&'a [u32]),
+}
+
+impl PayloadView<'_> {
+    /// Length in storage units (not model words).
+    pub fn units(&self) -> usize {
+        match self {
+            PayloadView::W64(v) => v.len(),
+            PayloadView::W32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units() == 0
+    }
+
+    /// Raw units widened to `u64` — diagnostics and parity harnesses
+    /// only; typed access goes through [`Decode`].
+    pub fn to_words(&self) -> Vec<u64> {
+        match self {
+            PayloadView::W64(v) => v.to_vec(),
+            PayloadView::W32(v) => v.iter().map(|&u| u as u64).collect(),
+        }
+    }
+}
+
+/// Cursor over a [`PayloadView`]: the codec layer's only way to read
+/// payload data back, mirroring [`SlabWriter`]'s three word shapes. Every
+/// read is shape-checked (`None` on underrun or a value that does not fit
+/// the requested shape), which is what lets [`Decode`] keep the "wrong
+/// shape ⇒ `None`" contract at both widths.
+#[derive(Debug, Clone)]
+pub struct SlabReader<'a> {
+    view: PayloadView<'a>,
+    pos: usize,
+}
+
+impl<'a> SlabReader<'a> {
+    pub fn new(view: PayloadView<'a>) -> SlabReader<'a> {
+        SlabReader { view, pos: 0 }
+    }
+
+    fn next_u64(&mut self) -> Option<u64> {
+        match self.view {
+            PayloadView::W64(v) => {
+                let w = *v.get(self.pos)?;
+                self.pos += 1;
+                Some(w)
+            }
+            PayloadView::W32(_) => None,
+        }
+    }
+
+    fn next_u32(&mut self) -> Option<u32> {
+        match self.view {
+            PayloadView::W32(v) => {
+                let u = *v.get(self.pos)?;
+                self.pos += 1;
+                Some(u)
+            }
+            PayloadView::W64(_) => None,
+        }
+    }
+
+    /// Read one wide model word (inverse of [`SlabWriter::push_wide`]).
+    pub fn read_wide(&mut self) -> Option<u64> {
+        match self.view {
+            PayloadView::W64(_) => self.next_u64(),
+            PayloadView::W32(_) => {
+                let lo = self.next_u32()?;
+                let hi = self.next_u32()?;
+                Some((hi as u64) << 32 | lo as u64)
+            }
+        }
+    }
+
+    /// Read one id-sized model word (inverse of [`SlabWriter::push_id`]).
+    /// At W64 the unit must actually fit an id — a wide value where an id
+    /// frame is expected is a shape error, exactly like a wrong length.
+    pub fn read_id(&mut self) -> Option<u32> {
+        match self.view {
+            PayloadView::W64(_) => u32::try_from(self.next_u64()?).ok(),
+            PayloadView::W32(_) => self.next_u32(),
+        }
+    }
+
+    /// Read one packed `(hi, lo)` pair (inverse of
+    /// [`SlabWriter::push_pair`]).
+    pub fn read_pair(&mut self) -> Option<(u32, u32)> {
+        match self.view {
+            PayloadView::W64(_) => {
+                let w = self.next_u64()?;
+                // audit:allow(cast-truncate): bit extraction — each half of the packed word is taken on purpose
+                Some(((w >> 32) as u32, w as u32))
+            }
+            PayloadView::W32(_) => {
+                let hi = self.next_u32()?;
+                let lo = self.next_u32()?;
+                Some((hi, lo))
+            }
+        }
+    }
+
+    /// True when the payload is fully consumed — every [`Decode`] impl
+    /// checks this so trailing garbage fails the frame.
+    pub fn done(&self) -> bool {
+        self.pos == self.view.units()
+    }
+}
+
 // ---------------------------------------------------------------- codecs
 
-/// A payload that can be appended to a slab.
+/// A payload that can be appended to a slab at either width.
 ///
-/// Contract: `encode` appends exactly [`Encode::words`] words — the
-/// outbox asserts it, so codec bugs surface at the send site, not as
+/// Contract: `encode_into` writes exactly [`Encode::words`] model words —
+/// the outbox asserts it, so codec bugs surface at the send site, not as
 /// garbled frames at the receiver.
 pub trait Encode {
-    /// Payload length in words (excluding the envelope).
+    /// Payload length in model words (excluding the envelope) — what the
+    /// ledger charges, independent of storage width.
     fn words(&self) -> usize;
-    /// Append the payload's words to `slab`.
-    fn encode(&self, slab: &mut Vec<u64>);
+    /// Append the payload's words through the writer.
+    fn encode_into(&self, w: &mut SlabWriter<'_>);
 }
 
 /// A payload that can be read back from a borrowed slab range.
 pub trait Decode: Sized {
     /// Parse a payload; `None` if the frame has the wrong shape.
-    fn decode(payload: &[u64]) -> Option<Self>;
+    fn decode(r: SlabReader<'_>) -> Option<Self>;
 }
 
 impl Encode for u64 {
@@ -65,17 +360,15 @@ impl Encode for u64 {
         1
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(*self);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_wide(*self);
     }
 }
 
 impl Decode for u64 {
-    fn decode(payload: &[u64]) -> Option<u64> {
-        match payload {
-            [w] => Some(*w),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<u64> {
+        let w = r.read_wide()?;
+        r.done().then_some(w)
     }
 }
 
@@ -84,18 +377,17 @@ impl Encode for (u64, u64) {
         2
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(self.0);
-        slab.push(self.1);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_wide(self.0);
+        w.push_wide(self.1);
     }
 }
 
 impl Decode for (u64, u64) {
-    fn decode(payload: &[u64]) -> Option<(u64, u64)> {
-        match payload {
-            [a, b] => Some((*a, *b)),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<(u64, u64)> {
+        let a = r.read_wide()?;
+        let b = r.read_wide()?;
+        r.done().then_some((a, b))
     }
 }
 
@@ -104,28 +396,28 @@ impl Encode for (u64, u64, u64) {
         3
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(self.0);
-        slab.push(self.1);
-        slab.push(self.2);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_wide(self.0);
+        w.push_wide(self.1);
+        w.push_wide(self.2);
     }
 }
 
 impl Decode for (u64, u64, u64) {
-    fn decode(payload: &[u64]) -> Option<(u64, u64, u64)> {
-        match payload {
-            [a, b, c] => Some((*a, *b, *c)),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<(u64, u64, u64)> {
+        let a = r.read_wide()?;
+        let b = r.read_wide()?;
+        let c = r.read_wide()?;
+        r.done().then_some((a, b, c))
     }
 }
 
 /// Status publication frame: a vertex id and its MIS bit packed into one
-/// word — the shape of what Alg 1/2/3's publish rounds ship per edge.
-/// Those rounds currently account their traffic via `sim.round` without
-/// routing real payloads; this frame is the wire format they adopt as
-/// they move onto the routed plane (today it is exercised by the wire
-/// tests and the `mpc/plane_codecs` benchmark).
+/// model word — the shape of what Alg 1/2/3's publish rounds ship per
+/// edge. Those rounds currently account their traffic via `sim.round`
+/// without routing real payloads; this frame is the wire format they
+/// adopt as they move onto the routed plane (today it is exercised by the
+/// wire tests and the `mpc/plane_codecs` benchmark).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VertexStatus {
     pub vertex: u32,
@@ -137,26 +429,23 @@ impl Encode for VertexStatus {
         1
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(((self.vertex as u64) << 1) | u64::from(self.in_mis));
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_pair(self.vertex, u32::from(self.in_mis));
     }
 }
 
 impl Decode for VertexStatus {
-    fn decode(payload: &[u64]) -> Option<VertexStatus> {
-        match payload {
-            [w] if *w >> 33 == 0 => Some(VertexStatus {
-                // audit:allow(cast-truncate): bit extraction — the guard proves the high bits are zero
-                vertex: (*w >> 1) as u32,
-                in_mis: *w & 1 == 1,
-            }),
-            _ => None,
+    fn decode(mut r: SlabReader<'_>) -> Option<VertexStatus> {
+        let (vertex, bit) = r.read_pair()?;
+        if bit > 1 || !r.done() {
+            return None;
         }
+        Some(VertexStatus { vertex, in_mis: bit == 1 })
     }
 }
 
-/// Label-propagation frame: `(vertex, label)` packed into one word —
-/// the shape of a connectivity/clustering update. Like
+/// Label-propagation frame: `(vertex, label)` packed into one model word
+/// — the shape of a connectivity/clustering update. Like
 /// [`VertexStatus`], this is the declared wire format for rounds whose
 /// traffic is still charged via `sim.round`; its current users are the
 /// wire tests and the `mpc/plane_codecs` benchmark.
@@ -171,26 +460,23 @@ impl Encode for LabelUpdate {
         1
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(((self.vertex as u64) << 32) | self.label as u64);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_pair(self.vertex, self.label);
     }
 }
 
 impl Decode for LabelUpdate {
-    fn decode(payload: &[u64]) -> Option<LabelUpdate> {
-        match payload {
-            // audit:allow(cast-truncate): bit extraction — each half of the packed word is taken on purpose
-            [w] => Some(LabelUpdate { vertex: (*w >> 32) as u32, label: *w as u32 }),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<LabelUpdate> {
+        let (vertex, label) = r.read_pair()?;
+        r.done().then_some(LabelUpdate { vertex, label })
     }
 }
 
-/// Rival announce frame: `(vertex, rank)` packed into one word — what a
-/// constant-round pivot phase ([`crate::algorithms::rivals`]) ships per
-/// directed edge in its announce round: "your neighbor with this rank is
-/// eligible this phase". The receiver folds the minimum rank per vertex,
-/// which is all the local-minimum pivot rule needs.
+/// Rival announce frame: `(vertex, rank)` packed into one model word —
+/// what a constant-round pivot phase ([`crate::algorithms::rivals`])
+/// ships per directed edge in its announce round: "your neighbor with
+/// this rank is eligible this phase". The receiver folds the minimum
+/// rank per vertex, which is all the local-minimum pivot rule needs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RankAnnounce {
     /// Destination vertex (the announcing vertex's neighbor).
@@ -204,27 +490,24 @@ impl Encode for RankAnnounce {
         1
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(((self.vertex as u64) << 32) | self.rank as u64);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_pair(self.vertex, self.rank);
     }
 }
 
 impl Decode for RankAnnounce {
-    fn decode(payload: &[u64]) -> Option<RankAnnounce> {
-        match payload {
-            [w] => Some(RankAnnounce {
-                vertex: u32::try_from(*w >> 32).expect("shifted half fits"),
-                rank: u32::try_from(*w & u64::from(u32::MAX)).expect("masked half fits"),
-            }),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<RankAnnounce> {
+        let (vertex, rank) = r.read_pair()?;
+        r.done().then_some(RankAnnounce { vertex, rank })
     }
 }
 
 /// Rival claim frame: a freshly-elected pivot claiming `vertex` into its
-/// cluster. Two words — `(vertex, pivot)` packed plus the pivot's rank —
-/// because the receiver adopts the **minimum-rank** claimer and, on a
-/// real MPC fleet, does not hold remote vertices' ranks locally.
+/// cluster. Two model words — `(vertex, pivot)` packed plus the pivot's
+/// id-sized rank — because the receiver adopts the **minimum-rank**
+/// claimer and, on a real MPC fleet, does not hold remote vertices'
+/// ranks locally. The rank word is id-sized, so the W32 plane stores the
+/// frame in 3 units (12 bytes) instead of 16.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PivotClaim {
     /// The claimed vertex.
@@ -240,63 +523,99 @@ impl Encode for PivotClaim {
         2
     }
 
-    fn encode(&self, slab: &mut Vec<u64>) {
-        slab.push(((self.vertex as u64) << 32) | self.pivot as u64);
-        slab.push(self.rank as u64);
+    fn encode_into(&self, w: &mut SlabWriter<'_>) {
+        w.push_pair(self.vertex, self.pivot);
+        w.push_id(self.rank);
     }
 }
 
 impl Decode for PivotClaim {
-    fn decode(payload: &[u64]) -> Option<PivotClaim> {
-        match payload {
-            [a, b] if *b >> 32 == 0 => Some(PivotClaim {
-                vertex: u32::try_from(*a >> 32).expect("shifted half fits"),
-                pivot: u32::try_from(*a & u64::from(u32::MAX)).expect("masked half fits"),
-                rank: u32::try_from(*b).expect("high bits guarded above"),
-            }),
-            _ => None,
-        }
+    fn decode(mut r: SlabReader<'_>) -> Option<PivotClaim> {
+        let (vertex, pivot) = r.read_pair()?;
+        let rank = r.read_id()?;
+        r.done().then_some(PivotClaim { vertex, pivot, rank })
     }
 }
 
 // ------------------------------------------------------------- send side
 
-/// One message's index entry in a sender-side slab.
+/// One message's index entry in a sender-side slab. `offset`/`units` are
+/// in storage units; `words` is the model-word count the ledger charges.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct WireEntry {
     from: u32,
     dst: u32,
     offset: u32,
-    len: u32,
+    units: u32,
+    words: u32,
 }
 
 /// A shard's outbox for one round: one contiguous payload slab plus the
-/// `(from, dst, offset, len)` index, with send words tallied on the
-/// shard's private [`ShardLedger`] as messages are appended.
+/// `(from, dst, offset, units, words)` index, with send words tallied on
+/// the shard's private [`ShardLedger`] as messages are appended.
 ///
 /// The router hands one of these (positioned on the current sender via
 /// `begin`) to the round's build closure; callers only see the typed
-/// [`WireOutbox::send`] / raw [`WireOutbox::send_words`] API.
+/// [`WireOutbox::send`] / bulk [`WireOutbox::append_run`] / raw
+/// [`WireOutbox::send_words`]/[`WireOutbox::send_ids`] API. Outboxes are
+/// pooled: [`WireOutbox::reset`] rewinds one for the next round while
+/// keeping every buffer's high-water-mark capacity.
 #[derive(Debug)]
 pub struct WireOutbox {
     machines: usize,
     from: u32,
-    slab: Vec<u64>,
+    slab: SlabBuf,
     entries: Vec<WireEntry>,
+    words_total: usize,
     ledger: ShardLedger,
 }
 
 impl WireOutbox {
     /// Outbox for the shard owning machines `range` of a `machines`-wide
-    /// fleet.
-    pub(crate) fn new(range: std::ops::Range<usize>, machines: usize) -> WireOutbox {
+    /// fleet, at the PR 5 `u64` width.
+    pub(crate) fn new(range: Range<usize>, machines: usize) -> WireOutbox {
+        WireOutbox::with_width(range, machines, WordWidth::W64)
+    }
+
+    /// Width-selecting constructor.
+    pub(crate) fn with_width(
+        range: Range<usize>,
+        machines: usize,
+        width: WordWidth,
+    ) -> WireOutbox {
         WireOutbox {
             machines,
             from: u32::try_from(range.start).expect("machine index fits u32"),
-            slab: Vec::new(),
+            slab: SlabBuf::new(width),
             entries: Vec::new(),
+            words_total: 0,
             ledger: ShardLedger::new(range),
         }
+    }
+
+    /// A pool seed: no machines yet, rewound by [`WireOutbox::reset`]
+    /// before first use.
+    pub(crate) fn empty(width: WordWidth) -> WireOutbox {
+        WireOutbox::with_width(0..0, 0, width)
+    }
+
+    /// Rewind for a new round, keeping slab/index capacity (the arena
+    /// pool's recycling path — this is `clear()`, not drop).
+    pub(crate) fn reset(&mut self, range: Range<usize>, machines: usize, width: WordWidth) {
+        self.machines = machines;
+        self.from = u32::try_from(range.start).expect("machine index fits u32");
+        if self.slab.width() != width {
+            self.slab = SlabBuf::new(width);
+        }
+        self.slab.clear();
+        self.entries.clear();
+        self.words_total = 0;
+        self.ledger.reset(range);
+    }
+
+    /// Storage width of this outbox's slab.
+    pub fn width(&self) -> WordWidth {
+        self.slab.width()
     }
 
     /// Position the outbox on sender `m` (the router calls this once per
@@ -307,19 +626,118 @@ impl WireOutbox {
 
     /// Send a typed payload to `dst`.
     pub fn send<T: Encode>(&mut self, dst: usize, msg: &T) {
-        let offset = self.slab.len();
-        msg.encode(&mut self.slab);
-        let len = self.slab.len() - offset;
-        assert_eq!(len, msg.words(), "Encode wrote {len} words, declared {}", msg.words());
-        self.push_entry(dst, offset, len);
+        let offset = self.slab.len_units();
+        let mut w = SlabWriter::new(&mut self.slab);
+        msg.encode_into(&mut w);
+        let words = w.words();
+        assert_eq!(words, msg.words(), "Encode wrote {words} words, declared {}", msg.words());
+        let units = self.slab.len_units() - offset;
+        self.push_entry(dst, offset, units, words);
     }
 
-    /// Send raw payload words to `dst` (the untyped escape hatch; empty
-    /// payloads are legal and cost the envelope word alone).
+    /// Send raw wide payload words to `dst` (the untyped escape hatch;
+    /// empty payloads are legal and cost the envelope word alone).
     pub fn send_words(&mut self, dst: usize, payload: &[u64]) {
-        let offset = self.slab.len();
-        self.slab.extend_from_slice(payload);
-        self.push_entry(dst, offset, payload.len());
+        let offset = self.slab.len_units();
+        let mut w = SlabWriter::new(&mut self.slab);
+        for &word in payload {
+            w.push_wide(word);
+        }
+        let units = self.slab.len_units() - offset;
+        self.push_entry(dst, offset, units, payload.len());
+    }
+
+    /// Send a raw run of vertex-sized ids to `dst`: one model word each,
+    /// one storage unit each at either width — the bulk path the narrow
+    /// plane halves byte-for-byte.
+    pub fn send_ids(&mut self, dst: usize, ids: &[u32]) {
+        let offset = self.slab.len_units();
+        match &mut self.slab {
+            SlabBuf::W64(v) => v.extend(ids.iter().map(|&id| id as u64)),
+            SlabBuf::W32(v) => v.extend_from_slice(ids),
+        }
+        let units = self.slab.len_units() - offset;
+        self.push_entry(dst, offset, units, ids.len());
+    }
+
+    /// Bulk-encode a run of typed messages to one destination: the
+    /// destination is validated once, the index reserves once from the
+    /// iterator's size hint, and the ledger is charged once for the whole
+    /// run instead of per message.
+    pub fn append_run<T, I>(&mut self, dst: usize, msgs: I)
+    where
+        T: Encode,
+        I: IntoIterator<Item = T>,
+    {
+        assert!(dst < self.machines, "message to unknown machine {dst}");
+        let dst = u32::try_from(dst).expect("machine index fits u32");
+        let iter = msgs.into_iter();
+        let (lower, _) = iter.size_hint();
+        self.entries.reserve(lower);
+        self.slab.reserve(lower);
+        let mut run_words: Words = 0;
+        for msg in iter {
+            run_words += self.encode_frame(dst, &msg);
+        }
+        if run_words > 0 {
+            self.ledger.charge(self.from as usize, run_words);
+        }
+    }
+
+    /// Bulk-encode `(dst, msg)` pairs, detecting runs of consecutive
+    /// equal destinations: the destination check runs once per run, and
+    /// the sender's ledger is charged once for the whole call. Delivery
+    /// order is identical to an equivalent sequence of
+    /// [`WireOutbox::send`] calls — this is strictly a batching of the
+    /// bookkeeping around the same frame stream.
+    pub fn append_runs<T, I>(&mut self, msgs: I)
+    where
+        T: Encode,
+        I: IntoIterator<Item = (usize, T)>,
+    {
+        let iter = msgs.into_iter();
+        let (lower, _) = iter.size_hint();
+        self.entries.reserve(lower);
+        self.slab.reserve(lower);
+        let mut run_words: Words = 0;
+        let mut current: Option<u32> = None;
+        for (dst, msg) in iter {
+            let dst = match current {
+                Some(d) if d as usize == dst => d,
+                _ => {
+                    assert!(dst < self.machines, "message to unknown machine {dst}");
+                    let d = u32::try_from(dst).expect("machine index fits u32");
+                    current = Some(d);
+                    d
+                }
+            };
+            run_words += self.encode_frame(dst, &msg);
+        }
+        if run_words > 0 {
+            self.ledger.charge(self.from as usize, run_words);
+        }
+    }
+
+    /// Encode one frame with a pre-validated destination, returning its
+    /// ledger cost (payload + envelope) for the caller to batch-charge.
+    fn encode_frame<T: Encode>(&mut self, dst: u32, msg: &T) -> Words {
+        let offset = self.slab.len_units();
+        let mut w = SlabWriter::new(&mut self.slab);
+        msg.encode_into(&mut w);
+        let words = w.words();
+        debug_assert_eq!(
+            words,
+            msg.words(),
+            "Encode wrote {words} words, declared {}",
+            msg.words()
+        );
+        let units = self.slab.len_units() - offset;
+        let offset = u32::try_from(offset).expect("round slab exceeds u32 offsets");
+        let units = u32::try_from(units).expect("payload exceeds u32 length");
+        let words32 = u32::try_from(words).expect("payload exceeds u32 length");
+        self.entries.push(WireEntry { from: self.from, dst, offset, units, words: words32 });
+        self.words_total += words;
+        words as Words + ENVELOPE_WORDS
     }
 
     /// Messages appended so far (across all senders of the shard).
@@ -327,79 +745,190 @@ impl WireOutbox {
         self.entries.len()
     }
 
-    /// Payload words appended so far.
+    /// Payload model words appended so far.
     pub fn slab_words(&self) -> usize {
-        self.slab.len()
+        self.words_total
     }
 
-    fn push_entry(&mut self, dst: usize, offset: usize, len: usize) {
+    /// Payload storage units appended so far (`== slab_words()` at W64;
+    /// smaller than `2 · slab_words()` at W32 whenever id-sized traffic
+    /// is present).
+    pub fn slab_units(&self) -> usize {
+        self.slab.len_units()
+    }
+
+    fn push_entry(&mut self, dst: usize, offset: usize, units: usize, words: usize) {
         assert!(dst < self.machines, "message to unknown machine {dst}");
         let offset = u32::try_from(offset).expect("round slab exceeds u32 offsets");
-        let len = u32::try_from(len).expect("payload exceeds u32 length");
+        let units = u32::try_from(units).expect("payload exceeds u32 length");
+        let words32 = u32::try_from(words).expect("payload exceeds u32 length");
         let dst = u32::try_from(dst).expect("machine index fits u32");
-        self.entries.push(WireEntry { from: self.from, dst, offset, len });
-        self.ledger.charge(self.from as usize, len as Words + ENVELOPE_WORDS);
+        self.entries.push(WireEntry { from: self.from, dst, offset, units, words: words32 });
+        self.words_total += words;
+        self.ledger.charge(self.from as usize, words as Words + ENVELOPE_WORDS);
     }
 
-    /// Tear down into the send ledger (the barrier absorbs it).
-    pub(crate) fn into_ledger(self) -> ShardLedger {
-        self.ledger
+    /// The shard's send ledger (the barrier absorbs it).
+    pub(crate) fn ledger(&self) -> &ShardLedger {
+        &self.ledger
     }
 }
 
 // ---------------------------------------------------------- receive side
 
 /// One delivered message's index entry in a receiver-side slab.
+/// `offset`/`units` are in storage units; `words` is the model-word
+/// count.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct InboxEntry {
     from: u32,
     offset: u32,
-    len: u32,
+    units: u32,
+    words: u32,
+}
+
+/// Cleared inbox bodies awaiting reuse, shared between the router's
+/// arena and every [`RoundInboxes`] it has handed out: when a caller
+/// drops a round's inboxes, the slabs and index Vecs return here
+/// (capacity intact) instead of freeing, and the next barrier pops them.
+/// Bounded to a couple of sets so callers that hoard inboxes cannot grow
+/// the pool.
+#[derive(Debug, Default)]
+pub(crate) struct ReclaimBin {
+    sets: Vec<(Vec<SlabBuf>, Vec<Vec<InboxEntry>>)>,
+}
+
+impl ReclaimBin {
+    /// True when no cleared inbox bodies are pooled (all are on loan or
+    /// none were ever returned).
+    pub(crate) fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+/// Most callers hold at most the current round's inboxes while the next
+/// round builds, so two pooled sets give steady-state reuse.
+const RECLAIM_SETS: usize = 2;
+
+pub(crate) type InboxReclaim = Arc<Mutex<ReclaimBin>>;
+
+/// Reusable sizing scratch for [`RoundInboxes::deliver`] (per-destination
+/// unit and message counts), pooled by the router's arena so the barrier
+/// does not allocate them per round.
+#[derive(Debug, Default)]
+pub struct DeliverScratch {
+    units: Vec<usize>,
+    counts: Vec<usize>,
 }
 
 /// Receiver-side arena for one round: one contiguous slab per destination
 /// machine plus per-destination entry lists. Built once at the round
-/// barrier; all access is zero-copy via [`RoundInboxes::inbox`].
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// barrier; all access is zero-copy via [`RoundInboxes::inbox`]. When
+/// built through a pooling router, dropping it returns the buffers to the
+/// router's arena instead of freeing them.
+#[derive(Debug)]
 pub struct RoundInboxes {
-    slabs: Vec<Vec<u64>>,
+    slabs: Vec<SlabBuf>,
     entries: Vec<Vec<InboxEntry>>,
+    reclaim: Option<InboxReclaim>,
+}
+
+impl PartialEq for RoundInboxes {
+    fn eq(&self, other: &RoundInboxes) -> bool {
+        // Delivered data only — the reclaim back-channel is plumbing.
+        self.slabs == other.slabs && self.entries == other.entries
+    }
+}
+
+impl Eq for RoundInboxes {}
+
+impl Clone for RoundInboxes {
+    fn clone(&self) -> RoundInboxes {
+        // A clone is a caller-owned copy: it does not share the pool
+        // back-channel (returning the same buffers twice would alias).
+        RoundInboxes { slabs: self.slabs.clone(), entries: self.entries.clone(), reclaim: None }
+    }
+}
+
+impl Drop for RoundInboxes {
+    fn drop(&mut self) {
+        let Some(reclaim) = self.reclaim.take() else { return };
+        let mut slabs = std::mem::take(&mut self.slabs);
+        let mut entries = std::mem::take(&mut self.entries);
+        for s in &mut slabs {
+            s.clear();
+        }
+        for e in &mut entries {
+            e.clear();
+        }
+        let mut bin = reclaim.lock().unwrap_or_else(|p| p.into_inner());
+        if bin.sets.len() < RECLAIM_SETS {
+            bin.sets.push((slabs, entries));
+        }
+    }
 }
 
 impl RoundInboxes {
     /// The barrier's exchange half: walk the shard outboxes in shard
     /// order (= sender order), copy each payload range once into its
-    /// destination slab, and charge receive words on `recv`.
+    /// destination slab, and charge receive words on `recv`. `scratch`
+    /// provides the reusable sizing buffers; `reclaim`, when given, is
+    /// the pool the returned value's buffers are drawn from and returned
+    /// to on drop.
     pub(crate) fn deliver(
         machines: usize,
+        width: WordWidth,
         shards: &[WireOutbox],
         recv: &mut ShardLedger,
+        scratch: &mut DeliverScratch,
+        reclaim: Option<&InboxReclaim>,
     ) -> RoundInboxes {
-        // Sizing pass so the receiver slabs allocate exactly once.
-        let mut words = vec![0usize; machines];
-        let mut counts = vec![0usize; machines];
+        // Sizing pass so the receiver slabs allocate (or grow) at most
+        // once each.
+        scratch.units.clear();
+        scratch.units.resize(machines, 0);
+        scratch.counts.clear();
+        scratch.counts.resize(machines, 0);
         for ob in shards {
             for e in &ob.entries {
-                words[e.dst as usize] += e.len as usize;
-                counts[e.dst as usize] += 1;
+                scratch.units[e.dst as usize] += e.units as usize;
+                scratch.counts[e.dst as usize] += 1;
             }
         }
-        let mut slabs: Vec<Vec<u64>> = words.iter().map(|&w| Vec::with_capacity(w)).collect();
-        let mut entries: Vec<Vec<InboxEntry>> =
-            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        let (mut slabs, mut entries) = reclaim
+            .and_then(|r| r.lock().unwrap_or_else(|p| p.into_inner()).sets.pop())
+            .unwrap_or_default();
+        // Normalize the recycled (or fresh) bodies to this fleet/width.
+        slabs.truncate(machines);
+        for s in &mut slabs {
+            if s.width() != width {
+                *s = SlabBuf::new(width);
+            }
+            debug_assert_eq!(s.len_units(), 0, "reclaimed slab not cleared");
+        }
+        while slabs.len() < machines {
+            slabs.push(SlabBuf::new(width));
+        }
+        entries.truncate(machines);
+        entries.resize_with(machines, Vec::new);
+        for d in 0..machines {
+            slabs[d].reserve(scratch.units[d]);
+            entries[d].reserve(scratch.counts[d]);
+        }
         for ob in shards {
             for e in &ob.entries {
                 let d = e.dst as usize;
                 let offset =
-                    u32::try_from(slabs[d].len()).expect("receiver slab exceeds u32 offsets");
-                slabs[d].extend_from_slice(
-                    &ob.slab[e.offset as usize..e.offset as usize + e.len as usize],
+                    u32::try_from(slabs[d].len_units()).expect("receiver slab exceeds u32 offsets");
+                slabs[d].copy_range_from(
+                    &ob.slab,
+                    e.offset as usize..e.offset as usize + e.units as usize,
                 );
-                entries[d].push(InboxEntry { from: e.from, offset, len: e.len });
-                recv.charge(d, e.len as Words + ENVELOPE_WORDS);
+                entries[d].push(InboxEntry { from: e.from, offset, units: e.units, words: e.words });
+                recv.charge(d, e.words as Words + ENVELOPE_WORDS);
             }
         }
-        RoundInboxes { slabs, entries }
+        RoundInboxes { slabs, entries, reclaim: reclaim.cloned() }
     }
 
     pub fn machines(&self) -> usize {
@@ -416,9 +945,9 @@ impl RoundInboxes {
         self.entries.iter().map(Vec::len).sum()
     }
 
-    /// Payload words delivered this round, across all machines.
+    /// Payload model words delivered this round, across all machines.
     pub fn total_words(&self) -> usize {
-        self.slabs.iter().map(Vec::len).sum()
+        self.entries.iter().flatten().map(|e| e.words as usize).sum()
     }
 }
 
@@ -426,7 +955,7 @@ impl RoundInboxes {
 /// deterministic sender order the barrier delivered.
 #[derive(Debug, Clone, Copy)]
 pub struct Inbox<'a> {
-    slab: &'a [u64],
+    slab: &'a SlabBuf,
     entries: &'a [InboxEntry],
 }
 
@@ -443,7 +972,8 @@ impl<'a> Inbox<'a> {
         let e = self.entries[i];
         WireMsg {
             from: e.from as usize,
-            payload: &self.slab[e.offset as usize..e.offset as usize + e.len as usize],
+            payload: self.slab.view(e.offset as usize..e.offset as usize + e.units as usize),
+            words: e.words,
         }
     }
 
@@ -472,7 +1002,7 @@ impl<'a> IntoIterator for Inbox<'a> {
 /// Iterator over an [`Inbox`] in delivery order.
 #[derive(Debug, Clone)]
 pub struct InboxIter<'a> {
-    slab: &'a [u64],
+    slab: &'a SlabBuf,
     entries: std::slice::Iter<'a, InboxEntry>,
 }
 
@@ -483,23 +1013,35 @@ impl<'a> Iterator for InboxIter<'a> {
         let e = self.entries.next()?;
         Some(WireMsg {
             from: e.from as usize,
-            payload: &self.slab[e.offset as usize..e.offset as usize + e.len as usize],
+            payload: self.slab.view(e.offset as usize..e.offset as usize + e.units as usize),
+            words: e.words,
         })
     }
 }
 
-/// A delivered message: sender id plus a borrowed payload slice.
+/// A delivered message: sender id plus a borrowed payload view.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WireMsg<'a> {
     pub from: usize,
-    pub payload: &'a [u64],
+    pub payload: PayloadView<'a>,
+    words: u32,
 }
 
 impl WireMsg<'_> {
     /// Ledger words of this message (payload + envelope), matching the
-    /// retired per-message accounting exactly.
+    /// retired per-message accounting exactly — at either storage width.
     pub fn words(&self) -> Words {
-        self.payload.len() as Words + ENVELOPE_WORDS
+        self.words as Words + ENVELOPE_WORDS
+    }
+
+    /// Payload length in model words (excluding the envelope).
+    pub fn payload_words(&self) -> usize {
+        self.words as usize
+    }
+
+    /// Raw payload units widened to `u64` (diagnostics / parity tests).
+    pub fn to_words(&self) -> Vec<u64> {
+        self.payload.to_words()
     }
 
     /// Decode the payload, panicking on a malformed frame (senders and
@@ -507,15 +1049,15 @@ impl WireMsg<'_> {
     pub fn decode<T: Decode>(&self) -> T {
         self.try_decode().unwrap_or_else(|| {
             panic!(
-                "payload of {} words does not decode as {}",
-                self.payload.len(),
+                "payload of {} units does not decode as {}",
+                self.payload.units(),
                 std::any::type_name::<T>()
             )
         })
     }
 
     pub fn try_decode<T: Decode>(&self) -> Option<T> {
-        T::decode(self.payload)
+        T::decode(SlabReader::new(self.payload))
     }
 }
 
@@ -567,11 +1109,30 @@ pub fn per_message_round(
 mod tests {
     use super::*;
 
-    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
-        let mut slab = Vec::new();
-        v.encode(&mut slab);
-        assert_eq!(slab.len(), v.words(), "declared vs written words");
-        assert_eq!(T::decode(&slab), Some(v), "encode∘decode must be id");
+    pub(crate) const BOTH_WIDTHS: [WordWidth; 2] = [WordWidth::W64, WordWidth::W32];
+
+    /// Decode a W64 payload straight from wide words (test shorthand).
+    fn decode_w64<T: Decode>(payload: &[u64]) -> Option<T> {
+        T::decode(SlabReader::new(PayloadView::W64(payload)))
+    }
+
+    fn roundtrip_at<T: Encode + Decode + PartialEq + Copy + std::fmt::Debug>(
+        width: WordWidth,
+        v: T,
+    ) {
+        let mut buf = SlabBuf::new(width);
+        let mut w = SlabWriter::new(&mut buf);
+        v.encode_into(&mut w);
+        assert_eq!(w.words(), v.words(), "declared vs written words ({width:?})");
+        let units = buf.len_units();
+        let got = T::decode(SlabReader::new(buf.view(0..units)));
+        assert_eq!(got, Some(v), "encode∘decode must be id ({width:?})");
+    }
+
+    fn roundtrip<T: Encode + Decode + PartialEq + Copy + std::fmt::Debug>(v: T) {
+        for width in BOTH_WIDTHS {
+            roundtrip_at(width, v);
+        }
     }
 
     #[test]
@@ -592,26 +1153,69 @@ mod tests {
 
     #[test]
     fn codec_rejects_wrong_shapes() {
-        assert_eq!(u64::decode(&[]), None);
-        assert_eq!(u64::decode(&[1, 2]), None);
-        assert_eq!(<(u64, u64)>::decode(&[1]), None);
-        assert_eq!(<(u64, u64, u64)>::decode(&[1, 2]), None);
-        assert_eq!(VertexStatus::decode(&[u64::MAX]), None, "high bits must be clear");
-        assert_eq!(LabelUpdate::decode(&[1, 2]), None);
-        assert_eq!(RankAnnounce::decode(&[1, 2]), None);
-        assert_eq!(PivotClaim::decode(&[1]), None);
-        assert_eq!(PivotClaim::decode(&[1, u64::MAX]), None, "rank high bits must be clear");
+        assert_eq!(decode_w64::<u64>(&[]), None);
+        assert_eq!(decode_w64::<u64>(&[1, 2]), None);
+        assert_eq!(decode_w64::<(u64, u64)>(&[1]), None);
+        assert_eq!(decode_w64::<(u64, u64, u64)>(&[1, 2]), None);
+        assert_eq!(decode_w64::<VertexStatus>(&[u64::MAX]), None, "MIS bit must be 0/1");
+        assert_eq!(decode_w64::<LabelUpdate>(&[1, 2]), None);
+        assert_eq!(decode_w64::<RankAnnounce>(&[1, 2]), None);
+        assert_eq!(decode_w64::<PivotClaim>(&[1]), None);
+        assert_eq!(decode_w64::<PivotClaim>(&[1, u64::MAX]), None, "rank must be id-sized");
+    }
+
+    #[test]
+    fn w64_layouts_match_packed_words() {
+        // The W64 slab layout is the PR 5 wire format: packed pairs are
+        // `(hi << 32) | lo`, wide values verbatim, ids widened — pinned
+        // here so width plumbing can never silently reshuffle bits.
+        let mut buf = SlabBuf::new(WordWidth::W64);
+        let mut w = SlabWriter::new(&mut buf);
+        LabelUpdate { vertex: 5, label: 9 }.encode_into(&mut w);
+        RankAnnounce { vertex: 2, rank: 3 }.encode_into(&mut w);
+        PivotClaim { vertex: 7, pivot: 1, rank: 4 }.encode_into(&mut w);
+        11u64.encode_into(&mut w);
+        assert_eq!(
+            buf,
+            SlabBuf::W64(vec![(5 << 32) | 9, (2 << 32) | 3, (7 << 32) | 1, 4, 11])
+        );
+    }
+
+    #[test]
+    fn w32_unit_counts_shrink_id_frames() {
+        // Model words are width-invariant; storage units are not. An
+        // id-sized word is 1 unit at both widths (8 → 4 bytes), a wide
+        // or packed word is 1 vs 2 units (8 → 8 bytes).
+        let count = |width: WordWidth| {
+            let mut buf = SlabBuf::new(width);
+            let mut w = SlabWriter::new(&mut buf);
+            PivotClaim { vertex: 1, pivot: 2, rank: 3 }.encode_into(&mut w);
+            (w.words(), buf.len_units(), buf.len_units() * width.unit_bytes())
+        };
+        assert_eq!(count(WordWidth::W64), (2, 2, 16));
+        assert_eq!(count(WordWidth::W32), (2, 3, 12));
+    }
+
+    #[test]
+    fn width_selection_follows_id_range() {
+        assert_eq!(WordWidth::for_ids(1_000_000, 512), WordWidth::W32);
+        assert_eq!(WordWidth::for_ids(u32::MAX as usize, 1), WordWidth::W32);
+        assert_eq!(WordWidth::for_ids(u32::MAX as usize + 1, 1), WordWidth::W64);
     }
 
     #[test]
     fn word_counts_match_ledger_accounting() {
         // Every codec's words() + the envelope equals what the retired
-        // per-message plane charged for the same payload.
-        let mut slab = Vec::new();
+        // per-message plane charged for the same payload — at both
+        // storage widths (the ledger never sees units).
         let v = VertexStatus { vertex: 4, in_mis: true };
-        v.encode(&mut slab);
-        let legacy_words = slab.len() as Words + 1; // Vec payload + sender word
-        assert_eq!(v.words() as Words + ENVELOPE_WORDS, legacy_words);
+        for width in BOTH_WIDTHS {
+            let mut buf = SlabBuf::new(width);
+            let mut w = SlabWriter::new(&mut buf);
+            v.encode_into(&mut w);
+            let legacy_words = 1 as Words + 1; // one packed word + sender word
+            assert_eq!(w.words() as Words + ENVELOPE_WORDS, legacy_words, "{width:?}");
+        }
     }
 
     #[test]
@@ -624,19 +1228,72 @@ mod tests {
         out.send_words(2, &[]);
         assert_eq!(out.messages(), 3);
         assert_eq!(out.slab_words(), 4);
-        assert_eq!(out.slab, vec![7, 1, 2, 3]);
+        assert_eq!(out.slab, SlabBuf::W64(vec![7, 1, 2, 3]));
         assert_eq!(
             out.entries,
             vec![
-                WireEntry { from: 0, dst: 1, offset: 0, len: 1 },
-                WireEntry { from: 0, dst: 3, offset: 1, len: 3 },
-                WireEntry { from: 1, dst: 2, offset: 4, len: 0 },
+                WireEntry { from: 0, dst: 1, offset: 0, units: 1, words: 1 },
+                WireEntry { from: 0, dst: 3, offset: 1, units: 3, words: 3 },
+                WireEntry { from: 1, dst: 2, offset: 4, units: 0, words: 0 },
             ]
         );
         // Ledger: machine 0 sent (1+1) + (3+1) = 6, machine 1 sent 0+1.
-        let ledger = out.into_ledger();
-        assert_eq!(ledger.used(0), 6);
-        assert_eq!(ledger.used(1), 1);
+        assert_eq!(out.ledger().used(0), 6);
+        assert_eq!(out.ledger().used(1), 1);
+    }
+
+    #[test]
+    fn outbox_reset_recycles_capacity() {
+        let mut out = WireOutbox::new(0..2, 4);
+        out.begin(0);
+        out.send_words(1, &[1, 2, 3, 4, 5]);
+        out.reset(2..4, 4, WordWidth::W64);
+        assert_eq!(out.messages(), 0);
+        assert_eq!(out.slab_words(), 0);
+        assert_eq!(out.ledger().base(), 2);
+        assert_eq!(out.ledger().total(), 0);
+        out.begin(2);
+        out.send(0, &9u64);
+        assert_eq!(out.ledger().used(2), 2);
+    }
+
+    #[test]
+    fn append_run_matches_per_message_sends() {
+        for width in BOTH_WIDTHS {
+            let mut bulk = WireOutbox::with_width(0..1, 4, width);
+            bulk.begin(0);
+            bulk.append_run(2, (0..5u32).map(|i| RankAnnounce { vertex: i, rank: i * 3 }));
+            let mut single = WireOutbox::with_width(0..1, 4, width);
+            single.begin(0);
+            for i in 0..5u32 {
+                single.send(2, &RankAnnounce { vertex: i, rank: i * 3 });
+            }
+            assert_eq!(bulk.slab, single.slab, "{width:?}: identical frame stream");
+            assert_eq!(bulk.entries, single.entries, "{width:?}");
+            assert_eq!(bulk.ledger().used(0), single.ledger().used(0), "{width:?}");
+        }
+    }
+
+    #[test]
+    fn append_runs_batches_mixed_destinations() {
+        for width in BOTH_WIDTHS {
+            let schedule: Vec<(usize, PivotClaim)> = [0, 0, 2, 2, 2, 1, 0]
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| (d, PivotClaim { vertex: i as u32, pivot: 1, rank: 2 }))
+                .collect();
+            let mut bulk = WireOutbox::with_width(0..1, 3, width);
+            bulk.begin(0);
+            bulk.append_runs(schedule.iter().copied());
+            let mut single = WireOutbox::with_width(0..1, 3, width);
+            single.begin(0);
+            for &(d, msg) in &schedule {
+                single.send(d, &msg);
+            }
+            assert_eq!(bulk.slab, single.slab, "{width:?}");
+            assert_eq!(bulk.entries, single.entries, "{width:?}");
+            assert_eq!(bulk.ledger().used(0), single.ledger().used(0), "{width:?}");
+        }
     }
 
     #[test]
@@ -648,29 +1305,102 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "unknown machine")]
+    fn append_run_rejects_unknown_destination() {
+        let mut out = WireOutbox::new(0..1, 2);
+        out.begin(0);
+        out.append_run(7, std::iter::once(1u64));
+    }
+
+    #[test]
     fn deliver_copies_in_sender_order_and_charges_receive() {
         // Two shards; delivery must interleave by shard order then
-        // sender order, exactly like the retired plane.
-        let mut a = WireOutbox::new(0..2, 3);
-        a.begin(0);
-        a.send(2, &10u64);
-        a.begin(1);
-        a.send_words(2, &[20, 21]);
-        let mut b = WireOutbox::new(2..3, 3);
-        b.begin(2);
-        b.send(2, &30u64);
-        b.send(0, &(1u64, 2u64));
-        let mut recv = ShardLedger::new(0..3);
-        let inboxes = RoundInboxes::deliver(3, &[a, b], &mut recv);
-        let got: Vec<(usize, Vec<u64>)> =
-            inboxes.inbox(2).iter().map(|m| (m.from, m.payload.to_vec())).collect();
-        assert_eq!(got, vec![(0, vec![10]), (1, vec![20, 21]), (2, vec![30])]);
-        assert_eq!(inboxes.inbox(0).first().map(|m| m.decode::<(u64, u64)>()), Some((1, 2)));
-        assert!(inboxes.inbox(1).is_empty());
-        // Receive ledger: machine 2 got 2 + 3 + 2 = 7 words, machine 0 got 3.
-        assert_eq!(recv.used(2), 7);
-        assert_eq!(recv.used(0), 3);
-        assert_eq!(inboxes.total_messages(), 4);
-        assert_eq!(inboxes.total_words(), 6);
+        // sender order, exactly like the retired plane — at both widths
+        // with identical ledger charges.
+        for width in BOTH_WIDTHS {
+            let mut a = WireOutbox::with_width(0..2, 3, width);
+            a.begin(0);
+            a.send(2, &10u64);
+            a.begin(1);
+            a.send_words(2, &[20, 21]);
+            let mut b = WireOutbox::with_width(2..3, 3, width);
+            b.begin(2);
+            b.send(2, &30u64);
+            b.send(0, &(1u64, 2u64));
+            let mut recv = ShardLedger::new(0..3);
+            let mut scratch = DeliverScratch::default();
+            let inboxes =
+                RoundInboxes::deliver(3, width, &[a, b], &mut recv, &mut scratch, None);
+            let froms: Vec<usize> = inboxes.inbox(2).iter().map(|m| m.from).collect();
+            assert_eq!(froms, [0, 1, 2], "{width:?}: shard order then sender order");
+            assert_eq!(inboxes.inbox(2).get(0).decode::<u64>(), 10, "{width:?}");
+            assert_eq!(inboxes.inbox(2).get(1).decode::<(u64, u64)>(), (20, 21), "{width:?}");
+            assert_eq!(inboxes.inbox(2).get(2).decode::<u64>(), 30, "{width:?}");
+            assert_eq!(
+                inboxes.inbox(0).first().map(|m| m.decode::<(u64, u64)>()),
+                Some((1, 2)),
+                "{width:?}"
+            );
+            assert!(inboxes.inbox(1).is_empty(), "{width:?}");
+            // Receive ledger: machine 2 got 2 + 3 + 2 = 7 words, machine 0 got 3
+            // — model words, identical at both widths.
+            assert_eq!(recv.used(2), 7, "{width:?}");
+            assert_eq!(recv.used(0), 3, "{width:?}");
+            assert_eq!(inboxes.total_messages(), 4, "{width:?}");
+            assert_eq!(inboxes.total_words(), 6, "{width:?}");
+        }
+    }
+
+    #[test]
+    fn deliver_recycles_through_the_reclaim_bin() {
+        let reclaim: InboxReclaim = Arc::default();
+        let mut scratch = DeliverScratch::default();
+        let run = || {
+            let mut out = WireOutbox::with_width(0..2, 2, WordWidth::W32);
+            out.begin(0);
+            out.send_ids(1, &[1, 2, 3]);
+            out
+        };
+        let mut recv = ShardLedger::new(0..2);
+        let first = RoundInboxes::deliver(
+            2,
+            WordWidth::W32,
+            &[run()],
+            &mut recv,
+            &mut scratch,
+            Some(&reclaim),
+        );
+        assert_eq!(first.inbox(1).get(0).to_words(), vec![1, 2, 3]);
+        assert!(reclaim.lock().unwrap().sets.is_empty(), "buffers are out on loan");
+        drop(first);
+        assert_eq!(reclaim.lock().unwrap().sets.len(), 1, "drop returns the buffers");
+        let mut recv = ShardLedger::new(0..2);
+        let second = RoundInboxes::deliver(
+            2,
+            WordWidth::W32,
+            &[run()],
+            &mut recv,
+            &mut scratch,
+            Some(&reclaim),
+        );
+        assert!(reclaim.lock().unwrap().sets.is_empty(), "second round reuses the set");
+        assert_eq!(second.inbox(1).get(0).to_words(), vec![1, 2, 3]);
+        assert_eq!(recv.used(1), 4);
+    }
+
+    #[test]
+    fn send_ids_halves_w32_bytes_but_not_ledger_words() {
+        let bytes = |width: WordWidth| {
+            let mut out = WireOutbox::with_width(0..1, 2, width);
+            out.begin(0);
+            out.send_ids(1, &[10, 20, 30, 40]);
+            (out.slab_units() * width.unit_bytes(), out.ledger().used(0))
+        };
+        let (b64, w64) = bytes(WordWidth::W64);
+        let (b32, w32) = bytes(WordWidth::W32);
+        assert_eq!(b64, 32);
+        assert_eq!(b32, 16, "id runs halve on the narrow plane");
+        assert_eq!(w64, w32, "ledger charges are width-invariant");
+        assert_eq!(w64, 5);
     }
 }

@@ -1,0 +1,91 @@
+//! Allocation counting for the perf lab: a [`System`]-backed
+//! [`GlobalAlloc`] wrapper that counts heap allocations (alloc,
+//! realloc and alloc_zeroed; frees are not counted), installed as the
+//! `#[global_allocator]` by the binaries that report allocation-count
+//! metrics — the `arbocc` CLI and `benches/message_plane.rs`.
+//!
+//! The library itself never installs it. Scenario code probes
+//! [`installed`] at run time and skips allocation metrics when the
+//! host binary runs on the plain system allocator (e.g. the unit-test
+//! harness), so the same scenario source works in every binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Counting wrapper over the system allocator. Zero-sized; the count
+/// lives in a process-global atomic so [`allocations`] works without a
+/// handle to the installed instance.
+pub struct CountingAlloc;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counter increment has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Heap allocations observed since process start. Stays 0 forever when
+/// the host binary did not install [`CountingAlloc`].
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Whether the host binary installed [`CountingAlloc`] as its global
+/// allocator: performs one heap allocation through an opaque call and
+/// checks that the counter moved.
+pub fn installed() -> bool {
+    let before = allocations();
+    std::hint::black_box(Box::new(before));
+    allocations() > before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test (not several) so the shared counter is not raced by
+    // parallel test threads bumping it through the manual calls below.
+    #[test]
+    fn manual_calls_count_but_probe_reports_uninstalled() {
+        // The unit-test harness runs on the system allocator.
+        assert!(!installed());
+        assert_eq!(allocations(), 0);
+
+        let a = CountingAlloc;
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            let p = a.realloc(p, layout, 128);
+            assert!(!p.is_null());
+            a.dealloc(p, Layout::from_size_align(128, 8).unwrap());
+            let z = a.alloc_zeroed(layout);
+            assert!(!z.is_null());
+            assert_eq!(*z, 0);
+            a.dealloc(z, layout);
+        }
+        assert_eq!(allocations(), 3);
+
+        // Still uninstalled: ordinary allocations bypass the counter.
+        assert!(!installed());
+    }
+}

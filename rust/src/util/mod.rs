@@ -5,6 +5,7 @@
 //! `criterion`, none of which are available in the offline crate registry
 //! (see DESIGN.md §2).
 
+pub mod alloc;
 pub mod cli;
 pub mod error;
 pub mod json;

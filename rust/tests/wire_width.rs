@@ -1,0 +1,245 @@
+//! Cross-width wire-plane invariants: the narrow `u32` storage plane
+//! must be invisible to the model.
+//!
+//! The PR 8 raw-speed pass lets a router pack id-sized words into 4-byte
+//! storage units ([`WordWidth::W32`]) to halve barrier copy bytes. The
+//! contract these tests pin:
+//!
+//! * every typed codec round-trips bit-exactly at **both** widths,
+//!   including `u32::MAX` ids and `u64` values past the id range (the
+//!   width-promotion edge where a wide value splits into two units);
+//! * a routed round's charged schedule — labels, max in/out **model
+//!   words**, totals, peaks — is identical at both widths: the ledger
+//!   counts model words, never storage units;
+//! * the rival pivot-phase engine produces bit-identical clusterings,
+//!   traces and communication totals on the u64 and u32 planes (and via
+//!   the width-selecting default entry point), at 1/2/8 shards — the
+//!   integration-scale twin of the `round_counts.rs` goldens.
+
+use arbocc::algorithms::rivals::{pivot_phase_engine, pivot_phase_engine_on, rival_input_words};
+use arbocc::data::corpus::WorkloadSpec;
+use arbocc::graph::Graph;
+use arbocc::mpc::router::Router;
+use arbocc::mpc::wire::{LabelUpdate, PivotClaim, RankAnnounce, VertexStatus, WireMsg, WordWidth};
+use arbocc::mpc::{MpcConfig, MpcSimulator, WireOutbox};
+use arbocc::util::prop::forall;
+use arbocc::util::rng::Rng;
+use arbocc::{prop_check, prop_eq};
+
+fn corpus_graph(spec: &str) -> Graph {
+    WorkloadSpec::parse(spec)
+        .expect("spec parses")
+        .generate()
+        .expect("spec generates")
+}
+
+/// One typed frame of the property stream — every codec the plane ships.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Frame {
+    Word(u64),
+    Pair(u64, u64),
+    Triple(u64, u64, u64),
+    Status(VertexStatus),
+    Label(LabelUpdate),
+    Rank(RankAnnounce),
+    Claim(PivotClaim),
+}
+
+/// Boundary-biased id: `u32::MAX` and friends show up often, so the
+/// pair-packing edge is exercised on every run.
+fn boundary_u32(rng: &mut Rng) -> u32 {
+    match rng.index(4) {
+        0 => u32::MAX,
+        1 => 0,
+        2 => u32::MAX - rng.index(8) as u32,
+        _ => rng.next_u64() as u32,
+    }
+}
+
+/// Boundary-biased wide value: sits on both sides of the `u32::MAX`
+/// promotion edge (a wide value never fits one u32 unit; the codec must
+/// split and rejoin it losslessly).
+fn boundary_u64(rng: &mut Rng) -> u64 {
+    match rng.index(5) {
+        0 => u64::from(u32::MAX),
+        1 => u64::from(u32::MAX) + 1 + rng.index(16) as u64,
+        2 => u64::MAX - rng.index(8) as u64,
+        3 => rng.index(100) as u64,
+        _ => rng.next_u64(),
+    }
+}
+
+fn random_frame(rng: &mut Rng) -> Frame {
+    match rng.index(7) {
+        0 => Frame::Word(boundary_u64(rng)),
+        1 => Frame::Pair(boundary_u64(rng), boundary_u64(rng)),
+        2 => Frame::Triple(boundary_u64(rng), boundary_u64(rng), boundary_u64(rng)),
+        3 => Frame::Status(VertexStatus {
+            vertex: boundary_u32(rng),
+            in_mis: rng.index(2) == 0,
+        }),
+        4 => Frame::Label(LabelUpdate { vertex: boundary_u32(rng), label: boundary_u32(rng) }),
+        5 => Frame::Rank(RankAnnounce { vertex: boundary_u32(rng), rank: boundary_u32(rng) }),
+        _ => Frame::Claim(PivotClaim {
+            vertex: boundary_u32(rng),
+            pivot: boundary_u32(rng),
+            rank: boundary_u32(rng),
+        }),
+    }
+}
+
+fn send_frame(out: &mut WireOutbox, dst: usize, f: &Frame) {
+    match f {
+        Frame::Word(a) => out.send(dst, a),
+        Frame::Pair(a, b) => out.send(dst, &(*a, *b)),
+        Frame::Triple(a, b, c) => out.send(dst, &(*a, *b, *c)),
+        Frame::Status(s) => out.send(dst, s),
+        Frame::Label(l) => out.send(dst, l),
+        Frame::Rank(r) => out.send(dst, r),
+        Frame::Claim(c) => out.send(dst, c),
+    }
+}
+
+/// Decode a delivered message as the frame shape we expect at this
+/// position; `None` on any shape mismatch (a test failure upstream).
+fn decode_frame(msg: &WireMsg<'_>, want: &Frame) -> Option<Frame> {
+    match want {
+        Frame::Word(_) => msg.try_decode::<u64>().map(Frame::Word),
+        Frame::Pair(..) => msg.try_decode::<(u64, u64)>().map(|(a, b)| Frame::Pair(a, b)),
+        Frame::Triple(..) => {
+            msg.try_decode::<(u64, u64, u64)>().map(|(a, b, c)| Frame::Triple(a, b, c))
+        }
+        Frame::Status(_) => msg.try_decode::<VertexStatus>().map(Frame::Status),
+        Frame::Label(_) => msg.try_decode::<LabelUpdate>().map(Frame::Label),
+        Frame::Rank(_) => msg.try_decode::<RankAnnounce>().map(Frame::Rank),
+        Frame::Claim(_) => msg.try_decode::<PivotClaim>().map(Frame::Claim),
+    }
+}
+
+#[test]
+fn prop_random_frame_streams_roundtrip_identically_at_both_widths() {
+    forall("random frame streams round-trip at both widths", 60, |rng, size| {
+        let machines = 2 + rng.index(6);
+        let frames: Vec<(usize, Frame)> =
+            (0..size).map(|_| (rng.index(machines), random_frame(rng))).collect();
+        let mut expected: Vec<Vec<Frame>> = vec![Vec::new(); machines];
+        for (dst, f) in &frames {
+            expected[*dst].push(*f);
+        }
+
+        let mut traces = Vec::new();
+        for width in [WordWidth::W64, WordWidth::W32] {
+            let router = Router::with_width(machines, width);
+            let mut sim = MpcSimulator::new(MpcConfig::model1(100_000, 1_000_000, 0.5));
+            let frames_ref = &frames;
+            let inboxes = router.round(&mut sim, "prop", |m, out| {
+                if m == 0 {
+                    for (dst, f) in frames_ref {
+                        send_frame(out, *dst, f);
+                    }
+                }
+            });
+            for (m, want_list) in expected.iter().enumerate() {
+                let inbox = inboxes.inbox(m);
+                prop_eq!(inbox.len(), want_list.len());
+                for (i, want) in want_list.iter().enumerate() {
+                    let msg = inbox.get(i);
+                    prop_eq!(msg.from, 0usize);
+                    let got = decode_frame(&msg, want)
+                        .ok_or_else(|| format!("{width:?}: frame {i} to {m} mis-shaped"))?;
+                    prop_check!(
+                        got == *want,
+                        "{width:?}: machine {m} frame {i}: {got:?} != {want:?}"
+                    );
+                }
+            }
+            traces.push(sim.trace().to_vec());
+        }
+        prop_eq!(traces[0], traces[1]);
+        Ok(())
+    });
+}
+
+#[test]
+fn width_promotion_edge_is_exact() {
+    // Ids in 0..=u32::MAX (and fleets up to that size) keep the narrow
+    // plane; one past either bound promotes to u64 storage.
+    assert_eq!(WordWidth::for_ids(u32::MAX as usize, 8), WordWidth::W32);
+    assert_eq!(WordWidth::for_ids(8, u32::MAX as usize), WordWidth::W32);
+    assert_eq!(WordWidth::for_ids(u32::MAX as usize + 1, 8), WordWidth::W64);
+    assert_eq!(WordWidth::for_ids(8, u32::MAX as usize + 1), WordWidth::W64);
+    assert_eq!(WordWidth::for_ids(0, 0), WordWidth::W32);
+    assert_eq!(WordWidth::W32.unit_bytes(), 4);
+    assert_eq!(WordWidth::W64.unit_bytes(), 8);
+}
+
+/// Run the rival pivot-phase engine on `spec` and return everything the
+/// model can observe: labels, phase/round counts, the full charged
+/// trace, and the fleet totals.
+fn engine_fingerprint(
+    g: &Graph,
+    rank: &[u32],
+    thresholds: &[u32],
+    width: Option<WordWidth>,
+    shards: usize,
+) -> (Vec<u32>, usize, usize, Vec<arbocc::mpc::simulator::RoundStat>, u64, u64) {
+    let cfg = MpcConfig::model1(g.n(), rival_input_words(g), 0.5);
+    let mut sim = if shards == 1 {
+        MpcSimulator::new(cfg)
+    } else {
+        MpcSimulator::sharded(cfg, shards)
+    };
+    let run = match width {
+        None => pivot_phase_engine(g, rank, thresholds, "wparity", &mut sim),
+        Some(w) => pivot_phase_engine_on(g, rank, thresholds, "wparity", &mut sim, w),
+    };
+    (
+        run.clustering.labels().to_vec(),
+        run.phases,
+        run.rounds,
+        sim.trace().to_vec(),
+        sim.total_communication(),
+        sim.peak_machine_words(),
+    )
+}
+
+/// The parity pin: identical fingerprints on the u64 plane, the u32
+/// plane, the width-selecting default entry, and the sharded executor.
+fn engine_parity_on(spec: &str) {
+    let g = corpus_graph(spec);
+    let rank: Vec<u32> = (0..g.n() as u32).collect();
+    // Doubling eligibility schedule (the rivals' geometric shape).
+    let mut thresholds: Vec<u32> = Vec::new();
+    let mut t = 2usize;
+    while t < g.n() {
+        thresholds.push(t as u32);
+        t *= 2;
+    }
+    thresholds.push(g.n() as u32);
+
+    let wide = engine_fingerprint(&g, &rank, &thresholds, Some(WordWidth::W64), 1);
+    let narrow = engine_fingerprint(&g, &rank, &thresholds, Some(WordWidth::W32), 1);
+    assert_eq!(wide, narrow, "{spec}: storage width leaked into the model");
+    assert_eq!(
+        engine_fingerprint(&g, &rank, &thresholds, None, 1),
+        wide,
+        "{spec}: the width-selecting default entry diverged"
+    );
+    for shards in [2usize, 8] {
+        assert_eq!(
+            engine_fingerprint(&g, &rank, &thresholds, Some(WordWidth::W32), shards),
+            wide,
+            "{spec}: u32 plane diverged at {shards} shards"
+        );
+    }
+}
+
+#[test]
+fn engine_parity_path8() {
+    engine_parity_on("path:n=8");
+}
+
+#[test]
+fn engine_parity_path600() {
+    engine_parity_on("path:n=600");
+}
