@@ -28,7 +28,8 @@ impl Default for CompareConfig {
     }
 }
 
-/// Per-metric outcome. Only `Regression` fails the gate.
+/// Per-metric outcome. `Regression` and `Missing` fail the gate
+/// ([`Comparison::gated_failures`]); everything else is informational.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
     Regression,
@@ -106,6 +107,20 @@ impl Comparison {
     pub fn gated_regressions(&self, filters: &[String]) -> Vec<&MetricDelta> {
         self.regressions()
             .into_iter()
+            .filter(|d| filters.is_empty() || filters.iter().any(|f| d.scenario.contains(f.as_str())))
+            .collect()
+    }
+
+    /// Everything that must fail the gate within the `--gate` scope:
+    /// regressions, plus gated metrics that are `Missing` from the
+    /// current run. A metric the baseline had but this run silently
+    /// dropped (renamed scenario, deleted metric key, skipped bin) would
+    /// otherwise disarm the gate without anyone noticing — absence must
+    /// fail loudly, not pass by default.
+    pub fn gated_failures(&self, filters: &[String]) -> Vec<&MetricDelta> {
+        self.deltas
+            .iter()
+            .filter(|d| matches!(d.verdict, Verdict::Regression | Verdict::Missing))
             .filter(|d| filters.is_empty() || filters.iter().any(|f| d.scenario.contains(f.as_str())))
             .collect()
     }
@@ -382,7 +397,7 @@ mod tests {
     }
 
     #[test]
-    fn info_new_and_missing_never_gate() {
+    fn info_and_new_never_gate_but_missing_fails() {
         let old = suite(
             "old",
             &[
@@ -401,7 +416,35 @@ mod tests {
         assert_eq!(verdict_of(&cmp, "shards"), Verdict::Info);
         assert_eq!(verdict_of(&cmp, "fresh"), Verdict::New);
         assert_eq!(verdict_of(&cmp, "gone"), Verdict::Missing);
+        // Missing is not a Regression (the delta table distinguishes
+        // them) and never reaches gated_regressions ...
         assert!(!cmp.has_regressions());
+        assert!(cmp.gated_regressions(&[]).is_empty());
+        // ... but it MUST fail the gate: a dropped metric is a silent
+        // hole in coverage, not a pass.
+        let failures = cmp.gated_failures(&[]);
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].metric, "gone");
+        assert_eq!(failures[0].verdict, Verdict::Missing);
+    }
+
+    #[test]
+    fn gated_failures_scope_missing_metrics_like_regressions() {
+        // Baseline has a whole scenario the current run renamed away:
+        // every one of its metrics is Missing.
+        let old = suite("old", &[("x", 1.0, 0.0, Direction::Lower)]);
+        let mut new = suite("new", &[("x", 1.0, 0.0, Direction::Lower)]);
+        new.scenarios[0].name = "demo/renamed".to_string();
+        let cmp = compare(&old, &new, &CompareConfig::default());
+        // In scope (empty filter, or a filter matching the *baseline*
+        // scenario name) the absence fails the gate.
+        assert_eq!(cmp.gated_failures(&[]).len(), 1);
+        assert_eq!(cmp.gated_failures(&["demo/scen".to_string()]).len(), 1);
+        // Out of scope it is reported but not gated.
+        assert!(cmp.gated_failures(&["perf/p8".to_string()]).is_empty());
+        // And with nothing missing or regressed, the gate stays green.
+        let same = compare(&old, &old, &CompareConfig::default());
+        assert!(same.gated_failures(&[]).is_empty());
     }
 
     #[test]

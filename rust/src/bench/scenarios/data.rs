@@ -1,7 +1,7 @@
 //! Dataset-subsystem scenarios (`data_lab` bin): ingest throughput for
-//! both text formats and the binary snapshot, round-trip fidelity, and
-//! the corpus sweep driving the auto solver over every addressable
-//! family.
+//! both text formats and both snapshot generations, round-trip
+//! fidelity, the v2 compression/parallel-decode lab, and the corpus
+//! sweep driving the auto solver over every addressable family.
 
 use std::sync::Arc;
 
@@ -10,7 +10,8 @@ use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRe
 use crate::bench::workloads;
 use crate::cluster::triangles::packing_lower_bound;
 use crate::data::corpus::WorkloadSpec;
-use crate::data::{edge_list, snapshot};
+use crate::data::{edge_list, snapshot, snapshot_v2};
+use crate::mpc::pool::ShardPool;
 use crate::solve::{solve_decomposed, DriverConfig, SolveRequest, SolverRegistry};
 use crate::util::table::{fnum, Table};
 use crate::util::timer::Timer;
@@ -19,14 +20,20 @@ pub fn register(r: &mut Registry) {
     r.register(Scenario {
         name: "data/ingest_throughput",
         bin: "data_lab",
-        about: "edge-list / CSV / snapshot parse throughput",
+        about: "edge-list / CSV / snapshot v1+v2 parse throughput",
         run: ingest_throughput,
     });
     r.register(Scenario {
         name: "data/snapshot_roundtrip",
         bin: "data_lab",
-        about: "arbocc-csr/v1 round-trip fidelity + encode/decode rates",
+        about: "arbocc-csr v1+v2 round-trip fidelity + encode/decode rates",
         run: snapshot_roundtrip,
+    });
+    r.register(Scenario {
+        name: "data/snapshot_v2_ratio",
+        bin: "data_lab",
+        about: "v2 columnar compression vs v1 + ShardPool decode speedup",
+        run: snapshot_v2_ratio,
     });
     r.register(Scenario {
         name: "solve/corpus_sweep",
@@ -49,14 +56,16 @@ fn ingest_throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
     edge_list::write_edges(&g, &mut csv, edge_list::EdgeListFormat::Csv).expect("write");
     let text_ws = String::from_utf8(ws).expect("ascii edge list");
     let text_csv = String::from_utf8(csv).expect("ascii edge list");
-    let bytes = snapshot::snapshot_bytes(&g);
+    let bytes = snapshot::snapshot_bytes(&g).expect("snapshot encode");
+    let v2 = snapshot_v2::snapshot_v2_bytes(&g).expect("v2 encode");
     println!(
-        "ingest workload {}: m={} — {} B text, {} B csv, {} B snapshot",
+        "ingest workload {}: m={} — {} B text, {} B csv, {} B snapshot, {} B v2",
         spec.canonical(),
         g.m(),
         text_ws.len(),
         text_csv.len(),
-        bytes.len()
+        bytes.len(),
+        v2.len()
     );
     let cfg = ctx.bench_cfg();
     let m_ws = harness::bench_with("edgelist_parse", &cfg, || {
@@ -76,6 +85,14 @@ fn ingest_throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
     rec.rate_metric("snapshot_edges_per_s", &m_snap, g.m() as f64);
     let per_edge = bytes.len() as f64 / g.m().max(1) as f64;
     rec.metric("snapshot_bytes_per_edge", per_edge, Direction::Info);
+    let pool = ShardPool::auto();
+    let m_v2 = harness::bench_with("snapshot_v2_read", &cfg, || {
+        let parsed = snapshot_v2::read_snapshot_v2_bytes(&v2, &pool).expect("v2 read");
+        assert_eq!(parsed.m(), g.m());
+    });
+    rec.rate_metric("snapshot_v2_edges_per_s", &m_v2, g.m() as f64);
+    let v2_per_edge = v2.len() as f64 / g.m().max(1) as f64;
+    rec.metric("snapshot_v2_bytes_per_edge", v2_per_edge, Direction::Info);
     rec
 }
 
@@ -84,18 +101,33 @@ fn ingest_throughput(ctx: &ScenarioCtx) -> ScenarioRecord {
 fn snapshot_roundtrip(ctx: &ScenarioCtx) -> ScenarioRecord {
     let mut rec = ScenarioRecord::new();
     let n = ctx.size(10_000, 100_000);
+    let pool = ShardPool::auto();
     for spec_s in [format!("mixed:n={n},seed=4"), format!("powerlaw:n={n},attach=3,seed=4")] {
         let spec = WorkloadSpec::parse(&spec_s).expect("spec");
         let g = spec.generate().expect("corpus generate");
-        let bytes = snapshot::snapshot_bytes(&g);
+        let bytes = snapshot::snapshot_bytes(&g).expect("encode");
         let back = snapshot::read_snapshot_bytes(&bytes).expect("read");
         assert_eq!(back, g, "{spec_s}: snapshot round-trip must be lossless");
         assert_eq!(
-            snapshot::snapshot_bytes(&back),
+            snapshot::snapshot_bytes(&back).expect("encode"),
             bytes,
             "{spec_s}: re-encoding must be byte-identical"
         );
-        println!("roundtrip {} OK: {} B for m={}", spec.canonical(), bytes.len(), g.m());
+        let v2 = snapshot_v2::snapshot_v2_bytes(&g).expect("v2 encode");
+        let back2 = snapshot_v2::read_snapshot_v2_bytes(&v2, &pool).expect("v2 read");
+        assert_eq!(back2, g, "{spec_s}: v2 round-trip must be lossless");
+        assert_eq!(
+            snapshot_v2::snapshot_v2_bytes(&back2).expect("v2 encode"),
+            v2,
+            "{spec_s}: v2 re-encoding must be byte-identical"
+        );
+        println!(
+            "roundtrip {} OK: {} B v1 / {} B v2 for m={}",
+            spec.canonical(),
+            bytes.len(),
+            v2.len(),
+            g.m()
+        );
     }
     let g = WorkloadSpec::parse(&format!("mixed:n={n},seed=4"))
         .expect("spec")
@@ -103,10 +135,10 @@ fn snapshot_roundtrip(ctx: &ScenarioCtx) -> ScenarioRecord {
         .expect("generate");
     let cfg = ctx.bench_cfg();
     let m_enc = harness::bench_with("snapshot_encode", &cfg, || {
-        let b = snapshot::snapshot_bytes(&g);
+        let b = snapshot::snapshot_bytes(&g).expect("encode");
         assert!(b.len() > 32);
     });
-    let bytes = snapshot::snapshot_bytes(&g);
+    let bytes = snapshot::snapshot_bytes(&g).expect("encode");
     let m_dec = harness::bench_with("snapshot_decode", &cfg, || {
         let parsed = snapshot::read_snapshot_bytes(&bytes).expect("read");
         assert_eq!(parsed.n(), g.n());
@@ -114,6 +146,72 @@ fn snapshot_roundtrip(ctx: &ScenarioCtx) -> ScenarioRecord {
     let mb = bytes.len() as f64 / (1024.0 * 1024.0);
     rec.rate_metric("encode_mb_per_s", &m_enc, mb);
     rec.rate_metric("decode_mb_per_s", &m_dec, mb);
+    let m_enc2 = harness::bench_with("snapshot_v2_encode", &cfg, || {
+        let b = snapshot_v2::snapshot_v2_bytes(&g).expect("v2 encode");
+        assert!(b.len() > 56);
+    });
+    let v2 = snapshot_v2::snapshot_v2_bytes(&g).expect("v2 encode");
+    let m_dec2 = harness::bench_with("snapshot_v2_decode", &cfg, || {
+        let parsed = snapshot_v2::read_snapshot_v2_bytes(&v2, &pool).expect("v2 read");
+        assert_eq!(parsed.n(), g.n());
+    });
+    // Rates are per *decoded* (v1-equivalent) megabyte so v1 and v2 are
+    // comparable: v2 moves fewer bytes for the same graph.
+    rec.rate_metric("v2_encode_mb_per_s", &m_enc2, mb);
+    rec.rate_metric("v2_decode_mb_per_s", &m_dec2, mb);
+    rec
+}
+
+// ------------------------------------------------ data/snapshot_v2_ratio
+
+/// The v2 acceptance lab: on a planted low-arboricity workload (the
+/// regime this repo targets — ≥1M undirected edges at the full tier),
+/// pin (a) v2 compression vs v1, (b) bit-identical v1→v2→v1
+/// transcoding, and (c) the ShardPool parallel-decode speedup.
+fn snapshot_v2_ratio(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let mut rec = ScenarioRecord::new();
+    let spec_s = ctx.pick(
+        "planted:n=4000,k=40,pin=0.9,p=0.00002,seed=7",
+        "planted:n=24000,k=200,pin=0.9,p=0.00002,seed=7",
+    );
+    let spec = WorkloadSpec::parse(spec_s).expect("spec");
+    let g = spec.generate().expect("corpus generate");
+    let v1 = snapshot::snapshot_bytes(&g).expect("v1 encode");
+    let v2 = snapshot_v2::snapshot_v2_bytes(&g).expect("v2 encode");
+    // Cross-format fidelity: v1 → v2 → v1 must be byte-identical.
+    let auto = ShardPool::auto();
+    let via_v1 = snapshot::read_snapshot_bytes(&v1).expect("v1 read");
+    let via_v2 = snapshot_v2::read_snapshot_v2_bytes(&v2, &auto).expect("v2 read");
+    assert_eq!(via_v2, g, "{spec_s}: v2 round-trip must be lossless");
+    assert_eq!(via_v1, via_v2, "{spec_s}: v1 and v2 must decode the same graph");
+    assert_eq!(
+        snapshot::snapshot_bytes(&via_v2).expect("re-encode"),
+        v1,
+        "{spec_s}: v1→v2→v1 must be bit-identical"
+    );
+    let ratio = v1.len() as f64 / v2.len().max(1) as f64;
+    println!(
+        "{spec_s}: m={} — v1 {} B, v2 {} B, ratio {ratio:.2}x",
+        g.m(),
+        v1.len(),
+        v2.len()
+    );
+    rec.metric("v1_bytes_per_edge", v1.len() as f64 / g.m().max(1) as f64, Direction::Info);
+    rec.metric("v2_bytes_per_edge", v2.len() as f64 / g.m().max(1) as f64, Direction::Info);
+    rec.metric("compression_ratio", ratio, Direction::Higher);
+    let cfg = ctx.bench_cfg();
+    let serial = ShardPool::serial();
+    let m_serial = harness::bench_with("v2_decode_serial", &cfg, || {
+        let parsed = snapshot_v2::read_snapshot_v2_bytes(&v2, &serial).expect("v2 read");
+        assert_eq!(parsed.m(), g.m());
+    });
+    let m_auto = harness::bench_with("v2_decode_parallel", &cfg, || {
+        let parsed = snapshot_v2::read_snapshot_v2_bytes(&v2, &auto).expect("v2 read");
+        assert_eq!(parsed.m(), g.m());
+    });
+    rec.rate_metric("v2_decode_edges_per_s", &m_auto, g.m() as f64);
+    rec.speedup_metric("parallel_decode_speedup", &m_serial, &m_auto);
+    rec.metric("decode_shards", auto.shards() as f64, Direction::Info);
     rec
 }
 

@@ -4,8 +4,10 @@
 //! CLI — addresses inputs through two currencies:
 //!
 //! * **files** — [`edge_list`] (whitespace/CSV signed edge lists with
-//!   strict line-numbered errors and sort/dedup/self-loop normalization)
-//!   and [`snapshot`] (the `arbocc-csr/v1` versioned binary CSR format);
+//!   strict line-numbered errors and sort/dedup/self-loop normalization),
+//!   [`snapshot`] (the `arbocc-csr/v1` versioned binary CSR format), and
+//!   [`snapshot_v2`] (the columnar compressed `arbocc-csr/v2` format,
+//!   block-checksummed and decoded in parallel on the `ShardPool`);
 //!   [`load_graph`] auto-detects which one a path holds by its magic.
 //! * **specs** — [`corpus`]'s `family:k=v,...` strings naming seeded
 //!   generator instances (`planted:n=50000,k=40,p=0.05,seed=7`), so any
@@ -18,6 +20,7 @@
 pub mod corpus;
 pub mod edge_list;
 pub mod snapshot;
+pub mod snapshot_v2;
 
 use std::path::Path;
 
@@ -28,6 +31,7 @@ use crate::util::error::{Error, Result};
 #[derive(Debug, Clone)]
 pub enum LoadStats {
     Snapshot { bytes: usize },
+    SnapshotV2 { bytes: usize, shards: usize },
     EdgeList(edge_list::IngestStats),
 }
 
@@ -37,13 +41,18 @@ impl LoadStats {
             LoadStats::Snapshot { bytes } => {
                 format!("arbocc-csr/v1 snapshot ({bytes} bytes)")
             }
+            LoadStats::SnapshotV2 { bytes, shards } => {
+                format!("arbocc-csr/v2 snapshot ({bytes} bytes, decoded on {shards} shard(s))")
+            }
             LoadStats::EdgeList(stats) => format!("edge list: {}", stats.describe()),
         }
     }
 }
 
 /// Load a graph from disk, auto-detecting the format: `arbocc-csr/v1`
-/// by its magic, anything else as a text edge list.
+/// or `arbocc-csr/v2` by magic (v2 block decode fans out across an
+/// auto-sized [`crate::mpc::pool::ShardPool`]), anything else as a text
+/// edge list.
 pub fn load_graph(path: &Path) -> Result<(Graph, LoadStats)> {
     let bytes = std::fs::read(path)
         .map_err(|e| Error::new(format!("{}: {e}", path.display())))?;
@@ -51,6 +60,15 @@ pub fn load_graph(path: &Path) -> Result<(Graph, LoadStats)> {
         let g = snapshot::read_snapshot_bytes(&bytes)
             .map_err(|e| e.context(format!("reading snapshot {}", path.display())))?;
         return Ok((g, LoadStats::Snapshot { bytes: bytes.len() }));
+    }
+    if bytes.starts_with(snapshot_v2::MAGIC) {
+        let pool = crate::mpc::pool::ShardPool::auto();
+        let g = snapshot_v2::read_snapshot_v2_bytes(&bytes, &pool)
+            .map_err(|e| e.context(format!("reading v2 snapshot {}", path.display())))?;
+        return Ok((
+            g,
+            LoadStats::SnapshotV2 { bytes: bytes.len(), shards: pool.shards() },
+        ));
     }
     let text = std::str::from_utf8(&bytes).map_err(|_| {
         Error::new(format!(
@@ -64,15 +82,20 @@ pub fn load_graph(path: &Path) -> Result<(Graph, LoadStats)> {
 }
 
 /// Save a graph, choosing the format from the extension: `.csr` /
-/// `.snapshot` / `.bin` write the binary snapshot, `.csv` a CSV edge
-/// list, anything else a whitespace edge list.  Returns the format label
-/// for CLI reporting.
+/// `.snapshot` / `.bin` write the v1 binary snapshot, `.csr2` / `.csrz`
+/// the columnar compressed v2 snapshot, `.csv` a CSV edge list, anything
+/// else a whitespace edge list.  Returns the format label for CLI
+/// reporting.
 pub fn save_graph(g: &Graph, path: &Path) -> Result<&'static str> {
     let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
     let label = match ext {
         "csr" | "snapshot" | "bin" => {
             snapshot::write_snapshot_file(g, path)?;
             "arbocc-csr/v1 snapshot"
+        }
+        "csr2" | "csrz" => {
+            snapshot_v2::write_snapshot_v2_file(g, path)?;
+            "arbocc-csr/v2 snapshot"
         }
         "csv" => {
             edge_list::write_edges_file(g, path, edge_list::EdgeListFormat::Csv)?;
@@ -100,7 +123,8 @@ mod tests {
     fn save_and_load_every_format() {
         let g = lambda_arboric(80, 2, &mut Rng::new(55));
         for (tag, expect) in [
-            ("a.csr", "snapshot"),
+            ("a.csr", "v1 snapshot"),
+            ("d.csr2", "v2 snapshot"),
             ("b.csv", "csv"),
             ("c.edges", "whitespace"),
         ] {

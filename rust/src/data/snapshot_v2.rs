@@ -1,0 +1,747 @@
+//! `arbocc-csr/v2` — columnar compressed CSR snapshots with
+//! block-parallel load.
+//!
+//! v1 ([`super::snapshot`]) stores raw offsets and neighbor ids; on the
+//! low-arboricity graphs this repo targets that is ~4 B per directed
+//! edge of mostly-zero high bytes. v2 stores the same graph as three
+//! integer columns, each cut into fixed-size blocks that are
+//! delta-friendly and independently decodable:
+//!
+//! * **degree column** — `n` values, vertex `v`'s adjacency length;
+//! * **head column** — `n` values, `zigzag(first_neighbor − v)` for
+//!   nonempty vertices and the canonical `0` for empty ones;
+//! * **gap column** — `gap_count = m_dir − #nonempty` values, the
+//!   strictly-sorted neighbor deltas `u_j − u_{j−1} − 1`.
+//!
+//! Each block of [`DEFAULT_BLOCK_LEN`] values is encoded **twice** —
+//! LEB128 varint and fixed-width bit-packing (one width byte, LSB-first)
+//! — and the smaller payload wins, tagged per block in a directory of
+//! `(offset u64, len u32, tag u8, checksum u64)` entries. The layout
+//! (all integers little-endian):
+//!
+//! ```text
+//! magic      8 B   b"ARBOCSR2"
+//! version    u32   2
+//! block_len  u32   values per block (1 ..= MAX_BLOCK_LEN)
+//! n          u64   vertex count
+//! m_dir      u64   directed adjacency length (= 2·|E+|)
+//! gap_count  u64   gap-column length (= m_dir − #nonempty vertices)
+//! header_ck  u64   FNV-1a over the 40 header bytes above
+//! directory  nblocks × 21 B  (off u64 | len u32 | tag u8 | ck u64)
+//! dir_ck     u64   FNV-1a over the directory bytes
+//! payloads   contiguous block payloads, in directory order, to EOF
+//! ```
+//!
+//! where `nblocks = 2·⌈n/L⌉ + ⌈gap_count/L⌉` (degree and head blocks
+//! first, then gap blocks). Every byte of the file is covered by exactly
+//! one checksum — header, directory, or block — so any single-byte
+//! corruption or truncation is a one-line `Err`, never a wrong graph.
+//!
+//! **Lazy-validation contract:** [`read_snapshot_v2_bytes`] validates
+//! the header, the directory checksum, tags, and payload contiguity
+//! *eagerly* (cheap, O(nblocks), before any proportional allocation);
+//! per-block checksums and decoding are deferred to a fan-out over the
+//! [`ShardPool`], one contiguous block range per shard. Partials are
+//! merged in shard order, so both the decoded graph and the first error
+//! reported are bit-identical at any shard count. Reconstruction
+//! (prefix-summing degrees, re-adding gaps) and the structural
+//! validation v1 also performs (range, loop-freedom, symmetry) are
+//! likewise sharded by vertex.
+
+use std::io::{Read, Write};
+
+use crate::graph::Graph;
+use crate::mpc::pool::ShardPool;
+use crate::util::error::{Error, Result};
+use crate::util::fnv1a;
+
+use super::snapshot;
+
+/// Leading magic of every `arbocc-csr/v2` snapshot.
+pub const MAGIC: &[u8; 8] = b"ARBOCSR2";
+/// Format version written and accepted.
+pub const VERSION: u32 = 2;
+/// Values per block written by [`snapshot_v2_bytes`]. Swept offline on
+/// planted workloads: 256 beats 512/1024 because one noisy gap only
+/// forces varint (or a wide bit width) on 256 neighbors, while the
+/// 21 B directory entry amortizes to < 0.1 B per value.
+pub const DEFAULT_BLOCK_LEN: u32 = 256;
+/// Upper bound on the declared block length accepted by the reader —
+/// a forged header cannot demand absurd per-block scratch.
+pub const MAX_BLOCK_LEN: u32 = 1 << 20;
+
+/// Header size in bytes (magic + version + block_len + n + m_dir +
+/// gap_count + header checksum).
+const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 8 + 8 + 8;
+/// Directory entry size in bytes (off u64 | len u32 | tag u8 | ck u64).
+const DIR_ENTRY_LEN: usize = 21;
+
+const TAG_VARINT: u8 = 0;
+const TAG_BITPACK: u8 = 1;
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Map a signed delta onto the unsigned gap domain (small magnitudes →
+/// small codes, both signs).
+fn zigzag(d: i64) -> u64 {
+    (d.wrapping_shl(1) ^ (d >> 63)) as u64
+}
+
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Append `v` as an LEB128 varint (7 data bits per byte, MSB continues).
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        // audit:allow(cast-truncate): masked to the low 7 bits
+        let low = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(low);
+            return;
+        }
+        out.push(low | 0x80);
+    }
+}
+
+/// Fixed-width bit-packed payload: one width byte (0..=64), then the
+/// values LSB-first at that width, zero-padded to a byte boundary.
+fn bitpack_payload(vals: &[u64]) -> Vec<u8> {
+    let width = vals.iter().map(|&x| 64 - x.leading_zeros()).max().unwrap_or(0);
+    let bits = vals.len().saturating_mul(width as usize);
+    let mut out = Vec::with_capacity(1 + bits.div_ceil(8));
+    // audit:allow(cast-truncate): width ≤ 64 fits one byte
+    out.push(width as u8);
+    let mut acc: u128 = 0;
+    let mut filled: u32 = 0;
+    for &x in vals {
+        acc |= u128::from(x) << filled;
+        filled += width;
+        while filled >= 8 {
+            // audit:allow(cast-truncate): masked to the low byte
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            filled -= 8;
+        }
+    }
+    if filled > 0 {
+        // audit:allow(cast-truncate): masked to the low byte
+        out.push((acc & 0xFF) as u8);
+    }
+    out
+}
+
+/// Encode one block both ways and keep the smaller payload (ties favor
+/// bit-packing: fixed-width decode is branch-free).
+fn encode_block(vals: &[u64]) -> (u8, Vec<u8>) {
+    let mut var = Vec::new();
+    for &x in vals {
+        push_varint(&mut var, x);
+    }
+    let packed = bitpack_payload(vals);
+    if packed.len() <= var.len() {
+        (TAG_BITPACK, packed)
+    } else {
+        (TAG_VARINT, var)
+    }
+}
+
+/// Decode a varint block that must hold exactly `cnt` values and consume
+/// every payload byte.
+fn decode_varint_block(pl: &[u8], cnt: usize) -> Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(cnt);
+    let mut pos = 0usize;
+    for i in 0..cnt {
+        let mut val: u64 = 0;
+        let mut shift: u32 = 0;
+        loop {
+            crate::ensure!(pos < pl.len(), "varint block truncated at value {i}");
+            let byte = pl[pos];
+            pos += 1;
+            crate::ensure!(shift < 64, "varint at value {i} exceeds 64 bits");
+            let low = u64::from(byte & 0x7F);
+            crate::ensure!(
+                shift < 63 || low <= 1,
+                "varint at value {i} overflows u64"
+            );
+            val |= low << shift;
+            if byte & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        out.push(val);
+    }
+    crate::ensure!(
+        pos == pl.len(),
+        "varint block has {} trailing byte(s)",
+        pl.len() - pos
+    );
+    Ok(out)
+}
+
+/// Decode a bit-packed block of exactly `cnt` values; the payload length
+/// must match the width byte exactly and padding bits must be zero.
+fn decode_bitpack_block(pl: &[u8], cnt: usize) -> Result<Vec<u64>> {
+    crate::ensure!(!pl.is_empty(), "bitpack block is empty (missing width byte)");
+    let width = u32::from(pl[0]);
+    crate::ensure!(width <= 64, "bitpack width {width} exceeds 64 bits");
+    let bits = (cnt as u64)
+        .checked_mul(u64::from(width))
+        .ok_or_else(|| Error::new("bitpack bit count overflows"))?;
+    let need = 1 + bits.div_ceil(8);
+    crate::ensure!(
+        pl.len() as u64 == need,
+        "bitpack block is {} byte(s), {cnt} value(s) × {width} bit(s) needs {need}",
+        pl.len()
+    );
+    let mask: u128 = if width == 64 { u128::from(u64::MAX) } else { (1u128 << width) - 1 };
+    let mut out = Vec::with_capacity(cnt);
+    let mut acc: u128 = 0;
+    let mut filled: u32 = 0;
+    let mut pos = 1usize;
+    for _ in 0..cnt {
+        while filled < width {
+            acc |= u128::from(pl[pos]) << filled;
+            pos += 1;
+            filled += 8;
+        }
+        out.push((acc & mask) as u64);
+        acc >>= width;
+        filled -= width;
+    }
+    crate::ensure!(acc == 0, "bitpack block has nonzero padding bits");
+    Ok(out)
+}
+
+/// Serialize with [`DEFAULT_BLOCK_LEN`].
+pub fn snapshot_v2_bytes(g: &Graph) -> Result<Vec<u8>> {
+    snapshot_v2_bytes_with(g, DEFAULT_BLOCK_LEN)
+}
+
+/// Serialize with an explicit block length (the block-boundary tests
+/// force tiny blocks; the bench lab sweeps sizes).
+pub fn snapshot_v2_bytes_with(g: &Graph, block_len: u32) -> Result<Vec<u8>> {
+    crate::ensure!(
+        (1..=MAX_BLOCK_LEN).contains(&block_len),
+        "block length {block_len} outside 1..={MAX_BLOCK_LEN}"
+    );
+    let nv = snapshot::vertex_count_u32(g)?;
+    let nvu = nv as usize;
+    let mdir: usize = (0..nv).map(|v| g.degree(v)).sum();
+    let mut degs: Vec<u64> = Vec::with_capacity(nvu);
+    let mut heads: Vec<u64> = Vec::with_capacity(nvu);
+    let mut gaps: Vec<u64> = Vec::with_capacity(mdir);
+    for v in 0..nv {
+        let list = g.neighbors(v);
+        degs.push(list.len() as u64);
+        match list.split_first() {
+            Some((&first, rest)) => {
+                heads.push(zigzag(i64::from(first) - i64::from(v)));
+                let mut prev = first;
+                for &u in rest {
+                    crate::ensure!(
+                        u > prev,
+                        "vertex {v}: adjacency not sorted-unique (CSR invariant broken)"
+                    );
+                    gaps.push(u64::from(u) - u64::from(prev) - 1);
+                    prev = u;
+                }
+            }
+            None => heads.push(0),
+        }
+    }
+    let blk = block_len as usize;
+    let mut payloads: Vec<(u8, Vec<u8>)> = Vec::new();
+    for col in [&degs, &heads, &gaps] {
+        for chunk in col.chunks(blk) {
+            payloads.push(encode_block(chunk));
+        }
+    }
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_u32(&mut buf, block_len);
+    push_u64(&mut buf, nvu as u64);
+    push_u64(&mut buf, mdir as u64);
+    push_u64(&mut buf, gaps.len() as u64);
+    let header_ck = fnv1a(&buf);
+    push_u64(&mut buf, header_ck);
+    let dir_bytes = payloads.len().saturating_mul(DIR_ENTRY_LEN).saturating_add(8);
+    let mut off = HEADER_LEN.saturating_add(dir_bytes);
+    let dir_start = buf.len();
+    for (tag, pl) in &payloads {
+        push_u64(&mut buf, off as u64);
+        let len32 = u32::try_from(pl.len()).map_err(|_| {
+            Error::new(format!("block payload of {} bytes exceeds u32", pl.len()))
+        })?;
+        push_u32(&mut buf, len32);
+        buf.push(*tag);
+        push_u64(&mut buf, fnv1a(pl));
+        off = off.saturating_add(pl.len());
+    }
+    let dir_ck = fnv1a(&buf[dir_start..]);
+    push_u64(&mut buf, dir_ck);
+    for (_, pl) in &payloads {
+        buf.extend_from_slice(pl);
+    }
+    Ok(buf)
+}
+
+/// One parsed directory entry (offsets already bounds-checked).
+struct DirEntry {
+    off: usize,
+    len: usize,
+    tag: u8,
+    ck: u64,
+}
+
+/// Values in chunk `idx` of a column of `total` values at block length
+/// `bl` (the final chunk is short).
+fn chunk_len(total: u64, bl: u64, idx: u64) -> u64 {
+    (total - idx.saturating_mul(bl)).min(bl)
+}
+
+/// Parse and validate an `arbocc-csr/v2` snapshot, fanning block
+/// checksum+decode and graph reconstruction across `pool`. The result —
+/// including which error is reported for a corrupt file — is identical
+/// at any shard count.
+pub fn read_snapshot_v2_bytes(bytes: &[u8], pool: &ShardPool) -> Result<Graph> {
+    let mut pos = 0usize;
+    let magic = snapshot::take(bytes, &mut pos, 8)?;
+    crate::ensure!(
+        magic == MAGIC.as_slice(),
+        "bad magic {magic:?}: not an arbocc-csr/v2 snapshot (expected {MAGIC:?})"
+    );
+    let version = snapshot::take_u32(bytes, &mut pos)?;
+    crate::ensure!(
+        version == VERSION,
+        "unsupported snapshot version {version} (reader speaks {VERSION})"
+    );
+    let block_len = snapshot::take_u32(bytes, &mut pos)?;
+    crate::ensure!(
+        (1..=MAX_BLOCK_LEN).contains(&block_len),
+        "bad block length {block_len} (expected 1..={MAX_BLOCK_LEN})"
+    );
+    let n64 = snapshot::take_u64(bytes, &mut pos)?;
+    let mdir64 = snapshot::take_u64(bytes, &mut pos)?;
+    let gap64 = snapshot::take_u64(bytes, &mut pos)?;
+    let stored_hck = snapshot::take_u64(bytes, &mut pos)?;
+    let actual_hck = fnv1a(&bytes[..HEADER_LEN - 8]);
+    crate::ensure!(
+        stored_hck == actual_hck,
+        "header checksum mismatch: stored {stored_hck:#018x}, computed {actual_hck:#018x}"
+    );
+    crate::ensure!(n64 <= u32::MAX as u64, "n={n64} exceeds the u32 vertex-id space");
+    crate::ensure!(gap64 <= mdir64, "gap count {gap64} exceeds m_dir={mdir64}");
+    crate::ensure!(
+        u128::from(mdir64) <= u128::from(n64).saturating_mul(u128::from(n64)),
+        "m_dir={mdir64} impossible for n={n64}"
+    );
+    let bl64 = u64::from(block_len);
+    let vblocks64 = n64.div_ceil(bl64);
+    let gblocks64 = gap64.div_ceil(bl64);
+    let nblocks64 = vblocks64
+        .checked_mul(2)
+        .and_then(|x| x.checked_add(gblocks64))
+        .ok_or_else(|| Error::new("block count overflows u64"))?;
+    // Eager phase: the whole directory must fit *before* any allocation
+    // proportional to the declared sizes.
+    let need = nblocks64
+        .checked_mul(DIR_ENTRY_LEN as u64)
+        .and_then(|x| x.checked_add((HEADER_LEN + 8) as u64))
+        .ok_or_else(|| Error::new("directory size overflows u64"))?;
+    crate::ensure!(
+        need <= bytes.len() as u64,
+        "truncated snapshot: {nblocks64} block(s) need {need} header+directory bytes, \
+         the file has {}",
+        bytes.len()
+    );
+    let nblocks = nblocks64 as usize;
+    let vb = vblocks64 as usize;
+    let dir_start = pos;
+    let mut entries: Vec<DirEntry> = Vec::with_capacity(nblocks);
+    for b in 0..nblocks {
+        let off = snapshot::take_u64(bytes, &mut pos)?;
+        let len = snapshot::take_u32(bytes, &mut pos)?;
+        let tag = snapshot::take(bytes, &mut pos, 1)?[0];
+        let ck = snapshot::take_u64(bytes, &mut pos)?;
+        crate::ensure!(
+            tag == TAG_VARINT || tag == TAG_BITPACK,
+            "block {b}: bad encoding tag {tag} (expected {TAG_VARINT} varint / {TAG_BITPACK} bitpack)"
+        );
+        crate::ensure!(
+            off <= bytes.len() as u64,
+            "block {b}: payload offset {off} past end of file ({} bytes)",
+            bytes.len()
+        );
+        entries.push(DirEntry { off: off as usize, len: len as usize, tag, ck });
+    }
+    let dir_end = pos;
+    let stored_dck = snapshot::take_u64(bytes, &mut pos)?;
+    let actual_dck = fnv1a(&bytes[dir_start..dir_end]);
+    crate::ensure!(
+        stored_dck == actual_dck,
+        "directory checksum mismatch: stored {stored_dck:#018x}, computed {actual_dck:#018x}"
+    );
+    // Payloads must tile [end-of-directory, EOF) exactly, in order.
+    let mut expect = pos;
+    for (b, e) in entries.iter().enumerate() {
+        crate::ensure!(
+            e.off == expect,
+            "block {b}: payload offset {} breaks contiguity (expected {expect})",
+            e.off
+        );
+        let end = e
+            .off
+            .checked_add(e.len)
+            .ok_or_else(|| Error::new(format!("block {b}: payload end overflows")))?;
+        crate::ensure!(
+            end <= bytes.len(),
+            "block {b}: payload [{}, {end}) past end of file ({} bytes)",
+            e.off,
+            bytes.len()
+        );
+        expect = end;
+    }
+    crate::ensure!(
+        expect == bytes.len(),
+        "snapshot length mismatch: payloads end at {expect} but the file has {} bytes",
+        bytes.len()
+    );
+    // Lazy phase: per-block checksum + decode, sharded over the block
+    // index space. Partials merge in shard order, so errors and values
+    // are deterministic at any shard count.
+    let entries_ref = &entries;
+    let partials: Vec<Result<Vec<Vec<u64>>>> = pool.run(nblocks, |_, range| -> Result<Vec<Vec<u64>>> {
+        let mut decoded = Vec::with_capacity(range.len());
+        for b in range {
+            let e = &entries_ref[b];
+            let pl = &bytes[e.off..e.off + e.len];
+            let actual = fnv1a(pl);
+            crate::ensure!(
+                actual == e.ck,
+                "block {b}: checksum mismatch (stored {:#018x}, computed {actual:#018x})",
+                e.ck
+            );
+            let cnt64 = if b < vb {
+                chunk_len(n64, bl64, b as u64)
+            } else if b < 2 * vb {
+                chunk_len(n64, bl64, (b - vb) as u64)
+            } else {
+                chunk_len(gap64, bl64, (b - 2 * vb) as u64)
+            };
+            let cnt = cnt64 as usize;
+            let decoded_block = if e.tag == TAG_BITPACK {
+                decode_bitpack_block(pl, cnt)
+            } else {
+                decode_varint_block(pl, cnt)
+            };
+            let vals =
+                decoded_block.map_err(|err| err.context(format!("decoding block {b}")))?;
+            decoded.push(vals);
+        }
+        Ok(decoded)
+    });
+    let mut blocks: Vec<Vec<u64>> = Vec::with_capacity(nblocks);
+    for p in partials {
+        blocks.extend(p?);
+    }
+    let nvu = n64 as usize;
+    let mut degs: Vec<u64> = Vec::with_capacity(nvu);
+    for vals in &blocks[..vb] {
+        degs.extend_from_slice(vals);
+    }
+    let mut heads: Vec<u64> = Vec::with_capacity(nvu);
+    for vals in &blocks[vb..2 * vb] {
+        heads.extend_from_slice(vals);
+    }
+    let gap_total = gap64 as usize;
+    let mut gaps: Vec<u64> = Vec::with_capacity(gap_total);
+    for vals in &blocks[2 * vb..] {
+        gaps.extend_from_slice(vals);
+    }
+    drop(blocks);
+    // Serial prefix sums: CSR offsets and each vertex's slice of the gap
+    // column (what makes per-vertex reconstruction embarrassingly
+    // parallel below).
+    let mut offsets: Vec<usize> = Vec::with_capacity(nvu + 1);
+    offsets.push(0);
+    let mut gap_start: Vec<usize> = Vec::with_capacity(nvu + 1);
+    gap_start.push(0);
+    let mut acc: u64 = 0;
+    let mut nonempty: u64 = 0;
+    let mut gacc: u64 = 0;
+    for (v, &d) in degs.iter().enumerate() {
+        acc = acc
+            .checked_add(d)
+            .ok_or_else(|| Error::new(format!("vertex {v}: degree prefix sum overflows")))?;
+        crate::ensure!(
+            acc <= mdir64,
+            "vertex {v}: degree prefix sum {acc} exceeds m_dir={mdir64}"
+        );
+        if d > 0 {
+            nonempty += 1;
+            gacc += d - 1;
+        }
+        offsets.push(acc as usize);
+        gap_start.push(gacc as usize);
+    }
+    crate::ensure!(
+        acc == mdir64,
+        "degree column sums to {acc}, header declares m_dir={mdir64}"
+    );
+    crate::ensure!(
+        gacc == gap64,
+        "degree column implies {gacc} gap(s), header declares {gap64}"
+    );
+    let mdir = mdir64 as usize;
+    // Parallel reconstruction: vertex v's list is head + running gaps,
+    // strictly increasing by construction; range and loop-freedom are
+    // checked per value.
+    let degs_ref = &degs;
+    let heads_ref = &heads;
+    let gaps_ref = &gaps;
+    let offsets_ref = &offsets;
+    let gap_start_ref = &gap_start;
+    let partials: Vec<Result<Vec<u32>>> = pool.run(nvu, |_, range| -> Result<Vec<u32>> {
+        let take_len = offsets_ref[range.end] - offsets_ref[range.start];
+        let mut out: Vec<u32> = Vec::with_capacity(take_len);
+        let mut gi = gap_start_ref[range.start];
+        for v in range {
+            let d = degs_ref[v];
+            if d == 0 {
+                crate::ensure!(
+                    heads_ref[v] == 0,
+                    "vertex {v}: nonzero head {} for empty adjacency (noncanonical)",
+                    heads_ref[v]
+                );
+                continue;
+            }
+            let delta = unzigzag(heads_ref[v]);
+            let first = (v as i64).checked_add(delta).ok_or_else(|| {
+                Error::new(format!("vertex {v}: head delta {delta} overflows"))
+            })?;
+            crate::ensure!(
+                first >= 0 && (first as u64) < n64,
+                "vertex {v}: first neighbor {first} out of range n={n64}"
+            );
+            let mut u = first as u64;
+            crate::ensure!(u != v as u64, "vertex {v}: self-loop in adjacency");
+            // audit:allow(cast-truncate): u < n ≤ u32::MAX, ensured above
+            out.push(u as u32);
+            for _ in 1..d {
+                let gap = gaps_ref[gi];
+                gi += 1;
+                u = u
+                    .checked_add(1)
+                    .and_then(|x| x.checked_add(gap))
+                    .ok_or_else(|| {
+                        Error::new(format!("vertex {v}: neighbor gap {gap} overflows"))
+                    })?;
+                crate::ensure!(u < n64, "vertex {v}: neighbor {u} out of range n={n64}");
+                crate::ensure!(u != v as u64, "vertex {v}: self-loop in adjacency");
+                // audit:allow(cast-truncate): u < n ≤ u32::MAX, ensured above
+                out.push(u as u32);
+            }
+        }
+        Ok(out)
+    });
+    let mut neighbors: Vec<u32> = Vec::with_capacity(mdir);
+    for p in partials {
+        neighbors.extend(p?);
+    }
+    // Symmetry validation (the graph is undirected by contract), sharded
+    // by vertex like v1's serial loop.
+    let neighbors_ref = &neighbors;
+    let checks: Vec<Result<()>> = pool.run(nvu, |_, range| -> Result<()> {
+        for v in range {
+            // audit:allow(cast-truncate): v < n ≤ u32::MAX
+            let v32 = v as u32;
+            for &u in &neighbors_ref[offsets_ref[v]..offsets_ref[v + 1]] {
+                let lo = offsets_ref[u as usize];
+                let hi = offsets_ref[u as usize + 1];
+                crate::ensure!(
+                    neighbors_ref[lo..hi].binary_search(&v32).is_ok(),
+                    "asymmetric edge: {v}→{u} present but {u}→{v} missing"
+                );
+            }
+        }
+        Ok(())
+    });
+    for c in checks {
+        c?;
+    }
+    Ok(Graph::from_csr(offsets, neighbors))
+}
+
+/// Write a v2 snapshot.
+pub fn write_snapshot_v2<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    w.write_all(&snapshot_v2_bytes(g)?)?;
+    Ok(())
+}
+
+pub fn write_snapshot_v2_file(g: &Graph, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, snapshot_v2_bytes(g)?)?;
+    Ok(())
+}
+
+/// Read a v2 snapshot from any reader (buffers fully, then validates).
+pub fn read_snapshot_v2<R: Read>(mut r: R, pool: &ShardPool) -> Result<Graph> {
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    read_snapshot_v2_bytes(&bytes, pool)
+}
+
+pub fn read_snapshot_v2_file(path: &std::path::Path, pool: &ShardPool) -> Result<Graph> {
+    read_snapshot_v2_bytes(&std::fs::read(path)?, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{barbell, lambda_arboric, planted_partition};
+    use crate::util::rng::Rng;
+
+    fn families() -> Vec<Graph> {
+        let mut rng = Rng::new(77);
+        vec![
+            Graph::empty(0),
+            Graph::empty(9),
+            barbell(6),
+            lambda_arboric(300, 3, &mut rng),
+            planted_partition(400, 8, 0.8, 0.02, &mut Rng::new(5)).0,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_families_default_blocks() {
+        let pool = ShardPool::new(2);
+        for g in families() {
+            let bytes = snapshot_v2_bytes(&g).unwrap();
+            let back = read_snapshot_v2_bytes(&bytes, &pool).unwrap();
+            assert_eq!(back, g);
+            assert_eq!(
+                snapshot_v2_bytes(&back).unwrap(),
+                bytes,
+                "write-read-write is byte-stable"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_at_awkward_block_lengths() {
+        let pool = ShardPool::serial();
+        let g = lambda_arboric(200, 2, &mut Rng::new(3));
+        for bl in [1u32, 2, 3, 7, 64, 255, 257] {
+            let bytes = snapshot_v2_bytes_with(&g, bl).unwrap();
+            assert_eq!(read_snapshot_v2_bytes(&bytes, &pool).unwrap(), g, "block_len={bl}");
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_graph() {
+        let (g, _) = planted_partition(600, 12, 0.9, 0.01, &mut Rng::new(11));
+        let bytes = snapshot_v2_bytes(&g).unwrap();
+        let serial = read_snapshot_v2_bytes(&bytes, &ShardPool::serial()).unwrap();
+        for shards in [2usize, 3, 8] {
+            let pool = ShardPool::new(shards);
+            assert_eq!(read_snapshot_v2_bytes(&bytes, &pool).unwrap(), serial, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn v2_matches_v1_content() {
+        let pool = ShardPool::new(4);
+        for g in families() {
+            let v1 = snapshot::snapshot_bytes(&g).unwrap();
+            let via_v1 = snapshot::read_snapshot_bytes(&v1).unwrap();
+            let v2 = snapshot_v2_bytes(&g).unwrap();
+            let via_v2 = read_snapshot_v2_bytes(&v2, &pool).unwrap();
+            assert_eq!(via_v1, via_v2);
+        }
+    }
+
+    #[test]
+    fn v2_is_smaller_on_clustered_graphs() {
+        let (g, _) = planted_partition(2000, 20, 0.9, 0.001, &mut Rng::new(9));
+        let v1 = snapshot::snapshot_bytes(&g).unwrap();
+        let v2 = snapshot_v2_bytes(&g).unwrap();
+        assert!(
+            v2.len() * 2 < v1.len(),
+            "v2 ({}) should be well under half of v1 ({})",
+            v2.len(),
+            v1.len()
+        );
+    }
+
+    #[test]
+    fn header_corruption_is_rejected_with_context() {
+        let g = barbell(5);
+        let bytes = snapshot_v2_bytes(&g).unwrap();
+        let pool = ShardPool::serial();
+        let mut bad = bytes.clone();
+        bad[0] ^= 1;
+        let msg = read_snapshot_v2_bytes(&bad, &pool).unwrap_err().to_string();
+        assert!(msg.contains("magic"), "{msg}");
+        let mut bad = bytes.clone();
+        bad[8] = 9; // version field
+        let msg = read_snapshot_v2_bytes(&bad, &pool).unwrap_err().to_string();
+        assert!(msg.contains("version"), "{msg}");
+        let mut bad = bytes.clone();
+        bad[16] ^= 0xFF; // n field — caught by the header checksum
+        let msg = read_snapshot_v2_bytes(&bad, &pool).unwrap_err().to_string();
+        assert!(msg.contains("header checksum"), "{msg}");
+    }
+
+    #[test]
+    fn block_corruption_error_is_shard_invariant() {
+        let g = lambda_arboric(500, 3, &mut Rng::new(21));
+        let bytes = snapshot_v2_bytes(&g).unwrap();
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1; // inside the final payload block
+        bad[last] ^= 0xFF;
+        let serial_msg =
+            read_snapshot_v2_bytes(&bad, &ShardPool::serial()).unwrap_err().to_string();
+        assert!(serial_msg.contains("checksum") || serial_msg.contains("block"), "{serial_msg}");
+        for shards in [2usize, 8] {
+            let msg = read_snapshot_v2_bytes(&bad, &ShardPool::new(shards))
+                .unwrap_err()
+                .to_string();
+            assert_eq!(msg, serial_msg, "error must not depend on shard count");
+        }
+    }
+
+    #[test]
+    fn varint_and_bitpack_blocks_roundtrip() {
+        for vals in [
+            vec![0u64; 300],
+            (0..300u64).collect::<Vec<_>>(),
+            vec![u64::MAX, 0, 1, u64::MAX - 1],
+            vec![7u64],
+            (0..100u64).map(|i| if i % 9 == 0 { 1 << 40 } else { i % 3 }).collect(),
+        ] {
+            let (tag, pl) = encode_block(&vals);
+            let back = if tag == TAG_BITPACK {
+                decode_bitpack_block(&pl, vals.len()).unwrap()
+            } else {
+                decode_varint_block(&pl, vals.len()).unwrap()
+            };
+            assert_eq!(back, vals);
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrips() {
+        for d in [0i64, 1, -1, 5, -5, i64::MAX, i64::MIN, 1 << 40, -(1 << 40)] {
+            assert_eq!(unzigzag(zigzag(d)), d, "{d}");
+        }
+    }
+}

@@ -8,8 +8,9 @@
 //!             cost, lower-bound ratio and MPC rounds
 //!   gen       generate a corpus workload (`arbocc gen planted:n=2000,k=8
 //!             -o g.csr`); `--list` prints the family registry
-//!   convert   re-encode a graph file (edge list ⇄ arbocc-csr snapshot,
-//!             format chosen by the output extension)
+//!   convert   re-encode a graph file (edge list ⇄ arbocc-csr v1/v2
+//!             snapshot, format chosen by the output extension — `.csr`
+//!             v1, `.csr2` columnar compressed v2)
 //!   mis       run the MPC greedy-MIS pipeline; report round counts
 //!   best-of-k the Remark 14 driver: K trials of any registered solver
 //!             through the coordinator + PJRT engine
@@ -427,9 +428,10 @@ fn cmd_forest(args: &Args) -> Result<()> {
 ///   arbocc gen --list                          print the family registry
 ///
 /// The output format follows the extension: `.csr` writes the
-/// `arbocc-csr/v1` binary snapshot, `.csv` a CSV edge list, anything
-/// else a whitespace edge list. Without `-o` the instance is generated
-/// and summarized (a dry run).
+/// `arbocc-csr/v1` binary snapshot, `.csr2` the columnar compressed
+/// `arbocc-csr/v2` snapshot, `.csv` a CSV edge list, anything else a
+/// whitespace edge list. Without `-o` the instance is generated and
+/// summarized (a dry run).
 fn cmd_gen(args: &Args) -> Result<()> {
     if args.get_bool("list") {
         let lines = describe_families();
@@ -456,13 +458,16 @@ fn cmd_gen(args: &Args) -> Result<()> {
             let bytes = std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
             println!("wrote {path} ({format}, {bytes} bytes)");
         }
-        None => println!("(dry run — pass -o <file> to write .csr / .edges / .csv)"),
+        None => println!("(dry run — pass -o <file> to write .csr / .csr2 / .edges / .csv)"),
     }
     Ok(())
 }
 
 /// Re-encode a graph file; the target format follows the output
-/// extension, the source format is auto-detected.
+/// extension (`.csr` v1 snapshot, `.csr2` columnar v2, `.csv` /
+/// anything else text), the source format is auto-detected by magic —
+/// so `arbocc convert g.csr g.csr2` and back transcode between the
+/// snapshot generations.
 fn cmd_convert(args: &Args) -> Result<()> {
     let pos = args.positional();
     let (Some(src), Some(dst)) = (pos.get(1), pos.get(2)) else {
@@ -700,11 +705,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .collect()
         })
         .unwrap_or_default();
-    let gated = cmp.gated_regressions(&gate_filters);
+    let gated = cmp.gated_failures(&gate_filters);
     if !gated.is_empty() {
+        // A gated metric that vanished from this run fails as loudly as
+        // a regression — silently dropping a metric must not disarm the
+        // gate.
+        let missing = gated
+            .iter()
+            .filter(|d| d.verdict == compare::Verdict::Missing)
+            .count();
+        let regressed = gated.len() - missing;
         eprintln!(
-            "bench gate: {} regression(s) vs {baseline_name}",
-            gated.len()
+            "bench gate: {regressed} regression(s), {missing} gated metric(s) \
+             missing from this run vs {baseline_name}"
         );
         std::process::exit(1);
     }

@@ -1,12 +1,16 @@
-//! Property tests for the dataset subsystem (ISSUE 4 satellite): CSR
-//! snapshot round-trips are bit-identical across widths and sizes, the
-//! edge-list parser is invariant under line permutation/duplication,
-//! malformed input is rejected with the offending line number, and the
+//! Property tests for the dataset subsystem (ISSUE 4 satellite, ISSUE 9
+//! v2 sweep): CSR snapshot round-trips are bit-identical across widths,
+//! sizes, and both format generations; the v2 reader rejects *every*
+//! single-byte flip and truncation with an `Err` (never a panic, never a
+//! silently wrong graph); v2 loads are shard-invariant at 1/2/8; the
+//! edge-list parser is invariant under line permutation/duplication;
+//! malformed input is rejected with the offending line number; and the
 //! generator corpus honors its determinism contract at 1/2/8 shards.
 
 use arbocc::data::corpus::{sweep_corpus, tiny_corpus, WorkloadSpec};
 use arbocc::data::edge_list::{self, EdgeListFormat};
 use arbocc::data::snapshot::{self, OffsetWidth};
+use arbocc::data::snapshot_v2;
 use arbocc::data::{load_graph, save_graph};
 use arbocc::graph::generators::{lambda_arboric, random_tree};
 use arbocc::graph::Graph;
@@ -24,10 +28,10 @@ fn prop_snapshot_roundtrip_bit_identical_across_widths() {
     forall("snapshot write→read→write is lossless and byte-stable", 40, |rng, size| {
         let lambda = 1 + rng.index(4);
         let g = lambda_arboric(size.max(2), lambda, rng);
-        let auto = snapshot::snapshot_bytes(&g);
+        let auto = snapshot::snapshot_bytes(&g).map_err(|e| e.to_string())?;
         let back = snapshot::read_snapshot_bytes(&auto).map_err(|e| e.to_string())?;
         prop_check!(back == g, "auto-width decode mismatch");
-        let again = snapshot::snapshot_bytes(&back);
+        let again = snapshot::snapshot_bytes(&back).map_err(|e| e.to_string())?;
         prop_check!(again == auto, "second encode must be byte-identical");
         // Forced u64 offsets: different bytes, same graph.
         let wide =
@@ -89,7 +93,7 @@ fn malformed_lines_are_rejected_with_line_numbers() {
 #[test]
 fn snapshot_corruption_is_rejected() {
     let g = lambda_arboric(60, 2, &mut Rng::new(8));
-    let bytes = snapshot::snapshot_bytes(&g);
+    let bytes = snapshot::snapshot_bytes(&g).unwrap();
     let mut bad = bytes.clone();
     bad[3] ^= 0xFF;
     assert!(snapshot::read_snapshot_bytes(&bad).unwrap_err().to_string().contains("magic"));
@@ -105,7 +109,7 @@ fn snapshot_corruption_is_rejected() {
 #[test]
 fn load_graph_autodetects_every_saved_format() {
     let g = lambda_arboric(90, 3, &mut Rng::new(31));
-    for tag in ["auto.csr", "auto.edges", "auto.csv"] {
+    for tag in ["auto.csr", "auto.csr2", "auto.edges", "auto.csv"] {
         let path = temp_path(tag);
         save_graph(&g, &path).unwrap();
         let (back, stats) = load_graph(&path).unwrap();
@@ -152,6 +156,79 @@ fn corpus_generation_is_shard_invariant() {
         assert_eq!(got.len(), baseline.len());
         for (i, (a, b)) in got.iter().zip(&baseline).enumerate() {
             assert_eq!(a, b, "{}@{shards} shards", specs[i]);
+        }
+    }
+}
+
+#[test]
+fn prop_v1_v2_v1_transcode_is_bit_identical() {
+    // The convert path's contract: transcoding between format
+    // generations loses nothing, and both encoders are byte-stable.
+    let pool = ShardPool::serial();
+    forall("v1→v2→v1 transcode round-trips bit-identically", 30, |rng, size| {
+        let lambda = 1 + rng.index(4);
+        let g = lambda_arboric(size.max(2), lambda, rng);
+        let v1 = snapshot::snapshot_bytes(&g).map_err(|e| e.to_string())?;
+        let v2 = snapshot_v2::snapshot_v2_bytes(&g).map_err(|e| e.to_string())?;
+        let via_v2 =
+            snapshot_v2::read_snapshot_v2_bytes(&v2, &pool).map_err(|e| e.to_string())?;
+        prop_check!(via_v2 == g, "v2 decode mismatch");
+        let v1_again = snapshot::snapshot_bytes(&via_v2).map_err(|e| e.to_string())?;
+        prop_check!(v1_again == v1, "v1 re-encode after v2 round-trip must be byte-identical");
+        let v2_again = snapshot_v2::snapshot_v2_bytes(&via_v2).map_err(|e| e.to_string())?;
+        prop_check!(v2_again == v2, "v2 re-encode must be byte-identical");
+        Ok(())
+    });
+}
+
+#[test]
+fn v2_load_is_shard_invariant_at_1_2_8() {
+    let g = WorkloadSpec::parse("planted:n=300,k=6,seed=11").unwrap().generate().unwrap();
+    let bytes = snapshot_v2::snapshot_v2_bytes(&g).unwrap();
+    let baseline = snapshot_v2::read_snapshot_v2_bytes(&bytes, &ShardPool::serial()).unwrap();
+    assert_eq!(baseline, g);
+    for shards in [1usize, 2, 8] {
+        let pool = ShardPool::new(shards);
+        let back = snapshot_v2::read_snapshot_v2_bytes(&bytes, &pool).unwrap();
+        assert_eq!(back, baseline, "decode differs at {shards} shard(s)");
+    }
+}
+
+#[test]
+fn v2_corruption_fuzz_every_flip_and_truncation_is_an_err() {
+    // The ISSUE 9 hostile-input sweep: for a small planted snapshot,
+    // every single-byte flip (two XOR patterns) and every truncation
+    // must come back as an `Err` — never a panic, never a silently
+    // wrong (or even silently right) graph.  Every byte of the v2
+    // format sits under one of the FNV-1a checksums (header, directory,
+    // or a block) and FNV-1a's xor/odd-multiply steps are bijective on
+    // u64, so a single-byte change always alters the stored digest.
+    let g = WorkloadSpec::parse("planted:n=120,k=4,seed=3").unwrap().generate().unwrap();
+    let bytes = snapshot_v2::snapshot_v2_bytes(&g).unwrap();
+    let pool = ShardPool::serial();
+    let decode = |bad: &[u8]| -> Result<Result<Graph, String>, ()> {
+        let bad = bad.to_vec();
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            snapshot_v2::read_snapshot_v2_bytes(&bad, &pool).map_err(|e| e.to_string())
+        }))
+        .map_err(|_| ())
+    };
+    for i in 0..bytes.len() {
+        for pat in [0x01u8, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[i] ^= pat;
+            match decode(&bad) {
+                Ok(Err(_)) => {}
+                Ok(Ok(_)) => panic!("flip byte {i} ^ {pat:#x}: accepted corrupt snapshot"),
+                Err(()) => panic!("flip byte {i} ^ {pat:#x}: reader panicked"),
+            }
+        }
+    }
+    for cut in 0..bytes.len() {
+        match decode(&bytes[..cut]) {
+            Ok(Err(_)) => {}
+            Ok(Ok(_)) => panic!("truncation to {cut} bytes: accepted corrupt snapshot"),
+            Err(()) => panic!("truncation to {cut} bytes: reader panicked"),
         }
     }
 }
