@@ -28,7 +28,7 @@
 #   bench        the legacy per-bin drivers via `cargo bench`
 
 CARGO ?= cargo
-BENCH_LABEL ?= PR9
+BENCH_LABEL ?= PR10
 
 .PHONY: tier1 fmt clippy audit docs ci examples solve-demo gen-demo bench bench-smoke bench-full bench-gate
 

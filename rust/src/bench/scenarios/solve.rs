@@ -6,16 +6,24 @@
 //!   at 1 shard vs all hardware threads on a multi-component workload
 //!   (the gated tentpole metric: sharding must beat a single shard);
 //! * `solve/mixed_families`    — auto-routed solves across forest, grid
-//!   and scale-free inputs, with the planner's routes asserted.
+//!   and scale-free inputs, with the planner's routes asserted;
+//! * `solve/delta_speedup`     — the warm-start incremental driver
+//!   replaying a drift stream vs from-scratch re-solves of every
+//!   post-batch graph (gated: incremental must stay ahead on the
+//!   multi-component planted corpus; the connected powerlaw leg
+//!   documents the bound where every batch dirties the one component).
 
 use std::sync::Arc;
 
 use crate::bench::harness::bench_with;
 use crate::bench::suite::{Direction, Registry, Scenario, ScenarioCtx, ScenarioRecord};
+use crate::data::corpus::WorkloadSpec;
+use crate::data::delta::drift_batches;
 use crate::graph::generators::{barabasi_albert, disjoint_union, grid, lambda_arboric, random_forest};
 use crate::graph::Graph;
 use crate::solve::{
-    plan, solve_decomposed, DriverConfig, SolveCtx, SolveRequest, SolverRegistry,
+    plan, solve_decomposed, DriverConfig, IncrementalState, SolveCtx, SolveRequest,
+    SolverRegistry,
 };
 use crate::util::rng::Rng;
 use crate::util::table::fnum;
@@ -40,6 +48,12 @@ pub fn register(r: &mut Registry) {
         bin: BIN,
         about: "auto-routed solves across forest/grid/scale-free",
         run: mixed_families,
+    });
+    r.register(Scenario {
+        name: "solve/delta_speedup",
+        bin: BIN,
+        about: "warm-start delta replay vs from-scratch re-solves",
+        run: delta_speedup,
     });
 }
 
@@ -110,6 +124,80 @@ fn component_speedup(ctx: &ScenarioCtx) -> ScenarioRecord {
     rec.speedup_metric("component_speedup", &m1, &mn);
     rec.metric("components", k as f64, Direction::Info);
     rec.metric("shards", shards as f64, Direction::Info);
+    rec
+}
+
+fn delta_speedup(ctx: &ScenarioCtx) -> ScenarioRecord {
+    let cfg = ctx.bench_cfg();
+    let shards = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let registry = SolverRegistry::standard();
+    let batches = 4usize;
+    let n = ctx.size(4_000, 40_000);
+    // Two corpus legs: `planted` at p=0 is many components (deltas dirty
+    // a few, the rest ride the cache), `powerlaw` is one connected
+    // component (every delta dirties it — the honest lower bound).
+    let legs: [(&str, String); 2] = [
+        ("planted", format!("planted:n={n},k=16,p=0,seed=7")),
+        ("powerlaw", format!("powerlaw:n={n},attach=3,seed=7")),
+    ];
+
+    let mut rec = ScenarioRecord::new();
+    rec.metric("batches", batches as f64, Direction::Info);
+    for (tag, spec_s) in &legs {
+        let base = WorkloadSpec::parse(spec_s).unwrap().generate().unwrap();
+        let req = SolveRequest { seed: 11, ..SolveRequest::new(Arc::new(base)) };
+        let dcfg = DriverConfig::auto(shards);
+        let stream = drift_batches(&req.graph, batches, 0.002, 901).unwrap();
+        let ops: usize = stream.iter().map(|b| b.ops.len()).sum();
+
+        // Warm session plus bit-identity replay, all outside the timed
+        // region: every batch's incremental result must equal the
+        // from-scratch solve of its post-batch graph (the golden
+        // contract — asserted here so a regression fails the run, not
+        // just the metric).
+        let warm = IncrementalState::new(req.clone(), dcfg.clone(), &registry).unwrap();
+        let mut check = warm.clone();
+        let mut posts: Vec<SolveRequest> = Vec::new();
+        let mut dirty_total = 0usize;
+        for batch in &stream {
+            let rep = check.apply_batch(batch, &registry).unwrap();
+            let preq = SolveRequest { graph: check.graph().clone(), ..req.clone() };
+            let scratch = solve_decomposed(&preq, &dcfg, &registry).unwrap();
+            assert_eq!(
+                rep.clustering.labels(),
+                scratch.clustering.labels(),
+                "{tag}: incremental replay must be bit-identical to scratch"
+            );
+            dirty_total += check.stats().dirty;
+            posts.push(preq);
+        }
+
+        let ms = bench_with(&format!("{tag}: scratch re-solve ×{batches} (n={n})"), &cfg, || {
+            for preq in &posts {
+                std::hint::black_box(
+                    solve_decomposed(preq, &dcfg, &registry).unwrap(),
+                );
+            }
+        });
+        println!("{ms}");
+        // The per-iteration session clone is charged to the incremental
+        // side, so the metric is conservative.
+        let mi = bench_with(&format!("{tag}: incremental replay ×{batches}"), &cfg, || {
+            let mut s = warm.clone();
+            for batch in &stream {
+                std::hint::black_box(s.apply_batch(batch, &registry).unwrap());
+            }
+        });
+        println!("{mi}");
+        println!(
+            "    ⇒ {tag}: warm-start speedup ×{} ({ops} op(s), {dirty_total} dirty \
+             component-solve(s) across {batches} batches)",
+            fnum(ms.median_s / mi.median_s.max(1e-12))
+        );
+        rec.speedup_metric(&format!("{tag}_speedup"), &ms, &mi);
+        rec.metric(&format!("{tag}_ops"), ops as f64, Direction::Info);
+        rec.metric(&format!("{tag}_dirty"), dirty_total as f64, Direction::Info);
+    }
     rec
 }
 

@@ -176,6 +176,28 @@ fn gen_er(p: &Params) -> Result<Graph> {
     Ok(erdos_renyi(n, prob, &mut Rng::new(seed)))
 }
 
+/// The post-delta endpoint of a drift sequence: generate the base spec
+/// (nested commas `;`-encoded), drift it through `batches` seeded
+/// `with_flip_noise` steps, and return the final graph. The same
+/// machinery `arbocc delta gen` records batch-by-batch
+/// (`data::delta::drift_delta`), so `drift:...` names the graph the
+/// incremental driver must land on.
+fn gen_drift(p: &Params) -> Result<Graph> {
+    use crate::data::delta::{apply_batch, decode_base_spec, drift_batches};
+    let base_spec = WorkloadSpec::parse(&decode_base_spec(p.raw("base")))?;
+    crate::ensure!(
+        base_spec.family() != "drift",
+        "family 'drift': base must be a concrete family, not another drift spec"
+    );
+    let (batches, flip, seed) = (p.usize("batches")?, p.prob("flip")?, p.u64("seed")?);
+    let base = base_spec.generate()?;
+    let mut cur = base.clone();
+    for batch in &drift_batches(&base, batches, flip, seed)? {
+        cur = apply_batch(&cur, batch)?;
+    }
+    Ok(cur)
+}
+
 fn gen_mixed(p: &Params) -> Result<Graph> {
     let (n, seed) = (p.usize("n")?, p.u64("seed")?);
     crate::ensure!(n >= 32, "family 'mixed': n={n} too small (needs four parts of >= 8)");
@@ -301,6 +323,17 @@ pub const FAMILIES: &[FamilySpec] = &[
         params: &[prm("n", "2000", "total vertices"), prm("seed", "1", "generator seed")],
         gen: gen_mixed,
     },
+    FamilySpec {
+        name: "drift",
+        about: "post-delta endpoint of a drift sequence over a base spec",
+        params: &[
+            prm("base", "planted:n=2000;k=8;seed=7", "base spec, inner commas as ';'"),
+            prm("batches", "4", "drift batches"),
+            prm("flip", "0.01", "per-batch edge flip-noise probability"),
+            prm("seed", "1", "drift stream seed"),
+        ],
+        gen: gen_drift,
+    },
 ];
 
 /// A parsed `family[:k=v,...]` workload address.
@@ -365,6 +398,19 @@ impl WorkloadSpec {
     /// Family key (`planted`, `powerlaw`, …).
     pub fn family(&self) -> &'static str {
         self.family.name
+    }
+
+    /// Resolved (given ∪ default) value of one declared parameter —
+    /// the out-of-band accessor `arbocc delta gen` uses to read a
+    /// `drift:` spec's base/batches/flip/seed without generating it.
+    pub fn param(&self, key: &str) -> Result<String> {
+        if let Some((_, v)) = self.given.iter().find(|(k, _)| k == key) {
+            return Ok(v.clone());
+        }
+        match self.family.params.iter().find(|p| p.key == key) {
+            Some(p) => Ok(p.default.to_string()),
+            None => crate::bail!("family '{}' has no parameter '{key}'", self.family.name),
+        }
     }
 
     /// The normalized spec string: given parameters in declared order.
@@ -524,6 +570,33 @@ mod tests {
             let g = spec.generate().unwrap();
             assert!(g.n() > 0, "{s}");
         }
+    }
+
+    #[test]
+    fn drift_family_generates_and_is_deterministic() {
+        let spec_s = "drift:base=cliques:count=4;k=5,batches=3,flip=0.05,seed=6";
+        let spec = WorkloadSpec::parse(spec_s).unwrap();
+        assert_eq!(spec.family(), "drift");
+        assert_eq!(spec.param("base").unwrap(), "cliques:count=4;k=5");
+        assert_eq!(spec.param("batches").unwrap(), "3");
+        let g = spec.generate().unwrap();
+        assert_eq!(g.n(), 20);
+        assert_eq!(g, spec.generate().unwrap(), "drift must regenerate identically");
+        // flip=0 drifts nowhere: the endpoint is the base itself.
+        let frozen = WorkloadSpec::parse("drift:base=cliques:count=4;k=5,flip=0")
+            .unwrap()
+            .generate()
+            .unwrap();
+        assert_eq!(frozen, WorkloadSpec::parse("cliques:count=4,k=5").unwrap().generate().unwrap());
+        // A recursive base is refused.
+        let err = WorkloadSpec::parse("drift:base=drift:flip=0")
+            .unwrap()
+            .generate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("concrete family"), "{err}");
+        // param() rejects undeclared keys.
+        assert!(spec.param("warp").is_err());
     }
 
     #[test]

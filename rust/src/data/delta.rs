@@ -1,0 +1,541 @@
+//! `arbocc-delta/v1` — checksummed edge-delta batches against a base
+//! snapshot, plus the drift generator behind the `drift:` corpus family.
+//!
+//! A delta names a base graph (by corpus spec *and* fingerprint, so a
+//! mismatched base is a one-line error, never a silently wrong solve)
+//! and carries an ordered sequence of batches; each batch is a set of
+//! edge inserts/deletes that transforms graph *i* into graph *i+1*.
+//! The layout (all integers little-endian):
+//!
+//! ```text
+//! magic     8 B   b"ARBODLT1"
+//! version   u32   1
+//! n         u64   vertex count of the base (and every successor)
+//! base_fp   u64   `graph_fingerprint` of the base graph
+//! spec_len  u32   byte length of the base corpus spec (may be 0)
+//! spec      spec_len × u8   UTF-8 corpus spec of the base
+//! batches   u32   batch count
+//! per batch:
+//!   n_ops   u32   op count
+//!   per op: kind u8 (0 insert | 1 delete), u u32, v u32 (u < v)
+//! checksum  u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! Reads validate everything — magic, version, checksum (verified over
+//! the whole body *before* structural parsing), exact length, op kind,
+//! endpoint range and orientation — so every single-byte flip and
+//! truncation is an `Err` with context, never a panic (pinned by
+//! `tests/incremental.rs`, the same battery shape as the snapshot
+//! codecs).
+//!
+//! **Determinism contract:** [`drift_delta`] is a pure function of its
+//! `drift:` spec — the batches are diffs between successive
+//! `with_flip_noise` applications under one seeded stream, so the same
+//! spec names the same delta everywhere (CLI `delta gen`, `--delta`,
+//! bench scenarios, tests).
+
+use crate::data::corpus::WorkloadSpec;
+use crate::graph::generators::with_flip_noise;
+use crate::graph::Graph;
+use crate::util::error::Result;
+use crate::util::fnv1a;
+use crate::util::rng::Rng;
+
+/// Leading magic of every `arbocc-delta/v1` file.
+pub const MAGIC: &[u8; 8] = b"ARBODLT1";
+/// Format version written and accepted.
+pub const VERSION: u32 = 1;
+
+/// One edge mutation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeOp {
+    Insert,
+    Delete,
+}
+
+impl EdgeOp {
+    fn tag(self) -> u8 {
+        match self {
+            EdgeOp::Insert => 0,
+            EdgeOp::Delete => 1,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Option<EdgeOp> {
+        match tag {
+            0 => Some(EdgeOp::Insert),
+            1 => Some(EdgeOp::Delete),
+            _ => None,
+        }
+    }
+}
+
+/// One batch of edge mutations, applied atomically.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DeltaBatch {
+    /// `(op, u, v)` with `u < v`; each pair appears at most once.
+    pub ops: Vec<(EdgeOp, u32, u32)>,
+}
+
+impl DeltaBatch {
+    /// `(inserts, deletes)` split into endpoint lists.
+    pub fn split_ops(&self) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+        let mut inserts = Vec::new();
+        let mut deletes = Vec::new();
+        for &(op, u, v) in &self.ops {
+            match op {
+                EdgeOp::Insert => inserts.push((u, v)),
+                EdgeOp::Delete => deletes.push((u, v)),
+            }
+        }
+        (inserts, deletes)
+    }
+}
+
+/// A parsed `arbocc-delta/v1` value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Delta {
+    /// Vertex count of the base and every successor graph.
+    pub n: usize,
+    /// [`graph_fingerprint`] of the base graph.
+    pub base_fingerprint: u64,
+    /// Corpus spec of the base (`planted:n=2000,k=8,seed=7`; may be
+    /// empty when the base came from a file).
+    pub base_spec: String,
+    pub batches: Vec<DeltaBatch>,
+}
+
+impl Delta {
+    /// Total op count across all batches.
+    pub fn total_ops(&self) -> usize {
+        self.batches.iter().map(|b| b.ops.len()).sum()
+    }
+}
+
+/// Order-sensitive structural fingerprint of a graph: FNV-1a over the
+/// vertex count, the degree sequence and the concatenated adjacency —
+/// the exact information content of the CSR arrays. Two graphs
+/// fingerprint equal iff their CSR representations are identical; this
+/// is the cache key of the incremental driver and the base check of
+/// every delta apply.
+pub fn graph_fingerprint(g: &Graph) -> u64 {
+    // Incremental FNV-1a over the stream `n · (degree · adjacency)*`
+    // (little-endian u64/u32) without materializing it.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    mix(&(g.n() as u64).to_le_bytes());
+    for v in 0..g.n() {
+        // audit:allow(cast-truncate): v < n and Graph vertex ids are u32 by contract
+        let vid = v as u32;
+        mix(&(g.degree(vid) as u64).to_le_bytes());
+        for &u in g.neighbors(vid) {
+            mix(&u.to_le_bytes());
+        }
+    }
+    h
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn ensure_op(n: usize, op: EdgeOp, u: u32, v: u32) -> Result<()> {
+    crate::ensure!(u < v, "delta op {op:?} ({u},{v}): endpoints must satisfy u < v");
+    crate::ensure!(
+        (v as usize) < n,
+        "delta op {op:?} ({u},{v}): endpoint {v} out of range n={n}"
+    );
+    Ok(())
+}
+
+/// Serialize a delta (validates op orientation/range and count widths).
+pub fn delta_bytes(delta: &Delta) -> Result<Vec<u8>> {
+    crate::ensure!(
+        delta.n <= u32::MAX as usize,
+        "delta n={} exceeds the u32 vertex-id space",
+        delta.n
+    );
+    let n_batches = u32::try_from(delta.batches.len())
+        .map_err(|_| crate::util::error::Error::new("delta has more than u32::MAX batches"))?;
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_u64(&mut buf, delta.n as u64);
+    push_u64(&mut buf, delta.base_fingerprint);
+    let spec = delta.base_spec.as_bytes();
+    let spec_len = u32::try_from(spec.len())
+        .map_err(|_| crate::util::error::Error::new("delta base spec exceeds u32::MAX bytes"))?;
+    push_u32(&mut buf, spec_len);
+    buf.extend_from_slice(spec);
+    push_u32(&mut buf, n_batches);
+    for batch in &delta.batches {
+        let n_ops = u32::try_from(batch.ops.len()).map_err(|_| {
+            crate::util::error::Error::new("delta batch has more than u32::MAX ops")
+        })?;
+        push_u32(&mut buf, n_ops);
+        for &(op, u, v) in &batch.ops {
+            ensure_op(delta.n, op, u, v)?;
+            buf.push(op.tag());
+            push_u32(&mut buf, u);
+            push_u32(&mut buf, v);
+        }
+    }
+    let ck = fnv1a(&buf);
+    push_u64(&mut buf, ck);
+    Ok(buf)
+}
+
+/// Parse and fully validate an `arbocc-delta/v1` file.
+pub fn read_delta_bytes(bytes: &[u8]) -> Result<Delta> {
+    use crate::data::snapshot::{take, take_u32, take_u64};
+    let mut pos = 0usize;
+    let magic = take(bytes, &mut pos, 8)?;
+    crate::ensure!(
+        magic == MAGIC.as_slice(),
+        "bad magic {magic:?}: not an arbocc-delta file (expected {MAGIC:?})"
+    );
+    let version = take_u32(bytes, &mut pos)?;
+    crate::ensure!(
+        version == VERSION,
+        "unsupported delta version {version} (reader speaks {VERSION})"
+    );
+    // Whole-body checksum before any structural parsing: a flipped
+    // count field must never steer allocation or op decoding.
+    crate::ensure!(
+        bytes.len() >= pos.saturating_add(8),
+        "truncated delta: no room for the trailing checksum"
+    );
+    let body = &bytes[..bytes.len() - 8];
+    let mut tail = bytes.len() - 8;
+    let stored = take_u64(bytes, &mut tail)?;
+    let actual = fnv1a(body);
+    crate::ensure!(
+        stored == actual,
+        "delta checksum mismatch: stored {stored:#018x}, computed {actual:#018x}"
+    );
+    let n64 = take_u64(body, &mut pos)?;
+    crate::ensure!(n64 <= u32::MAX as u64, "delta n={n64} exceeds the u32 vertex-id space");
+    let n = n64 as usize;
+    let base_fingerprint = take_u64(body, &mut pos)?;
+    let spec_len = take_u32(body, &mut pos)? as usize;
+    let spec_bytes = take(body, &mut pos, spec_len)?;
+    let base_spec = std::str::from_utf8(spec_bytes)
+        .map_err(|_| crate::util::error::Error::new("delta base spec is not UTF-8"))?
+        .to_string();
+    let n_batches = take_u32(body, &mut pos)? as usize;
+    let mut batches = Vec::new();
+    for bi in 0..n_batches {
+        let n_ops = take_u32(body, &mut pos)? as usize;
+        // Length check before allocation: 9 bytes per op must fit in
+        // what remains of the body.
+        crate::ensure!(
+            n_ops.saturating_mul(9) <= body.len().saturating_sub(pos),
+            "delta batch {bi} declares {n_ops} ops but only {} byte(s) remain",
+            body.len().saturating_sub(pos)
+        );
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            let tag = take(body, &mut pos, 1)?[0];
+            let Some(op) = EdgeOp::from_tag(tag) else {
+                crate::bail!("delta batch {bi}: bad op kind {tag} (expected 0|1)");
+            };
+            let u = take_u32(body, &mut pos)?;
+            let v = take_u32(body, &mut pos)?;
+            ensure_op(n, op, u, v)?;
+            ops.push((op, u, v));
+        }
+        batches.push(DeltaBatch { ops });
+    }
+    crate::ensure!(
+        pos == body.len(),
+        "delta has {} trailing byte(s) after the last batch",
+        body.len() - pos
+    );
+    Ok(Delta { n, base_fingerprint, base_spec, batches })
+}
+
+pub fn write_delta_file(delta: &Delta, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, delta_bytes(delta)?)?;
+    Ok(())
+}
+
+pub fn read_delta_file(path: &std::path::Path) -> Result<Delta> {
+    read_delta_bytes(&std::fs::read(path)?)
+}
+
+/// Apply one batch to a graph, strictly: every delete must name a
+/// present edge, every insert an absent one, and no pair may appear
+/// twice in the batch — a drifted-out-of-sync delta is an error with
+/// context, never a silently divergent graph.
+pub fn apply_batch(g: &Graph, batch: &DeltaBatch) -> Result<Graph> {
+    let n = g.n();
+    let mut seen: std::collections::BTreeSet<(u32, u32)> = std::collections::BTreeSet::new();
+    let mut edges: std::collections::BTreeSet<(u32, u32)> = g.edges().collect();
+    for &(op, u, v) in &batch.ops {
+        ensure_op(n, op, u, v)?;
+        crate::ensure!(
+            seen.insert((u, v)),
+            "delta batch touches edge ({u},{v}) twice"
+        );
+        match op {
+            EdgeOp::Insert => crate::ensure!(
+                edges.insert((u, v)),
+                "delta insert ({u},{v}): edge already present in the base"
+            ),
+            EdgeOp::Delete => crate::ensure!(
+                edges.remove(&(u, v)),
+                "delta delete ({u},{v}): edge not present in the base"
+            ),
+        }
+    }
+    let edge_list: Vec<(u32, u32)> = edges.into_iter().collect();
+    Ok(Graph::from_edges(n, &edge_list))
+}
+
+/// Apply every batch in order against a fingerprint-checked base;
+/// returns the post-batch graph sequence (one entry per batch).
+pub fn apply_batches(base: &Graph, delta: &Delta) -> Result<Vec<Graph>> {
+    crate::ensure!(
+        base.n() == delta.n,
+        "delta base mismatch: delta says n={}, base graph has n={}",
+        delta.n,
+        base.n()
+    );
+    let fp = graph_fingerprint(base);
+    crate::ensure!(
+        fp == delta.base_fingerprint,
+        "delta base mismatch: delta was generated against fingerprint \
+         {:#018x}, this base fingerprints {fp:#018x}",
+        delta.base_fingerprint
+    );
+    let mut out = Vec::with_capacity(delta.batches.len());
+    let mut cur = base.clone();
+    for (i, batch) in delta.batches.iter().enumerate() {
+        cur = apply_batch(&cur, batch)
+            .map_err(|e| e.context(format!("applying delta batch {i}")))?;
+        out.push(cur.clone());
+    }
+    Ok(out)
+}
+
+/// The exact edge diff `old → new`: deletes (in `old`, not `new`) then
+/// inserts (in `new`, not `old`), each ascending — so
+/// `apply_batch(old, &diff_graphs(old, new)?) == new`.
+pub fn diff_graphs(old: &Graph, new: &Graph) -> Result<DeltaBatch> {
+    crate::ensure!(
+        old.n() == new.n(),
+        "diff requires equal vertex counts (old n={}, new n={})",
+        old.n(),
+        new.n()
+    );
+    let mut ops = Vec::new();
+    for (u, v) in old.edges() {
+        if !new.has_edge(u, v) {
+            ops.push((EdgeOp::Delete, u, v));
+        }
+    }
+    for (u, v) in new.edges() {
+        if !old.has_edge(u, v) {
+            ops.push((EdgeOp::Insert, u, v));
+        }
+    }
+    Ok(DeltaBatch { ops })
+}
+
+/// Deterministic drift: `batches` successive [`with_flip_noise`]
+/// perturbations under one seeded stream, recorded as diffs. A pure
+/// function of `(base, batches, flip, seed)`.
+pub fn drift_batches(base: &Graph, batches: usize, flip: f64, seed: u64) -> Result<Vec<DeltaBatch>> {
+    crate::ensure!(
+        (0.0..=1.0).contains(&flip),
+        "drift flip probability {flip} outside [0,1]"
+    );
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(batches);
+    let mut cur = base.clone();
+    for _ in 0..batches {
+        let next = with_flip_noise(&cur, flip, &mut rng);
+        out.push(diff_graphs(&cur, &next)?);
+        cur = next;
+    }
+    Ok(out)
+}
+
+/// Decode the `;`-encoded base spec of a `drift:` address (the corpus
+/// grammar splits on `,`, so the nested spec swaps its commas for `;`:
+/// `drift:base=planted:n=2000;k=8;seed=7,batches=4`).
+pub fn decode_base_spec(raw: &str) -> String {
+    raw.replace(';', ",")
+}
+
+/// Build the full [`Delta`] a `drift:` spec names: parse + generate the
+/// base, drift it, record the (comma-form) base spec and fingerprint.
+pub fn drift_delta(spec: &WorkloadSpec) -> Result<Delta> {
+    crate::ensure!(
+        spec.family() == "drift",
+        "delta generation needs a drift: spec, got family '{}'",
+        spec.family()
+    );
+    let base_raw = spec.param("base")?;
+    let base_spec = WorkloadSpec::parse(&decode_base_spec(&base_raw))?;
+    crate::ensure!(
+        base_spec.family() != "drift",
+        "drift base must be a concrete family, not another drift spec"
+    );
+    let batches: usize = spec
+        .param("batches")?
+        .parse()
+        .map_err(|_| crate::util::error::Error::new("drift: batches is not a valid usize"))?;
+    let flip: f64 = spec
+        .param("flip")?
+        .parse()
+        .map_err(|_| crate::util::error::Error::new("drift: flip is not a valid f64"))?;
+    let seed: u64 = spec
+        .param("seed")?
+        .parse()
+        .map_err(|_| crate::util::error::Error::new("drift: seed is not a valid u64"))?;
+    let base = base_spec.generate()?;
+    let batch_list = drift_batches(&base, batches, flip, seed)?;
+    Ok(Delta {
+        n: base.n(),
+        base_fingerprint: graph_fingerprint(&base),
+        base_spec: base_spec.canonical(),
+        batches: batch_list,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{clique, disjoint_cliques, lambda_arboric};
+
+    fn sample_delta() -> (Graph, Delta) {
+        let base = lambda_arboric(60, 2, &mut Rng::new(11));
+        let batches = drift_batches(&base, 3, 0.05, 9).unwrap();
+        let delta = Delta {
+            n: base.n(),
+            base_fingerprint: graph_fingerprint(&base),
+            base_spec: "arboric:n=60,lambda=2,seed=11".to_string(),
+            batches,
+        };
+        (base, delta)
+    }
+
+    #[test]
+    fn roundtrip_is_byte_stable() {
+        let (_, delta) = sample_delta();
+        assert!(delta.total_ops() > 0, "drift at flip=0.05 should move edges");
+        let bytes = delta_bytes(&delta).unwrap();
+        let back = read_delta_bytes(&bytes).unwrap();
+        assert_eq!(back, delta);
+        assert_eq!(delta_bytes(&back).unwrap(), bytes);
+    }
+
+    #[test]
+    fn diff_then_apply_is_identity() {
+        let old = lambda_arboric(50, 2, &mut Rng::new(21));
+        let new = with_flip_noise(&old, 0.2, &mut Rng::new(22));
+        let batch = diff_graphs(&old, &new).unwrap();
+        assert_eq!(apply_batch(&old, &batch).unwrap(), new);
+        // Empty diff round-trips too.
+        let none = diff_graphs(&old, &old).unwrap();
+        assert!(none.ops.is_empty());
+        assert_eq!(apply_batch(&old, &none).unwrap(), old);
+    }
+
+    #[test]
+    fn apply_batches_checks_fingerprint() {
+        let (base, delta) = sample_delta();
+        let graphs = apply_batches(&base, &delta).unwrap();
+        assert_eq!(graphs.len(), delta.batches.len());
+        let wrong = clique(base.n());
+        let err = apply_batches(&wrong, &delta).unwrap_err().to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let short = Graph::empty(3);
+        let err = apply_batches(&short, &delta).unwrap_err().to_string();
+        assert!(err.contains("n="), "{err}");
+    }
+
+    #[test]
+    fn strict_apply_errors() {
+        let g = disjoint_cliques(2, 3); // edges within {0,1,2} and {3,4,5}
+        for (ops, frag) in [
+            (vec![(EdgeOp::Insert, 0u32, 1u32)], "already present"),
+            (vec![(EdgeOp::Delete, 0, 3)], "not present"),
+            (vec![(EdgeOp::Insert, 2, 2)], "u < v"),
+            (vec![(EdgeOp::Insert, 1, 0)], "u < v"),
+            (vec![(EdgeOp::Insert, 0, 9)], "out of range"),
+            (
+                vec![(EdgeOp::Delete, 0, 1), (EdgeOp::Insert, 0, 1)],
+                "twice",
+            ),
+        ] {
+            let err = apply_batch(&g, &DeltaBatch { ops }).unwrap_err().to_string();
+            assert!(err.contains(frag), "{err}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_separates_structure() {
+        let a = clique(5);
+        let b = disjoint_cliques(1, 5);
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&b));
+        let c = lambda_arboric(5, 1, &mut Rng::new(3));
+        assert_ne!(graph_fingerprint(&a), graph_fingerprint(&c));
+        assert_ne!(
+            graph_fingerprint(&Graph::empty(4)),
+            graph_fingerprint(&Graph::empty(5)),
+            "fingerprint must see the vertex count"
+        );
+    }
+
+    #[test]
+    fn drift_is_deterministic() {
+        let base = lambda_arboric(40, 2, &mut Rng::new(31));
+        let a = drift_batches(&base, 4, 0.1, 7).unwrap();
+        let b = drift_batches(&base, 4, 0.1, 7).unwrap();
+        assert_eq!(a, b);
+        let c = drift_batches(&base, 4, 0.1, 8).unwrap();
+        assert_ne!(a, c, "different seeds should drift differently");
+    }
+
+    #[test]
+    fn drift_delta_from_spec() {
+        let spec =
+            WorkloadSpec::parse("drift:base=arboric:n=50;lambda=2;seed=4,batches=2,flip=0.1,seed=6")
+                .unwrap();
+        let delta = drift_delta(&spec).unwrap();
+        assert_eq!(delta.n, 50);
+        assert_eq!(delta.batches.len(), 2);
+        assert_eq!(delta.base_spec, "arboric:n=50,lambda=2,seed=4");
+        let base = WorkloadSpec::parse(&delta.base_spec).unwrap().generate().unwrap();
+        assert_eq!(graph_fingerprint(&base), delta.base_fingerprint);
+    }
+
+    #[test]
+    fn corruption_is_rejected_with_context() {
+        let (_, delta) = sample_delta();
+        let bytes = delta_bytes(&delta).unwrap();
+        let mut bad = bytes.clone();
+        bad[0] ^= 1;
+        assert!(read_delta_bytes(&bad).unwrap_err().to_string().contains("magic"));
+        let mut bad = bytes.clone();
+        bad[8] = 9; // version field
+        assert!(read_delta_bytes(&bad).unwrap_err().to_string().contains("version"));
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        assert!(read_delta_bytes(&bad).unwrap_err().to_string().contains("checksum"));
+        let msg = read_delta_bytes(&bytes[..bytes.len() - 3]).unwrap_err().to_string();
+        assert!(!msg.is_empty());
+    }
+}

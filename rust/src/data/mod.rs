@@ -7,7 +7,9 @@
 //!   strict line-numbered errors and sort/dedup/self-loop normalization),
 //!   [`snapshot`] (the `arbocc-csr/v1` versioned binary CSR format), and
 //!   [`snapshot_v2`] (the columnar compressed `arbocc-csr/v2` format,
-//!   block-checksummed and decoded in parallel on the `ShardPool`);
+//!   block-checksummed and decoded in parallel on the `ShardPool`), and
+//!   [`delta`] (the `arbocc-delta/v1` edge-delta batches the incremental
+//!   solver replays against a fingerprint-checked base);
 //!   [`load_graph`] auto-detects which one a path holds by its magic.
 //! * **specs** — [`corpus`]'s `family:k=v,...` strings naming seeded
 //!   generator instances (`planted:n=50000,k=40,p=0.05,seed=7`), so any
@@ -18,6 +20,7 @@
 //! whole pipeline; see DESIGN.md §7.
 
 pub mod corpus;
+pub mod delta;
 pub mod edge_list;
 pub mod snapshot;
 pub mod snapshot_v2;

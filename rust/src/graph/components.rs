@@ -37,8 +37,20 @@ impl Components {
 
 /// BFS-based component labelling, O(n + m).
 pub fn components(g: &Graph) -> Components {
+    let mut out = Components { label: Vec::new(), count: 0 };
+    components_into(g, &mut out);
+    out
+}
+
+/// [`components`] into caller-owned scratch: the label Vec's capacity is
+/// reused across calls, so the incremental delta maintainer and the
+/// decomposition driver stop paying an n-sized allocation per
+/// relabelling.
+pub fn components_into(g: &Graph, out: &mut Components) {
     let n = g.n();
-    let mut label = vec![u32::MAX; n];
+    out.label.clear();
+    out.label.resize(n, u32::MAX);
+    let label = &mut out.label;
     let mut count = 0u32;
     let mut queue = std::collections::VecDeque::new();
     for start in 0..n as u32 {
@@ -57,7 +69,7 @@ pub fn components(g: &Graph) -> Components {
         }
         count += 1;
     }
-    Components { label, count: count as usize }
+    out.count = count as usize;
 }
 
 /// Split a graph into one compact subgraph per connected component.
@@ -83,7 +95,10 @@ pub fn split_components(g: &Graph, comps: &Components) -> Vec<(Graph, Vec<u32>)>
         .into_iter()
         .map(|m| {
             let mut offsets = Vec::with_capacity(m.len() + 1);
-            let mut neighbors = Vec::new();
+            // Pre-reserve the component's degree sum (one counting pass
+            // over members) so the adjacency Vec never regrows.
+            let degree_sum: usize = m.iter().map(|&v| g.degree(v)).sum();
+            let mut neighbors = Vec::with_capacity(degree_sum);
             offsets.push(0);
             for &v in &m {
                 // Every neighbor shares v's component, so the mapped ids
@@ -94,6 +109,127 @@ pub fn split_components(g: &Graph, comps: &Components) -> Vec<(Graph, Vec<u32>)>
             (Graph::from_csr(offsets, neighbors), m)
         })
         .collect()
+}
+
+/// The incremental component maintainer's output: the post-delta
+/// labelling (bit-identical to `components(new_g)`, pinned by tests)
+/// plus, per new component, which old component it is an untouched copy
+/// of.
+#[derive(Debug, Clone)]
+pub struct DeltaComponents {
+    /// Labelling of the post-delta graph, in canonical order (component
+    /// ids ascend with each component's minimum vertex id — the same
+    /// numbering [`components`] produces).
+    pub comps: Components,
+    /// `clean_from[j] = Some(c)`: new component j is exactly old
+    /// component c with no op endpoint inside it, so its induced
+    /// subgraph is unchanged. `None`: j is dirty and must be re-solved.
+    pub clean_from: Vec<Option<u32>>,
+}
+
+impl DeltaComponents {
+    /// `(clean, dirty)` component counts.
+    pub fn clean_dirty(&self) -> (usize, usize) {
+        let clean = self.clean_from.iter().filter(|c| c.is_some()).count();
+        (clean, self.comps.count - clean)
+    }
+}
+
+/// Update a component labelling across one edge-delta batch without a
+/// full BFS where possible:
+///
+/// * old components with **no** op endpoint keep their single fragment —
+///   no edge of theirs changed, so no traversal happens at all;
+/// * components hit by a **delete** may split, so they are re-BFS'd on
+///   `new_g` restricted to their own member set (localized: the cost is
+///   the touched components' size, not n + m);
+/// * **inserts** only merge, so they become unions over the resulting
+///   fragments in a scratch [`UnionFind`].
+///
+/// Fragments are renumbered by first occurrence in vertex order, which
+/// reproduces [`components`]' canonical numbering exactly — the
+/// incremental driver's per-component seeds depend on it.
+pub fn components_after_delta(
+    new_g: &Graph,
+    old: &Components,
+    inserts: &[(u32, u32)],
+    deletes: &[(u32, u32)],
+) -> DeltaComponents {
+    let n = new_g.n();
+    assert_eq!(old.label.len(), n, "old labelling must cover the post-delta vertex set");
+    // Which old components any op touches, and which need a localized
+    // re-BFS (deletes can split; inserts only merge).
+    let mut touched = vec![false; old.count];
+    let mut rebfs = vec![false; old.count];
+    for &(u, v) in inserts {
+        touched[old.label[u as usize] as usize] = true;
+        touched[old.label[v as usize] as usize] = true;
+    }
+    for &(u, v) in deletes {
+        for w in [u, v] {
+            let c = old.label[w as usize] as usize;
+            touched[c] = true;
+            rebfs[c] = true;
+        }
+    }
+    // Fragment labelling: one fragment per untouched-by-delete old
+    // component (no traversal), BFS fragments inside re-BFS components.
+    // Cross-component inserts are invisible here (the BFS stays inside
+    // the old member set); the union pass below stitches them.
+    let mut frag = vec![u32::MAX; n];
+    let mut comp_frag = vec![u32::MAX; old.count];
+    let mut frag_count = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for v in 0..n as u32 {
+        if frag[v as usize] != u32::MAX {
+            continue;
+        }
+        let c = old.label[v as usize] as usize;
+        if !rebfs[c] {
+            if comp_frag[c] == u32::MAX {
+                comp_frag[c] = frag_count;
+                frag_count += 1;
+            }
+            frag[v as usize] = comp_frag[c];
+            continue;
+        }
+        frag[v as usize] = frag_count;
+        queue.push_back(v);
+        while let Some(x) = queue.pop_front() {
+            for &u in new_g.neighbors(x) {
+                if old.label[u as usize] as usize == c && frag[u as usize] == u32::MAX {
+                    frag[u as usize] = frag_count;
+                    queue.push_back(u);
+                }
+            }
+        }
+        frag_count += 1;
+    }
+    // Inserts merge fragments.
+    let mut uf = UnionFind::new(frag_count as usize);
+    for &(u, v) in inserts {
+        uf.union(frag[u as usize], frag[v as usize]);
+    }
+    // Canonical renumber by first occurrence in vertex order (the same
+    // order BFS from ascending start vertices assigns), plus the
+    // clean-component certificate.
+    let mut root_to_new = vec![u32::MAX; frag_count as usize];
+    let mut label = vec![u32::MAX; n];
+    let mut clean_from = Vec::new();
+    for v in 0..n {
+        let root = uf.find(frag[v]) as usize;
+        if root_to_new[root] == u32::MAX {
+            root_to_new[root] = clean_from.len() as u32;
+            let c = old.label[v];
+            // An untouched old component has no insert endpoint (so its
+            // fragment was never unioned) and no delete endpoint (so it
+            // is one whole fragment): the new component IS old c.
+            clean_from.push(if touched[c as usize] { None } else { Some(c) });
+        }
+        label[v] = root_to_new[root];
+    }
+    let count = clean_from.len();
+    DeltaComponents { comps: Components { label, count }, clean_from }
 }
 
 /// Is the vertex set `vs` a clique in g? (Checks degrees first: in a
@@ -254,6 +390,98 @@ mod tests {
         }
         assert!(covered.into_iter().all(|c| c));
         assert_eq!(total_m, g.m());
+    }
+
+    #[test]
+    fn components_into_reuses_scratch() {
+        let g1 = disjoint_cliques(3, 4);
+        let g2 = path(5);
+        let mut scratch = Components { label: Vec::new(), count: 0 };
+        components_into(&g1, &mut scratch);
+        assert_eq!(scratch.count, 3);
+        assert_eq!(scratch.label, components(&g1).label);
+        // Reuse across a smaller graph: stale labels must not leak.
+        components_into(&g2, &mut scratch);
+        assert_eq!(scratch.count, 1);
+        assert_eq!(scratch.label, components(&g2).label);
+    }
+
+    fn delta_vs_full(
+        old_g: &Graph,
+        inserts: &[(u32, u32)],
+        deletes: &[(u32, u32)],
+    ) -> DeltaComponents {
+        let mut edges: std::collections::BTreeSet<(u32, u32)> = old_g.edges().collect();
+        for &(u, v) in deletes {
+            assert!(edges.remove(&(u, v)), "test delete ({u},{v}) missing");
+        }
+        for &(u, v) in inserts {
+            assert!(edges.insert((u, v)), "test insert ({u},{v}) already present");
+        }
+        let list: Vec<(u32, u32)> = edges.into_iter().collect();
+        let new_g = Graph::from_edges(old_g.n(), &list);
+        let old = components(old_g);
+        let dc = components_after_delta(&new_g, &old, inserts, deletes);
+        let full = components(&new_g);
+        assert_eq!(dc.comps.label, full.label, "incremental labelling must match full BFS");
+        assert_eq!(dc.comps.count, full.count);
+        // Clean components really are untouched old components.
+        let old_members = old.members();
+        let new_members = dc.comps.members();
+        for (j, from) in dc.clean_from.iter().enumerate() {
+            if let Some(c) = from {
+                assert_eq!(new_members[j], old_members[*c as usize], "clean comp {j}");
+            }
+        }
+        dc
+    }
+
+    #[test]
+    fn delta_components_merge_split_and_clean() {
+        // Three K4s: {0..3}, {4..7}, {8..11}.
+        let g = disjoint_cliques(3, 4);
+        // Insert a bridge 0–4: comps 0,1 merge, comp 2 stays clean.
+        let dc = delta_vs_full(&g, &[(0, 4)], &[]);
+        assert_eq!(dc.comps.count, 2);
+        assert_eq!(dc.clean_dirty(), (1, 1));
+        assert_eq!(dc.clean_from, vec![None, Some(2)]);
+        // Delete an internal edge (clique stays connected): dirty but
+        // structurally intact; others clean.
+        let dc = delta_vs_full(&g, &[], &[(0, 1)]);
+        assert_eq!(dc.comps.count, 3);
+        assert_eq!(dc.clean_dirty(), (2, 1));
+        // Split: delete all of vertex 3's edges; {0,1,2} + isolated {3}.
+        let dc = delta_vs_full(&g, &[], &[(0, 3), (1, 3), (2, 3)]);
+        assert_eq!(dc.comps.count, 4);
+        assert_eq!(dc.clean_dirty(), (2, 2));
+        // Merge and split in one batch.
+        let dc = delta_vs_full(&g, &[(0, 8)], &[(4, 5), (4, 6), (4, 7)]);
+        assert_eq!(dc.comps.count, 3); // {0..3}+{8..11}, {5,6,7}, {4}
+        assert_eq!(dc.clean_dirty(), (0, 3));
+    }
+
+    #[test]
+    fn delta_components_random_drift_matches_full_bfs() {
+        use crate::graph::generators::random_forest;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(910);
+        for trial in 0..20 {
+            let g = random_forest(80, 0.8, &mut rng);
+            let mut inserts = Vec::new();
+            let mut deletes = Vec::new();
+            let mut pool: Vec<(u32, u32)> = g.edges().collect();
+            rng.shuffle(&mut pool);
+            deletes.extend(pool.into_iter().take(trial % 5));
+            while inserts.len() < trial % 4 {
+                let u = rng.index(80) as u32;
+                let v = rng.index(80) as u32;
+                let (a, b) = (u.min(v), u.max(v));
+                if a != b && !g.has_edge(a, b) && !inserts.contains(&(a, b)) {
+                    inserts.push((a, b));
+                }
+            }
+            delta_vs_full(&g, &inserts, &deletes);
+        }
     }
 
     #[test]

@@ -3,7 +3,13 @@
 //! Subcommands:
 //!   solve     the unified solver engine: planner-routed (`--algo auto`)
 //!             or named solver, per-component sharded decomposition,
-//!             plan trace in the output
+//!             plan trace in the output; `--delta <file>` replays an
+//!             `arbocc-delta/v1` stream through the warm-start
+//!             incremental driver (`--verify` cross-checks the final
+//!             batch against a from-scratch solve)
+//!   delta     edge-delta streams: `delta gen <drift:...> -o f` writes
+//!             an `arbocc-delta/v1` file, `delta apply <f>` replays it
+//!             against its recorded (or `--input`) base graph
 //!   cluster   run one registered solver on a generated workload; report
 //!             cost, lower-bound ratio and MPC rounds
 //!   gen       generate a corpus workload (`arbocc gen planted:n=2000,k=8
@@ -54,8 +60,8 @@ use arbocc::graph::Graph;
 use arbocc::cluster::exact::MAX_EXACT_N;
 use arbocc::runtime::{BackendKind, CostEngine};
 use arbocc::solve::{
-    simulator_for, solve_decomposed, DriverConfig, ModelKind, SolveCtx, SolveReport,
-    SolveRequest, SolverRegistry,
+    simulator_for, solve_decomposed, DriverConfig, IncrementalState, ModelKind, SolveCtx,
+    SolveReport, SolveRequest, SolverRegistry,
 };
 use arbocc::util::cli::Args;
 use arbocc::util::rng::Rng;
@@ -131,7 +137,14 @@ fn request_from_args(args: &Args, g: Graph, seed: u64) -> Result<SolveRequest> {
         if args.has("lambda") { Some(args.get_usize("lambda", 1)?.max(1)) } else { None };
     req.eps = args.get_f64("eps", 2.0)?;
     req.model = model;
-    req.delta = args.get_f64("delta", 0.5)?;
+    // `--delta` is overloaded in `solve`: a number is the MPC memory
+    // sublinearity δ, anything else names an `arbocc-delta/v1` stream
+    // (consumed by `cmd_solve`), so a non-numeric value keeps δ at its
+    // default here instead of erroring.
+    req.delta = match args.get("delta") {
+        Some(v) => v.parse().unwrap_or(0.5),
+        None => 0.5,
+    };
     req.round_budget = if args.has("rounds") { Some(args.get_usize("rounds", 0)?) } else { None };
     req.trials = args.get_usize("trials", 1)?.max(1);
     Ok(req)
@@ -204,8 +217,8 @@ fn print_report(req: &SolveRequest, report: &SolveReport) {
 ///
 ///   arbocc solve [--algo auto|<name>] [--family F --n N | --input path]
 ///                [--shards S] [--exact-cutoff C] [--lambda λ] [--eps ε]
-///                [--model m1|m2] [--delta δ] [--rounds R] [--trials K]
-///                [--list]
+///                [--model m1|m2] [--delta δ|<stream>] [--rounds R]
+///                [--trials K] [--verify] [--list]
 ///
 /// `--algo auto` routes each connected component through the planner's
 /// Theorem 26 / Corollary 27–32 decision tree, extended by the §9 rival
@@ -214,6 +227,14 @@ fn print_report(req: &SolveRequest, report: &SolveReport) {
 /// concurrently on an S-shard pool (bit-identical results at every S).
 /// `--trials K > 1` runs the Remark 14 best-of-K driver over the whole
 /// graph instead.
+///
+/// `--delta <file>` (any non-numeric value) replays an `arbocc-delta/v1`
+/// stream through the warm-start incremental driver: the base graph is
+/// solved once, then each batch updates the component labelling in place
+/// and re-solves only the components the delta dirtied (per-batch cache
+/// stats printed). The stitched result of every batch is bit-identical
+/// to a from-scratch solve of the post-batch graph; `--verify` proves it
+/// for the final batch by running one.
 fn cmd_solve(args: &Args) -> Result<()> {
     let registry = SolverRegistry::standard();
     if args.get_bool("list") {
@@ -237,6 +258,23 @@ fn cmd_solve(args: &Args) -> Result<()> {
     )?;
     let req = request_from_args(args, g, seed)?;
     print_graph_line(&family, &req.graph);
+
+    // A non-numeric `--delta` names an edge-delta stream to replay
+    // incrementally (a number is the MPC δ, handled by the request).
+    let delta_file = args.get("delta").filter(|v| v.parse::<f64>().is_err());
+    if let Some(dpath) = delta_file {
+        arbocc::ensure!(
+            req.trials <= 1,
+            "--delta streams cannot be combined with --trials (the warm-start \
+             driver is a single-trial path)"
+        );
+        let cfg = DriverConfig {
+            shards,
+            exact_cutoff: args.get_usize("exact-cutoff", 8)?,
+            algo: if algo == "auto" { None } else { Some(algo.clone()) },
+        };
+        return solve_delta_stream(&req, &cfg, &registry, &dpath, args.get_bool("verify"));
+    }
 
     if req.trials > 1 {
         // Remark 14: K independent trials through the coordinator.
@@ -275,6 +313,143 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let report = solve_decomposed(&req, &cfg, &registry)?;
     print_report(&req, &report);
     Ok(())
+}
+
+/// The `solve --delta <stream>` path: base solve, then one warm-start
+/// re-solve per batch with per-batch dirty/cache accounting.
+fn solve_delta_stream(
+    req: &SolveRequest,
+    cfg: &DriverConfig,
+    registry: &SolverRegistry,
+    dpath: &str,
+    verify: bool,
+) -> Result<()> {
+    let delta = arbocc::data::delta::read_delta_file(std::path::Path::new(dpath))
+        .with_context(|| format!("reading --delta {dpath}"))?;
+    arbocc::ensure!(
+        req.graph.n() == delta.n
+            && arbocc::data::delta::graph_fingerprint(&req.graph) == delta.base_fingerprint,
+        "--delta {dpath}: stream was recorded against a different base graph \
+         (stream base: n={}, spec {}) — regenerate it or pass the matching --input",
+        delta.n,
+        delta.base_spec
+    );
+    let mut state = IncrementalState::new(req.clone(), cfg.clone(), registry)?;
+    println!(
+        "base solve: {} component(s), cost={} in {:.3}s",
+        state.stats().components,
+        state.report().cost.total(),
+        state.report().wall_s
+    );
+    for (i, batch) in delta.batches.iter().enumerate() {
+        let rep = state
+            .apply_batch(batch, registry)
+            .with_context(|| format!("applying delta batch {i}"))?;
+        let s = *state.stats();
+        println!(
+            "batch {i}: +{}/-{} op(s) -> {} component(s) ({} clean, {} dirty), \
+             cache {} hit / {} miss, cost={} in {:.3}s",
+            s.inserts,
+            s.deletes,
+            s.components,
+            s.clean,
+            s.dirty,
+            s.cache_hits,
+            s.cache_misses,
+            rep.cost.total(),
+            rep.wall_s
+        );
+    }
+    let final_req = SolveRequest { graph: state.graph().clone(), ..req.clone() };
+    print_graph_line("post-delta", &final_req.graph);
+    print_report(&final_req, state.report());
+    let (hits, misses) = state.cache_stats();
+    println!("session cache: {hits} hit(s) / {misses} miss(es)");
+    if verify {
+        let scratch = solve_decomposed(&final_req, cfg, registry)?;
+        arbocc::ensure!(
+            scratch.clustering.labels() == state.report().clustering.labels()
+                && scratch.cost == state.report().cost,
+            "verify: incremental result diverges from the from-scratch solve \
+             (this is a bug — the warm-start contract is bit-identity)"
+        );
+        println!("verify: bit-identical to a from-scratch solve of the final graph");
+    }
+    Ok(())
+}
+
+/// Edge-delta streams (`arbocc-delta/v1`):
+///
+///   arbocc delta gen <drift:base=...;...,batches=K,flip=P,seed=S> -o <file>
+///   arbocc delta apply <file> [--input <base>] [-o <out>]
+///
+/// `gen` evaluates a `drift` corpus spec into a checksummed stream of
+/// insert/delete batches against its base graph (inner commas of the
+/// base spec written as `;`). `apply` replays a stream — against
+/// `--input` when given, else the recorded base spec is regenerated —
+/// printing per-batch graph sizes; `-o` writes the final graph in the
+/// format its extension names.
+fn cmd_delta(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    let verb = pos.get(1).map(|s| s.as_str()).unwrap_or("");
+    match verb {
+        "gen" => {
+            let Some(spec_s) = pos.get(2) else {
+                arbocc::bail!(
+                    "usage: arbocc delta gen <drift:base=...;...,batches=K,flip=P,seed=S> \
+                     -o <file>"
+                );
+            };
+            let spec = WorkloadSpec::parse(spec_s)?;
+            let delta = arbocc::data::delta::drift_delta(&spec)?;
+            let Some(path) = args.get("o").or_else(|| args.get("out")) else {
+                arbocc::bail!("delta gen: pass -o <file> to write the stream");
+            };
+            arbocc::data::delta::write_delta_file(&delta, std::path::Path::new(&path))
+                .with_context(|| format!("writing {path}"))?;
+            let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            println!(
+                "wrote {path} (arbocc-delta/v1, {} batch(es), {} op(s), {bytes} bytes) \
+                 against base {}",
+                delta.batches.len(),
+                delta.total_ops(),
+                delta.base_spec
+            );
+            Ok(())
+        }
+        "apply" => {
+            let Some(path) = pos.get(2) else {
+                arbocc::bail!("usage: arbocc delta apply <file> [--input <base>] [-o <out>]");
+            };
+            let delta = arbocc::data::delta::read_delta_file(std::path::Path::new(path))
+                .with_context(|| format!("reading {path}"))?;
+            let base = if let Some(input) = args.get("input") {
+                let (g, stats) = arbocc::data::load_graph(std::path::Path::new(&input))
+                    .with_context(|| format!("reading --input {input}"))?;
+                println!("loaded {input}: {}", stats.describe());
+                g
+            } else {
+                let spec = WorkloadSpec::parse(&delta.base_spec).with_context(|| {
+                    format!("regenerating recorded base '{}'", delta.base_spec)
+                })?;
+                spec.generate()?
+            };
+            print_graph_line(&delta.base_spec, &base);
+            let graphs = arbocc::data::delta::apply_batches(&base, &delta)?;
+            for (i, g) in graphs.iter().enumerate() {
+                println!("after batch {i}: n={} m={}", g.n(), g.m());
+            }
+            if let Some(out) = args.get("o").or_else(|| args.get("out")) {
+                let last = graphs.last().unwrap_or(&base);
+                let p = std::path::Path::new(&out);
+                let format = arbocc::data::save_graph(last, p)
+                    .with_context(|| format!("writing {out}"))?;
+                println!("wrote {out} ({format})");
+            }
+            Ok(())
+        }
+        other => arbocc::bail!("unknown delta verb '{other}' (gen|apply)"),
+    }
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
@@ -752,6 +927,7 @@ fn main() {
     let result = match cmd {
         "solve" => cmd_solve(&args),
         "cluster" => cmd_cluster(&args),
+        "delta" => cmd_delta(&args),
         "gen" => cmd_gen(&args),
         "convert" => cmd_convert(&args),
         "mis" => cmd_mis(&args),
@@ -765,7 +941,7 @@ fn main() {
         other => {
             eprintln!("unknown command '{other}'");
             eprintln!(
-                "usage: arbocc <solve|cluster|gen|convert|mis|best-of-k|forest|bench|check|audit|report|info> [--flags]"
+                "usage: arbocc <solve|cluster|delta|gen|convert|mis|best-of-k|forest|bench|check|audit|report|info> [--flags]"
             );
             std::process::exit(2);
         }

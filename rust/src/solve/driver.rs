@@ -77,6 +77,129 @@ pub fn component_seed(base: u64, component: usize) -> u64 {
     crate::coordinator::trial_seed(base ^ COMPONENT_STREAM_TAG, component)
 }
 
+/// One component's solve: the route taken plus everything the stitch
+/// needs. Also the unit the incremental driver's `SolveCache` stores —
+/// a pure function of `(component graph, route, seed)`, so a cached
+/// value is interchangeable with a fresh solve.
+#[derive(Debug, Clone)]
+pub struct ComponentSolve {
+    pub route: &'static str,
+    pub clustering: Clustering,
+    pub mpc_rounds: Option<usize>,
+    pub mpc_words: Option<Words>,
+    pub cost: Cost,
+}
+
+/// Validate a forced algorithm against the registry and the exact
+/// solver's size cap; returns the forced route as a `&'static str` the
+/// pool threads can share.
+pub(crate) fn resolve_forced(
+    cfg: &DriverConfig,
+    registry: &SolverRegistry,
+    largest: usize,
+) -> Result<Option<&'static str>> {
+    let Some(name) = &cfg.algo else {
+        return Ok(None);
+    };
+    let Some(solver) = registry.get(name) else {
+        crate::bail!(
+            "unknown solver '{name}' (known: {})",
+            registry.names().join("|")
+        );
+    };
+    // The subset-DP solver is hard-capped; refuse a forced exact-small
+    // on components beyond it — a message, never a panic backtrace.
+    if name == "exact-small" {
+        crate::ensure!(
+            largest <= MAX_EXACT_N,
+            "--algo exact-small is capped at component size {MAX_EXACT_N}, \
+             but the largest component has n={largest}"
+        );
+    }
+    Ok(Some(solver.name()))
+}
+
+/// Route one component: a pure function of the component (and the
+/// request's λ hint / round budget), never of scheduling.
+pub(crate) fn route_component(
+    part: &crate::graph::Graph,
+    exact_cutoff: usize,
+    forced: Option<&'static str>,
+    lambda: Option<usize>,
+    round_budget: Option<usize>,
+) -> &'static str {
+    if part.n() <= exact_cutoff {
+        "exact-small"
+    } else {
+        match forced {
+            Some(name) => name,
+            None => planner::plan_component_with(part, lambda, round_budget).solver,
+        }
+    }
+}
+
+/// Solve one component on a serial sub-context. `seed` must be
+/// [`component_seed`]`(req.seed, canonical index)` so the result is a
+/// pure function of `(component, route, request seed, index)`.
+pub(crate) fn solve_component(
+    registry: &SolverRegistry,
+    req: &SolveRequest,
+    part: &Arc<crate::graph::Graph>,
+    route: &'static str,
+    seed: u64,
+) -> ComponentSolve {
+    let sub_req = SolveRequest {
+        graph: part.clone(),
+        seed,
+        lambda: req.lambda,
+        eps: req.eps,
+        model: req.model,
+        delta: req.delta,
+        round_budget: req.round_budget,
+        trials: 1,
+    };
+    let solver = registry.get(route).expect("routes are registered");
+    let mut sub_ctx = SolveCtx::serial();
+    let rep = solver.solve(&sub_req, &mut sub_ctx);
+    ComponentSolve {
+        route,
+        clustering: rep.clustering,
+        mpc_rounds: rep.mpc_rounds,
+        mpc_words: rep.mpc_words,
+        cost: rep.cost,
+    }
+}
+
+/// Stitch per-component solves back into one clustering: labels
+/// `[0, n)` are the singleton base; component clusters land above it at
+/// threaded offsets, in component order. Returns the merged clustering
+/// plus the summed cost, max rounds (components run on disjoint machine
+/// groups, so the fleet-wide round count is the slowest component) and
+/// summed words (every word still crosses the network).
+pub(crate) fn stitch_components(
+    n: usize,
+    parts: &[(Arc<crate::graph::Graph>, Vec<u32>)],
+    solved: &[ComponentSolve],
+) -> (Clustering, Cost, Option<usize>, Option<Words>) {
+    let mut merged = Clustering::singletons(n);
+    let mut offset = n as u32;
+    let mut cost = Cost { positive: 0, negative: 0 };
+    let mut mpc_rounds: Option<usize> = None;
+    let mut mpc_words: Option<Words> = None;
+    for (cs, (_, old_ids)) in solved.iter().zip(parts) {
+        offset = merged.merge_subclustering_with_offset(&cs.clustering, old_ids, offset);
+        cost.positive += cs.cost.positive;
+        cost.negative += cs.cost.negative;
+        if let Some(r) = cs.mpc_rounds {
+            mpc_rounds = Some(mpc_rounds.unwrap_or(0).max(r));
+        }
+        if let Some(w) = cs.mpc_words {
+            mpc_words = Some(mpc_words.unwrap_or(0) + w);
+        }
+    }
+    (merged, cost, mpc_rounds, mpc_words)
+}
+
 /// Decompose, solve per component on the pool, stitch. Errors only on
 /// an unknown forced algorithm name.
 pub fn solve_decomposed(
@@ -89,14 +212,6 @@ pub fn solve_decomposed(
     let n = g.n();
     let mut ctx = SolveCtx::new(cfg.shards);
 
-    if let Some(name) = &cfg.algo {
-        crate::ensure!(
-            registry.get(name).is_some(),
-            "unknown solver '{name}' (known: {})",
-            registry.names().join("|")
-        );
-    }
-
     let comps = components(g);
     let parts: Vec<(Arc<crate::graph::Graph>, Vec<u32>)> = split_components(g, &comps)
         .into_iter()
@@ -106,59 +221,29 @@ pub fn solve_decomposed(
     // run.plan across 1/2/8 shards), so the shard width is not noted.
     let largest = parts.iter().map(|(p, _)| p.n()).max().unwrap_or(0);
     ctx.note(format!("decompose: {} component(s), largest n={largest}", parts.len()));
-    // The subset-DP solver is hard-capped; clamp the cutoff (so an
-    // over-eager `--exact-cutoff` degrades to the cap instead of
-    // tripping the solver's assert) and refuse a forced exact-small on
-    // components beyond it — a message, never a panic backtrace.
+    // Clamp an over-eager `--exact-cutoff` to the subset-DP cap instead
+    // of tripping the solver's assert.
     let exact_cutoff = cfg.exact_cutoff.min(MAX_EXACT_N);
-    if cfg.algo.as_deref() == Some("exact-small") {
-        crate::ensure!(
-            largest <= MAX_EXACT_N,
-            "--algo exact-small is capped at component size {MAX_EXACT_N}, \
-             but the largest component has n={largest}"
-        );
-    }
-
-    // Forced algorithm, resolved once (a &'static str the pool threads
-    // can share).
-    let forced: Option<&'static str> =
-        cfg.algo.as_ref().map(|name| registry.get(name).expect("checked above").name());
+    let forced = resolve_forced(cfg, registry, largest)?;
 
     // Route *and* solve each component on the pool. The route is a pure
     // function of the component (planner inspection is O(n + m), a real
     // share of small solves), and partials are collected in shard order,
     // so both the trace and the clustering are shard-count independent.
     let pool = ShardPool::new(cfg.shards);
-    let solved: Vec<(&'static str, Clustering, Option<usize>, Option<Words>, Cost)> = pool
+    let solved: Vec<ComponentSolve> = pool
         .run(parts.len(), |_, range| {
             range
                 .map(|i| {
                     let part = &parts[i].0;
-                    let route = if part.n() <= exact_cutoff {
-                        "exact-small"
-                    } else {
-                        match forced {
-                            Some(name) => name,
-                            None => {
-                                planner::plan_component_with(part, req.lambda, req.round_budget)
-                                    .solver
-                            }
-                        }
-                    };
-                    let sub_req = SolveRequest {
-                        graph: part.clone(),
-                        seed: component_seed(req.seed, i),
-                        lambda: req.lambda,
-                        eps: req.eps,
-                        model: req.model,
-                        delta: req.delta,
-                        round_budget: req.round_budget,
-                        trials: 1,
-                    };
-                    let solver = registry.get(route).expect("routes are registered");
-                    let mut sub_ctx = SolveCtx::serial();
-                    let rep = solver.solve(&sub_req, &mut sub_ctx);
-                    (route, rep.clustering, rep.mpc_rounds, rep.mpc_words, rep.cost)
+                    let route = route_component(
+                        part,
+                        exact_cutoff,
+                        forced,
+                        req.lambda,
+                        req.round_budget,
+                    );
+                    solve_component(registry, req, part, route, component_seed(req.seed, i))
                 })
                 .collect::<Vec<_>>()
         })
@@ -166,36 +251,16 @@ pub fn solve_decomposed(
         .flatten()
         .collect();
 
-    for (i, ((part, _), (route, ..))) in parts.iter().zip(&solved).enumerate() {
+    for (i, ((part, _), cs)) in parts.iter().zip(&solved).enumerate() {
         if i < TRACE_COMPONENT_CAP {
-            ctx.note(format!("component {i}: n={} m={} -> {route}", part.n(), part.m()));
+            ctx.note(format!("component {i}: n={} m={} -> {}", part.n(), part.m(), cs.route));
         }
     }
     if parts.len() > TRACE_COMPONENT_CAP {
         ctx.note(format!("… {} more component(s)", parts.len() - TRACE_COMPONENT_CAP));
     }
 
-    // Stitch: labels [0, n) are the singleton base; component clusters
-    // land above it at threaded offsets, in component order.
-    let mut merged = Clustering::singletons(n);
-    let mut offset = n as u32;
-    let mut cost = Cost { positive: 0, negative: 0 };
-    let mut mpc_rounds: Option<usize> = None;
-    let mut mpc_words: Option<Words> = None;
-    for ((_, clustering, rounds, words, part_cost), (_, old_ids)) in solved.iter().zip(&parts) {
-        offset = merged.merge_subclustering_with_offset(clustering, old_ids, offset);
-        cost.positive += part_cost.positive;
-        cost.negative += part_cost.negative;
-        // Components run on disjoint machine groups, so the fleet-wide
-        // round count is the slowest component, not the sum…
-        if let Some(r) = *rounds {
-            mpc_rounds = Some(mpc_rounds.unwrap_or(0).max(r));
-        }
-        // …but every word still crosses the network, so words add up.
-        if let Some(w) = *words {
-            mpc_words = Some(mpc_words.unwrap_or(0) + w);
-        }
-    }
+    let (merged, cost, mpc_rounds, mpc_words) = stitch_components(n, &parts, &solved);
 
     let solver = format!("{}+components", cfg.algo.as_deref().unwrap_or("auto"));
     Ok(SolveReport {

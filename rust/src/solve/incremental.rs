@@ -1,0 +1,428 @@
+//! Incremental re-clustering on streaming edge deltas: warm-start the
+//! per-component driver.
+//!
+//! Correlation clustering decomposes exactly over connected components
+//! of E+, so when the graph drifts by an edge delta only the components
+//! the delta touches can change — everything else is cached work. An
+//! [`IncrementalState`] holds the current graph, its component
+//! labelling, and a [`SolveCache`] of per-component results keyed by
+//! `(component fingerprint, route, seed)`; applying a
+//! [`DeltaBatch`](crate::data::delta::DeltaBatch):
+//!
+//! 1. rebuilds the CSR through the strict `data::delta::apply_batch`;
+//! 2. updates the labelling with
+//!    `graph::components::components_after_delta` (inserts = unions over
+//!    a scratch union-find, deletes = localized re-BFS of the touched
+//!    components only), classifying every component clean/dirty;
+//! 3. probes the cache per component and re-solves only the misses on
+//!    the [`ShardPool`], then stitches with the driver's offset-merge.
+//!
+//! **The golden contract:** per-component seeds stay the driver's pure
+//! function of `(request seed, component index-in-canonical-order)`, so
+//! the stitched result is **bit-identical to a from-scratch
+//! `solve_decomposed` of the post-delta graph at every shard count**
+//! (pinned at 1/2/8 by `tests/incremental.rs`). That rule is also why
+//! the cache key carries the seed: when a delta shifts a clean
+//! component's canonical index, its seed changes, the probe misses, and
+//! the component is re-solved — correctness never leans on the cache.
+//! A component that drifts back to a previously seen
+//! `(fingerprint, route, seed)` — the common steady-state bounce — hits.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+use crate::cluster::exact::MAX_EXACT_N;
+use crate::data::delta::{apply_batch, graph_fingerprint, DeltaBatch};
+use crate::graph::components::{
+    components, components_after_delta, split_components, Components,
+};
+use crate::graph::Graph;
+use crate::mpc::pool::ShardPool;
+use crate::solve::driver::{
+    component_seed, resolve_forced, route_component, solve_component, stitch_components,
+    ComponentSolve, DriverConfig,
+};
+use crate::solve::{SolveCtx, SolveReport, SolveRequest, SolverRegistry};
+use crate::util::error::Result;
+use crate::util::timer::Timer;
+
+/// Cache key: `(component fingerprint, route, per-component seed)`. All
+/// three are pure functions of the request and the component, so a hit
+/// is interchangeable with a fresh solve.
+pub type CacheKey = (u64, &'static str, u64);
+
+/// FIFO-bounded cache of per-component solves.
+#[derive(Debug, Clone)]
+pub struct SolveCache {
+    map: BTreeMap<CacheKey, ComponentSolve>,
+    order: VecDeque<CacheKey>,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Default cache bound: enough for thousands of live components plus
+/// their recent history without unbounded growth.
+pub const DEFAULT_CACHE_CAP: usize = 4096;
+
+impl SolveCache {
+    pub fn new(cap: usize) -> SolveCache {
+        SolveCache {
+            map: BTreeMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `(hits, misses)` across the cache's lifetime.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Probe; counts a hit or miss.
+    pub fn get(&mut self, key: &CacheKey) -> Option<ComponentSolve> {
+        match self.map.get(key) {
+            Some(cs) => {
+                self.hits += 1;
+                Some(cs.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert, evicting the oldest entry past the bound. Re-inserting an
+    /// existing key refreshes the value without growing the order queue.
+    pub fn insert(&mut self, key: CacheKey, value: ComponentSolve) {
+        if self.map.insert(key, value).is_none() {
+            self.order.push_back(key);
+            while self.map.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+}
+
+/// Per-batch accounting the incremental driver reports alongside the
+/// stitched [`SolveReport`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Post-batch component count.
+    pub components: usize,
+    /// Components certified untouched by the delta.
+    pub clean: usize,
+    /// Components the delta touched (re-solved unless cached).
+    pub dirty: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+impl BatchStats {
+    pub fn ops(&self) -> usize {
+        self.inserts + self.deletes
+    }
+}
+
+/// A warm incremental solving session over one drifting graph.
+#[derive(Clone)]
+pub struct IncrementalState {
+    req: SolveRequest,
+    cfg: DriverConfig,
+    comps: Components,
+    cache: SolveCache,
+    report: SolveReport,
+    last_stats: BatchStats,
+}
+
+impl IncrementalState {
+    /// Solve the base graph from scratch, seeding the cache with every
+    /// component's result.
+    pub fn new(
+        req: SolveRequest,
+        cfg: DriverConfig,
+        registry: &SolverRegistry,
+    ) -> Result<IncrementalState> {
+        let comps = components(&req.graph);
+        let mut state = IncrementalState {
+            report: SolveReport {
+                solver: String::new(),
+                clustering: crate::cluster::Clustering::singletons(req.graph.n()),
+                cost: crate::cluster::cost::Cost { positive: 0, negative: 0 },
+                mpc_rounds: None,
+                mpc_words: None,
+                wall_s: 0.0,
+                plan: Vec::new(),
+            },
+            comps,
+            cache: SolveCache::new(DEFAULT_CACHE_CAP),
+            req,
+            cfg,
+            last_stats: BatchStats::default(),
+        };
+        let clean_from = vec![None; state.comps.count];
+        state.resolve(&clean_from, "base", registry)?;
+        Ok(state)
+    }
+
+    /// The current (post-delta) graph.
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.req.graph
+    }
+
+    /// The latest stitched report (base solve, or the last batch).
+    pub fn report(&self) -> &SolveReport {
+        &self.report
+    }
+
+    /// Accounting for the most recent batch.
+    pub fn stats(&self) -> &BatchStats {
+        &self.last_stats
+    }
+
+    /// `(hits, misses)` of the component cache across the session.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Apply one delta batch: update the CSR and the component
+    /// labelling incrementally, re-solve cache misses on the pool,
+    /// stitch. The returned report is bit-identical to
+    /// [`crate::solve::solve_decomposed`] on the post-batch graph.
+    pub fn apply_batch(
+        &mut self,
+        batch: &DeltaBatch,
+        registry: &SolverRegistry,
+    ) -> Result<SolveReport> {
+        let (inserts, deletes) = batch.split_ops();
+        let new_g = Arc::new(apply_batch(&self.req.graph, batch)?);
+        let dc = components_after_delta(&new_g, &self.comps, &inserts, &deletes);
+        self.req.graph = new_g;
+        self.comps = dc.comps;
+        self.last_stats = BatchStats {
+            inserts: inserts.len(),
+            deletes: deletes.len(),
+            ..BatchStats::default()
+        };
+        self.resolve(&dc.clean_from, "delta", registry)?;
+        Ok(self.report.clone())
+    }
+
+    /// Shared solve path of the base solve and every batch: split,
+    /// route, probe the cache, solve misses on the pool in canonical
+    /// order, stitch.
+    fn resolve(
+        &mut self,
+        clean_from: &[Option<u32>],
+        phase: &str,
+        registry: &SolverRegistry,
+    ) -> Result<()> {
+        let timer = Timer::start();
+        let n = self.req.graph.n();
+        let mut ctx = SolveCtx::new(self.cfg.shards);
+        let parts: Vec<(Arc<Graph>, Vec<u32>)> =
+            split_components(&self.req.graph, &self.comps)
+                .into_iter()
+                .map(|(part, old)| (Arc::new(part), old))
+                .collect();
+        let largest = parts.iter().map(|(p, _)| p.n()).max().unwrap_or(0);
+        let exact_cutoff = self.cfg.exact_cutoff.min(MAX_EXACT_N);
+        let forced = resolve_forced(&self.cfg, registry, largest)?;
+
+        // Phase 1 (serial, canonical order): route every component and
+        // probe the cache. Routing is a pure function of the component,
+        // so clean components route identically to their cached entry.
+        let mut solved: Vec<Option<ComponentSolve>> = Vec::with_capacity(parts.len());
+        let mut keys: Vec<CacheKey> = Vec::with_capacity(parts.len());
+        let mut misses: Vec<usize> = Vec::new();
+        for (i, (part, _)) in parts.iter().enumerate() {
+            let route = route_component(
+                part,
+                exact_cutoff,
+                forced,
+                self.req.lambda,
+                self.req.round_budget,
+            );
+            let key: CacheKey =
+                (graph_fingerprint(part), route, component_seed(self.req.seed, i));
+            let cached = self.cache.get(&key);
+            if cached.is_none() {
+                misses.push(i);
+            }
+            keys.push(key);
+            solved.push(cached);
+        }
+
+        // Phase 2: solve the misses concurrently. Partials are collected
+        // in shard order and every seed is a function of the canonical
+        // index, so nothing depends on scheduling.
+        let pool = ShardPool::new(self.cfg.shards);
+        let fresh: Vec<ComponentSolve> = pool
+            .run(misses.len(), |_, range| {
+                range
+                    .map(|j| {
+                        let i = misses[j];
+                        let part = &parts[i].0;
+                        solve_component(
+                            registry,
+                            &self.req,
+                            part,
+                            keys[i].1,
+                            keys[i].2,
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        for (j, cs) in misses.iter().zip(fresh) {
+            self.cache.insert(keys[*j], cs.clone());
+            solved[*j] = Some(cs);
+        }
+        let solved: Vec<ComponentSolve> =
+            solved.into_iter().map(|cs| cs.expect("every miss was solved")).collect();
+
+        let (clean, dirty) = {
+            let clean = clean_from.iter().filter(|c| c.is_some()).count();
+            (clean, parts.len() - clean)
+        };
+        let hit_count = parts.len() - misses.len();
+        self.last_stats.components = parts.len();
+        self.last_stats.clean = clean;
+        self.last_stats.dirty = dirty;
+        self.last_stats.cache_hits = hit_count;
+        self.last_stats.cache_misses = misses.len();
+        // Shard-count independent trace, like the driver's.
+        ctx.note(format!(
+            "{phase}: {} component(s) ({clean} clean, {dirty} dirty), \
+             cache {hit_count} hit / {} miss",
+            parts.len(),
+            misses.len()
+        ));
+
+        let (merged, cost, mpc_rounds, mpc_words) = stitch_components(n, &parts, &solved);
+        self.report = SolveReport {
+            solver: format!("{}+incremental", self.cfg.algo.as_deref().unwrap_or("auto")),
+            clustering: merged,
+            cost,
+            mpc_rounds,
+            mpc_words,
+            wall_s: timer.elapsed_s(),
+            plan: ctx.trace().to_vec(),
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::cost::{cost, Cost};
+    use crate::data::delta::{drift_batches, EdgeOp};
+    use crate::graph::generators::disjoint_cliques;
+    use crate::solve::solve_decomposed;
+
+    fn registry() -> SolverRegistry {
+        SolverRegistry::standard()
+    }
+
+    fn dummy_solve(tag: u64) -> ComponentSolve {
+        ComponentSolve {
+            route: "exact-small",
+            clustering: crate::cluster::Clustering::singletons(1),
+            mpc_rounds: Some(tag as usize),
+            mpc_words: None,
+            cost: Cost { positive: 0, negative: 0 },
+        }
+    }
+
+    #[test]
+    fn cache_bounds_and_counts() {
+        let mut c = SolveCache::new(2);
+        assert!(c.is_empty());
+        assert!(c.get(&(1, "a", 1)).is_none());
+        c.insert((1, "a", 1), dummy_solve(1));
+        c.insert((2, "a", 2), dummy_solve(2));
+        c.insert((3, "a", 3), dummy_solve(3)); // evicts (1,a,1)
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&(1, "a", 1)).is_none());
+        assert_eq!(c.get(&(3, "a", 3)).unwrap().mpc_rounds, Some(3));
+        assert_eq!(c.stats(), (1, 3));
+        // Refreshing a live key must not double-count it in the queue.
+        c.insert((3, "a", 3), dummy_solve(9));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&(3, "a", 3)).unwrap().mpc_rounds, Some(9));
+    }
+
+    #[test]
+    fn base_solve_matches_decomposed() {
+        let g = Arc::new(disjoint_cliques(4, 5));
+        let req = SolveRequest { seed: 13, ..SolveRequest::new(g) };
+        let cfg = DriverConfig::auto(2);
+        let reg = registry();
+        let state = IncrementalState::new(req.clone(), cfg.clone(), &reg).unwrap();
+        let scratch = solve_decomposed(&req, &cfg, &reg).unwrap();
+        assert_eq!(state.report().clustering.labels(), scratch.clustering.labels());
+        assert_eq!(state.report().cost, scratch.cost);
+        assert_eq!(state.report().mpc_rounds, scratch.mpc_rounds);
+        assert_eq!(state.report().mpc_words, scratch.mpc_words);
+        assert_eq!(state.stats().cache_misses, 4);
+    }
+
+    #[test]
+    fn drift_batches_stay_bit_identical_and_cost_consistent() {
+        let g = Arc::new(disjoint_cliques(5, 6));
+        let batches = drift_batches(&g, 3, 0.05, 77).unwrap();
+        let req = SolveRequest { seed: 5, ..SolveRequest::new(g) };
+        let cfg = DriverConfig::auto(2);
+        let reg = registry();
+        let mut state = IncrementalState::new(req.clone(), cfg.clone(), &reg).unwrap();
+        for batch in &batches {
+            let rep = state.apply_batch(batch, &reg).unwrap();
+            let scratch_req =
+                SolveRequest { graph: state.graph().clone(), ..req.clone() };
+            let scratch = solve_decomposed(&scratch_req, &cfg, &reg).unwrap();
+            assert_eq!(rep.clustering.labels(), scratch.clustering.labels());
+            assert_eq!(rep.cost, scratch.cost);
+            assert_eq!(rep.cost, cost(state.graph(), &rep.clustering));
+        }
+    }
+
+    #[test]
+    fn bounce_hits_cache() {
+        // Insert a bridge between cliques 0 and 1, then delete it: every
+        // component returns to a seen (fingerprint, route, seed) state.
+        let g = Arc::new(disjoint_cliques(3, 4));
+        let req = SolveRequest { seed: 3, ..SolveRequest::new(g) };
+        let reg = registry();
+        let mut state =
+            IncrementalState::new(req, DriverConfig::auto(1), &reg).unwrap();
+        let bridge = DeltaBatch { ops: vec![(EdgeOp::Insert, 0, 4)] };
+        let unbridge = DeltaBatch { ops: vec![(EdgeOp::Delete, 0, 4)] };
+        state.apply_batch(&bridge, &reg).unwrap();
+        // The merged component is new; the surviving clique {8..11} is
+        // the only clean one.
+        assert_eq!(state.stats().clean, 1);
+        state.apply_batch(&unbridge, &reg).unwrap();
+        // All three components are back at their base (fingerprint,
+        // route, seed) triples: every probe hits.
+        assert_eq!(state.stats().cache_hits, 3);
+        assert_eq!(state.stats().cache_misses, 0);
+    }
+}

@@ -18,17 +18,23 @@
 //! * [`driver`] — per-component decomposition: split with
 //!   `graph::components`, solve components concurrently on
 //!   `mpc::pool::ShardPool` (exact solver on tiny components, planned
-//!   solver elsewhere), stitch labels back deterministically.
+//!   solver elsewhere), stitch labels back deterministically;
+//! * [`incremental`] — the warm-start path over streaming edge deltas:
+//!   an [`IncrementalState`] replays `arbocc-delta/v1` batches, updates
+//!   the component labelling in place, and re-solves only cache misses,
+//!   bit-identical to a from-scratch [`solve_decomposed`].
 //!
 //! Every future algorithm lands as one registry entry; `arbocc solve`,
 //! the best-of-K coordinator and the bench scenarios all speak this API.
 
 pub mod driver;
+pub mod incremental;
 pub mod planner;
 pub mod registry;
 pub mod solvers;
 
 pub use driver::{solve_decomposed, DriverConfig};
+pub use incremental::{BatchStats, IncrementalState, SolveCache};
 pub use planner::{plan, plan_component, Plan};
 pub use registry::SolverRegistry;
 

@@ -1,0 +1,201 @@
+//! Integration tests for the streaming-delta subsystem (ISSUE 10): the
+//! `arbocc-delta/v1` format's hostile-input battery, and the warm-start
+//! incremental driver's golden contract — **every batch's stitched
+//! result is bit-identical to a from-scratch `solve_decomposed` of the
+//! post-batch graph, at 1, 2 and 8 shards**.
+
+use std::sync::Arc;
+
+use arbocc::data::corpus::WorkloadSpec;
+use arbocc::data::delta::{
+    apply_batches, delta_bytes, diff_graphs, drift_batches, drift_delta, graph_fingerprint,
+    read_delta_bytes, Delta, DeltaBatch, EdgeOp,
+};
+use arbocc::graph::Graph;
+use arbocc::solve::{
+    solve_decomposed, DriverConfig, IncrementalState, SolveRequest, SolverRegistry,
+};
+
+fn gen(spec: &str) -> Graph {
+    WorkloadSpec::parse(spec).unwrap().generate().unwrap()
+}
+
+/// Replay `stream` through the incremental driver at `shards`, checking
+/// every batch against a from-scratch solve of the post-batch graph.
+fn assert_replay_matches_scratch(base: &Graph, stream: &[DeltaBatch], shards: usize, tag: &str) {
+    let reg = SolverRegistry::standard();
+    let req = SolveRequest { seed: 21, ..SolveRequest::new(Arc::new(base.clone())) };
+    let cfg = DriverConfig::auto(shards);
+    let mut state = IncrementalState::new(req.clone(), cfg.clone(), &reg).unwrap();
+    // The base solve itself must match.
+    let scratch0 = solve_decomposed(&req, &cfg, &reg).unwrap();
+    assert_eq!(state.report().clustering.labels(), scratch0.clustering.labels(), "{tag}: base");
+    for (i, batch) in stream.iter().enumerate() {
+        let rep = state.apply_batch(batch, &reg).unwrap();
+        let preq = SolveRequest { graph: state.graph().clone(), ..req.clone() };
+        let scratch = solve_decomposed(&preq, &cfg, &reg).unwrap();
+        assert_eq!(
+            rep.clustering.labels(),
+            scratch.clustering.labels(),
+            "{tag}: batch {i} at {shards} shard(s) diverges from scratch"
+        );
+        assert_eq!(rep.cost, scratch.cost, "{tag}: batch {i} cost");
+        assert_eq!(rep.mpc_rounds, scratch.mpc_rounds, "{tag}: batch {i} rounds");
+        assert_eq!(rep.mpc_words, scratch.mpc_words, "{tag}: batch {i} words");
+    }
+}
+
+#[test]
+fn drift_replay_is_bit_identical_at_1_2_8_shards_across_corpora() {
+    // Three structurally different bases: many components (planted at
+    // p=0), one connected scale-free component, and a λ=1 forest.
+    for (tag, spec, flip) in [
+        ("planted", "planted:n=240,k=8,p=0,seed=7", 0.03),
+        ("powerlaw", "powerlaw:n=160,attach=3,seed=7", 0.02),
+        ("forest", "forest:n=200,keep=0.85,seed=7", 0.05),
+    ] {
+        let base = gen(spec);
+        let stream = drift_batches(&base, 4, flip, 99).unwrap();
+        assert!(stream.iter().any(|b| !b.ops.is_empty()), "{tag}: drift produced no ops");
+        for shards in [1usize, 2, 8] {
+            assert_replay_matches_scratch(&base, &stream, shards, tag);
+        }
+    }
+}
+
+#[test]
+fn handcrafted_merges_and_splits_stay_identical_and_hit_the_cache() {
+    // cliques:count=3,k=4 → vertices {0..3} {4..7} {8..11}. The stream
+    // merges two cliques, splits them back, then isolates a vertex —
+    // exercising component merge, split, and count growth explicitly.
+    let base = gen("cliques:count=3,k=4");
+    let stream = vec![
+        DeltaBatch { ops: vec![(EdgeOp::Insert, 0, 4)] },
+        DeltaBatch { ops: vec![(EdgeOp::Delete, 0, 4)] },
+        DeltaBatch {
+            ops: vec![
+                (EdgeOp::Delete, 8, 11),
+                (EdgeOp::Delete, 9, 11),
+                (EdgeOp::Delete, 10, 11),
+            ],
+        },
+    ];
+    for shards in [1usize, 2, 8] {
+        assert_replay_matches_scratch(&base, &stream, shards, "handcrafted");
+    }
+    // Stats through the public API: after the bounce (batch 1) every
+    // component is back at a seen (fingerprint, route, seed) triple.
+    let reg = SolverRegistry::standard();
+    let req = SolveRequest { seed: 21, ..SolveRequest::new(Arc::new(base)) };
+    let mut state = IncrementalState::new(req, DriverConfig::auto(2), &reg).unwrap();
+    state.apply_batch(&stream[0], &reg).unwrap();
+    assert_eq!(state.stats().components, 2);
+    assert_eq!(state.stats().clean, 1);
+    state.apply_batch(&stream[1], &reg).unwrap();
+    assert_eq!(state.stats().components, 3);
+    assert_eq!(state.stats().cache_hits, 3);
+    assert_eq!(state.stats().cache_misses, 0);
+    state.apply_batch(&stream[2], &reg).unwrap();
+    assert_eq!(state.stats().components, 4);
+    assert_eq!(state.stats().clean, 2);
+}
+
+#[test]
+fn drift_corpus_family_equals_the_delta_chain_endpoint() {
+    // The `drift` corpus family and the `arbocc-delta/v1` stream are two
+    // views of the same construction: generating the family must equal
+    // applying the recorded stream to its base.
+    let spec = WorkloadSpec::parse("drift:base=planted:n=150;k=5;seed=3,batches=3,flip=0.04,seed=9")
+        .unwrap();
+    let endpoint = spec.generate().unwrap();
+    let delta = drift_delta(&spec).unwrap();
+    let base = gen("planted:n=150,k=5,seed=3");
+    assert_eq!(graph_fingerprint(&base), delta.base_fingerprint);
+    let graphs = apply_batches(&base, &delta).unwrap();
+    assert_eq!(graphs.last().unwrap(), &endpoint);
+}
+
+#[test]
+fn delta_roundtrip_is_byte_stable_and_diff_reconstructs() {
+    let old = gen("planted:n=100,k=4,seed=5");
+    let new = gen("planted:n=100,k=4,p=0.05,seed=6");
+    let batch = diff_graphs(&old, &new).unwrap();
+    let delta = Delta {
+        n: old.n(),
+        base_fingerprint: graph_fingerprint(&old),
+        base_spec: "planted:n=100,k=4,seed=5".to_string(),
+        batches: vec![batch],
+    };
+    let bytes = delta_bytes(&delta).unwrap();
+    let back = read_delta_bytes(&bytes).unwrap();
+    assert_eq!(back, delta);
+    assert_eq!(delta_bytes(&back).unwrap(), bytes, "re-encode must be byte-stable");
+    let graphs = apply_batches(&old, &back).unwrap();
+    assert_eq!(graphs.last().unwrap(), &new);
+}
+
+#[test]
+fn delta_corruption_fuzz_every_flip_and_truncation_is_an_err() {
+    // Same hostile-input battery as the snapshot formats: every
+    // single-byte flip (two XOR patterns) and every truncation of an
+    // `arbocc-delta/v1` stream must come back as an `Err` — never a
+    // panic, never a silently-accepted stream. The whole body sits
+    // under one FNV-1a trailer verified before structural parsing, and
+    // FNV-1a's xor/odd-multiply steps are bijective on u64, so any
+    // single-byte change alters the digest.
+    let spec = WorkloadSpec::parse("drift:base=cliques:count=4;k=5,batches=2,flip=0.1,seed=3")
+        .unwrap();
+    let delta = drift_delta(&spec).unwrap();
+    let bytes = delta_bytes(&delta).unwrap();
+    let decode = |bad: &[u8]| -> Result<Result<Delta, String>, ()> {
+        let bad = bad.to_vec();
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            read_delta_bytes(&bad).map_err(|e| e.to_string())
+        }))
+        .map_err(|_| ())
+    };
+    for i in 0..bytes.len() {
+        for pat in [0x01u8, 0xFF] {
+            let mut bad = bytes.clone();
+            bad[i] ^= pat;
+            match decode(&bad) {
+                Ok(Err(_)) => {}
+                Ok(Ok(_)) => panic!("flip byte {i} ^ {pat:#x}: accepted corrupt delta"),
+                Err(()) => panic!("flip byte {i} ^ {pat:#x}: reader panicked"),
+            }
+        }
+    }
+    for cut in 0..bytes.len() {
+        match decode(&bytes[..cut]) {
+            Ok(Err(_)) => {}
+            Ok(Ok(_)) => panic!("truncation to {cut} bytes: accepted corrupt delta"),
+            Err(()) => panic!("truncation to {cut} bytes: reader panicked"),
+        }
+    }
+}
+
+#[test]
+fn strict_apply_and_fingerprint_mismatch_are_errors() {
+    let base = gen("cliques:count=2,k=4");
+    let other = gen("cliques:count=2,k=5");
+    let delta = Delta {
+        n: base.n(),
+        base_fingerprint: graph_fingerprint(&base),
+        base_spec: "cliques:count=2,k=4".to_string(),
+        batches: vec![DeltaBatch { ops: vec![(EdgeOp::Insert, 0, 4)] }],
+    };
+    // Applying against the wrong base is refused by fingerprint (or n).
+    let err = apply_batches(&other, &delta).unwrap_err().to_string();
+    assert!(err.contains("mismatch") || err.contains("fingerprint"), "{err}");
+    // Strict op semantics: inserting a present edge / deleting an
+    // absent one / touching one edge twice are all errors.
+    for (ops, what) in [
+        (vec![(EdgeOp::Insert, 0u32, 1u32)], "already present"),
+        (vec![(EdgeOp::Delete, 0, 4)], "not present"),
+        (vec![(EdgeOp::Insert, 0, 4), (EdgeOp::Delete, 0, 4)], "twice"),
+    ] {
+        let d = Delta { batches: vec![DeltaBatch { ops }], ..delta.clone() };
+        let err = apply_batches(&base, &d).unwrap_err().to_string();
+        assert!(err.contains(what), "expected '{what}' in: {err}");
+    }
+}
